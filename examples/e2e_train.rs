@@ -1,0 +1,74 @@
+//! End-to-end driver (the repo's headline validation run):
+//!
+//! pretrain a ~26M-parameter LLaMA-flavor transformer on the synthetic
+//! corpus for a few hundred steps (full-precision LM, loss curve logged),
+//! quantize it to NF4 in Rust, then run QST finetuning on instruction data
+//! and evaluate MMLU-like 5-shot accuracy.
+//!
+//! All compute is AOT-compiled HLO executed from Rust via PJRT — this proves
+//! the L1 (Pallas dequant kernels) / L2 (JAX graphs) / L3 (coordinator)
+//! layers compose.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_train -- [pretrain_steps] [ft_steps]`
+
+use anyhow::Result;
+use qst::coordinator::pipeline;
+use qst::experiments::common;
+use qst::runtime::Runtime;
+use qst::util::{human_bytes, peak_rss_bytes};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let pretrain_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let ft_steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let cfg = "e2e-llama";
+
+    let mut rt = Runtime::with_default_dir()?;
+    println!("== e2e driver: {cfg} (~26M backbone) on 1 CPU core ==");
+
+    // Stage 1: pretrain (logs the loss curve).
+    let t0 = std::time::Instant::now();
+    let base = if pipeline::base_ckpt_path(cfg).exists() {
+        println!("reusing existing base checkpoint");
+        qst::coordinator::Checkpoint::load(&pipeline::base_ckpt_path(cfg))?
+    } else {
+        let (ckpt, report) = pipeline::pretrain(&mut rt, cfg, pretrain_steps, 1e-3, 0, true)?;
+        ckpt.save(&pipeline::base_ckpt_path(cfg))?;
+        let m = &report.metrics;
+        println!(
+            "pretrain: {} steps, loss {:.3} -> {:.3}, {:.2} s/step, {:.0} tok/s",
+            pretrain_steps,
+            m.losses.first().unwrap(),
+            m.mean_loss_tail(10),
+            m.median_step_secs(),
+            m.tokens_per_sec()
+        );
+        // persist the loss curve for EXPERIMENTS.md
+        m.save_csv(&qst::runs_dir().join("e2e_pretrain_loss.csv"))?;
+        ckpt
+    };
+    println!("base: {} tensors, {}", base.tensors.len(), human_bytes(base.total_bytes() as f64));
+
+    // Stage 2+3: NF4-quantize (inside finetune_mmlu) + QST finetune.
+    let out = common::finetune_mmlu(&mut rt, cfg, "qst", ft_steps, &base, "")?;
+    println!(
+        "QST finetune: {} trainable params ({:.2}% of backbone), final loss {:.3}, {:.2} s/step",
+        out.trainable_params,
+        out.trainable_params as f64
+            / base.tensors.values().map(|t| t.numel()).sum::<usize>() as f64
+            * 100.0,
+        out.final_loss,
+        out.median_step_secs
+    );
+
+    // Stage 4: MMLU-like 5-shot eval.
+    let acc = common::eval_mmlu(&mut rt, cfg, "qst", &out, 100, "")?;
+    println!("MMLU-like 5-shot accuracy after QST: {acc:.3} (chance = 0.25)");
+    println!(
+        "total wall {:.1}s, peak RSS {}",
+        t0.elapsed().as_secs_f64(),
+        human_bytes(peak_rss_bytes() as f64)
+    );
+    println!("e2e OK");
+    Ok(())
+}

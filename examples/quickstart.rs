@@ -1,0 +1,41 @@
+//! Quickstart: the smallest end-to-end QST run.
+//!
+//! 1. Pretrain a tiny backbone on the synthetic corpus (full-precision LM).
+//! 2. Quantize it to NF4 in Rust.
+//! 3. Finetune the side network (QST) on a GLUE-like task — Python never runs.
+//! 4. Evaluate.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use qst::coordinator::pipeline;
+use qst::data::glue::GlueTask;
+use qst::experiments::common;
+use qst::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::with_default_dir()?;
+    println!("== QST quickstart (config: tiny-opt, task: SST-2-like) ==");
+
+    // 1+2. pretrain (or reuse) the base model; frozen quantization happens
+    //      inside finetune_glue from the checkpoint via rust/src/quant.
+    let base = pipeline::ensure_base(&mut rt, "tiny-opt", 300, 3e-3, true)?;
+    println!("base checkpoint: {} tensors, {} bytes",
+             base.tensors.len(), base.total_bytes());
+
+    // 3. QST finetuning: only the side network trains.
+    let out = common::finetune_glue(&mut rt, "tiny-opt", "qst", GlueTask::Sst2, 120, &base, "")?;
+    println!(
+        "finetuned: {} trainable params, final loss {:.4}, {:.0} ms/step",
+        out.trainable_params,
+        out.final_loss,
+        out.median_step_secs * 1e3
+    );
+
+    // 4. evaluate on held-out data.
+    let acc = common::eval_glue(&mut rt, "tiny-opt", "qst", GlueTask::Sst2, &out, 256)?;
+    println!("SST-2-like accuracy: {acc:.3}");
+    assert!(acc > 0.6, "QST should comfortably beat chance on the synthetic task");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python: JAX model (L2) + Pallas kernels (L1) + the AOT bridge.
+
+Nothing in this package runs on the training path — ``compile.aot`` lowers
+every graph to HLO text once (``make artifacts``); the Rust coordinator loads
+and executes the artifacts via PJRT.
+"""

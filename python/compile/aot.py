@@ -1,0 +1,392 @@
+"""The AOT bridge: lower every (config × method × graph) to HLO **text** +
+a manifest, so the Rust coordinator can run training with zero Python.
+
+Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids.  ``print_large_constants=True`` is required — without
+it embedded constants (the NF4 codebook!) print as ``{...}`` and parse back
+as zeros.
+
+Manifest format (line-based; parsed by ``rust/src/runtime/manifest.rs``)::
+
+    qst-manifest-v1
+    config tiny-opt
+    method qst
+    graph train
+    task cls
+    batch 8 32
+    cfgfield d_model 128
+    ...
+    input 0 g.alpha f32 scalar role=trainable
+    input 1 g.down.00.l1 f32 64x8 role=trainable
+    ...
+    output 0 g.alpha f32 scalar role=trainable
+
+Graph shapes (argument order == manifest order)::
+
+    init      (seed u32[])                      -> trainable...
+    train     (trainable..., m..., v..., step, lr, frozen..., batch...)
+              -> (trainable'..., m'..., v'..., step', loss, gnorm)
+    eval cls  (trainable..., frozen..., tokens, label_pos) -> label logits [B,V]
+    eval lm   (trainable..., frozen..., tokens, targets, mask) -> (loss, last logits)
+    generate  (trainable..., frozen..., tokens, pos)       -> logits [B,V]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, methods, model, optim
+
+DT_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+            jnp.uint32.dtype: "u32", jnp.uint8.dtype: "u8",
+            jnp.int8.dtype: "i8", jnp.float16.dtype: "f16"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _dims(shape):
+    return "scalar" if len(shape) == 0 else "x".join(str(int(d)) for d in shape)
+
+
+class Spec:
+    def __init__(self, name, shape, dtype, role):
+        self.name, self.shape, self.dtype, self.role = name, tuple(shape), dtype, role
+
+    def sds(self):
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def line(self, kind, idx):
+        dt = DT_NAMES[jnp.dtype(self.dtype)]
+        return f"{kind} {idx} {self.name} {dt} {_dims(self.shape)} role={self.role}"
+
+
+def batch_specs(task, b, s):
+    if task == "cls":
+        return [Spec("batch.tokens", (b, s), jnp.int32, "data"),
+                Spec("batch.label_pos", (b,), jnp.int32, "data"),
+                Spec("batch.label_tok", (b,), jnp.int32, "data")]
+    return [Spec("batch.tokens", (b, s), jnp.int32, "data"),
+            Spec("batch.targets", (b, s), jnp.int32, "data"),
+            Spec("batch.mask", (b, s), jnp.float32, "data")]
+
+
+def batch_from_flat(task, vals):
+    if task == "cls":
+        return {"tokens": vals[0], "label_pos": vals[1], "label_tok": vals[2]}
+    return {"tokens": vals[0], "targets": vals[1], "mask": vals[2]}
+
+
+class Artifact:
+    """One lowered graph: name, ordered input/output specs, flat fn."""
+
+    def __init__(self, name, cfg, method, graph, task, in_specs, out_specs, fn,
+                 batch=None, extra_meta=()):
+        self.name, self.cfg, self.method = name, cfg, method
+        self.graph, self.task = graph, task
+        self.in_specs, self.out_specs, self.fn = in_specs, out_specs, fn
+        self.batch = batch
+        self.extra_meta = extra_meta
+
+    def manifest(self):
+        lines = ["qst-manifest-v1",
+                 f"config {self.cfg.name}",
+                 f"method {self.method}",
+                 f"graph {self.graph}",
+                 f"task {self.task or '-'}"]
+        if self.batch:
+            lines.append(f"batch {self.batch[0]} {self.batch[1]}")
+        for k in ("flavor", "vocab", "d_model", "n_layers", "n_heads", "d_ff",
+                  "max_seq", "reduction", "downsample", "downsample_rank",
+                  "qblock", "qgroup", "qdtype", "lora_rank", "lora_alpha",
+                  "adapter_rank"):
+            lines.append(f"cfgfield {k} {getattr(self.cfg, k)}")
+        for k, v in self.extra_meta:
+            lines.append(f"meta {k} {v}")
+        for i, s in enumerate(self.in_specs):
+            lines.append(s.line("input", i))
+        for i, s in enumerate(self.out_specs):
+            lines.append(s.line("output", i))
+        return "\n".join(lines) + "\n"
+
+    def lower(self, out_dir):
+        hlo_path = os.path.join(out_dir, f"{self.name}.hlo.txt")
+        meta_path = os.path.join(out_dir, f"{self.name}.meta.txt")
+        # keep_unused=True: jit must not drop unused args (e.g. eval graphs
+        # never read batch.label_tok) or the compiled ENTRY signature would
+        # desynchronize from the manifest the Rust runtime marshals against.
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*[s.sds() for s in self.in_specs])
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(meta_path, "w") as f:
+            f.write(self.manifest())
+        return hlo_path
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+
+def trainable_specs(cfg, method, role, **kw):
+    tr = methods.get(method).init_trainable(cfg, jax.random.PRNGKey(0), **kw)
+    return [Spec(n, tr[n].shape, tr[n].dtype, role) for n in model.flatten_names(tr)]
+
+
+def frozen_specs(cfg, method):
+    fs = methods.get(method).frozen_spec(cfg)
+    return [Spec(n, fs[n][0], fs[n][1], "frozen") for n in sorted(fs)]
+
+
+def build_init(cfg, method, variant="", **kw):
+    t_specs = trainable_specs(cfg, method, "trainable", **kw)
+    names = [s.name for s in t_specs]
+
+    def fn(seed):
+        tr = methods.get(method).init_trainable(cfg, jax.random.PRNGKey(seed), **kw)
+        return tuple(tr[n] for n in names)
+
+    name = f"{cfg.name}__{method}__init{variant}"
+    return Artifact(name, cfg, method, "init", None,
+                    [Spec("seed", (), jnp.uint32, "seed")], t_specs, fn)
+
+
+def build_train(cfg, method, task, b, s, ct=jnp.float32, variant="", **kw):
+    t_specs = trainable_specs(cfg, method, "trainable", **kw)
+    f_specs = frozen_specs(cfg, method)
+    bt_specs = batch_specs(task, b, s)
+    names = [x.name for x in t_specs]
+    fnames = [x.name for x in f_specs]
+    nt, nf = len(t_specs), len(f_specs)
+    step_fn = methods.make_train_step(cfg, method, task, ct=ct, **kw)
+
+    in_specs = (t_specs
+                + [Spec("opt.m." + n, sp.shape, sp.dtype, "optm") for n, sp in zip(names, t_specs)]
+                + [Spec("opt.v." + n, sp.shape, sp.dtype, "optv") for n, sp in zip(names, t_specs)]
+                + [Spec("opt.step", (), jnp.float32, "step"),
+                   Spec("lr", (), jnp.float32, "lr")]
+                + f_specs + bt_specs)
+    out_specs = (t_specs
+                 + [Spec("opt.m." + n, sp.shape, sp.dtype, "optm") for n, sp in zip(names, t_specs)]
+                 + [Spec("opt.v." + n, sp.shape, sp.dtype, "optv") for n, sp in zip(names, t_specs)]
+                 + [Spec("opt.step", (), jnp.float32, "step"),
+                    Spec("loss", (), jnp.float32, "loss"),
+                    Spec("gnorm", (), jnp.float32, "gnorm")])
+
+    def fn(*flat):
+        tr = dict(zip(names, flat[:nt]))
+        m = dict(zip(names, flat[nt:2 * nt]))
+        v = dict(zip(names, flat[2 * nt:3 * nt]))
+        step = flat[3 * nt]
+        lr = flat[3 * nt + 1]
+        frozen = dict(zip(fnames, flat[3 * nt + 2:3 * nt + 2 + nf]))
+        batch = batch_from_flat(task, flat[3 * nt + 2 + nf:])
+        tr, m, v, step, loss, gnorm = step_fn(tr, m, v, step, lr, frozen, batch)
+        return (tuple(tr[n] for n in names) + tuple(m[n] for n in names)
+                + tuple(v[n] for n in names) + (step, loss, gnorm))
+
+    name = f"{cfg.name}__{method}__{task}__train{variant}"
+    return Artifact(name, cfg, method, "train", task, in_specs, out_specs, fn,
+                    batch=(b, s))
+
+
+def build_eval(cfg, method, task, b, s, ct=jnp.float32, variant="", **kw):
+    t_specs = trainable_specs(cfg, method, "trainable", **kw)
+    f_specs = frozen_specs(cfg, method)
+    bt_specs = batch_specs(task, b, s)
+    names = [x.name for x in t_specs]
+    fnames = [x.name for x in f_specs]
+    nt, nf = len(t_specs), len(f_specs)
+    eval_fn = methods.make_eval_step(cfg, method, task, ct=ct, **kw)
+
+    in_specs = t_specs + f_specs + bt_specs
+    if task == "cls":
+        out_specs = [Spec("logits", (b, cfg.vocab), jnp.float32, "logits")]
+    else:
+        out_specs = [Spec("loss", (), jnp.float32, "loss"),
+                     Spec("logits", (b, cfg.vocab), jnp.float32, "logits")]
+
+    def fn(*flat):
+        tr = dict(zip(names, flat[:nt]))
+        frozen = dict(zip(fnames, flat[nt:nt + nf]))
+        batch = batch_from_flat(task, flat[nt + nf:])
+        return eval_fn(tr, frozen, batch)
+
+    name = f"{cfg.name}__{method}__{task}__eval{variant}"
+    return Artifact(name, cfg, method, "eval", task, in_specs, out_specs, fn,
+                    batch=(b, s))
+
+
+def build_generate(cfg, method, b, s, ct=jnp.float32, variant="", **kw):
+    """Next-token logits at per-row position `pos` (rows are right-padded)."""
+    t_specs = trainable_specs(cfg, method, "trainable", **kw)
+    f_specs = frozen_specs(cfg, method)
+    names = [x.name for x in t_specs]
+    fnames = [x.name for x in f_specs]
+    nt, nf = len(t_specs), len(f_specs)
+    fwd = methods.get(method).forward
+
+    in_specs = (t_specs + f_specs
+                + [Spec("batch.tokens", (b, s), jnp.int32, "data"),
+                   Spec("batch.pos", (b,), jnp.int32, "data")])
+    out_specs = [Spec("logits", (b, cfg.vocab), jnp.float32, "logits")]
+
+    def fn(*flat):
+        tr = dict(zip(names, flat[:nt]))
+        frozen = dict(zip(fnames, flat[nt:nt + nf]))
+        tokens, pos = flat[nt + nf], flat[nt + nf + 1]
+        logits = fwd(cfg, tr, frozen, tokens, ct=ct, **kw)
+        return (logits[jnp.arange(b), pos],)
+
+    name = f"{cfg.name}__{method}__generate{variant}"
+    return Artifact(name, cfg, method, "generate", "lm", in_specs, out_specs, fn,
+                    batch=(b, s))
+
+
+def build_kernel_bench(m, k, n, qdtype="nf4"):
+    """Standalone fused dequant-matmul + f32-matmul baseline (bench_kernels)."""
+    from . import quant as q
+    from .kernels import nf4
+
+    in_specs = [Spec("x", (m, k), jnp.float32, "data"),
+                Spec("packed", (k // 2, n), jnp.uint8, "data"),
+                Spec("scales", (k // 64, n), jnp.float32, "data"),
+                Spec("wref", (k, n), jnp.float32, "data")]
+    out_specs = [Spec("y_kernel", (m, n), jnp.float32, "logits"),
+                 Spec("y_f32", (m, n), jnp.float32, "logits")]
+
+    def fn(x, packed, scales, wref):
+        yk = nf4.dequant_matmul(x, packed, scales, qdtype=qdtype,
+                                bm=min(128, m), bn=min(128, n))
+        return yk, x @ wref
+
+    cfg = configs.get("nano-opt")
+    name = f"kernel__dequant_matmul__{m}x{k}x{n}"
+    return Artifact(name, cfg, "kernel", "bench", None, in_specs, out_specs, fn)
+
+
+# ---------------------------------------------------------------------------
+# Build list — every artifact the tests / examples / experiments need.
+# ---------------------------------------------------------------------------
+
+
+def build_list():
+    arts = []
+    f16 = jnp.float16
+
+    # --- pretraining (full finetuning graphs double as the pretrainer) ---
+    for cname, b, s in [("nano-opt", 4, 32), ("nano-llama", 4, 32),
+                        ("tiny-opt", 8, 32), ("small-opt", 8, 32), ("med-opt", 4, 32),
+                        ("tiny-llama", 8, 64), ("small-llama", 8, 64),
+                        ("med-llama", 4, 64), ("e2e-llama", 4, 128)]:
+        cfg = configs.get(cname)
+        arts.append(build_init(cfg, "full"))
+        arts.append(build_train(cfg, "full", "lm", b, s))
+        arts.append(build_eval(cfg, "full", "lm", b, s))
+
+    # --- GLUE-like classification (Table 1, Table 5) ---
+    glue = [("tiny-opt", ["qst", "qlora", "lora", "adapter", "lst"]),
+            ("small-opt", ["qst", "qlora"]),
+            ("med-opt", ["qst", "qlora"])]
+    for cname, ms in glue:
+        cfg = configs.get(cname)
+        b, s = (8, 32)
+        for meth in ms:
+            arts.append(build_init(cfg, meth))
+            arts.append(build_train(cfg, meth, "cls", b, s))
+            arts.append(build_eval(cfg, meth, "cls", 32, s))
+
+    # Table 5: fp16 compute-dtype variants (QLoRA unstable, QST stable)
+    for meth in ["qst", "qlora"]:
+        cfg = configs.get("tiny-opt")
+        arts.append(build_train(cfg, meth, "cls", 8, 32, ct=f16, variant="__fp16"))
+
+    # --- MMLU-like + chatbot LM finetuning (Tables 2, 7; Figs 1b, 6) ---
+    for cname in ["tiny-llama", "small-llama", "med-llama"]:
+        cfg = configs.get(cname)
+        b, s = 4, 128
+        for meth in ["qst", "qlora"]:
+            arts.append(build_init(cfg, meth))
+            arts.append(build_train(cfg, meth, "lm", b, s))
+            arts.append(build_eval(cfg, meth, "lm", b, s))
+            arts.append(build_generate(cfg, meth, 1, s))
+
+    # --- Fig 5: reduction-factor sweep (r = 2..32; d_side >= 4) ---
+    for r in [2, 4, 16, 32]:  # r=8 is tiny-llama's default, built above
+        cfg = configs.get("tiny-llama").with_(reduction=r)
+        arts.append(build_init(cfg, "qst", variant=f"__r{r}"))
+        arts.append(build_train(cfg, "qst", "lm", 4, 128, variant=f"__r{r}"))
+        arts.append(build_eval(cfg, "qst", "lm", 4, 128, variant=f"__r{r}"))
+
+    # --- Table 4: FP4 vs NF4 ---
+    cfg4 = configs.get("tiny-llama").with_(qdtype="fp4")
+    arts.append(build_init(cfg4, "qst", variant="__fp4"))
+    arts.append(build_train(cfg4, "qst", "lm", 4, 128, variant="__fp4"))
+    arts.append(build_eval(cfg4, "qst", "lm", 4, 128, variant="__fp4"))
+
+    # --- Table 6: downsample-module ablation ---
+    for ds in ["linear", "lora", "maxpool", "avgpool"]:  # adapter is the default
+        cfg = configs.get("tiny-llama").with_(downsample=ds)
+        arts.append(build_init(cfg, "qst", variant=f"__ds_{ds}"))
+        arts.append(build_train(cfg, "qst", "lm", 4, 128, variant=f"__ds_{ds}"))
+        arts.append(build_eval(cfg, "qst", "lm", 4, 128, variant=f"__ds_{ds}"))
+
+    # --- e2e driver (quickstart / e2e_train / chatbot examples) ---
+    cfg = configs.get("e2e-llama")
+    for meth in ["qst"]:
+        arts.append(build_init(cfg, meth))
+        arts.append(build_train(cfg, meth, "lm", 4, 128))
+        arts.append(build_eval(cfg, meth, "lm", 4, 128))
+        arts.append(build_generate(cfg, meth, 1, 128))
+
+    # --- kernel microbench artifacts ---
+    arts.append(build_kernel_bench(64, 512, 512))
+    arts.append(build_kernel_bench(128, 1024, 1024))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arts = build_list()
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+    if args.list:
+        for a in arts:
+            print(a.name)
+        return
+
+    done = skipped = 0
+    for a in arts:
+        hlo = os.path.join(args.out, f"{a.name}.hlo.txt")
+        if not args.force and os.path.exists(hlo):
+            skipped += 1
+            continue
+        import time
+        t0 = time.time()
+        a.lower(args.out)
+        sz = os.path.getsize(hlo)
+        print(f"[aot] {a.name}: {sz/1e6:.1f} MB in {time.time()-t0:.1f}s", flush=True)
+        done += 1
+    print(f"[aot] built {done}, skipped {skipped} (already present)")
+
+
+if __name__ == "__main__":
+    main()

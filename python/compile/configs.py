@@ -1,0 +1,134 @@
+"""Model size/architecture configurations shared between the JAX build path and
+the Rust coordinator (echoed into every artifact manifest).
+
+The sandbox is a single CPU core, so the *runnable* configs are scaled-down
+proxies of the paper's OPT / LLaMA-2 models (same architecture family, same
+finetuning-method mechanics).  The paper's true dimensions live in
+``rust/src/costmodel/paperdims.rs`` and are only used by the analytical
+memory/FLOPs models.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the (frozen) backbone LLM ``f``.
+
+    flavor:
+      * ``opt``   — pre-LN LayerNorm(+bias), learned positional embeddings,
+                    GELU 4x MLP, linear biases (OPT family).
+      * ``llama`` — RMSNorm (no bias), rotary position embeddings, SwiGLU MLP,
+                    no biases (LLaMA-2 family).
+    """
+
+    name: str
+    flavor: str  # "opt" | "llama"
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+
+    # --- QST / side-network hyperparameters (paper §3.2) ---
+    reduction: int = 16          # r: side-net width = d_model / r
+    downsample: str = "adapter"  # linear | lora | adapter | maxpool | avgpool
+    downsample_rank: int = 16    # rank of the LoRA/Adapter downsample modules
+
+    # --- quantization (paper §3.1) ---
+    qblock: int = 64             # elements per quantization block
+    qgroup: int = 256            # scales per double-quantization group
+    qdtype: str = "nf4"          # nf4 | fp4
+
+    # --- baseline hyperparameters ---
+    lora_rank: int = 16
+    lora_alpha: int = 16
+    adapter_rank: int = 16       # Houlsby adapter bottleneck (baseline method)
+
+    def __post_init__(self):
+        assert self.flavor in ("opt", "llama"), self.flavor
+        assert self.d_model % self.n_heads == 0
+        assert self.d_model % self.reduction == 0, "d_model must divide by r"
+        assert self.downsample in ("linear", "lora", "adapter", "maxpool", "avgpool")
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_side(self) -> int:
+        return self.d_model // self.reduction
+
+    @property
+    def side_heads(self) -> int:
+        # Keep head dim >= 8 in the side net; fall back to a single head.
+        h = self.n_heads // self.reduction
+        return max(1, h) if self.d_side % max(1, h) == 0 else 1
+
+    def with_(self, **kw) -> "ModelConfig":
+        d = asdict(self)
+        d.update(kw)
+        return ModelConfig(**d)
+
+    def n_params_backbone(self) -> int:
+        """Parameter count of the frozen backbone (tied LM head)."""
+        d, L, V, ff = self.d_model, self.n_layers, self.vocab, self.d_ff
+        emb = V * d
+        pos = self.max_seq * d if self.flavor == "opt" else 0
+        if self.flavor == "opt":
+            attn = 4 * d * d + 4 * d          # qkv+o with bias
+            mlp = 2 * d * ff + ff + d
+            norms = 2 * 2 * d                 # ln1, ln2 (scale+bias)
+        else:
+            attn = 4 * d * d
+            mlp = 3 * d * ff                  # gate, up, down
+            norms = 2 * d                     # rms1, rms2 (scale)
+        final_norm = 2 * d if self.flavor == "opt" else d
+        return emb + pos + L * (attn + mlp + norms) + final_norm
+
+
+# --------------------------------------------------------------------------
+# Size registry.  Proxy sizes chosen so a full experiment sweep fits a single
+# CPU core; "paper model → proxy" mapping is recorded in DESIGN.md §3.
+# --------------------------------------------------------------------------
+
+def _mk(name, flavor, V, d, L, H, ff, S, **kw):
+    return ModelConfig(name=name, flavor=flavor, vocab=V, d_model=d, n_layers=L,
+                       n_heads=H, d_ff=ff, max_seq=S, **kw)
+
+
+CONFIGS = {
+    # tests / CI — a few hundred k params
+    "nano-opt": _mk("nano-opt", "opt", 256, 64, 2, 4, 256, 64, reduction=4, downsample_rank=8, lora_rank=8, adapter_rank=8),
+    "nano-llama": _mk("nano-llama", "llama", 256, 64, 2, 4, 192, 64, reduction=4, downsample_rank=8, lora_rank=8, adapter_rank=8),
+    # proxy for OPT-1.3B in GLUE-like experiments (~1.6M backbone params)
+    "tiny-opt": _mk("tiny-opt", "opt", 512, 128, 4, 4, 512, 64, reduction=8, downsample_rank=8),
+    # proxy for OPT-2.7B (~6M)
+    "small-opt": _mk("small-opt", "opt", 1024, 192, 6, 6, 768, 64, reduction=8, downsample_rank=8),
+    # proxy for OPT-6.7B (~11M)
+    "med-opt": _mk("med-opt", "opt", 1024, 256, 8, 8, 1024, 64, reduction=8, downsample_rank=8),
+    # proxies for LLaMA-2 family (MMLU-like / chat experiments)
+    "tiny-llama": _mk("tiny-llama", "llama", 512, 128, 4, 4, 384, 128, reduction=8, downsample_rank=8),
+    "small-llama": _mk("small-llama", "llama", 1024, 192, 6, 6, 512, 128, reduction=8, downsample_rank=8),
+    "med-llama": _mk("med-llama", "llama", 1024, 256, 8, 8, 704, 128, reduction=8, downsample_rank=8),
+    # end-to-end driver: the largest model a single-core-CPU training run
+    # sustains for a few hundred steps (~26M backbone params)
+    "e2e-llama": _mk("e2e-llama", "llama", 2048, 512, 8, 8, 1408, 128, reduction=16, downsample_rank=16),
+}
+
+# Mapping used by the experiment harness: paper model -> runnable proxy.
+PAPER_PROXY = {
+    "OPT-1.3B": "tiny-opt",
+    "OPT-2.7B": "small-opt",
+    "OPT-6.7B": "med-opt",
+    "LLaMA-2-7B": "tiny-llama",
+    "LLaMA-2-13B": "small-llama",
+    "LLaMA-2-70B": "med-llama",
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config '{name}'; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

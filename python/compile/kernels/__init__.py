@@ -1,0 +1,9 @@
+"""L1 Pallas kernels: the paper's compute hot-spots.
+
+* ``nf4.dequant_matmul`` — fused 4-bit dequantize + matmul (QST forward path)
+* ``quantize.quantize_blockwise`` — blockwise absmax NF4/FP4 quantizer
+* ``pool.maxpool`` / ``pool.avgpool`` — gradient-free downsample modules
+* ``ref`` — pure-jnp oracles for all of the above
+"""
+
+from . import nf4, pool, quantize, ref  # noqa: F401

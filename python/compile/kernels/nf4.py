@@ -1,0 +1,132 @@
+"""Pallas fused dequantize-and-matmul kernel — the QST forward hot-spot.
+
+The paper's CUDA realization (bitsandbytes-style) stages 4-bit weight tiles
+through shared memory, dequantizes in registers, and feeds tensor cores.  The
+TPU-shaped Pallas mapping (DESIGN.md §8):
+
+* ``BlockSpec`` tiles stream ``x`` (bm, K) and a packed-weight stripe
+  (K//2, bn) HBM→VMEM per grid step — the double-buffered pipeline Pallas
+  generates replaces the CUDA shared-memory staging loop.
+* Tile K-extent is always a multiple of the 64-element quantization block so
+  every tile carries whole scale rows (no cross-tile scale fetch).
+* Dequantization is a 16-entry codebook lookup on the VPU (one-hot matmul
+  against the codebook — gathers lower poorly in interpret mode), then the
+  f32 tile feeds the MXU-shaped ``jnp.dot``.
+
+Run under ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so real-TPU performance is *estimated* in
+EXPERIMENTS.md §Perf from the VMEM footprint / MXU shape of these tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quant
+
+
+def _dequant_tile(packed_tile, scales_tile, code, qblock):
+    """u8[Kp, bn] packed + f32[KB, bn] scales -> f32[K, bn] weights."""
+    kp, bn = packed_tile.shape
+    k = kp * 2
+    lo = (packed_tile & 0xF).astype(jnp.int32)
+    hi = (packed_tile >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(k, bn)
+    # One-hot codebook expansion: idx -> f32 via (k*bn, 16) @ (16,) contraction.
+    onehot = (idx.reshape(-1, 1) == jnp.arange(16, dtype=jnp.int32)).astype(code.dtype)
+    w = (onehot @ code).reshape(k, bn)
+    w = (w.reshape(k // qblock, qblock, bn) * scales_tile[:, None, :]).reshape(k, bn)
+    return w
+
+
+def _kernel(x_ref, packed_ref, scales_ref, code_ref, o_ref, *, qblock):
+    w = _dequant_tile(packed_ref[...], scales_ref[...], code_ref[...], qblock)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("qdtype", "qblock", "bm", "bn", "interpret"))
+def dequant_matmul(x, packed, scales, *, qdtype="nf4", qblock=64,
+                   bm=128, bn=128, interpret=True):
+    """y = x @ dequant(packed, scales) as a Pallas kernel.
+
+    x: f32[M, K]; packed: u8[K//2, N]; scales: f32[K//qblock, N] -> f32[M, N].
+    Grid is (M/bm, N/bn); each program dequantizes one (K, bn) weight stripe in
+    VMEM and contracts it against an (bm, K) activation tile.
+    """
+    m, k = x.shape
+    n = packed.shape[1]
+    assert packed.shape[0] == k // 2 and scales.shape == (k // qblock, n)
+    def fit(block, total):
+        block = min(block, total)
+        while total % block != 0:
+            block -= 1
+        return block
+
+    bm = fit(bm, m)
+    bn = fit(bn, n)
+    code = quant.codebook(qdtype)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k // 2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // qblock, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((16,), lambda i, j: (0,)),  # codebook, resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scales, code)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: interpret-mode pallas_call does not support reverse-mode AD, so
+# the kernel carries a custom VJP — the same shape as bitsandbytes' CUDA
+# autograd function: forward runs the fused kernel, backward dequantizes once
+# more and contracts dy @ W^T.  The quantized weights are constants, so no
+# cotangent flows into packed/scales (only QLoRA's activation-gradient path
+# needs this; QST never differentiates through the backbone at all).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def dequant_matmul_ad(x, packed, scales, qdtype="nf4", qblock=64, bm=128, bn=128):
+    return dequant_matmul(x, packed, scales, qdtype=qdtype, qblock=qblock, bm=bm, bn=bn)
+
+
+def _dequant_full(packed, scales, qdtype, qblock):
+    k, n = packed.shape[0] * 2, packed.shape[1]
+    code = quant.codebook(qdtype)
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(k, n)
+    w = jnp.take(code, idx.reshape(-1)).reshape(k, n)
+    return (w.reshape(k // qblock, qblock, n) * scales[:, None, :]).reshape(k, n)
+
+
+def _dm_fwd(x, packed, scales, qdtype, qblock, bm, bn):
+    y = dequant_matmul(x, packed, scales, qdtype=qdtype, qblock=qblock, bm=bm, bn=bn)
+    return y, (packed, scales)
+
+
+def _dm_bwd(qdtype, qblock, bm, bn, res, dy):
+    packed, scales = res
+    w = _dequant_full(packed, scales, qdtype, qblock)
+    return (dy @ w.T, None, None)
+
+
+dequant_matmul_ad.defvjp(_dm_fwd, _dm_bwd)
+
+
+def vmem_bytes(k, bm, bn, qblock=64):
+    """Estimated VMEM working set of one grid step (perf model, DESIGN.md §8)."""
+    x_tile = bm * k * 4
+    packed_tile = (k // 2) * bn
+    scales_tile = (k // qblock) * bn * 4
+    w_tile = k * bn * 4          # dequantized stripe
+    out_tile = bm * bn * 4
+    return x_tile + packed_tile + scales_tile + w_tile + out_tile

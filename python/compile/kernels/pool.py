@@ -1,0 +1,82 @@
+"""Pallas gradient-free downsample kernels (paper §3.2, Table 6).
+
+Max/AvgPooling over the feature dimension map the backbone hidden state
+f32[T, d] to the side-network width f32[T, d/r] with **zero trainable
+parameters** — the cheapest of the paper's downsample-module family.
+
+Grid tiles rows (tokens); the feature reduction happens entirely in-register
+on the VPU, so the kernel is memory-bound: one d-wide read, one d/r-wide
+write per token.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, o_ref, *, r, op):
+    h = h_ref[...]
+    bt, d = h.shape
+    g = h.reshape(bt, d // r, r)
+    o_ref[...] = jnp.max(g, axis=-1) if op == "max" else jnp.mean(g, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "op", "bt", "interpret"))
+def pool(h, *, r, op="avg", bt=128, interpret=True):
+    """h: f32[T, d] -> f32[T, d//r] via max/avg pooling over feature groups."""
+    t, d = h.shape
+    assert d % r == 0
+    bt = min(bt, t)
+    assert t % bt == 0
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_kernel, r=r, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, d // r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d // r), jnp.float32),
+        interpret=interpret,
+    )(h)
+
+
+def maxpool(h, r, **kw):
+    return pool(h, r=r, op="max", **kw)
+
+
+def avgpool(h, r, **kw):
+    return pool(h, r=r, op="avg", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: interpret-mode pallas_call lacks reverse-mode AD, so pooling gets
+# a custom VJP (avg: spread dy/r over the group; max: route dy to the argmax).
+# QST never needs this (pool inputs are stop_gradient'ed backbone states) but
+# it keeps the kernels drop-in usable in differentiable contexts.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def pool_ad(h, r, op="avg", bt=128):
+    return pool(h, r=r, op=op, bt=bt)
+
+
+def _pool_fwd(h, r, op, bt):
+    return pool(h, r=r, op=op, bt=bt), h
+
+
+def _pool_bwd(r, op, bt, h, dy):
+    t, d = h.shape
+    g = h.reshape(t, d // r, r)
+    if op == "avg":
+        dh = jnp.broadcast_to(dy[..., None] / r, g.shape)
+    else:
+        is_max = g == jnp.max(g, axis=-1, keepdims=True)
+        # split ties evenly, as jnp.max's subgradient convention
+        share = is_max / jnp.maximum(1, jnp.sum(is_max, axis=-1, keepdims=True))
+        dh = dy[..., None] * share
+    return (dh.reshape(t, d),)
+
+
+pool_ad.defvjp(_pool_fwd, _pool_bwd)

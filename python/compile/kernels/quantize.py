@@ -1,0 +1,61 @@
+"""Pallas blockwise-quantize kernel (f32 weights -> packed NF4/FP4 + scales).
+
+Used on the *build/quantize* path (Rust quantizes checkpoints with its own
+implementation; this kernel exists so the whole format round-trips inside one
+HLO module for the quantization-error experiments, Table 4) and as the L1
+counterpart of ``rust/src/quant``.
+
+Grid runs over column tiles; each program quantizes a full (K, bn) stripe:
+absmax per 64-element block, nearest-codebook rounding, nibble packing.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quant
+
+
+def _kernel(w_ref, code_ref, packed_ref, scales_ref, *, qblock):
+    w = w_ref[...]
+    code = code_ref[...]
+    k, bn = w.shape
+    blocks = w.reshape(k // qblock, qblock, bn)
+    scales = jnp.max(jnp.abs(blocks), axis=1)
+    safe = jnp.where(scales == 0.0, 1.0, scales)
+    normed = blocks / safe[:, None, :]
+    # nearest codebook entry (16-way argmin on the VPU)
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code), axis=-1)
+    idx = idx.reshape(k, bn).astype(jnp.uint8)
+    lo = idx[0::2, :]
+    hi = idx[1::2, :]
+    packed_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+    scales_ref[...] = scales
+
+
+@functools.partial(jax.jit, static_argnames=("qdtype", "qblock", "bn", "interpret"))
+def quantize_blockwise(w, *, qdtype="nf4", qblock=64, bn=128, interpret=True):
+    """w: f32[K, N] -> (packed u8[K//2, N], scales f32[K//qblock, N])."""
+    k, n = w.shape
+    assert k % (2 * qblock) == 0 or k % qblock == 0 and k % 2 == 0, (k, qblock)
+    bn = min(bn, n)
+    assert n % bn == 0
+    code = quant.codebook(qdtype)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_kernel, qblock=qblock),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j)),
+                  pl.BlockSpec((16,), lambda j: (0,))],
+        out_specs=[
+            pl.BlockSpec((k // 2, bn), lambda j: (0, j)),
+            pl.BlockSpec((k // qblock, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k // 2, n), jnp.uint8),
+            jax.ShapeDtypeStruct((k // qblock, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w, code)

@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: pytest + hypothesis compare each
+Pallas kernel (run under ``interpret=True``) against these functions across
+shapes and dtypes.  They are deliberately written in the most obvious way.
+"""
+
+import jax.numpy as jnp
+
+from .. import quant
+
+
+def dequant_matmul_ref(x, packed, scales, qdtype="nf4", qblock=64):
+    """y = x @ dequant(packed, scales).
+
+    x: f32[M, K]; packed: u8[K//2, N] (nibbles run down the K axis, low nibble
+    first); scales: f32[K//qblock, N] — one absmax scale per (qblock-row, col)
+    stripe.  Returns f32[M, N].
+    """
+    K = x.shape[1]
+    N = packed.shape[1]
+    code = quant.codebook(qdtype)
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(K, N)  # interleave along K
+    w = jnp.take(code, idx.reshape(-1)).reshape(K, N)
+    w = (w.reshape(K // qblock, qblock, N) * scales[:, None, :]).reshape(K, N)
+    return x @ w
+
+
+def quantize_ref(w, qdtype="nf4", qblock=64):
+    """Column-stripe blockwise quantization matching dequant_matmul_ref layout.
+
+    w: f32[K, N] -> (packed u8[K//2, N], scales f32[K//qblock, N]).
+    """
+    K, N = w.shape
+    code = quant.codebook(qdtype)
+    blocks = w.reshape(K // qblock, qblock, N)
+    scales = jnp.max(jnp.abs(blocks), axis=1)  # [K//qblock, N]
+    safe = jnp.where(scales == 0.0, 1.0, scales)
+    normed = blocks / safe[:, None, :]
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code), axis=-1)  # [KB, qblock, N]
+    idx = idx.reshape(K, N).astype(jnp.uint8)
+    lo = idx[0::2, :]
+    hi = idx[1::2, :]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scales
+
+
+def avgpool_ref(h, r):
+    """Feature-dim average pooling d -> d/r.  h: f32[..., d]."""
+    d = h.shape[-1]
+    return jnp.mean(h.reshape(*h.shape[:-1], d // r, r), axis=-1)
+
+
+def maxpool_ref(h, r):
+    """Feature-dim max pooling d -> d/r.  h: f32[..., d]."""
+    d = h.shape[-1]
+    return jnp.max(h.reshape(*h.shape[:-1], d // r, r), axis=-1)

@@ -1,0 +1,75 @@
+"""Finetuning methods: the paper's QST plus every baseline it compares to.
+
+Each method module exposes the same protocol, consumed by ``aot.py``:
+
+* ``init_trainable(cfg, key) -> dict``       — trainable parameter tree
+* ``frozen_spec(cfg) -> dict[name, (shape, dtype)]`` — frozen inputs the Rust
+  coordinator must provide (f32 backbone and/or quantized ``q.*`` tensors)
+* ``forward(cfg, trainable, frozen, tokens, ct) -> logits f32[B, S, V]``
+
+``make_loss`` / ``make_train_step`` below assemble task losses and in-graph
+AdamW around that protocol, so every method lowers to the same artifact shape
+and the coordinator is completely method-agnostic.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model, optim
+from . import adapter, full, lora, lst, qlora, qst  # noqa: F401
+
+REGISTRY = {
+    "full": full,
+    "lora": lora,
+    "qlora": qlora,
+    "adapter": adapter,
+    "lst": lst,
+    "qst": qst,
+}
+
+
+def get(name: str):
+    return REGISTRY[name]
+
+
+def make_loss(cfg, method_name, task, ct=jnp.float32, **method_kw):
+    """loss(trainable, frozen, batch) -> (loss, logits)."""
+    m = get(method_name)
+
+    def loss_fn(trainable, frozen, batch):
+        logits = m.forward(cfg, trainable, frozen, batch["tokens"], ct=ct, **method_kw)
+        if task == "cls":
+            loss = model.cls_loss(logits, batch["label_pos"], batch["label_tok"])
+        else:
+            loss = model.lm_loss(logits, batch["targets"], batch["mask"])
+        return loss, logits
+
+    return loss_fn
+
+
+def make_train_step(cfg, method_name, task, ct=jnp.float32, **method_kw):
+    """(trainable, m, v, step, lr, frozen, batch) -> (trainable', m', v', step', loss, gnorm)."""
+    loss_fn = make_loss(cfg, method_name, task, ct, **method_kw)
+
+    def train_step(trainable, m, v, step, lr, frozen, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda t: loss_fn(t, frozen, batch), has_aux=True)(trainable)
+        grads, gnorm = optim.clip_by_global_norm(grads)
+        trainable, m, v, step = optim.adamw_update(trainable, grads, m, v, step, lr)
+        return trainable, m, v, step, loss, gnorm
+
+    return train_step
+
+
+def make_eval_step(cfg, method_name, task, ct=jnp.float32, **method_kw):
+    """cls -> label-position logits f32[B, V]; lm -> (loss, last-pos logits)."""
+    m = get(method_name)
+
+    def eval_step(trainable, frozen, batch):
+        logits = m.forward(cfg, trainable, frozen, batch["tokens"], ct=ct, **method_kw)
+        if task == "cls":
+            return (model.cls_logits(logits, batch["label_pos"]),)
+        loss = model.lm_loss(logits, batch["targets"], batch["mask"])
+        return (loss, logits[:, -1, :])
+
+    return eval_step

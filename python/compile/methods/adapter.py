@@ -1,0 +1,38 @@
+"""Houlsby adapters (Houlsby et al. 2019): bottleneck MLPs inserted after the
+attention and MLP sublayers; 16-bit frozen base, full-depth backprop."""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model
+from . import specs
+
+
+def init_trainable(cfg, key):
+    p = {}
+    d, rank = cfg.d_model, cfg.adapter_rank
+    for i in range(cfg.n_layers):
+        for sub in ("attn", "mlp"):
+            pre = f"ad.layers.{i:02d}.{sub}"
+            key, k1 = jax.random.split(key)
+            p[f"{pre}.w1"] = model._dense_init(k1, d, (d, rank))
+            p[f"{pre}.b1"] = jnp.zeros((rank,), jnp.float32)
+            p[f"{pre}.w2"] = jnp.zeros((rank, d), jnp.float32)  # zero-init out proj
+            p[f"{pre}.b2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def frozen_spec(cfg):
+    return specs.backbone_f32_spec(cfg)
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32):
+    getw = model.FullWeights(frozen, ct)
+
+    def adapters(pre, sub, y):
+        a = f"ad.{pre[2:]}.{sub}"  # f.layers.NN -> ad.layers.NN.sub
+        h = jax.nn.gelu(y @ trainable[f"{a}.w1"].astype(ct) + trainable[f"{a}.b1"].astype(ct))
+        return y + h @ trainable[f"{a}.w2"].astype(ct) + trainable[f"{a}.b2"].astype(ct)
+
+    h, _ = model.backbone_fwd(cfg, getw, tokens, adapters=adapters, ct=ct)
+    return model.final_logits(cfg, getw, h, ct)

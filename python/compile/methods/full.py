@@ -1,0 +1,24 @@
+"""Full finetuning: every backbone parameter is trainable.
+
+Doubles as the *pretraining* method — the Rust coordinator uses the
+``full``/``lm`` train artifact to create the base checkpoints that the
+PEFT methods then freeze (and QST/QLoRA quantize).
+"""
+
+import jax.numpy as jnp
+
+from .. import model
+
+
+def init_trainable(cfg, key):
+    return model.init_backbone(cfg, key)
+
+
+def frozen_spec(cfg):
+    return {}
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32):
+    getw = model.FullWeights(trainable, ct)
+    h, _ = model.backbone_fwd(cfg, getw, tokens, ct=ct)
+    return model.final_logits(cfg, getw, h, ct)

@@ -1,0 +1,29 @@
+"""LoRA (Hu et al. 2021): low-rank deltas on every backbone matmul, 16-bit
+frozen base.  Backprop runs through the whole backbone (the activation
+footprint the paper's M3 analysis charges it for)."""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model
+
+
+def init_trainable(cfg, key):
+    p = {}
+    for name, (k, n) in model.quantizable_names(cfg).items():
+        key, ka = jax.random.split(key)
+        p[f"lora.{name}.a"] = model._dense_init(ka, k, (k, cfg.lora_rank))
+        p[f"lora.{name}.b"] = jnp.zeros((cfg.lora_rank, n), jnp.float32)  # zero-init: identity start
+    return p
+
+
+def frozen_spec(cfg):
+    from . import specs
+    return specs.backbone_f32_spec(cfg)
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32):
+    base = model.FullWeights(frozen, ct)
+    getw = model.LoraWeights(base, trainable, cfg)
+    h, _ = model.backbone_fwd(cfg, getw, tokens, ct=ct)
+    return model.final_logits(cfg, getw, h, ct)

@@ -1,0 +1,32 @@
+"""LST — Ladder Side-Tuning (Sung et al. 2022): 16-bit frozen base, linear
+downsample modules, prediction from the side network **only** (no α-mix).
+
+This is the faithful baseline: its two costs relative to QST are (1) the
+16-bit backbone weights (no quantization) and (2) the heavy linear
+downsamplers; its quality pathology is the far-from-pretrained init of the
+output head (paper §3.2), which the repetition metric in the chatbot
+experiment probes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model, side
+from . import specs
+
+
+def init_trainable(cfg, key):
+    return side.init_side(cfg, key, downsample="linear")
+
+
+def frozen_spec(cfg):
+    return specs.backbone_f32_spec(cfg)
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32):
+    getw = model.FullWeights(frozen, ct)
+    h, hiddens = model.backbone_fwd(cfg, getw, tokens, collect_hidden=True, ct=ct)
+    hiddens = [jax.lax.stop_gradient(x) for x in hiddens]
+    hg = side.side_fwd(cfg, trainable, hiddens, ds="linear", ct=ct)
+    mixed = side.combine(cfg, trainable, jax.lax.stop_gradient(h), hg, mode="lst", ct=ct)
+    return model.final_logits(cfg, getw, mixed, ct)

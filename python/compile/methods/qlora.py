@@ -1,0 +1,29 @@
+"""QLoRA (Dettmers et al. 2023): NF4 double-quantized frozen base + LoRA.
+
+The forward uses the fused Pallas dequant-matmul for the 4-bit base plus the
+factored (x@A)@B low-rank path.  Gradients flow through the *dequantized*
+weights back to A/B — i.e. full-depth backprop, which is exactly the
+intermediate-activation cost (M3) QST eliminates.
+"""
+
+import jax.numpy as jnp
+
+from .. import model
+from . import lora as lora_mod
+from . import specs
+
+
+def init_trainable(cfg, key):
+    return lora_mod.init_trainable(cfg, key)
+
+
+def frozen_spec(cfg):
+    return specs.backbone_quant_spec(cfg)
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32):
+    qparams, residual = specs.split_quant_frozen(cfg, frozen)
+    base = model.QuantWeights(cfg, qparams, residual, ct)
+    getw = model.LoraWeights(base, trainable, cfg)
+    h, _ = model.backbone_fwd(cfg, getw, tokens, ct=ct)
+    return model.final_logits(cfg, getw, h, ct)

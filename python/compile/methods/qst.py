@@ -1,0 +1,35 @@
+"""QST — the paper's method: NF4/FP4 double-quantized frozen backbone + side
+network with factorized/gradient-free downsample modules + α-mixed output.
+
+``stop_gradient`` on every backbone hidden state makes the no-backprop-
+through-f property explicit in the graph: the only gradient paths run inside
+the side network, so the saved-activation set is the side net's (width d/r)
+plus the N+1 downsampled states — the paper's M3 saving.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model, side
+from . import specs
+
+
+def init_trainable(cfg, key, downsample=None):
+    return side.init_side(cfg, key, downsample=downsample or cfg.downsample)
+
+
+def frozen_spec(cfg):
+    return specs.backbone_quant_spec(cfg)
+
+
+def forward(cfg, trainable, frozen, tokens, ct=jnp.float32, downsample=None):
+    ds = downsample or cfg.downsample
+    qparams, residual = specs.split_quant_frozen(cfg, frozen)
+    getw = model.QuantWeights(cfg, qparams, residual, ct)
+    h, hiddens = model.backbone_fwd(cfg, getw, tokens, collect_hidden=True, ct=ct)
+    # No backprop through f — QST's central memory/time saving (M3).
+    hiddens = [jax.lax.stop_gradient(x) for x in hiddens]
+    h = jax.lax.stop_gradient(h)
+    hg = side.side_fwd(cfg, trainable, hiddens, ds=ds, ct=ct)
+    mixed = side.combine(cfg, trainable, h, hg, mode="qst", ct=ct)
+    return model.final_logits(cfg, getw, mixed, ct)

@@ -1,0 +1,37 @@
+"""Frozen-input specs shared by the method modules.
+
+A *spec* maps input name -> (shape, dtype); ``aot.py`` turns it into manifest
+entries and the Rust coordinator fills the buffers (from a pretrained
+checkpoint, quantizing on its side for ``q.*`` tensors).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import model, quant
+
+
+def backbone_f32_spec(cfg):
+    """All backbone params as plain f32 inputs (16-bit methods)."""
+    p = model.init_backbone(cfg, jax.random.PRNGKey(0))
+    return {k: (v.shape, jnp.float32) for k, v in p.items()}
+
+
+def backbone_quant_spec(cfg):
+    """Quantized matrices (4 tensors each) + f32 residual params."""
+    spec = {}
+    qnames = model.quantizable_names(cfg)
+    for name, (k, n) in qnames.items():
+        for field, (shape, dtype) in quant.qmatrix_specs(k, n, cfg.qblock, cfg.qgroup).items():
+            spec[f"q.{name}.{field}"] = (shape, dtype)
+    for name, (shape, dtype) in backbone_f32_spec(cfg).items():
+        if name not in qnames:
+            spec[name] = (shape, dtype)
+    return spec
+
+
+def split_quant_frozen(cfg, frozen):
+    """Split a quant-spec frozen dict into (qparams, residual f32)."""
+    qparams = {k: v for k, v in frozen.items() if k.startswith("q.")}
+    residual = {k: v for k, v in frozen.items() if not k.startswith("q.")}
+    return qparams, residual

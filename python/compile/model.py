@@ -1,0 +1,351 @@
+"""L2: the backbone LLM ``f`` — a decoder-only transformer in two flavors.
+
+* ``opt``:   learned positional embeddings, pre-LN LayerNorm (scale+bias),
+             GELU 4x MLP, biases on linears — the OPT family.
+* ``llama``: RMSNorm, rotary embeddings, SwiGLU MLP, no biases — LLaMA-2.
+
+Parameters are a flat ``dict[str, jnp.ndarray]``; flattening order for the
+AOT manifests is **sorted by name** (see :func:`flatten_names`).  The forward
+pass is parameterized by a ``getw(name)`` accessor so the same code serves
+full-precision, LoRA-augmented, and NF4-quantized (fused dequant-matmul
+Pallas kernel) weight paths.
+
+The LM head is tied to the embedding matrix, and classification reuses the LM
+head on label tokens (as in the paper).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import nf4
+
+# ---------------------------------------------------------------------------
+# Parameter tree helpers
+# ---------------------------------------------------------------------------
+
+
+def flatten_names(params: dict) -> list:
+    """Canonical flattening order shared with the Rust coordinator."""
+    return sorted(params)
+
+
+def flatten(params: dict) -> list:
+    return [params[k] for k in flatten_names(params)]
+
+
+def unflatten(names: list, values: list) -> dict:
+    return dict(zip(names, values))
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, shape, scale=1.0):
+    return (jax.random.normal(key, shape) * scale / np.sqrt(fan_in)).astype(jnp.float32)
+
+
+def init_backbone(cfg, key) -> dict:
+    """Random init of the full-precision backbone (used by the pretrain path)."""
+    d, ff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    p = {}
+    key, k1, k2 = jax.random.split(key, 3)
+    p["f.emb"] = (jax.random.normal(k1, (V, d)) * 0.02).astype(jnp.float32)
+    if cfg.flavor == "opt":
+        p["f.pos"] = (jax.random.normal(k2, (cfg.max_seq, d)) * 0.02).astype(jnp.float32)
+    for i in range(L):
+        pre = f"f.layers.{i:02d}"
+        key, *ks = jax.random.split(key, 8)
+        for j, wn in enumerate(["wq", "wk", "wv", "wo"]):
+            p[f"{pre}.attn.{wn}"] = _dense_init(ks[j], d, (d, d))
+        if cfg.flavor == "opt":
+            for wn in ["wq", "wk", "wv", "wo"]:
+                p[f"{pre}.attn.b{wn[1]}"] = jnp.zeros((d,), jnp.float32)
+            p[f"{pre}.mlp.w1"] = _dense_init(ks[4], d, (d, ff))
+            p[f"{pre}.mlp.b1"] = jnp.zeros((ff,), jnp.float32)
+            p[f"{pre}.mlp.w2"] = _dense_init(ks[5], ff, (ff, d))
+            p[f"{pre}.mlp.b2"] = jnp.zeros((d,), jnp.float32)
+            p[f"{pre}.ln1.scale"] = jnp.ones((d,), jnp.float32)
+            p[f"{pre}.ln1.bias"] = jnp.zeros((d,), jnp.float32)
+            p[f"{pre}.ln2.scale"] = jnp.ones((d,), jnp.float32)
+            p[f"{pre}.ln2.bias"] = jnp.zeros((d,), jnp.float32)
+        else:
+            p[f"{pre}.mlp.wg"] = _dense_init(ks[4], d, (d, ff))
+            p[f"{pre}.mlp.wu"] = _dense_init(ks[5], d, (d, ff))
+            p[f"{pre}.mlp.wd"] = _dense_init(ks[6], ff, (ff, d))
+            p[f"{pre}.ln1.scale"] = jnp.ones((d,), jnp.float32)
+            p[f"{pre}.ln2.scale"] = jnp.ones((d,), jnp.float32)
+    p["f.lnf.scale"] = jnp.ones((d,), jnp.float32)
+    if cfg.flavor == "opt":
+        p["f.lnf.bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def quantizable_names(cfg) -> dict:
+    """name -> (K, N) for every backbone matrix stored 4-bit when quantized."""
+    d, ff = cfg.d_model, cfg.d_ff
+    out = {}
+    for i in range(cfg.n_layers):
+        pre = f"f.layers.{i:02d}"
+        for wn in ["wq", "wk", "wv", "wo"]:
+            out[f"{pre}.attn.{wn}"] = (d, d)
+        if cfg.flavor == "opt":
+            out[f"{pre}.mlp.w1"] = (d, ff)
+            out[f"{pre}.mlp.w2"] = (ff, d)
+        else:
+            out[f"{pre}.mlp.wg"] = (d, ff)
+            out[f"{pre}.mlp.wu"] = (d, ff)
+            out[f"{pre}.mlp.wd"] = (ff, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Weight accessors ("who provides matrix `name`?")
+# ---------------------------------------------------------------------------
+
+
+class FullWeights:
+    """Plain f32 weights from a single params dict."""
+
+    def __init__(self, params, compute_dtype=jnp.float32):
+        self.p = params
+        self.ct = compute_dtype
+
+    def __call__(self, name):
+        return self.p[name].astype(self.ct)
+
+    def vec(self, name):
+        return self.p[name].astype(self.ct)
+
+
+class QuantWeights:
+    """NF4/FP4 double-quantized matrices + f32 residual params.
+
+    Matmul weights come from the fused Pallas dequant-matmul path; vectors
+    (norms, biases, embeddings) stay 16/32-bit exactly as in the paper.
+    """
+
+    def __init__(self, cfg, qparams, residual, compute_dtype=jnp.float32,
+                 use_kernel=True):
+        self.cfg = cfg
+        self.q = qparams
+        self.r = residual
+        self.ct = compute_dtype
+        self.use_kernel = use_kernel
+        self.shapes = quantizable_names(cfg)
+
+    def dequant(self, name):
+        k, n = self.shapes[name]
+        q = {f: self.q[f"q.{name}.{f}"] for f in ("packed", "qscales", "gabs", "gmean")}
+        w = quant.dequantize_matrix(q, k, n, self.cfg.qdtype, self.cfg.qblock, self.cfg.qgroup)
+        return w.astype(self.ct)
+
+    def matmul(self, x, name):
+        """x @ W via the fused kernel (scales dequantized in-graph first)."""
+        k, n = self.shapes[name]
+        q = {f: self.q[f"q.{name}.{f}"] for f in ("packed", "qscales", "gabs", "gmean")}
+        scales = quant.matrix_scales(q, k // self.cfg.qblock, n, self.cfg.qgroup)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, k).astype(jnp.float32)
+        if self.use_kernel:
+            y = nf4.dequant_matmul_ad(x2, q["packed"], scales,
+                                      self.cfg.qdtype, self.cfg.qblock,
+                                      x2.shape[0], min(128, n))
+        else:
+            from .kernels import ref
+            y = ref.dequant_matmul_ref(x2, q["packed"], scales,
+                                       self.cfg.qdtype, self.cfg.qblock)
+        return y.reshape(*lead, n).astype(self.ct)
+
+    def vec(self, name):
+        return self.r[name].astype(self.ct)
+
+    def __call__(self, name):  # fallback full dequant (used by LoRA delta path)
+        return self.dequant(name)
+
+
+class LoraWeights:
+    """Wrap another accessor and add low-rank deltas W + (alpha/r)·A@B."""
+
+    def __init__(self, base, lora_params, cfg):
+        self.base = base
+        self.lp = lora_params
+        self.scale = cfg.lora_alpha / cfg.lora_rank
+        self.ct = base.ct
+
+    def __call__(self, name):
+        w = self.base(name)
+        a = self.lp.get(f"lora.{name}.a")
+        if a is None:
+            return w
+        b = self.lp[f"lora.{name}.b"]
+        return w + ((a @ b) * self.scale).astype(self.ct)
+
+    def vec(self, name):
+        return self.base.vec(name)
+
+    def matmul(self, x, name):
+        if hasattr(self.base, "matmul"):
+            y = self.base.matmul(x, name)
+        else:
+            y = x @ self.base(name)
+        a = self.lp.get(f"lora.{name}.a")
+        if a is not None:
+            # low-rank path: (x @ A) @ B keeps LoRA FLOPs at O(d·rank)
+            b = self.lp[f"lora.{name}.b"]
+            y = y + ((x @ a.astype(self.ct)) @ b.astype(self.ct)) * self.scale
+        return y
+
+
+def matmul(getw, x, name, bias=None):
+    """Dispatch x @ W(name) through the accessor's fused path when available."""
+    if hasattr(getw, "matmul"):
+        y = getw.matmul(x, name)
+    else:
+        y = x @ getw(name)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x / jnp.sqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(q, k):
+    """Rotary embeddings over [B, H, S, Dh]."""
+    dh = q.shape[-1]
+    s = q.shape[-2]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        xc = x.dtype
+        return jnp.concatenate(
+            [x1 * cos.astype(xc) - x2 * sin.astype(xc),
+             x1 * sin.astype(xc) + x2 * cos.astype(xc)], axis=-1)
+
+    return rot(q), rot(k)
+
+
+def attention(x, getw, pre, n_heads, flavor, ct):
+    b, s, d = x.shape
+    dh = d // n_heads
+
+    def proj(wn):
+        bias = getw.vec(f"{pre}.attn.b{wn[1]}") if flavor == "opt" else None
+        y = matmul(getw, x, f"{pre}.attn.{wn}", bias)
+        return y.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
+    if flavor == "llama":
+        q, k = rope(q, k)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att.astype(jnp.float32), -1e9)
+    att = jax.nn.softmax(att, axis=-1).astype(ct)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    bias = getw.vec(f"{pre}.attn.bo") if flavor == "opt" else None
+    return matmul(getw, y, f"{pre}.attn.wo", bias)
+
+
+def mlp(x, getw, pre, flavor):
+    if flavor == "opt":
+        h = matmul(getw, x, f"{pre}.mlp.w1", getw.vec(f"{pre}.mlp.b1"))
+        h = jax.nn.gelu(h)
+        return matmul(getw, h, f"{pre}.mlp.w2", getw.vec(f"{pre}.mlp.b2"))
+    g = jax.nn.silu(matmul(getw, x, f"{pre}.mlp.wg"))
+    u = matmul(getw, x, f"{pre}.mlp.wu")
+    return matmul(getw, g * u, f"{pre}.mlp.wd")
+
+
+def block(x, getw, pre, cfg, ct, adapters=None):
+    flavor = cfg.flavor
+    if flavor == "opt":
+        h = layer_norm(x, getw.vec(f"{pre}.ln1.scale"), getw.vec(f"{pre}.ln1.bias"))
+    else:
+        h = rms_norm(x, getw.vec(f"{pre}.ln1.scale"))
+    a = attention(h, getw, pre, cfg.n_heads, flavor, ct)
+    if adapters is not None:
+        a = adapters(pre, "attn", a)
+    x = x + a
+    if flavor == "opt":
+        h = layer_norm(x, getw.vec(f"{pre}.ln2.scale"), getw.vec(f"{pre}.ln2.bias"))
+    else:
+        h = rms_norm(x, getw.vec(f"{pre}.ln2.scale"))
+    m = mlp(h, getw, pre, flavor)
+    if adapters is not None:
+        m = adapters(pre, "mlp", m)
+    return x + m
+
+
+def backbone_fwd(cfg, getw, tokens, collect_hidden=False, adapters=None,
+                 ct=jnp.float32):
+    """Forward through f.  Returns (h_N pre-final-norm, [h_0..h_N] if asked)."""
+    b, s = tokens.shape
+    emb = getw.vec("f.emb")
+    x = emb[tokens]
+    if cfg.flavor == "opt":
+        x = x + getw.vec("f.pos")[None, :s, :]
+    x = x.astype(ct)
+    hiddens = [x] if collect_hidden else None
+    for i in range(cfg.n_layers):
+        x = block(x, getw, f"f.layers.{i:02d}", cfg, ct, adapters)
+        if collect_hidden:
+            hiddens.append(x)
+    return x, hiddens
+
+
+def final_logits(cfg, getw, h, ct=jnp.float32):
+    """Tied-embedding LM head on the (mixed) final hidden state."""
+    if cfg.flavor == "opt":
+        h = layer_norm(h, getw.vec("f.lnf.scale"), getw.vec("f.lnf.bias"))
+    else:
+        h = rms_norm(h, getw.vec("f.lnf.scale"))
+    return (h @ getw.vec("f.emb").T.astype(ct)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, targets, mask):
+    """Masked next-token cross-entropy.  logits f32[B,S,V], targets i32[B,S]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def cls_loss(logits, label_pos, label_tok):
+    """Cross-entropy at the label position.  logits f32[B,S,V]."""
+    b = logits.shape[0]
+    at = logits[jnp.arange(b), label_pos]  # [B, V]
+    logp = jax.nn.log_softmax(at, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, label_tok[:, None], axis=-1))
+
+
+def cls_logits(logits, label_pos):
+    b = logits.shape[0]
+    return logits[jnp.arange(b), label_pos]

@@ -1,0 +1,44 @@
+"""AdamW, in-graph (paper: Adam/AdamW with the usual two moments).
+
+The optimizer lives *inside* the train-step HLO so the Rust coordinator only
+threads opaque state buffers between steps.  The learning rate is a scalar
+**input** so L3 owns the schedule (linear/constant + warmup, per the paper's
+Appendix A/B hyperparameters) without re-lowering the artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+CLIP_NORM = 1.0  # global-norm gradient clipping, as in HF Trainer defaults
+
+
+def init_state(params: dict):
+    """(m, v, step) zero state for a trainable param dict."""
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}, jnp.zeros((), jnp.float32)
+
+
+def clip_by_global_norm(grads: dict, max_norm=CLIP_NORM):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return {k: g * scale for k, g in grads.items()}, gn
+
+
+def adamw_update(params, grads, m, v, step, lr, weight_decay=0.01):
+    """One AdamW step.  Decay applies to matrices only (ndim >= 2), matching
+    the convention of not decaying norms/biases/gates."""
+    step = step + 1.0
+    bc1 = 1.0 - B1 ** step
+    bc2 = 1.0 - B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(jnp.float32)
+        mk = B1 * m[k] + (1 - B1) * g
+        vk = B2 * v[k] + (1 - B2) * g * g
+        upd = (mk / bc1) / (jnp.sqrt(vk / bc2) + EPS)
+        wd = weight_decay if params[k].ndim >= 2 else 0.0
+        new_p[k] = params[k] - lr * (upd + wd * params[k])
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v, step

@@ -1,0 +1,202 @@
+"""4-bit blockwise quantization with double-quantized scales (paper §3.1).
+
+Implements the QST/QLoRA storage format:
+
+* A weight tensor ``W`` is flattened and split into blocks of ``qblock``
+  (default 64) elements.  Each block is scaled by its absmax and every element
+  is snapped to the nearest entry of a 16-entry 4-bit codebook (NF4 or FP4).
+  Two 4-bit codes are packed per byte: code ``2i`` in the low nibble of byte
+  ``i``, code ``2i+1`` in the high nibble.  **This nibble convention is part of
+  the on-disk format and is mirrored exactly by ``rust/src/quant``.**
+
+* Double quantization (paper: "we use 8-bit float points to quantize the
+  quantization constants"): per-block absmax scales ``c1`` are grouped by
+  ``qgroup`` (default 256), the group mean is subtracted, and the residual is
+  symmetrically quantized to int8 against the group absmax.  Stored as
+  ``(q8 scales: i8, group absmax: f32/127, group mean: f32)`` — same 8-bit
+  budget per scale as the paper's FP8, documented in DESIGN.md §3.
+
+All functions are pure ``jnp`` and double as the correctness oracle for the
+Pallas kernels in ``kernels/``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# NF4: the information-theoretically optimal 4-bit data type for N(0,1) data
+# (Dettmers et al. 2023, appendix E) — equal expected mass per quantization bin.
+NF4_CODE = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+# FP4 (e2m1, no inf/nan): sign x {0, .5, 1, 1.5, 2, 3, 4, 6} / 6 normalized to
+# absmax 1 so both codebooks share the same scale convention.
+_FP4_POS = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32) / 6.0
+FP4_CODE = np.concatenate([_FP4_POS, -_FP4_POS[1:], [-1.0]]).astype(np.float32)
+# layout: [0, .5/6 .. 1, -.5/6 .. -4/6, -1]  (16 entries, index = 4-bit code)
+
+CODEBOOKS = {"nf4": NF4_CODE, "fp4": FP4_CODE}
+
+
+def codebook(qdtype: str) -> jnp.ndarray:
+    return jnp.asarray(CODEBOOKS[qdtype])
+
+
+# --------------------------------------------------------------------------
+# Blockwise quantize / dequantize (single-level scales)
+# --------------------------------------------------------------------------
+
+def quantize_blockwise(w: jnp.ndarray, qdtype: str = "nf4", qblock: int = 64):
+    """Quantize ``w`` (any shape, numel % (2*qblock) == 0 along flattening).
+
+    Returns ``(packed u8[numel//2], scales f32[numel//qblock])``.
+    """
+    flat = w.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    assert n % qblock == 0, f"numel {n} not divisible by qblock {qblock}"
+    blocks = flat.reshape(-1, qblock)
+    scales = jnp.max(jnp.abs(blocks), axis=1)
+    safe = jnp.where(scales == 0.0, 1.0, scales)
+    normed = blocks / safe[:, None]
+    code = codebook(qdtype)
+    # nearest codebook entry
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code[None, None, :]), axis=-1)
+    idx = idx.reshape(-1).astype(jnp.uint8)
+    lo = idx[0::2]
+    hi = idx[1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scales
+
+
+def dequantize_blockwise(packed, scales, shape, qdtype: str = "nf4", qblock: int = 64):
+    """Inverse of :func:`quantize_blockwise` (up to codebook rounding)."""
+    code = codebook(qdtype)
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(-1)  # interleave lo/hi
+    vals = jnp.take(code, idx)
+    vals = vals.reshape(-1, qblock) * scales[:, None]
+    return vals.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Double quantization of the scales
+# --------------------------------------------------------------------------
+
+def quantize_scales(scales: jnp.ndarray, qgroup: int = 256):
+    """8-bit quantize per-block scales.  Returns (q8 i8[n], gabs f32[g], gmean f32[g]).
+
+    Padding positions (when n % qgroup != 0) are masked out of the group
+    statistics so the last group's mean/absmax reflect only real scales —
+    the Rust quantizer computes the same statistics over the unpadded tail.
+    """
+    n = scales.shape[0]
+    pad = (-n) % qgroup
+    padded = jnp.pad(scales, (0, pad))
+    groups = padded.reshape(-1, qgroup)
+    mask = (jnp.arange(padded.shape[0]) < n).reshape(-1, qgroup).astype(jnp.float32)
+    cnt = jnp.maximum(1.0, jnp.sum(mask, axis=1))
+    gmean = jnp.sum(groups * mask, axis=1) / cnt
+    resid = (groups - gmean[:, None]) * mask
+    gabs = jnp.max(jnp.abs(resid), axis=1)
+    safe = jnp.where(gabs == 0.0, 1.0, gabs)
+    q8 = jnp.round(resid / safe[:, None] * 127.0).astype(jnp.int8)
+    return q8.reshape(-1)[:n], gabs, gmean
+
+
+def dequantize_scales(q8, gabs, gmean, n: int, qgroup: int = 256):
+    pad = (-n) % qgroup
+    q = jnp.pad(q8.astype(jnp.float32), (0, pad)).reshape(-1, qgroup)
+    scales = q / 127.0 * gabs[:, None] + gmean[:, None]
+    return scales.reshape(-1)[:n]
+
+
+# --------------------------------------------------------------------------
+# Full double-quantized tensor format (what Rust ships to the artifacts)
+# --------------------------------------------------------------------------
+
+def quantize_tensor(w, qdtype="nf4", qblock=64, qgroup=256):
+    """Full QST storage format: returns dict of the 4 device tensors."""
+    packed, scales = quantize_blockwise(w, qdtype, qblock)
+    q8, gabs, gmean = quantize_scales(scales, qgroup)
+    return {"packed": packed, "qscales": q8, "gabs": gabs, "gmean": gmean}
+
+
+def dequantize_tensor(q, shape, qdtype="nf4", qblock=64, qgroup=256):
+    nblocks = int(np.prod(shape)) // qblock
+    scales = dequantize_scales(q["qscales"], q["gabs"], q["gmean"], nblocks, qgroup)
+    return dequantize_blockwise(q["packed"], scales, shape, qdtype, qblock)
+
+
+def qtensor_specs(shape, qblock=64, qgroup=256):
+    """Shapes/dtypes of the stored quantized form of a tensor of ``shape``."""
+    numel = int(np.prod(shape))
+    nblocks = numel // qblock
+    ngroups = (nblocks + qgroup - 1) // qgroup
+    return {
+        "packed": ((numel // 2,), jnp.uint8),
+        "qscales": ((nblocks,), jnp.int8),
+        "gabs": ((ngroups,), jnp.float32),
+        "gmean": ((ngroups,), jnp.float32),
+    }
+
+
+def storage_bits_per_param(qblock=64, qgroup=256):
+    """Effective bits/param of the format (paper quotes ~4.127 for QLoRA)."""
+    return 4.0 + 8.0 / qblock + 64.0 / (qblock * qgroup)
+
+
+# --------------------------------------------------------------------------
+# Matrix (column-stripe) format — the layout the model's matmuls consume.
+#
+# For a weight W[K, N] (y = x @ W), quantization blocks are (qblock x 1)
+# column stripes: packed u8[K//2, N] with nibbles running down K (low nibble
+# first), scales f32[K//qblock, N].  This is the layout
+# ``kernels.ref.dequant_matmul_ref`` / the Pallas kernel consume, and the
+# layout ``rust/src/quant`` produces when quantizing a checkpoint.
+# Double quantization flattens the scale matrix row-major.
+# --------------------------------------------------------------------------
+
+def quantize_matrix(w, qdtype="nf4", qblock=64, qgroup=256):
+    """W[K, N] -> dict(packed u8[K//2,N], qscales i8[KB*N], gabs, gmean)."""
+    from .kernels import ref  # local import to avoid a cycle
+
+    packed, scales = ref.quantize_ref(w, qdtype, qblock)
+    q8, gabs, gmean = quantize_scales(scales.reshape(-1), qgroup)
+    return {"packed": packed, "qscales": q8, "gabs": gabs, "gmean": gmean}
+
+
+def matrix_scales(q, kb, n, qgroup=256):
+    """Recover the f32 scale matrix [K//qblock, N] from a quantized matrix."""
+    return dequantize_scales(q["qscales"], q["gabs"], q["gmean"], kb * n, qgroup).reshape(kb, n)
+
+
+def dequantize_matrix(q, k, n, qdtype="nf4", qblock=64, qgroup=256):
+    """Full dequantization of a column-stripe quantized matrix -> f32[K, N]."""
+    code = codebook(qdtype)
+    packed = q["packed"]
+    scales = matrix_scales(q, k // qblock, n, qgroup)
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(k, n)
+    w = jnp.take(code, idx.reshape(-1)).reshape(k, n)
+    return (w.reshape(k // qblock, qblock, n) * scales[:, None, :]).reshape(k, n)
+
+
+def qmatrix_specs(k, n, qblock=64, qgroup=256):
+    """Shapes/dtypes of the stored quantized form of W[K, N]."""
+    nblocks = (k // qblock) * n
+    ngroups = (nblocks + qgroup - 1) // qgroup
+    return {
+        "packed": ((k // 2, n), jnp.uint8),
+        "qscales": ((nblocks,), jnp.int8),
+        "gabs": ((ngroups,), jnp.float32),
+        "gmean": ((ngroups,), jnp.float32),
+    }

@@ -1,0 +1,125 @@
+"""The QST/LST side network ``g`` (paper §3.2, Figure 3).
+
+``g`` is a transformer of the same flavor as the backbone ``f`` but with every
+width divided by the reduction factor ``r``.  The input of side layer ``i``
+mixes the downsampled backbone hidden state with the previous side state:
+
+    u_i    = (1 - β_i) · downsample_i(h_f[i]) + β_i · h_g[i-1]
+    h_g[i] = side_block_i(u_i),       β_i = sigmoid(γ_i),  γ_i zero-init
+
+Downsample-module family (paper Table 6): ``linear`` (what LST uses — heavy),
+``lora``/``adapter`` (factorized, ~8% of trainable params), ``maxpool``/
+``avgpool`` (gradient-free Pallas kernels, zero params).
+
+Output head: QST mixes the backbone's final hidden state back in,
+``h = α·h_f[N] + (1-α)·upsample(h_g[N])`` with α = sigmoid(a), a init ≫ 0 so
+training starts at the pretrained model (the LoRA-style identity init that
+fixes LST's repetition pathology).  LST predicts from ``upsample(h_g[N])``
+alone (no α-mix) — kept as a separate mode so the ablation is faithful.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import pool
+
+DOWNSAMPLE_KINDS = ("linear", "lora", "adapter", "maxpool", "avgpool")
+
+
+def init_side(cfg, key, downsample=None) -> dict:
+    """Init side-network params ``g.*`` (trainable set for QST/LST)."""
+    ds = downsample or cfg.downsample
+    assert ds in DOWNSAMPLE_KINDS
+    d, r = cfg.d_model, cfg.reduction
+    dg = cfg.d_side
+    rank = cfg.downsample_rank
+    side_cfg = cfg.with_(name=cfg.name + "-side", d_model=dg,
+                         n_heads=cfg.side_heads, d_ff=max(4, cfg.d_ff // r),
+                         reduction=1)
+    key, kb = jax.random.split(key)
+    p = {("g." + k[2:] if k.startswith("f.") else k): v
+         for k, v in model.init_backbone(side_cfg, kb).items()
+         if k != "f.emb" and k != "f.pos"}
+
+    # downsample modules: one per layer plus one for the embedding output
+    for i in range(cfg.n_layers + 1):
+        pre = f"g.down.{i:02d}"
+        key, k1, k2 = jax.random.split(key, 3)
+        if ds == "linear":
+            p[f"{pre}.w"] = model._dense_init(k1, d, (d, dg))
+            p[f"{pre}.b"] = jnp.zeros((dg,), jnp.float32)
+        elif ds in ("lora", "adapter"):
+            p[f"{pre}.l1"] = model._dense_init(k1, d, (d, rank))
+            p[f"{pre}.l2"] = model._dense_init(k2, rank, (rank, dg))
+        # maxpool / avgpool: parameter-free
+    # upsample back to d, zero-init so the α-mix starts exactly at f's output
+    key, ku = jax.random.split(key)
+    p["g.up.w"] = jnp.zeros((dg, d), jnp.float32)
+    p["g.up.b"] = jnp.zeros((d,), jnp.float32)
+    # per-layer gates γ (zero-init → β = 0.5) and output gate a.
+    # Paper: α init 1 (pure pretrained start).  Exactly 1 kills the side
+    # gradient entirely ((1-α)·dL/dh = 0), recovering only as fast as α
+    # itself moves; at the paper's step counts that's fine, but our proxy
+    # runs are 100-200 steps, so start at sigmoid(2) ≈ 0.88 — still
+    # near-identity (upsample is zero-init) with a usable side gradient.
+    p["g.gamma"] = jnp.zeros((cfg.n_layers + 1,), jnp.float32)
+    p["g.alpha"] = jnp.full((), 2.0, jnp.float32)
+    return p
+
+
+def downsample(p, i, h, cfg, ds, ct=jnp.float32):
+    """Apply downsample module i to a backbone hidden state f32[B,S,d]."""
+    pre = f"g.down.{i:02d}"
+    if ds == "linear":
+        return h @ p[f"{pre}.w"].astype(ct) + p[f"{pre}.b"].astype(ct)
+    if ds == "lora":
+        return (h @ p[f"{pre}.l1"].astype(ct)) @ p[f"{pre}.l2"].astype(ct)
+    if ds == "adapter":
+        return jax.nn.gelu(h @ p[f"{pre}.l1"].astype(ct)) @ p[f"{pre}.l2"].astype(ct)
+    # gradient-free Pallas pooling kernels
+    b, s, d = h.shape
+    flat = h.reshape(b * s, d).astype(jnp.float32)
+    out = pool.pool(flat, r=cfg.reduction, op="max" if ds == "maxpool" else "avg",
+                    bt=min(128, b * s))
+    return out.reshape(b, s, cfg.d_side).astype(ct)
+
+
+def side_fwd(cfg, sparams, hiddens, ds=None, ct=jnp.float32):
+    """Forward through g given the backbone hidden states [h_0 .. h_N]."""
+    ds = ds or cfg.downsample
+    side_cfg = cfg.with_(name=cfg.name + "-side", d_model=cfg.d_side,
+                         n_heads=cfg.side_heads, d_ff=max(4, cfg.d_ff // cfg.reduction),
+                         reduction=1)
+    getw = model.FullWeights({("f." + k[2:]): v for k, v in sparams.items()
+                              if k.startswith("g.layers") or k.startswith("g.ln")}, ct)
+    gamma = sparams["g.gamma"]
+    hg = downsample(sparams, 0, hiddens[0], cfg, ds, ct)
+    for i in range(cfg.n_layers):
+        beta = jax.nn.sigmoid(gamma[i + 1])
+        u = (1.0 - beta) * downsample(sparams, i + 1, hiddens[i + 1], cfg, ds, ct) + beta * hg
+        hg = model.block(u, getw, f"f.layers.{i:02d}", side_cfg, ct)
+    return hg
+
+
+def upsample(sparams, hg, ct=jnp.float32):
+    return hg @ sparams["g.up.w"].astype(ct) + sparams["g.up.b"].astype(ct)
+
+
+def combine(cfg, sparams, h_f, hg, mode="qst", ct=jnp.float32):
+    """Final hidden state fed to the (frozen) LM head."""
+    up = upsample(sparams, hg, ct)
+    if mode == "lst":
+        # LST predicts from the side network alone — the initialization-point
+        # weakness the paper identifies (drives its long-generation repetition)
+        return up
+    alpha = jax.nn.sigmoid(sparams["g.alpha"])
+    return alpha * h_f + (1.0 - alpha) * up
+
+
+def n_side_params(cfg, ds=None) -> int:
+    """Closed-form trainable-parameter count (used by Table 1/6 and costmodel)."""
+    import jax.random as jr
+    p = init_side(cfg, jr.PRNGKey(0), ds)
+    return sum(int(np.prod(v.shape)) for v in p.values())

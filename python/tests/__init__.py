@@ -1,0 +1,1 @@
+# pytest package marker (test modules use relative imports)

@@ -1,0 +1,97 @@
+"""AOT bridge tests: manifest format, spec/graph consistency, HLO text rules."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, methods, model
+
+
+class TestSpecs:
+    def test_batch_specs_order(self):
+        cls = aot.batch_specs("cls", 4, 16)
+        assert [s.name for s in cls] == ["batch.tokens", "batch.label_pos", "batch.label_tok"]
+        lm = aot.batch_specs("lm", 4, 16)
+        assert [s.name for s in lm] == ["batch.tokens", "batch.targets", "batch.mask"]
+
+    def test_trainable_specs_sorted(self):
+        cfg = configs.get("nano-opt")
+        specs = aot.trainable_specs(cfg, "qst", "trainable")
+        names = [s.name for s in specs]
+        assert names == sorted(names), "manifest order must be sorted-by-name"
+
+    def test_frozen_specs_cover_method_spec(self):
+        cfg = configs.get("nano-llama")
+        specs = aot.frozen_specs(cfg, "qst")
+        want = methods.qst.frozen_spec(cfg)
+        assert {s.name for s in specs} == set(want)
+
+
+class TestManifest:
+    def test_manifest_text_roundtrippable(self):
+        cfg = configs.get("nano-opt")
+        art = aot.build_train(cfg, "full", "lm", 2, 8)
+        text = art.manifest()
+        assert text.startswith("qst-manifest-v1")
+        lines = text.splitlines()
+        n_in = sum(1 for l in lines if l.startswith("input "))
+        n_out = sum(1 for l in lines if l.startswith("output "))
+        assert n_in == len(art.in_specs)
+        assert n_out == len(art.out_specs)
+        # indices contiguous from 0
+        idx = [int(l.split()[1]) for l in lines if l.startswith("input ")]
+        assert idx == list(range(n_in))
+
+    def test_scalar_dims_encoding(self):
+        s = aot.Spec("lr", (), jnp.float32, "lr")
+        assert "scalar" in s.line("input", 0)
+
+    def test_train_graph_arity(self):
+        cfg = configs.get("nano-opt")
+        art = aot.build_train(cfg, "full", "lm", 2, 8)
+        nt = len(aot.trainable_specs(cfg, "full", "trainable"))
+        # trainable + m + v + step + lr + frozen(0) + 3 batch tensors
+        assert len(art.in_specs) == 3 * nt + 2 + 3
+        # trainable + m + v + step + loss + gnorm
+        assert len(art.out_specs) == 3 * nt + 3
+
+
+class TestLoweringRules:
+    def test_hlo_text_prints_large_constants(self):
+        """print_large_constants=True is load-bearing: without it the NF4
+        codebook constant prints as '{...}' and parses back as zeros."""
+        import os, tempfile
+        cfg = configs.get("nano-llama")
+        art = aot.build_generate(cfg, "qst", 1, 16)
+        with tempfile.TemporaryDirectory() as d:
+            path = art.lower(d)
+            text = open(path).read()
+            assert "0.6961928" in text, "NF4 codebook values must be inlined"
+            assert os.path.exists(os.path.join(d, f"{art.name}.meta.txt"))
+
+    def test_keep_unused_preserves_arity(self):
+        """ENTRY parameter count must equal the manifest input count."""
+        import tempfile
+        cfg = configs.get("nano-opt")
+        art = aot.build_eval(cfg, "full", "cls", 2, 8)
+        with tempfile.TemporaryDirectory() as d:
+            path = art.lower(d)
+            text = open(path).read()
+            entry = text[text.index("ENTRY"):]
+            assert entry.count(" parameter(") == len(art.in_specs)
+
+
+class TestBuildList:
+    def test_build_list_names_unique(self):
+        arts = aot.build_list()
+        names = [a.name for a in arts]
+        assert len(names) == len(set(names))
+        assert len(arts) > 80, "the full artifact set should be substantial"
+
+    def test_every_train_has_init(self):
+        arts = aot.build_list()
+        names = {a.name for a in arts}
+        for a in arts:
+            if a.graph == "train" and "__fp16" not in a.name:
+                cfgm = a.name.split("__")[0] + "__" + a.method
+                assert any(n.startswith(cfgm) and "__init" in n for n in names), a.name

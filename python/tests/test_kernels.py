@@ -1,0 +1,114 @@
+"""L1 Pallas kernels vs pure-jnp oracles (``kernels/ref.py``).
+
+Hypothesis sweeps shapes/dtypes; every kernel must match its reference to
+float tolerance under ``interpret=True``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import nf4, pool, quantize, ref
+
+
+def rnd(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestDequantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 64), (16, 256, 96), (1, 64, 32)])
+    @pytest.mark.parametrize("qdtype", ["nf4", "fp4"])
+    def test_matches_ref(self, m, k, n, qdtype):
+        w = rnd((k, n), seed=1, scale=0.4)
+        x = rnd((m, k), seed=2)
+        packed, scales = ref.quantize_ref(w, qdtype)
+        y_ref = ref.dequant_matmul_ref(x, packed, scales, qdtype)
+        y_ker = nf4.dequant_matmul(x, packed, scales, qdtype=qdtype, bm=m, bn=32)
+        np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+    def test_tiling_invariance(self):
+        # result must not depend on the block decomposition
+        w, x = rnd((256, 128), seed=3), rnd((32, 256), seed=4)
+        packed, scales = ref.quantize_ref(w)
+        outs = [nf4.dequant_matmul(x, packed, scales, bm=bm, bn=bn)
+                for bm, bn in [(8, 32), (16, 64), (32, 128)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]), rtol=1e-5, atol=1e-5)
+
+    def test_close_to_f32_matmul(self):
+        # fused path approximates the f32 matmul within quantization noise
+        w, x = rnd((128, 64), seed=5, scale=0.1), rnd((8, 128), seed=6)
+        packed, scales = ref.quantize_ref(w)
+        y4 = nf4.dequant_matmul(x, packed, scales, bm=8, bn=64)
+        y32 = x @ w
+        rel = float(jnp.linalg.norm(y4 - y32) / jnp.linalg.norm(y32))
+        assert rel < 0.15
+
+    def test_vmem_model(self):
+        # tile working set must fit a 16 MiB VMEM at the default block shape
+        assert nf4.vmem_bytes(k=4096, bm=128, bn=128) < 16 * 2**20
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("k,n", [(128, 64), (256, 128)])
+    @pytest.mark.parametrize("qdtype", ["nf4", "fp4"])
+    def test_matches_ref(self, k, n, qdtype):
+        w = rnd((k, n), seed=7, scale=0.5)
+        p_ref, s_ref = ref.quantize_ref(w, qdtype)
+        p_ker, s_ker = quantize.quantize_blockwise(w, qdtype=qdtype, bn=32)
+        assert bool(jnp.all(p_ref == p_ker))
+        np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref), rtol=1e-6)
+
+    def test_quantize_then_matmul_roundtrip(self):
+        w, x = rnd((128, 96), seed=8, scale=0.2), rnd((4, 128), seed=9)
+        p, s = quantize.quantize_blockwise(w, bn=96)
+        y = nf4.dequant_matmul(x, p, s, bm=4, bn=96)
+        rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.15
+
+
+class TestPoolKernels:
+    @pytest.mark.parametrize("r", [2, 4, 8])
+    @pytest.mark.parametrize("op", ["max", "avg"])
+    def test_matches_ref(self, r, op):
+        h = rnd((64, 64), seed=10)
+        got = pool.pool(h, r=r, op=op, bt=16)
+        want = ref.maxpool_ref(h, r) if op == "max" else ref.avgpool_ref(h, r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_gradient_free(self):
+        # pooling has no trainable params; grads flow to the *input* only
+        h = rnd((8, 32), seed=11)
+        g = jax.grad(lambda x: jnp.sum(pool.pool_ad(x, 4, 'avg', 8)))(h)
+        np.testing.assert_allclose(np.asarray(g), 1.0 / 4.0, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 16), kb=st.integers(1, 3),
+    n=st.sampled_from([32, 64, 96]), seed=st.integers(0, 1000),
+    qdtype=st.sampled_from(["nf4", "fp4"]),
+)
+def test_dequant_matmul_hypothesis(m, kb, n, seed, qdtype):
+    """Property: kernel == oracle across arbitrary (m, k, n) and both dtypes."""
+    k = kb * 128
+    w = rnd((k, n), seed=seed, scale=0.3)
+    x = rnd((m, k), seed=seed + 1)
+    packed, scales = ref.quantize_ref(w, qdtype)
+    y_ref = ref.dequant_matmul_ref(x, packed, scales, qdtype)
+    y_ker = nf4.dequant_matmul(x, packed, scales, qdtype=qdtype, bm=m, bn=n)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.sampled_from([8, 16, 64]), d=st.sampled_from([32, 64, 128]),
+       r=st.sampled_from([2, 4, 8]), op=st.sampled_from(["max", "avg"]),
+       seed=st.integers(0, 1000))
+def test_pool_hypothesis(t, d, r, op, seed):
+    h = rnd((t, d), seed=seed)
+    got = pool.pool(h, r=r, op=op, bt=min(8, t))
+    want = ref.maxpool_ref(h, r) if op == "max" else ref.avgpool_ref(h, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,145 @@
+"""L2 model tests: shapes, causality, flavor parity, weight accessors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, quant
+
+
+@pytest.fixture(scope="module", params=["nano-opt", "nano-llama"])
+def setup(request):
+    cfg = configs.get(request.param)
+    params = model.init_backbone(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    return cfg, params, tokens
+
+
+def quantize_backbone(cfg, params):
+    frozen = {}
+    qn = model.quantizable_names(cfg)
+    for name, (k, n) in qn.items():
+        q = quant.quantize_matrix(params[name], cfg.qdtype, cfg.qblock, cfg.qgroup)
+        for f, v in q.items():
+            frozen[f"q.{name}.{f}"] = v
+    for name in params:
+        if name not in qn:
+            frozen[name] = params[name]
+    return frozen
+
+
+class TestBackbone:
+    def test_param_count_formula(self, setup):
+        cfg, params, _ = setup
+        actual = sum(int(np.prod(v.shape)) for v in params.values())
+        assert actual == cfg.n_params_backbone()
+
+    def test_forward_shapes(self, setup):
+        cfg, params, tokens = setup
+        getw = model.FullWeights(params)
+        h, hiddens = model.backbone_fwd(cfg, getw, tokens, collect_hidden=True)
+        assert h.shape == (2, 16, cfg.d_model)
+        assert len(hiddens) == cfg.n_layers + 1
+        logits = model.final_logits(cfg, getw, h)
+        assert logits.shape == (2, 16, cfg.vocab)
+
+    def test_causality(self, setup):
+        """Changing token t must not affect logits at positions < t."""
+        cfg, params, tokens = setup
+        getw = model.FullWeights(params)
+
+        def logits(toks):
+            h, _ = model.backbone_fwd(cfg, getw, toks)
+            return model.final_logits(cfg, getw, h)
+
+        base = logits(tokens)
+        perturbed = tokens.at[:, 10].set((tokens[:, 10] + 1) % cfg.vocab)
+        pert = logits(perturbed)
+        np.testing.assert_allclose(np.asarray(base[:, :10]), np.asarray(pert[:, :10]),
+                                   rtol=1e-5, atol=1e-5)
+        assert float(jnp.max(jnp.abs(base[:, 10:] - pert[:, 10:]))) > 1e-6
+
+    def test_quantized_forward_close_to_full(self, setup):
+        cfg, params, tokens = setup
+        full = model.FullWeights(params)
+        h_full, _ = model.backbone_fwd(cfg, full, tokens)
+        frozen = quantize_backbone(cfg, params)
+        qp = {k: v for k, v in frozen.items() if k.startswith("q.")}
+        res = {k: v for k, v in frozen.items() if not k.startswith("q.")}
+        qw = model.QuantWeights(cfg, qp, res)
+        h_q, _ = model.backbone_fwd(cfg, qw, tokens)
+        rel = float(jnp.linalg.norm(h_q - h_full) / jnp.linalg.norm(h_full))
+        # nano-scale models have few quant blocks, so relative noise is high;
+        # the tight bit-level guarantees live in test_quant / the golden tests
+        assert rel < 0.35, f"quantized forward drifted {rel:.3f}"
+
+    def test_kernel_vs_ref_dequant_path(self, setup):
+        cfg, params, tokens = setup
+        frozen = quantize_backbone(cfg, params)
+        qp = {k: v for k, v in frozen.items() if k.startswith("q.")}
+        res = {k: v for k, v in frozen.items() if not k.startswith("q.")}
+        h1, _ = model.backbone_fwd(cfg, model.QuantWeights(cfg, qp, res, use_kernel=True), tokens)
+        h2, _ = model.backbone_fwd(cfg, model.QuantWeights(cfg, qp, res, use_kernel=False), tokens)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4, atol=1e-4)
+
+    def test_lora_identity_at_init(self, setup):
+        cfg, params, tokens = setup
+        from compile.methods import lora
+        tr = lora.init_trainable(cfg, jax.random.PRNGKey(2))
+        base = model.FullWeights(params)
+        wrapped = model.LoraWeights(base, tr, cfg)
+        h0, _ = model.backbone_fwd(cfg, base, tokens)
+        h1, _ = model.backbone_fwd(cfg, wrapped, tokens)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=1e-6, atol=1e-6)
+
+
+class TestLosses:
+    def test_lm_loss_uniform(self):
+        v = 64
+        logits = jnp.zeros((2, 8, v))
+        targets = jnp.zeros((2, 8), jnp.int32)
+        mask = jnp.ones((2, 8))
+        loss = model.lm_loss(logits, targets, mask)
+        np.testing.assert_allclose(float(loss), np.log(v), rtol=1e-5)
+
+    def test_lm_loss_mask(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+        targets = jnp.zeros((2, 8), jnp.int32)
+        half = jnp.concatenate([jnp.ones((2, 4)), jnp.zeros((2, 4))], axis=1)
+        l_half = model.lm_loss(logits, targets, half)
+        l_manual = model.lm_loss(logits[:, :4], targets[:, :4], jnp.ones((2, 4)))
+        np.testing.assert_allclose(float(l_half), float(l_manual), rtol=1e-5)
+
+    def test_cls_loss_picks_position(self):
+        logits = jnp.zeros((2, 8, 16)).at[0, 3, 5].set(10.0).at[1, 7, 2].set(10.0)
+        pos = jnp.array([3, 7], jnp.int32)
+        tok = jnp.array([5, 2], jnp.int32)
+        loss = model.cls_loss(logits, pos, tok)
+        assert float(loss) < 0.01
+
+    def test_flatten_order_stable(self):
+        cfg = configs.get("nano-opt")
+        p = model.init_backbone(cfg, jax.random.PRNGKey(0))
+        names = model.flatten_names(p)
+        assert names == sorted(names)
+        vals = model.flatten(p)
+        back = model.unflatten(names, vals)
+        assert set(back) == set(p)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 8, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 8, 16))
+        q2, k2 = model.rope(q, k)
+        np.testing.assert_allclose(np.asarray(jnp.linalg.norm(q2, axis=-1)),
+                                   np.asarray(jnp.linalg.norm(q, axis=-1)), rtol=1e-5)
+
+    def test_rope_relative(self):
+        # dot(q_i, k_j) after rope depends only on i-j for identical raw q,k
+        q = jnp.tile(jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16)), (1, 1, 8, 1))
+        qr, kr = model.rope(q, q)
+        d1 = float(jnp.dot(qr[0, 0, 3], kr[0, 0, 1]))
+        d2 = float(jnp.dot(qr[0, 0, 5], kr[0, 0, 3]))
+        np.testing.assert_allclose(d1, d2, rtol=1e-4)

@@ -1,0 +1,154 @@
+"""Quantization format tests: blockwise NF4/FP4, double quantization,
+matrix (column-stripe) layout, and hypothesis sweeps over shapes/values.
+
+The pack/unpack layout pinned here is mirrored bit-for-bit by
+``rust/src/quant`` (cross-language golden fixtures in test_golden.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+
+def rnd(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestCodebooks:
+    def test_nf4_properties(self):
+        code = quant.NF4_CODE
+        assert len(code) == 16
+        assert code[0] == -1.0 and code[-1] == 1.0
+        assert code[7] == 0.0
+        assert np.all(np.diff(code) > 0), "NF4 codebook must be sorted"
+
+    def test_fp4_properties(self):
+        code = quant.FP4_CODE
+        assert len(code) == 16
+        assert code[0] == 0.0
+        assert np.max(code) == 1.0 and np.min(code) == -1.0
+        # e2m1 has 8 magnitudes, sign-symmetric except the double zero
+        assert len(np.unique(np.abs(code))) == 8
+
+    def test_codebook_lookup(self):
+        assert quant.codebook("nf4").shape == (16,)
+        assert quant.codebook("fp4").shape == (16,)
+        with pytest.raises(KeyError):
+            quant.codebook("int4")
+
+
+class TestBlockwise:
+    @pytest.mark.parametrize("qdtype", ["nf4", "fp4"])
+    def test_roundtrip_error_bounded(self, qdtype):
+        w = rnd((64, 64), scale=0.5)
+        packed, scales = quant.quantize_blockwise(w, qdtype)
+        back = quant.dequantize_blockwise(packed, scales, w.shape, qdtype)
+        # worst-case error is half the widest codebook gap times the block absmax
+        code = np.sort(quant.CODEBOOKS[qdtype])
+        gap = np.max(np.diff(code)) / 2
+        bound = gap * np.max(np.abs(np.asarray(w))) + 1e-6
+        assert float(jnp.max(jnp.abs(back - w))) <= bound
+
+    def test_packed_layout(self):
+        # block of 64: first value -> low nibble of byte 0
+        w = jnp.zeros((128,), jnp.float32).at[0].set(1.0).at[1].set(-1.0)
+        packed, scales = quant.quantize_blockwise(w)
+        b0 = int(packed[0])
+        assert b0 & 0xF == 15, "code for +absmax is 15 (NF4 max)"
+        assert (b0 >> 4) == 0, "code for -absmax is 0 (NF4 min)"
+
+    def test_zeros_block(self):
+        w = jnp.zeros((64,), jnp.float32)
+        packed, scales = quant.quantize_blockwise(w)
+        assert float(scales[0]) == 0.0
+        back = quant.dequantize_blockwise(packed, scales, w.shape)
+        assert float(jnp.max(jnp.abs(back))) == 0.0
+
+    def test_scale_is_absmax(self):
+        w = rnd((256,), seed=3)
+        _, scales = quant.quantize_blockwise(w)
+        expect = jnp.max(jnp.abs(w.reshape(-1, 64)), axis=1)
+        np.testing.assert_allclose(np.asarray(scales), np.asarray(expect), rtol=1e-6)
+
+    def test_absmax_is_exactly_representable(self):
+        # +absmax maps to code 1.0 so it round-trips exactly
+        w = jnp.full((64,), 3.7, jnp.float32)
+        packed, scales = quant.quantize_blockwise(w)
+        back = quant.dequantize_blockwise(packed, scales, w.shape)
+        np.testing.assert_allclose(np.asarray(back), 3.7, rtol=1e-6)
+
+
+class TestDoubleQuant:
+    def test_scale_roundtrip(self):
+        scales = jnp.abs(rnd((512,), seed=1)) + 0.01
+        q8, gabs, gmean = quant.quantize_scales(scales)
+        back = quant.dequantize_scales(q8, gabs, gmean, 512)
+        err = jnp.max(jnp.abs(back - scales))
+        assert float(err) <= float(jnp.max(gabs)) / 127.0 + 1e-6
+
+    def test_partial_group(self):
+        # 300 scales with qgroup 256 -> one full + one partial group
+        scales = jnp.abs(rnd((300,), seed=2)) + 0.01
+        q8, gabs, gmean = quant.quantize_scales(scales)
+        assert q8.shape == (300,) and gabs.shape == (2,)
+        back = quant.dequantize_scales(q8, gabs, gmean, 300)
+        assert float(jnp.max(jnp.abs(back - scales))) < 0.1
+
+    def test_storage_bits(self):
+        # paper (QLoRA §3): ~4.127 bits/param with block 64 + double quant
+        assert abs(quant.storage_bits_per_param() - 4.127) < 0.01
+
+
+class TestMatrixFormat:
+    @pytest.mark.parametrize("k,n", [(128, 32), (256, 96), (64, 64)])
+    def test_matrix_roundtrip(self, k, n):
+        w = rnd((k, n), seed=4, scale=0.3)
+        q = quant.quantize_matrix(w)
+        back = quant.dequantize_matrix(q, k, n)
+        # NF4 with double-quantized scales: rms error well under 10% of std
+        rms = float(jnp.sqrt(jnp.mean((back - w) ** 2)))
+        assert rms < 0.1 * 0.3
+
+    def test_specs_match_actuals(self):
+        k, n = 128, 96
+        q = quant.quantize_matrix(rnd((k, n)))
+        specs = quant.qmatrix_specs(k, n)
+        for f, (shape, dtype) in specs.items():
+            assert tuple(q[f].shape) == tuple(shape), f
+            assert q[f].dtype == jnp.dtype(dtype), f
+
+    def test_nf4_beats_fp4_on_gaussian(self):
+        # the paper's Table 4 mechanism: NF4 is quantile-optimal for N(0,1)
+        w = rnd((256, 128), seed=5)
+        e_nf4 = w - quant.dequantize_matrix(quant.quantize_matrix(w, "nf4"), 256, 128, "nf4")
+        e_fp4 = w - quant.dequantize_matrix(quant.quantize_matrix(w, "fp4"), 256, 128, "fp4")
+        assert float(jnp.mean(e_nf4**2)) < float(jnp.mean(e_fp4**2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kb=st.integers(1, 4), n=st.integers(1, 6).map(lambda v: v * 16),
+    seed=st.integers(0, 2**16), scale=st.floats(1e-3, 10.0),
+    qdtype=st.sampled_from(["nf4", "fp4"]),
+)
+def test_matrix_roundtrip_hypothesis(kb, n, seed, scale, qdtype):
+    """Property: dequant(quant(w)) stays within the codebook-gap bound for any
+    shape/scale/dtype; packed/scale shapes always match the spec."""
+    k = kb * 128
+    w = rnd((k, n), seed=seed, scale=scale)
+    q = quant.quantize_matrix(w, qdtype)
+    specs = quant.qmatrix_specs(k, n)
+    for f in q:
+        assert tuple(q[f].shape) == tuple(specs[f][0])
+    back = quant.dequantize_matrix(q, k, n, qdtype)
+    code = np.sort(quant.CODEBOOKS[qdtype])
+    gap = np.max(np.diff(code)) / 2
+    # block absmax bound + double-quantization error of the scale itself
+    dq_err = float(jnp.max(q["gabs"])) / 127.0
+    bound = (gap + 1e-3) * (float(jnp.max(jnp.abs(w))) + dq_err) + dq_err + 1e-5
+    assert float(jnp.max(jnp.abs(back - w))) <= bound

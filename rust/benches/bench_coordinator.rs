@@ -1,0 +1,89 @@
+//! L3 coordinator overhead: what the Rust side adds around the AOT step.
+//!
+//! * data generation + batch assembly (must overlap/vanish vs step time)
+//! * host→device upload of a training batch
+//! * a full train step (nano artifact) through the executor
+//! * checkpoint serialization
+//!
+//! If coordinator items are ≪ the train-step time, L3 is not the bottleneck
+//! (paper's claim holds: the method, not the harness, sets throughput).
+
+use qst::benchkit::Bench;
+use qst::coordinator::Checkpoint;
+use qst::data::batcher::{lm_batch, LmExample};
+use qst::data::{corpus::Corpus, Vocab};
+use qst::runtime::Runtime;
+use qst::tensor::HostTensor;
+
+fn main() {
+    let mut results = vec![];
+    let vocab = Vocab::new(256);
+    let (b, s) = (4usize, 32usize);
+
+    // data generation + assembly
+    let mut corpus = Corpus::new(vocab.clone(), 5);
+    let r = Bench::quick("datagen+batch 4x32").run(|| {
+        let exs: Vec<LmExample> = (0..b)
+            .map(|_| {
+                let (t, tg, m) = corpus.lm_example(s);
+                LmExample { tokens: t, targets: tg, mask: m }
+            })
+            .collect();
+        lm_batch(&exs, s)
+    });
+    r.throughput("token", (b * s) as f64);
+    results.push(r);
+
+    let Ok(mut rt) = Runtime::with_default_dir() else {
+        eprintln!("no runtime; skipping device benches");
+        return;
+    };
+
+    // upload path
+    let big = HostTensor::from_f32(&[256, 64], &vec![1.0; 256 * 64]);
+    let r = Bench::quick("upload 64KB tensor").run(|| rt.upload(&big).unwrap());
+    r.throughput("byte", big.bytes() as f64);
+    results.push(r);
+
+    // full train step via the executor (nano artifact)
+    if rt.load("nano-opt__full__lm__train").is_ok() {
+        let frozen = std::collections::HashMap::new();
+        let mut trainer = qst::coordinator::Trainer::new(
+            &mut rt,
+            "nano-opt__full__init",
+            "nano-opt__full__lm__train",
+            &frozen,
+            0,
+        )
+        .unwrap();
+        let (bb, ss) = trainer.batch_dims();
+        let mut c2 = Corpus::new(vocab.clone(), 6);
+        let exs: Vec<LmExample> = (0..bb)
+            .map(|_| {
+                let (t, tg, m) = c2.lm_example(ss);
+                LmExample { tokens: t, targets: tg, mask: m }
+            })
+            .collect();
+        let batch = lm_batch(&exs, ss);
+        let r = Bench::quick("train step nano-opt (executor)")
+            .run(|| trainer.step(&rt, &batch, 1e-3).unwrap());
+        r.throughput("token", (bb * ss) as f64);
+        results.push(r);
+    } else {
+        eprintln!("nano artifacts missing — run `make artifacts`");
+    }
+
+    // checkpoint serialization
+    let mut tensors = std::collections::HashMap::new();
+    for i in 0..32 {
+        tensors.insert(format!("t{i}"), HostTensor::from_f32(&[64, 64], &vec![0.5; 4096]));
+    }
+    let ck = Checkpoint::new(tensors);
+    let path = std::env::temp_dir().join("qst_bench.ckpt");
+    let r = Bench::quick("checkpoint save 512KB").run(|| ck.save(&path).unwrap());
+    r.throughput("byte", ck.total_bytes() as f64);
+    results.push(r);
+    std::fs::remove_file(&path).ok();
+
+    qst::benchkit::log_csv(&qst::runs_dir().join("bench_coordinator.csv"), &results).ok();
+}

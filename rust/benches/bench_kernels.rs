@@ -1,0 +1,50 @@
+//! L1 kernel bench: fused NF4 dequant-matmul artifact vs a plain f32 matmul
+//! inside the same HLO module, across two problem sizes.
+//!
+//! The artifact computes both y_kernel (4-bit path) and y_f32 (dense path),
+//! so the reported time covers the pair; the interesting number is the
+//! per-size scaling and the executor overhead breakdown in bench_coordinator.
+
+use qst::benchkit::Bench;
+use qst::runtime::Runtime;
+use qst::tensor::HostTensor;
+use qst::util::rng::Rng;
+
+fn main() {
+    let mut rt = Runtime::with_default_dir().expect("runtime");
+    let mut results = vec![];
+    for (m, k, n) in [(64usize, 512usize, 512usize), (128, 1024, 1024)] {
+        let name = format!("kernel__dequant_matmul__{m}x{k}x{n}");
+        let Ok(art) = rt.load(&name) else {
+            eprintln!("skipping {name} (artifact missing — run `make artifacts`)");
+            continue;
+        };
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.3).collect();
+        let (packed, scales) = qst::quant::quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let inputs = vec![
+            HostTensor::from_f32(&[m, k], &x),
+            HostTensor::from_u8(&[k / 2, n], packed),
+            HostTensor::from_f32(&[k / 64, n], &scales),
+            HostTensor::from_f32(&[k, n], &w),
+        ];
+        // correctness guard before timing
+        let out = art.run_host(&inputs).expect("exec");
+        let yk = out[0].as_f32().unwrap();
+        let yf = out[1].as_f32().unwrap();
+        let rel: f32 = {
+            let num: f32 = yk.iter().zip(&yf).map(|(a, b)| (a - b).powi(2)).sum();
+            let den: f32 = yf.iter().map(|v| v * v).sum();
+            (num / den).sqrt()
+        };
+        assert!(rel < 0.2, "kernel diverged from f32 matmul: rel {rel}");
+
+        let r = Bench::quick(&format!("dequant_matmul+f32 {m}x{k}x{n}"))
+            .run(|| art.run_host(&inputs).unwrap());
+        // 2*m*k*n MACs for each of the two matmuls
+        r.throughput("FLOP", 2.0 * 2.0 * (m * k * n) as f64);
+        results.push(r);
+    }
+    qst::benchkit::log_csv(&qst::runs_dir().join("bench_kernels.csv"), &results).ok();
+}

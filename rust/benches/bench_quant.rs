@@ -1,0 +1,28 @@
+//! Rust quantizer throughput (the checkpoint → NF4 path the coordinator runs
+//! before every QST/QLoRA job).
+
+use qst::benchkit::Bench;
+use qst::util::rng::Rng;
+
+fn main() {
+    let mut results = vec![];
+    for (k, n) in [(256usize, 256usize), (1024, 1024)] {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let r = Bench::quick(&format!("quantize_matrix nf4 {k}x{n}"))
+            .run(|| qst::quant::quantize_matrix_raw(&w, k, n, "nf4", 64));
+        r.throughput("param", (k * n) as f64);
+        results.push(r);
+
+        let (packed, scales) = qst::quant::quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let r = Bench::quick(&format!("dequantize_matrix nf4 {k}x{n}"))
+            .run(|| qst::quant::dequantize_matrix_raw(&packed, &scales, k, n, "nf4", 64));
+        r.throughput("param", (k * n) as f64);
+        results.push(r);
+
+        let r = Bench::quick(&format!("quantize_scales {k}x{n}/64"))
+            .run(|| qst::quant::quantize_scales(&scales, 256));
+        results.push(r);
+    }
+    qst::benchkit::log_csv(&qst::runs_dir().join("bench_quant.csv"), &results).ok();
+}

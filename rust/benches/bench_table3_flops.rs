@@ -1,0 +1,93 @@
+//! Table 3 companion bench: *measured* wall-clock per token for each method's
+//! train step on the proxy models, next to the analytical FLOPs/token model.
+//! The paper's claim is the ratio (QST ~2.5-3x cheaper than QLoRA/LoRA);
+//! we verify the measured ratio tracks the model.
+
+use qst::benchkit::Bench;
+use qst::costmodel::paperdims::{paper_model, Method};
+use qst::costmodel::flops_per_token;
+use qst::coordinator::pipeline::frozen_from_checkpoint;
+use qst::data::batcher::{cls_batch, lm_batch, LmExample};
+use qst::data::glue::{GlueGen, GlueTask};
+use qst::data::mmlu::MmluGen;
+use qst::data::Vocab;
+use qst::runtime::Runtime;
+
+fn main() {
+    let Ok(mut rt) = Runtime::with_default_dir() else { return };
+    // a quick base checkpoint (few steps — we only measure step *time*)
+    let base = match qst::coordinator::pipeline::ensure_base(&mut rt, "tiny-llama", 40, 3e-3, false)
+    {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("skipping (artifacts missing?): {e}");
+            return;
+        }
+    };
+
+    let mut rows = vec![];
+    for method in ["qst", "qlora"] {
+        let train = format!("tiny-llama__{method}__lm__train");
+        let Ok(art) = rt.load(&train) else { continue };
+        let (b, s) = art.manifest.batch.unwrap();
+        let vocab = Vocab::new(art.manifest.cfg.usize("vocab"));
+        let frozen = frozen_from_checkpoint(&art.manifest, &base).unwrap();
+        let mut trainer = qst::coordinator::Trainer::new(
+            &mut rt,
+            &format!("tiny-llama__{method}__init"),
+            &train,
+            &frozen,
+            0,
+        )
+        .unwrap();
+        let mut gen = MmluGen::new(vocab, s, 9);
+        let exs: Vec<LmExample> = (0..b)
+            .map(|_| {
+                let (t, tg, m) = gen.finetune_example(s);
+                LmExample { tokens: t, targets: tg, mask: m }
+            })
+            .collect();
+        let batch = lm_batch(&exs, s);
+        let r = Bench::quick(&format!("train-step tiny-llama {method} (lm {b}x{s})"))
+            .run(|| trainer.step(&rt, &batch, 1e-3).unwrap());
+        let per_tok = r.median_secs / (b * s) as f64;
+        println!("{method}: {:.1} µs/token", per_tok * 1e6);
+        rows.push((method.to_string(), per_tok));
+    }
+
+    // also time the 16-bit full-backprop methods on the opt proxy (cls task)
+    if let Ok(base_opt) = qst::coordinator::pipeline::ensure_base(&mut rt, "tiny-opt", 40, 3e-3, false) {
+        for method in ["lora", "adapter", "lst", "qst"] {
+            let train = format!("tiny-opt__{method}__cls__train");
+            let Ok(art) = rt.load(&train) else { continue };
+            let (b, s) = art.manifest.batch.unwrap();
+            let vocab = Vocab::new(art.manifest.cfg.usize("vocab"));
+            let frozen = frozen_from_checkpoint(&art.manifest, &base_opt).unwrap();
+            let mut trainer = qst::coordinator::Trainer::new(
+                &mut rt,
+                &format!("tiny-opt__{method}__init"),
+                &train,
+                &frozen,
+                0,
+            )
+            .unwrap();
+            let mut gen = GlueGen::new(GlueTask::Sst2, vocab, s, 4);
+            let batch = cls_batch(&gen.examples(b), s);
+            let r = Bench::quick(&format!("train-step tiny-opt {method} (cls {b}x{s})"))
+                .run(|| trainer.step(&rt, &batch, 1e-3).unwrap());
+            println!("{method}: {:.1} µs/token", r.median_secs / (b * s) as f64 * 1e6);
+        }
+    }
+
+    if rows.len() == 2 {
+        let qst = rows.iter().find(|(m, _)| m == "qst").unwrap().1;
+        let qlora = rows.iter().find(|(m, _)| m == "qlora").unwrap().1;
+        let m7 = paper_model("LLaMA-2-7B").unwrap();
+        let model_ratio = flops_per_token(m7, Method::QLora) / flops_per_token(m7, Method::Qst);
+        println!(
+            "\nmeasured QLoRA/QST step-time ratio: {:.2}x  (FLOPs model at 7B dims: {:.2}x, paper 2.66x)",
+            qlora / qst,
+            model_ratio
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal criterion-style bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`], which
+//! does warmup, adaptive iteration counts, and reports median / MAD /
+//! throughput in a criterion-like format.  Results can also be appended to a
+//! CSV for the EXPERIMENTS.md perf log.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub mean_secs: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_secs: 2.0,
+        }
+    }
+
+    pub fn quick(name: &str) -> Self {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 30, target_secs: 0.7, ..Bench::new(name) }
+    }
+
+    /// Time `f` adaptively; prints a criterion-like line and returns stats.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.target_secs && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        let r = BenchResult {
+            name: self.name.clone(),
+            iters: samples.len(),
+            median_secs: median,
+            mad_secs: mad,
+            mean_secs: mean,
+        };
+        println!(
+            "{:<48} time: [{:>10} median ± {:>9} MAD]  ({} iters)",
+            r.name,
+            fmt_secs(r.median_secs),
+            fmt_secs(r.mad_secs),
+            r.iters
+        );
+        r
+    }
+}
+
+impl BenchResult {
+    /// Report a derived throughput line (e.g. tokens/s, GFLOP/s).
+    pub fn throughput(&self, label: &str, units_per_iter: f64) -> f64 {
+        let rate = units_per_iter / self.median_secs;
+        println!("{:<48}   -> {:.3e} {label}/s", "", rate);
+        rate
+    }
+
+    pub fn csv_line(&self) -> String {
+        format!("{},{},{:.9},{:.9}\n", self.name, self.iters, self.median_secs, self.mad_secs)
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Append results to a CSV log (created with a header if absent).
+pub fn log_csv(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let exists = path.exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if !exists {
+        writeln!(f, "name,iters,median_secs,mad_secs")?;
+    }
+    for r in results {
+        f.write_all(r.csv_line().as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench { warmup_iters: 0, min_iters: 3, max_iters: 5, target_secs: 0.01, ..Bench::new("noop") }
+            .run(|| 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.median_secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).contains("s"));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `qst <command> [--flag value] [--switch] [positional...]` with
+//! typed accessors, defaults, and a usage printer.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Flags that never take a value (so `--verbose positional` parses right).
+const KNOWN_SWITCHES: &[&str] = &["verbose", "fast", "force", "help"];
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.iter().skip(1).peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                bail!("expected a command before flags (got '{cmd}')");
+            }
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if KNOWN_SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v.clone());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32_or(&self, k: &str, default: f32) -> Result<f32> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} expects a float, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn require(&self, k: &str) -> Result<&str> {
+        self.get(k).with_context(|| format!("missing required flag --{k}"))
+    }
+}
+
+pub const USAGE: &str = "\
+qst — Quantized Side Tuning (ACL 2024) coordinator
+
+USAGE: qst <command> [flags]
+
+COMMANDS:
+  pretrain     --config <name> [--steps N] [--lr F] [--verbose]
+               Pretrain a backbone on the synthetic corpus; saves runs/<cfg>__base.ckpt
+  quantize     --config <name> [--qdtype nf4|fp4]
+               Quantize a pretrained backbone checkpoint (reports error stats)
+  finetune     --config <name> --method qst|qlora|lora|adapter|lst
+               [--task cls|lm] [--glue-task SST-2|...] [--steps N] [--lr F] [--verbose]
+  eval         --config <name> --method <m> [--task cls|lm] ...
+  generate     --config <name> --method <m> [--prompt-len N] [--max-new N]
+  experiments  --id table1|table2|table3|table4|table5|table6|table7|
+                    fig1a|fig1b|fig4|fig5|fig6|calib|all  [--fast]
+  artifacts    List available AOT artifacts
+  info         Print environment / runtime info
+  help         This message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        let v: Vec<String> = std::iter::once("qst").chain(s.iter().copied()).map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse(&["finetune", "--config", "tiny-opt", "--steps", "100", "--verbose", "pos1"]);
+        assert_eq!(a.command, "finetune");
+        assert_eq!(a.get("config"), Some("tiny-opt"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["x", "--lr=0.002"]);
+        assert_eq!(a.f32_or("lr", 0.0).unwrap(), 0.002);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["x", "--verbose"]);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["x", "--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = parse(&["x"]);
+        assert!(a.require("config").is_err());
+    }
+}

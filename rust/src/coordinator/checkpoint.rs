@@ -1,0 +1,167 @@
+//! Checkpoint format: a minimal named-tensor binary container.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "QSTCKPT1" | u32 count | entries...
+//! entry: u32 name_len | name bytes | u8 dtype | u8 ndim | u64 dims[ndim] | data
+//! ```
+//! Used for pretrained backbones, quantized backbones, and side-network
+//! (trainable) state.  Tensors are stored sorted by name so files are
+//! byte-reproducible.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, HostTensor};
+
+const MAGIC: &[u8; 8] = b"QSTCKPT1";
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::I32 => 2,
+        DType::U32 => 3,
+        DType::U8 => 4,
+        DType::I8 => 5,
+    }
+}
+
+fn code_dtype(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::F16,
+        2 => DType::I32,
+        3 => DType::U32,
+        4 => DType::U8,
+        5 => DType::I8,
+        other => bail!("bad dtype code {other}"),
+    })
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: HashMap<String, HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn new(tensors: HashMap<String, HostTensor>) -> Self {
+        Checkpoint { tensors }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut names: Vec<&String> = self.tensors.keys().collect();
+        names.sort();
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(names.len() as u32).to_le_bytes())?;
+        for name in names {
+            let t = &self.tensors[name];
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[dtype_code(t.dtype), t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a QST checkpoint", path.display());
+        }
+        let mut u32buf = [0u8; 4];
+        r.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf);
+        let mut tensors = HashMap::with_capacity(count as usize);
+        for _ in 0..count {
+            r.read_exact(&mut u32buf)?;
+            let nlen = u32::from_le_bytes(u32buf) as usize;
+            let mut nbuf = vec![0u8; nlen];
+            r.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf)?;
+            let mut hdr = [0u8; 2];
+            r.read_exact(&mut hdr)?;
+            let dtype = code_dtype(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            let mut u64buf = [0u8; 8];
+            for _ in 0..ndim {
+                r.read_exact(&mut u64buf)?;
+                shape.push(u64::from_le_bytes(u64buf) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0u8; numel * dtype.size()];
+            r.read_exact(&mut data)?;
+            tensors.insert(name, HostTensor { dtype, shape, data });
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("qst_test_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut tensors = HashMap::new();
+        tensors.insert("w".into(), HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]));
+        tensors.insert("q".into(), HostTensor::from_u8(&[4], vec![1, 2, 3, 255]));
+        tensors.insert("s".into(), HostTensor::scalar_f32(7.5));
+        let ck = Checkpoint::new(tensors);
+        let path = tmpfile("roundtrip.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.tensors["w"].as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.tensors["q"].data, vec![1, 2, 3, 255]);
+        assert_eq!(back.tensors["s"].scalar(), 7.5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn byte_reproducible() {
+        let mut tensors = HashMap::new();
+        for i in 0..10 {
+            tensors.insert(format!("t{i}"), HostTensor::from_f32(&[3], &[i as f32, 0., 1.]));
+        }
+        let ck = Checkpoint::new(tensors);
+        let p1 = tmpfile("rep1.ckpt");
+        let p2 = tmpfile("rep2.ckpt");
+        ck.save(&p1).unwrap();
+        ck.save(&p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

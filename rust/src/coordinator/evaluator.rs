@@ -1,0 +1,296 @@
+//! Evaluation: GLUE-style accuracy/correlation, LM loss, MMLU-style k-shot
+//! choice scoring, and greedy generation (for the chatbot experiment).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::{cls_batch, ClsExample};
+use crate::data::mmlu::MmluItem;
+use crate::runtime::{Artifact, Role, Runtime};
+use crate::tensor::HostTensor;
+
+/// Assemble the ordered input vector for a (trainable..., frozen..., data...)
+/// graph from named maps.
+fn assemble_inputs(
+    art: &Artifact,
+    trainable: &HashMap<String, HostTensor>,
+    frozen: &HashMap<String, HostTensor>,
+    data: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mut inputs = Vec::with_capacity(art.manifest.inputs.len());
+    let mut d = data.iter();
+    for s in &art.manifest.inputs {
+        let t = match s.role {
+            Role::Trainable => trainable
+                .get(&s.name)
+                .with_context(|| format!("missing trainable '{}'", s.name))?
+                .clone(),
+            Role::Frozen => frozen
+                .get(&s.name)
+                .with_context(|| format!("missing frozen '{}'", s.name))?
+                .clone(),
+            Role::Data => d.next().context("not enough data tensors")?.clone(),
+            other => anyhow::bail!("unexpected input role {other:?} in eval graph"),
+        };
+        inputs.push(t);
+    }
+    Ok(inputs)
+}
+
+/// Classification evaluator over a cls eval artifact.
+pub struct ClsEval {
+    art: Rc<Artifact>,
+    pub batch: (usize, usize),
+}
+
+pub struct ClsResult {
+    pub accuracy: f64,
+    pub pearson: f64,
+    pub n: usize,
+}
+
+impl ClsEval {
+    pub fn new(rt: &mut Runtime, eval_name: &str) -> Result<Self> {
+        let art = rt.load(eval_name)?;
+        let batch = art.manifest.batch.context("eval artifact missing batch dims")?;
+        Ok(ClsEval { art, batch })
+    }
+
+    /// Accuracy by argmax over the task's label tokens; Pearson between the
+    /// predicted and true bucket for regression-style tasks.
+    pub fn evaluate(
+        &self,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+        examples: &[ClsExample],
+        label_tokens: &[i32],
+    ) -> Result<ClsResult> {
+        let (b, s) = self.batch;
+        let mut correct = 0usize;
+        let mut n = 0usize;
+        let mut preds: Vec<f64> = vec![];
+        let mut golds: Vec<f64> = vec![];
+        for chunk in examples.chunks(b) {
+            if chunk.len() < b {
+                break; // fixed-shape artifact; drop the ragged tail
+            }
+            let batch = cls_batch(chunk, s);
+            let inputs = assemble_inputs(&self.art, trainable, frozen, &batch.tensors)?;
+            let out = self.art.run_host(&inputs)?;
+            let logits = &out[0]; // [B, V]
+            let v = logits.shape[1];
+            for (row, ex) in chunk.iter().enumerate() {
+                let mut best = 0usize;
+                let mut bestv = f32::NEG_INFINITY;
+                for (k, &tok) in label_tokens.iter().enumerate() {
+                    let val = logits.f32_at(row * v + tok as usize);
+                    if val > bestv {
+                        bestv = val;
+                        best = k;
+                    }
+                }
+                if best == ex.label {
+                    correct += 1;
+                }
+                preds.push(best as f64);
+                golds.push(ex.label as f64);
+                n += 1;
+            }
+        }
+        Ok(ClsResult { accuracy: correct as f64 / n.max(1) as f64, pearson: pearson(&preds, &golds), n })
+    }
+}
+
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        cov += (a[i] - ma) * (b[i] - mb);
+        va += (a[i] - ma).powi(2);
+        vb += (b[i] - mb).powi(2);
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va * vb).sqrt()
+}
+
+/// LM evaluator: average masked loss over batches (perplexity proxy).
+pub struct LmEval {
+    art: Rc<Artifact>,
+    pub batch: (usize, usize),
+}
+
+impl LmEval {
+    pub fn new(rt: &mut Runtime, eval_name: &str) -> Result<Self> {
+        let art = rt.load(eval_name)?;
+        let batch = art.manifest.batch.context("eval artifact missing batch dims")?;
+        Ok(LmEval { art, batch })
+    }
+
+    pub fn avg_loss(
+        &self,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+        batches: &[crate::data::Batch],
+    ) -> Result<f64> {
+        let mut total = 0.0;
+        for b in batches {
+            let inputs = assemble_inputs(&self.art, trainable, frozen, &b.tensors)?;
+            let out = self.art.run_host(&inputs)?;
+            total += out[0].scalar() as f64;
+        }
+        Ok(total / batches.len().max(1) as f64)
+    }
+}
+
+/// Position-indexed logit scorer over a `generate` artifact (B = 1):
+/// used for MMLU choice ranking and greedy decoding.
+pub struct Generator {
+    art: Rc<Artifact>,
+    pub seq: usize,
+}
+
+impl Generator {
+    pub fn new(rt: &mut Runtime, gen_name: &str) -> Result<Self> {
+        let art = rt.load(gen_name)?;
+        let (b, s) = art.manifest.batch.context("generate artifact missing batch dims")?;
+        anyhow::ensure!(b == 1, "generator expects B=1 artifacts");
+        Ok(Generator { art, seq: s })
+    }
+
+    /// Logits at `pos` for a single (right-padded) row.
+    pub fn logits_at(
+        &self,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+        tokens: &[i32],
+        pos: usize,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(tokens.len() == self.seq, "row must be padded to {}", self.seq);
+        let data = vec![
+            HostTensor::from_i32(&[1, self.seq], tokens),
+            HostTensor::from_i32(&[1], &[pos as i32]),
+        ];
+        let inputs = assemble_inputs(&self.art, trainable, frozen, &data)?;
+        let out = self.art.run_host(&inputs)?;
+        Ok(out[0].clone())
+    }
+
+    /// MMLU scoring: fraction of items whose correct choice token has the
+    /// highest logit at the query position.
+    pub fn mmlu_accuracy(
+        &self,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+        items: &[MmluItem],
+    ) -> Result<f64> {
+        let mut correct = 0usize;
+        for it in items {
+            let logits = self.logits_at(trainable, frozen, &it.tokens, it.pos)?;
+            let mut best = 0usize;
+            let mut bestv = f32::NEG_INFINITY;
+            for (k, &tok) in it.choices.iter().enumerate() {
+                let v = logits.f32_at(tok as usize);
+                if v > bestv {
+                    bestv = v;
+                    best = k;
+                }
+            }
+            if best == it.answer {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / items.len().max(1) as f64)
+    }
+
+    /// Greedy decoding from a prompt; returns generated token ids.
+    pub fn greedy(
+        &self,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<Vec<i32>> {
+        let mut toks = prompt.to_vec();
+        let mut out = vec![];
+        for _ in 0..max_new {
+            let pos = toks.len() - 1;
+            anyhow::ensure!(toks.len() <= self.seq, "context overflow");
+            let mut padded = toks.clone();
+            padded.resize(self.seq, crate::data::vocabulary::PAD);
+            let logits = self.logits_at(trainable, frozen, &padded, pos)?;
+            let v = logits.numel();
+            let mut best = 0usize;
+            let mut bestv = f32::NEG_INFINITY;
+            for i in 0..v {
+                let val = logits.f32_at(i);
+                if val > bestv {
+                    bestv = val;
+                    best = i;
+                }
+            }
+            toks.push(best as i32);
+            out.push(best as i32);
+            if best as i32 == crate::data::vocabulary::EOS {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Repetition rate of a generated sequence: fraction of 3-grams that repeat
+/// (the paper's qualitative LST failure mode, made quantitative).
+pub fn repetition_rate(tokens: &[i32]) -> f64 {
+    if tokens.len() < 6 {
+        return 0.0;
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut repeats = 0usize;
+    let mut total = 0usize;
+    for w in tokens.windows(3) {
+        total += 1;
+        if !seen.insert((w[0], w[1], w[2])) {
+            repeats += 1;
+        }
+    }
+    repeats as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 1.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn repetition_extremes() {
+        let constant = vec![5i32; 30];
+        assert!(repetition_rate(&constant) > 0.9);
+        let distinct: Vec<i32> = (0..30).collect();
+        assert_eq!(repetition_rate(&distinct), 0.0);
+    }
+}

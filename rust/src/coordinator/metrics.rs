@@ -1,0 +1,97 @@
+//! Training metrics: loss curves, throughput, simple CSV logging.
+
+use std::path::Path;
+
+/// Rolling metrics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub losses: Vec<f32>,
+    pub gnorms: Vec<f32>,
+    pub step_secs: Vec<f64>,
+    pub tokens_per_step: usize,
+}
+
+impl Metrics {
+    pub fn new(tokens_per_step: usize) -> Self {
+        Metrics { tokens_per_step, ..Default::default() }
+    }
+
+    pub fn push(&mut self, loss: f32, gnorm: f32, secs: f64) {
+        self.losses.push(loss);
+        self.gnorms.push(gnorm);
+        self.step_secs.push(secs);
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn mean_loss_tail(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+
+    /// Median step time (robust to compile-on-first-step spikes).
+    pub fn median_step_secs(&self) -> f64 {
+        if self.step_secs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.step_secs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_per_step as f64 / self.median_step_secs()
+    }
+
+    /// True iff any recorded loss is NaN/Inf — the Table 5 divergence signal.
+    pub fn diverged(&self) -> bool {
+        self.losses.iter().any(|l| !l.is_finite())
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut s = String::from("step,loss,gnorm,secs\n");
+        for i in 0..self.losses.len() {
+            s.push_str(&format!(
+                "{},{},{},{:.6}\n",
+                i, self.losses[i], self.gnorms[i], self.step_secs[i]
+            ));
+        }
+        std::fs::write(path, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_mean_and_median() {
+        let mut m = Metrics::new(128);
+        for i in 0..10 {
+            m.push(10.0 - i as f32, 1.0, if i == 0 { 5.0 } else { 0.1 });
+        }
+        assert_eq!(m.last_loss(), 1.0);
+        assert!((m.mean_loss_tail(2) - 1.5).abs() < 1e-6);
+        // median ignores the first-step compile spike
+        assert!(m.median_step_secs() < 0.2);
+        assert!(m.tokens_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut m = Metrics::new(1);
+        m.push(1.0, 1.0, 0.1);
+        assert!(!m.diverged());
+        m.push(f32::NAN, 1.0, 0.1);
+        assert!(m.diverged());
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the training/eval runtime built on [`crate::runtime`].
+//!
+//! The paper's contribution is at L1/L2 (quantized compute + side network);
+//! the coordinator is the production harness around it: run configs, LR
+//! schedules with warmup, gradient-accumulation, checkpointing, metrics,
+//! the pretrain → quantize → finetune → evaluate pipeline, and the
+//! experiment sweeps.
+
+pub mod checkpoint;
+pub mod evaluator;
+pub mod metrics;
+pub mod pipeline;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use evaluator::{ClsEval, LmEval};
+pub use schedule::{LrSchedule, ScheduleKind};
+pub use trainer::{TrainConfig, Trainer, TrainReport};

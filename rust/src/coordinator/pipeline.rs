@@ -1,0 +1,130 @@
+//! High-level flows: pretrain → quantize → finetune, and the frozen-input
+//! assembly that bridges checkpoints to artifact manifests.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::Checkpoint;
+use super::trainer::{TrainConfig, Trainer, TrainReport};
+use crate::data::{batcher, corpus::Corpus, Vocab};
+use crate::runtime::{Manifest, Role, Runtime};
+use crate::tensor::HostTensor;
+
+/// Build the frozen-input map an artifact expects from a full-precision
+/// backbone checkpoint, quantizing `q.*` tensors with `rust/src/quant`.
+///
+/// Quantization parameters (qdtype/qblock/qgroup) come from the manifest's
+/// config echo, so a Table-4 FP4 artifact automatically gets FP4 packing.
+pub fn frozen_from_checkpoint(man: &Manifest, ckpt: &Checkpoint) -> Result<HashMap<String, HostTensor>> {
+    let qdtype = man.cfg.get("qdtype").unwrap_or("nf4").to_string();
+    let qblock = man.cfg.usize("qblock").max(1);
+    let qgroup = man.cfg.usize("qgroup").max(1);
+    let mut out = HashMap::new();
+    let mut qcache: HashMap<String, crate::quant::QMatrix> = HashMap::new();
+    for slot in man.inputs_with_role(Role::Frozen) {
+        if let Some(rest) = slot.name.strip_prefix("q.") {
+            let (wname, field) = rest.rsplit_once('.').context("bad q.* name")?;
+            if !qcache.contains_key(wname) {
+                let w = ckpt
+                    .tensors
+                    .get(wname)
+                    .with_context(|| format!("checkpoint missing '{wname}'"))?;
+                qcache.insert(wname.into(), crate::quant::quantize_matrix(w, &qdtype, qblock, qgroup));
+            }
+            let q = &qcache[wname];
+            let t = match field {
+                "packed" => q.packed.clone(),
+                "qscales" => q.qscales.clone(),
+                "gabs" => q.gabs.clone(),
+                "gmean" => q.gmean.clone(),
+                other => anyhow::bail!("unknown q field '{other}'"),
+            };
+            out.insert(slot.name.clone(), t);
+        } else {
+            let t = ckpt
+                .tensors
+                .get(&slot.name)
+                .with_context(|| format!("checkpoint missing '{}'", slot.name))?;
+            out.insert(slot.name.clone(), t.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Pretrain a backbone with the `full`/`lm` artifact on the synthetic corpus;
+/// returns the final backbone parameters as a checkpoint.
+pub fn pretrain(
+    rt: &mut Runtime,
+    cfg_name: &str,
+    steps: usize,
+    lr: f32,
+    seed: u32,
+    verbose: bool,
+) -> Result<(Checkpoint, TrainReport)> {
+    let init = format!("{cfg_name}__full__init");
+    let train = format!("{cfg_name}__full__lm__train");
+    let frozen = HashMap::new(); // full finetuning has no frozen inputs
+    let mut trainer = Trainer::new(rt, &init, &train, &frozen, seed)?;
+    let (b, s) = trainer.batch_dims();
+    let art = rt.load(&train)?;
+    let vocab = Vocab::new(art.manifest.cfg.usize("vocab"));
+    let mut corpus = Corpus::new(vocab, seed as u64 + 1);
+    let mut tcfg = TrainConfig::quick(steps, lr);
+    tcfg.verbose = verbose;
+    tcfg.seed = seed;
+    let report = trainer.run(rt, &tcfg, |_| {
+        let exs: Vec<_> = (0..b)
+            .map(|_| {
+                let (t, tg, m) = corpus.lm_example(s);
+                batcher::LmExample { tokens: t, targets: tg, mask: m }
+            })
+            .collect();
+        batcher::lm_batch(&exs, s)
+    })?;
+    Ok((Checkpoint::new(report.trainable.clone()), report))
+}
+
+/// Standard checkpoint path for a pretrained backbone.
+pub fn base_ckpt_path(cfg_name: &str) -> PathBuf {
+    crate::runs_dir().join(format!("{cfg_name}__base.ckpt"))
+}
+
+/// Pretrain-or-load: reuse an existing base checkpoint when present.
+pub fn ensure_base(
+    rt: &mut Runtime,
+    cfg_name: &str,
+    steps: usize,
+    lr: f32,
+    verbose: bool,
+) -> Result<Checkpoint> {
+    let path = base_ckpt_path(cfg_name);
+    if path.exists() {
+        return Checkpoint::load(&path);
+    }
+    let (ckpt, report) = pretrain(rt, cfg_name, steps, lr, 0, verbose)?;
+    eprintln!(
+        "[pretrain {cfg_name}] {} steps, loss {:.3} -> {:.3}, {:.1}s",
+        steps,
+        report.metrics.losses.first().copied().unwrap_or(f32::NAN),
+        report.metrics.mean_loss_tail(10),
+        report.wall_secs
+    );
+    ckpt.save(&path)?;
+    Ok(ckpt)
+}
+
+/// Finetune `method` on a prepared frozen map with a caller-supplied batch
+/// generator; thin wrapper for the experiment harness.
+pub fn finetune(
+    rt: &mut Runtime,
+    init_name: &str,
+    train_name: &str,
+    frozen: &HashMap<String, HostTensor>,
+    tcfg: &TrainConfig,
+    next_batch: impl FnMut(usize) -> crate::data::Batch,
+) -> Result<TrainReport> {
+    let mut trainer = Trainer::new(rt, init_name, train_name, frozen, tcfg.seed)?;
+    trainer.run(rt, tcfg, next_batch)
+}

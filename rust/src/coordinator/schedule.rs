@@ -1,0 +1,86 @@
+//! Learning-rate schedules (paper Appendix A/B: linear or constant with a
+//! warmup ratio of 0.06 / 0.03 respectively).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Constant,
+    Linear,
+    Cosine,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub kind: ScheduleKind,
+    pub base_lr: f32,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn new(kind: ScheduleKind, base_lr: f32, total_steps: usize, warmup_ratio: f64) -> Self {
+        let warmup_steps = ((total_steps as f64) * warmup_ratio).round() as usize;
+        LrSchedule { kind, base_lr, total_steps, warmup_steps }
+    }
+
+    /// Paper GLUE setup: linear schedule, warmup 0.06, lr 2e-4.
+    pub fn paper_glue(total_steps: usize) -> Self {
+        Self::new(ScheduleKind::Linear, 2e-4, total_steps, 0.06)
+    }
+
+    /// Paper MMLU setup: constant schedule, warmup 0.03.
+    pub fn paper_mmlu(total_steps: usize, lr: f32) -> Self {
+        Self::new(ScheduleKind::Constant, lr, total_steps, 0.03)
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step as f32 + 1.0) / self.warmup_steps as f32;
+        }
+        let progress = if self.total_steps > self.warmup_steps {
+            (step - self.warmup_steps) as f32
+                / (self.total_steps - self.warmup_steps).max(1) as f32
+        } else {
+            0.0
+        };
+        let progress = progress.clamp(0.0, 1.0);
+        match self.kind {
+            ScheduleKind::Constant => self.base_lr,
+            ScheduleKind::Linear => self.base_lr * (1.0 - progress),
+            ScheduleKind::Cosine => {
+                self.base_lr * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::new(ScheduleKind::Linear, 1.0, 100, 0.1);
+        assert!(s.lr_at(0) < s.lr_at(5));
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = LrSchedule::new(ScheduleKind::Linear, 1.0, 100, 0.0);
+        assert!(s.lr_at(99) < 0.02);
+        assert!(s.lr_at(50) > 0.4 && s.lr_at(50) < 0.6);
+    }
+
+    #[test]
+    fn constant_stays() {
+        let s = LrSchedule::new(ScheduleKind::Constant, 0.5, 100, 0.03);
+        assert_eq!(s.lr_at(50), 0.5);
+        assert_eq!(s.lr_at(99), 0.5);
+    }
+
+    #[test]
+    fn cosine_midpoint() {
+        let s = LrSchedule::new(ScheduleKind::Cosine, 1.0, 100, 0.0);
+        assert!((s.lr_at(50) - 0.5).abs() < 0.02);
+    }
+}

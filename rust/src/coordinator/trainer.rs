@@ -1,0 +1,184 @@
+//! The training loop: init → (lr, batch) → step → metrics, with all compute
+//! inside the AOT train artifact.
+//!
+//! The coordinator owns everything the paper's Appendix A/B specifies at the
+//! harness level — schedules, warmup, step counts, seeds, logging — while the
+//! artifact owns fwd/bwd/AdamW.  Batch shapes are baked into the artifact at
+//! lowering time (bs×seq in the manifest), matching the paper's per-model
+//! batch-size table.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::metrics::Metrics;
+use super::schedule::LrSchedule;
+use crate::data::Batch;
+use crate::runtime::{Artifact, Executor, Role, Runtime};
+use crate::tensor::HostTensor;
+use crate::util::timed;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub seed: u32,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn quick(steps: usize, lr: f32) -> Self {
+        TrainConfig {
+            steps,
+            schedule: LrSchedule::paper_mmlu(steps, lr),
+            seed: 0,
+            log_every: 50,
+            verbose: false,
+        }
+    }
+}
+
+pub struct TrainReport {
+    pub metrics: Metrics,
+    /// final trainable parameters (side network / LoRA / ... ) by name
+    pub trainable: HashMap<String, HostTensor>,
+    pub wall_secs: f64,
+}
+
+pub struct Trainer {
+    pub exec: Executor,
+    train_art: Rc<Artifact>,
+    lr_slot: usize,
+    data_slots: Vec<usize>,
+    loss_out: usize,
+    gnorm_out: usize,
+}
+
+impl Trainer {
+    /// Build a trainer: runs the init artifact for trainable params, zeroes
+    /// the optimizer state, uploads the frozen tensors.
+    pub fn new(
+        rt: &mut Runtime,
+        init_name: &str,
+        train_name: &str,
+        frozen: &HashMap<String, HostTensor>,
+        seed: u32,
+    ) -> Result<Self> {
+        let init_art = rt.load(init_name)?;
+        let train_art = rt.load(train_name)?;
+
+        // 1. initialize trainable params via the init artifact
+        let seed_t = HostTensor::scalar_u32(seed);
+        let init_out = init_art.run_host(&[seed_t])?;
+        let mut trainable: HashMap<String, HostTensor> = HashMap::new();
+        for (slot, t) in init_art.manifest.outputs.iter().zip(init_out) {
+            trainable.insert(slot.name.clone(), t);
+        }
+
+        let mut exec = Executor::new(train_art.clone());
+        let m = &train_art.manifest;
+        let mut lr_slot = None;
+        let mut data_slots = vec![];
+        // 2. fill every input slot
+        for (i, s) in m.inputs.iter().enumerate() {
+            match s.role {
+                Role::Trainable => {
+                    let t = trainable
+                        .get(&s.name)
+                        .with_context(|| format!("init artifact missing '{}'", s.name))?
+                        .clone();
+                    exec.set(rt, i, &t)?;
+                }
+                Role::OptM | Role::OptV => {
+                    exec.set(rt, i, &HostTensor::zeros(s.dtype, &s.shape))?;
+                }
+                Role::Step => exec.set(rt, i, &HostTensor::scalar_f32(0.0))?,
+                Role::Lr => {
+                    lr_slot = Some(i);
+                    exec.set(rt, i, &HostTensor::scalar_f32(0.0))?;
+                }
+                Role::Frozen => {
+                    let t = frozen
+                        .get(&s.name)
+                        .with_context(|| format!("frozen tensors missing '{}'", s.name))?;
+                    exec.set(rt, i, t)?;
+                }
+                Role::Data => data_slots.push(i),
+                _ => {}
+            }
+        }
+        let loss_out = m.output_index(Role::Loss).context("train graph has no loss output")?;
+        let gnorm_out = m.output_index(Role::Gnorm).unwrap_or(loss_out);
+        Ok(Trainer {
+            exec,
+            train_art,
+            lr_slot: lr_slot.context("train graph has no lr input")?,
+            data_slots,
+            loss_out,
+            gnorm_out,
+        })
+    }
+
+    /// Batch geometry from the manifest.
+    pub fn batch_dims(&self) -> (usize, usize) {
+        self.train_art.manifest.batch.unwrap_or((1, 1))
+    }
+
+    /// One optimizer step on the given batch at the given LR.
+    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
+        self.exec.set(rt, self.lr_slot, &HostTensor::scalar_f32(lr))?;
+        anyhow::ensure!(
+            batch.tensors.len() == self.data_slots.len(),
+            "batch arity {} != data slots {}",
+            batch.tensors.len(),
+            self.data_slots.len()
+        );
+        for (slot, t) in self.data_slots.clone().into_iter().zip(&batch.tensors) {
+            self.exec.set(rt, slot, t)?;
+        }
+        let out = self.exec.step(rt)?;
+        Ok((out[self.loss_out].scalar(), out[self.gnorm_out].scalar()))
+    }
+
+    /// Full loop with a batch generator.
+    pub fn run(
+        &mut self,
+        rt: &Runtime,
+        cfg: &TrainConfig,
+        mut next_batch: impl FnMut(usize) -> Batch,
+    ) -> Result<TrainReport> {
+        let (b, s) = self.batch_dims();
+        let mut metrics = Metrics::new(b * s);
+        let (loop_result, wall) = timed(|| -> Result<()> {
+            for step in 0..cfg.steps {
+                let lr = cfg.schedule.lr_at(step);
+                let batch = next_batch(step);
+                let ((loss, gnorm), secs) = {
+                    let t0 = std::time::Instant::now();
+                    let r = self.step(rt, &batch, lr)?;
+                    (r, t0.elapsed().as_secs_f64())
+                };
+                metrics.push(loss, gnorm, secs);
+                if cfg.verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+                    eprintln!(
+                        "[train {}] step {step}/{} loss {loss:.4} gnorm {gnorm:.3} lr {lr:.2e} ({:.0} tok/s)",
+                        self.train_art.name,
+                        cfg.steps,
+                        (b * s) as f64 / secs
+                    );
+                }
+            }
+            Ok(())
+        });
+        loop_result?;
+        let trainable = self.exec.read_role(Role::Trainable)?;
+        Ok(TrainReport { metrics, trainable, wall_secs: wall })
+    }
+
+    /// Current trainable parameters (e.g. to checkpoint mid-run).
+    pub fn trainable(&self) -> Result<HashMap<String, HostTensor>> {
+        self.exec.read_role(Role::Trainable)
+    }
+}

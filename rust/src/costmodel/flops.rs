@@ -1,0 +1,89 @@
+//! Training-FLOPs model (paper Table 3: FLOPS per token, lower is better).
+//!
+//! Conventions: forward = 2·P, backward = 4·P MAC-FLOPs per token through any
+//! parameter set P that gradients traverse.
+//! * Full/LoRA/Adapter/QLoRA: 6·P backbone (+ small method extras).
+//! * QST: 2·P frozen forward + 6·P_side — no backbone backward at all.
+//! * LST (as evaluated in the paper, 16-bit backbone): activation
+//!   checkpointing forces a forward *recompute* during the side backward
+//!   (their implementation re-materializes h_f), i.e. 4·P + 6·P_side; once
+//!   the 16-bit model spills past device memory (13B/70B on 4×A5000),
+//!   offload stalls inflate the effective cost further — modeled as a spill
+//!   multiplier from the memory model.  This reproduces Table 3's LST
+//!   blow-up at 70B.
+
+use super::memory::memory_bytes;
+use super::paperdims::{Method, PaperModel};
+
+/// Aggregate device memory of the paper's testbed (4x RTX A5000, 24 GB).
+pub const TESTBED_BYTES: f64 = 4.0 * 24.0e9;
+
+pub fn flops_per_token_r(m: &PaperModel, method: Method, r: usize) -> f64 {
+    let p = m.params;
+    match method {
+        Method::Full => 6.0 * p,
+        Method::Lora => 6.0 * p + 6.0 * m.trainable_params(Method::Lora),
+        // QLoRA pays the same matmuls plus dequant overhead on every forward
+        // weight access (paper: "slightly higher than LoRA")
+        Method::QLora => (6.0 * p + 6.0 * m.trainable_params(Method::QLora)) * 1.03,
+        Method::Adapter => 6.0 * p + 6.0 * m.trainable_params(Method::Adapter),
+        Method::Lst => {
+            let side = 6.0 * m.side_params(8, "linear", 0);
+            let base = 4.0 * p + side; // fwd + checkpointed recompute
+            // spill multiplier once 16-bit weights + activations exceed the testbed
+            let need = memory_bytes(m, Method::Lst, 4, 384).total();
+            let spill = (need / TESTBED_BYTES).max(1.0);
+            base * spill
+        }
+        Method::Qst => 2.0 * p + 6.0 * m.side_params(r, "adapter", 16),
+    }
+}
+
+pub fn flops_per_token(m: &PaperModel, method: Method) -> f64 {
+    flops_per_token_r(m, method, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::memory::NF4_BITS;
+    use crate::costmodel::paperdims::paper_model;
+
+    #[test]
+    fn table3_ordering() {
+        // paper Table 3: QST lowest everywhere; LST highest at 70B
+        for name in ["LLaMA-2-7B", "LLaMA-2-13B", "LLaMA-2-70B"] {
+            let m = paper_model(name).unwrap();
+            let qst = flops_per_token(m, Method::Qst);
+            for meth in [Method::QLora, Method::Lora, Method::Adapter, Method::Lst] {
+                assert!(flops_per_token(m, meth) > qst, "{name} {meth:?}");
+            }
+        }
+        let m70 = paper_model("LLaMA-2-70B").unwrap();
+        let lst = flops_per_token(m70, Method::Lst);
+        for meth in [Method::QLora, Method::Lora, Method::Adapter, Method::Qst] {
+            assert!(lst > flops_per_token(m70, meth), "LST must be worst at 70B");
+        }
+    }
+
+    #[test]
+    fn qst_speedup_factor() {
+        // paper: ~2.5-3x lower FLOPs/token than QLoRA (11.7 vs 4.4 at 7B)
+        let m = paper_model("LLaMA-2-7B").unwrap();
+        let ratio = flops_per_token(m, Method::QLora) / flops_per_token(m, Method::Qst);
+        assert!(ratio > 2.0 && ratio < 3.5, "ratio {ratio:.2} (paper ~2.66)");
+    }
+
+    #[test]
+    fn qlora_slightly_above_lora() {
+        let m = paper_model("LLaMA-2-13B").unwrap();
+        let qlora = flops_per_token(m, Method::QLora);
+        let lora = flops_per_token(m, Method::Lora);
+        assert!(qlora > lora && qlora < lora * 1.1);
+    }
+
+    #[test]
+    fn nf4_bits_sane() {
+        assert!((NF4_BITS - 4.127).abs() < 0.01);
+    }
+}

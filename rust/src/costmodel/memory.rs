@@ -1,0 +1,163 @@
+//! Analytical memory model (DESIGN.md §5) — regenerates Fig 1a, Fig 4,
+//! Fig 5b and the memory columns of Tables 1/2.
+//!
+//! Conventions (calibrated against the paper's reported QLoRA/QST numbers;
+//! see EXPERIMENTS.md §Calibration):
+//! * 16-bit storage for full-precision weights, NF4+double-quant = 4.127
+//!   bits/param for quantized ones; trainable params always 16-bit.
+//! * Optimizer: AdamW with fp32 moments + fp16 gradient = 10 bytes per
+//!   trainable param (the paper's "threefold" bucket).
+//! * Activations: Megatron-style `s·b·(34·h + 5·a·s)` bytes per layer for
+//!   full-backprop methods; side-tuning methods store only the side network's
+//!   activations (width h/r) + the (L+1) downsampled inputs + a 2-layer live
+//!   window of the frozen forward + the logits buffer.
+
+use super::paperdims::{Method, PaperModel};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryBreakdown {
+    pub weights: f64,
+    pub optimizer: f64,
+    pub activations: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights + self.optimizer + self.activations
+    }
+}
+
+/// Bits per parameter of the NF4 + double-quantization storage format.
+pub const NF4_BITS: f64 = 4.127;
+/// Bytes of optimizer state per trainable parameter (fp16 grad + fp32 m, v).
+pub const OPT_BYTES: f64 = 10.0;
+/// Bytes per element of the 16-bit compute dtype.
+const B16: f64 = 2.0;
+
+/// Per-layer stored-activation bytes for one sample position (Megatron-LM
+/// table 2 shape, 16-bit): 34·h + 5·a·s.
+fn act_per_layer(m: &PaperModel, s: usize) -> f64 {
+    34.0 * m.d as f64 + 5.0 * m.heads as f64 * s as f64
+}
+
+/// Full memory breakdown for finetuning `model` with `method` at batch `b`,
+/// sequence `s`, optionally overriding the side-network reduction factor.
+pub fn memory_bytes_r(m: &PaperModel, method: Method, b: usize, s: usize, r: usize) -> MemoryBreakdown {
+    let p = m.params;
+    let pt = match method {
+        Method::Qst => m.side_params(r, "adapter", 16),
+        other => m.trainable_params(other),
+    };
+
+    let frozen_bits = if method.quantized() { NF4_BITS } else { 16.0 };
+    let weights = match method {
+        Method::Full => p * B16,
+        _ => p * frozen_bits / 8.0 + pt * B16,
+    };
+    let optimizer = pt * OPT_BYTES;
+
+    let tokens = (b * s) as f64;
+    let logits = tokens * m.vocab as f64 * B16;
+    let activations = if method.full_backprop() {
+        m.layers as f64 * tokens * act_per_layer(m, s) + logits
+    } else {
+        // side network at width h/r (heads scale down too)
+        let side = PaperModel { d: m.d / r, heads: (m.heads / r).max(1), ..*m };
+        let side_acts = m.layers as f64 * tokens * act_per_layer(&side, s);
+        // (L+1) downsampled hidden states kept for the side inputs
+        let down_inputs = (m.layers + 1) as f64 * tokens * (m.d / r) as f64 * B16;
+        // live working set of the frozen forward (~2 layers, freed as it goes)
+        let live = 2.0 * tokens * act_per_layer(m, s);
+        side_acts + down_inputs + live + logits
+    };
+    MemoryBreakdown { weights, optimizer, activations }
+}
+
+pub fn memory_bytes(m: &PaperModel, method: Method, b: usize, s: usize) -> MemoryBreakdown {
+    let r = match method {
+        Method::Lst => 8,
+        _ => 16,
+    };
+    memory_bytes_r(m, method, b, s, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::paperdims::{paper_model, ALL_METHODS};
+
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn table2_shape_llama70b() {
+        // paper Table 2 (bs 4, seq 384): QLoRA 95.5 GB, QST 56.0 GB (1.7x)
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        let qlora = memory_bytes(m, Method::QLora, 4, 384).total() / GB;
+        let qst = memory_bytes(m, Method::Qst, 4, 384).total() / GB;
+        assert!(qlora > 60.0 && qlora < 130.0, "QLoRA {qlora:.1} GB (paper 95.5)");
+        assert!(qst > 30.0 && qst < 70.0, "QST {qst:.1} GB (paper 56.0)");
+        let ratio = qlora / qst;
+        assert!(ratio > 1.4 && ratio < 3.0, "ratio {ratio:.2} (paper 1.7)");
+    }
+
+    #[test]
+    fn qst_lowest_at_every_batch_size() {
+        // Fig 4a: QST lowest at every batch size
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        for &b in &[1usize, 4, 16, 32] {
+            let qst = memory_bytes(m, Method::Qst, b, 512).total();
+            for meth in ALL_METHODS {
+                if meth != Method::Qst {
+                    assert!(
+                        memory_bytes(m, meth, b, 512).total() >= qst,
+                        "{} beats QST at b={b}",
+                        meth.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activation_growth_flatter_for_side_tuning() {
+        // Fig 4a/4c: QST/LST activation slope << QLoRA's
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        let slope = |meth: Method| {
+            let a1 = memory_bytes(m, meth, 1, 512).activations;
+            let a2 = memory_bytes(m, meth, 16, 512).activations;
+            a2 - a1
+        };
+        assert!(slope(Method::Qst) < slope(Method::QLora) / 5.0);
+        assert!(slope(Method::Lst) < slope(Method::Lora) / 5.0);
+    }
+
+    #[test]
+    fn quantization_gap_widens_with_size(){
+        // Fig 4b: the QST-vs-16-bit gap grows with total model bits
+        let small = paper_model("OPT-1.3B").unwrap();
+        let big = paper_model("OPT-66B").unwrap();
+        let gap = |m: &PaperModel| {
+            memory_bytes(m, Method::Lst, 4, 512).total()
+                - memory_bytes(m, Method::Qst, 4, 512).total()
+        };
+        assert!(gap(big) > 10.0 * gap(small));
+    }
+
+    #[test]
+    fn qst_beats_lst_by_weights() {
+        // paper §4.4: "~100 GB reduction compared to LST" at 70B
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        let lst = memory_bytes(m, Method::Lst, 4, 512).total() / GB;
+        let qst = memory_bytes(m, Method::Qst, 4, 512).total() / GB;
+        assert!(lst - qst > 80.0, "LST {lst:.0} vs QST {qst:.0}");
+    }
+
+    #[test]
+    fn full_ft_7x_claim() {
+        // abstract: "QST reduces total memory up to 7x vs full finetuning"
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        let full = memory_bytes(m, Method::Full, 16, 384).total();
+        let qst = memory_bytes(m, Method::Qst, 16, 384).total();
+        assert!(full / qst > 5.0, "ratio {:.1}", full / qst);
+    }
+}

@@ -1,0 +1,17 @@
+//! Analytical memory + FLOPs models evaluated at the paper's *true* model
+//! dimensions (1.3B–70B) — the regenerators for Fig 1a, Fig 4, Fig 5b/5c,
+//! Table 2's memory column and Table 3.
+//!
+//! Memory footprint is an arithmetic consequence of (method, dims, batch,
+//! seq): exact for weights/optimizer, Megatron-style for activations.  The
+//! constants are calibrated against measured proxy runs
+//! (`qst experiments --id calib`) and the calibration is recorded in
+//! EXPERIMENTS.md.
+
+pub mod flops;
+pub mod memory;
+pub mod paperdims;
+
+pub use flops::flops_per_token;
+pub use memory::{memory_bytes, MemoryBreakdown};
+pub use paperdims::{paper_model, Method, PaperModel, PAPER_MODELS};

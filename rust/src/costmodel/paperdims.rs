@@ -1,0 +1,160 @@
+//! True dimensions of every model in the paper's evaluation.
+
+/// Finetuning methods compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Full,
+    Lora,
+    QLora,
+    Adapter,
+    Lst,
+    Qst,
+}
+
+pub const ALL_METHODS: [Method; 6] =
+    [Method::Full, Method::Lora, Method::QLora, Method::Adapter, Method::Lst, Method::Qst];
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Full => "Full-FT",
+            Method::Lora => "LoRA",
+            Method::QLora => "QLoRA",
+            Method::Adapter => "Adapter",
+            Method::Lst => "LST",
+            Method::Qst => "QST",
+        }
+    }
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::Lora => "lora",
+            Method::QLora => "qlora",
+            Method::Adapter => "adapter",
+            Method::Lst => "lst",
+            Method::Qst => "qst",
+        }
+    }
+
+    /// 4-bit frozen weights?
+    pub fn quantized(self) -> bool {
+        matches!(self, Method::QLora | Method::Qst)
+    }
+
+    /// Backprop through the backbone?
+    pub fn full_backprop(self) -> bool {
+        !matches!(self, Method::Lst | Method::Qst)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    /// total backbone parameters (reported size)
+    pub params: f64,
+}
+
+pub const PAPER_MODELS: [PaperModel; 9] = [
+    PaperModel { name: "OPT-1.3B", d: 2048, layers: 24, heads: 32, ff: 8192, vocab: 50272, params: 1.3e9 },
+    PaperModel { name: "OPT-2.7B", d: 2560, layers: 32, heads: 32, ff: 10240, vocab: 50272, params: 2.7e9 },
+    PaperModel { name: "OPT-6.7B", d: 4096, layers: 32, heads: 32, ff: 16384, vocab: 50272, params: 6.7e9 },
+    PaperModel { name: "OPT-13B", d: 5120, layers: 40, heads: 40, ff: 20480, vocab: 50272, params: 13.0e9 },
+    PaperModel { name: "OPT-30B", d: 7168, layers: 48, heads: 56, ff: 28672, vocab: 50272, params: 30.0e9 },
+    PaperModel { name: "OPT-66B", d: 9216, layers: 64, heads: 72, ff: 36864, vocab: 50272, params: 66.0e9 },
+    PaperModel { name: "LLaMA-2-7B", d: 4096, layers: 32, heads: 32, ff: 11008, vocab: 32000, params: 6.7e9 },
+    PaperModel { name: "LLaMA-2-13B", d: 5120, layers: 40, heads: 40, ff: 13824, vocab: 32000, params: 13.0e9 },
+    PaperModel { name: "LLaMA-2-70B", d: 8192, layers: 80, heads: 64, ff: 28672, vocab: 32000, params: 69.0e9 },
+];
+
+pub fn paper_model(name: &str) -> Option<&'static PaperModel> {
+    PAPER_MODELS.iter().find(|m| m.name == name)
+}
+
+impl PaperModel {
+    /// LoRA trainable params: rank-r adapters on every linear (QLoRA's setup,
+    /// r = 64 as in Dettmers et al.).
+    pub fn lora_params(&self, rank: usize) -> f64 {
+        // per layer: q,k,v,o (d->d) + mlp matrices (d->ff, ff->d [, d->ff])
+        let attn = 4.0 * (self.d + self.d) as f64;
+        let is_llama = self.name.starts_with("LLaMA");
+        let mlp = if is_llama {
+            2.0 * (self.d + self.ff) as f64 + (self.ff + self.d) as f64
+        } else {
+            (self.d + self.ff) as f64 + (self.ff + self.d) as f64
+        };
+        self.layers as f64 * rank as f64 * (attn + mlp)
+    }
+
+    /// Houlsby adapter trainable params (bottleneck rank after attn + mlp).
+    pub fn adapter_params(&self, rank: usize) -> f64 {
+        self.layers as f64 * 2.0 * (2.0 * self.d as f64 * rank as f64 + (rank + self.d) as f64)
+    }
+
+    /// Side-network trainable params at reduction r with the given downsample
+    /// module ("linear" | "adapter" | "pool").
+    pub fn side_params(&self, r: usize, downsample: &str, ds_rank: usize) -> f64 {
+        let dg = (self.d / r) as f64;
+        let ffg = (self.ff / r) as f64;
+        let is_llama = self.name.starts_with("LLaMA");
+        let attn = 4.0 * dg * dg;
+        let mlp = if is_llama { 3.0 * dg * ffg } else { 2.0 * dg * ffg };
+        let blocks = self.layers as f64 * (attn + mlp + 4.0 * dg);
+        let down_per = match downsample {
+            "linear" => self.d as f64 * dg + dg,
+            "pool" | "maxpool" | "avgpool" => 0.0,
+            _ => self.d as f64 * ds_rank as f64 + ds_rank as f64 * dg, // lora/adapter
+        };
+        let down = (self.layers + 1) as f64 * down_per;
+        let up = dg * self.d as f64 + self.d as f64;
+        blocks + down + up + self.layers as f64 + 2.0
+    }
+
+    /// Trainable parameters for each method (paper defaults: LoRA r=64 for
+    /// QLoRA/LoRA, adapter rank 64, QST r=16 with adapter-rank-16 downsamples,
+    /// LST r=8 with linear downsamples).
+    pub fn trainable_params(&self, m: Method) -> f64 {
+        match m {
+            Method::Full => self.params,
+            Method::Lora | Method::QLora => self.lora_params(64),
+            Method::Adapter => self.adapter_params(64),
+            Method::Lst => self.side_params(8, "linear", 0),
+            Method::Qst => self.side_params(16, "adapter", 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert!(paper_model("LLaMA-2-70B").is_some());
+        assert!(paper_model("GPT-5").is_none());
+    }
+
+    #[test]
+    fn trainable_ordering_matches_table1() {
+        // paper Table 1 (OPT-6.7B): QLoRA 2.33% >> QST 0.42%
+        let m = paper_model("OPT-6.7B").unwrap();
+        let qlora_pct = m.trainable_params(Method::QLora) / m.params * 100.0;
+        let qst_pct = m.trainable_params(Method::Qst) / m.params * 100.0;
+        assert!(qlora_pct > 1.0 && qlora_pct < 5.0, "QLoRA% = {qlora_pct:.2}");
+        assert!(qst_pct < 1.0, "QST% = {qst_pct:.2}");
+        assert!(qlora_pct / qst_pct > 3.0, "paper reports ~5.5x");
+    }
+
+    #[test]
+    fn lst_heavier_than_qst() {
+        // LST's linear downsamplers + r=8 side dominate QST's r=16 + adapters
+        for m in &PAPER_MODELS {
+            assert!(m.trainable_params(Method::Lst) > m.trainable_params(Method::Qst), "{}", m.name);
+        }
+    }
+}

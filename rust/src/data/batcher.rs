@@ -1,0 +1,149 @@
+//! Batch assembly: examples -> the `batch.*` tensors of the artifact graphs,
+//! plus a background prefetch pipeline (std::thread + channel) so data
+//! generation overlaps step execution on the single-core testbed.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::tensor::HostTensor;
+
+/// One classification example (GLUE-like).
+#[derive(Clone, Debug)]
+pub struct ClsExample {
+    pub tokens: Vec<i32>,
+    pub label_pos: usize,
+    /// label token id fed to the loss (LM-head reuse)
+    pub label_tok: i32,
+    /// raw class index (for accuracy computation)
+    pub label: usize,
+}
+
+/// One LM example (pretraining / SFT).
+#[derive(Clone, Debug)]
+pub struct LmExample {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Assembled batch tensors in manifest order.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tensors: Vec<HostTensor>,
+    /// per-row class indices (cls batches; empty for lm)
+    pub labels: Vec<usize>,
+}
+
+pub fn cls_batch(examples: &[ClsExample], seq: usize) -> Batch {
+    let b = examples.len();
+    let mut tokens = Vec::with_capacity(b * seq);
+    let mut pos = Vec::with_capacity(b);
+    let mut tok = Vec::with_capacity(b);
+    let mut labels = Vec::with_capacity(b);
+    for e in examples {
+        assert_eq!(e.tokens.len(), seq);
+        tokens.extend_from_slice(&e.tokens);
+        pos.push(e.label_pos as i32);
+        tok.push(e.label_tok);
+        labels.push(e.label);
+    }
+    Batch {
+        tensors: vec![
+            HostTensor::from_i32(&[b, seq], &tokens),
+            HostTensor::from_i32(&[b], &pos),
+            HostTensor::from_i32(&[b], &tok),
+        ],
+        labels,
+    }
+}
+
+pub fn lm_batch(examples: &[LmExample], seq: usize) -> Batch {
+    let b = examples.len();
+    let mut tokens = Vec::with_capacity(b * seq);
+    let mut targets = Vec::with_capacity(b * seq);
+    let mut mask = Vec::with_capacity(b * seq);
+    for e in examples {
+        assert_eq!(e.tokens.len(), seq);
+        tokens.extend_from_slice(&e.tokens);
+        targets.extend_from_slice(&e.targets);
+        mask.extend_from_slice(&e.mask);
+    }
+    Batch {
+        tensors: vec![
+            HostTensor::from_i32(&[b, seq], &tokens),
+            HostTensor::from_i32(&[b, seq], &targets),
+            HostTensor::from_f32(&[b, seq], &mask),
+        ],
+        labels: vec![],
+    }
+}
+
+/// Bounded background prefetcher: runs a generator closure on a worker thread
+/// so batch assembly overlaps PJRT execution.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Batch>,
+    _handle: thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    pub fn new<F>(depth: usize, mut gen: F) -> Self
+    where
+        F: FnMut() -> Batch + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let handle = thread::spawn(move || {
+            loop {
+                let b = gen();
+                if tx.send(b).is_err() {
+                    return; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next(&self) -> Batch {
+        self.rx.recv().expect("prefetcher thread died")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::glue::{GlueGen, GlueTask};
+    use crate::data::vocabulary::Vocab;
+
+    #[test]
+    fn cls_batch_shapes() {
+        let mut g = GlueGen::new(GlueTask::Sst2, Vocab::new(512), 32, 1);
+        let b = cls_batch(&g.examples(8), 32);
+        assert_eq!(b.tensors[0].shape, vec![8, 32]);
+        assert_eq!(b.tensors[1].shape, vec![8]);
+        assert_eq!(b.tensors[2].shape, vec![8]);
+        assert_eq!(b.labels.len(), 8);
+    }
+
+    #[test]
+    fn lm_batch_shapes() {
+        let ex = LmExample {
+            tokens: vec![1; 16],
+            targets: vec![2; 16],
+            mask: vec![1.0; 16],
+        };
+        let b = lm_batch(&[ex.clone(), ex], 16);
+        assert_eq!(b.tensors[0].shape, vec![2, 16]);
+        assert_eq!(b.tensors[2].as_f32().unwrap().iter().sum::<f32>(), 32.0);
+    }
+
+    #[test]
+    fn prefetcher_delivers() {
+        let mut i = 0usize;
+        let pf = Prefetcher::new(2, move || {
+            i += 1;
+            Batch { tensors: vec![HostTensor::scalar_f32(i as f32)], labels: vec![] }
+        });
+        let a = pf.next().tensors[0].scalar();
+        let b = pf.next().tensors[0].scalar();
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,212 @@
+//! Pretraining corpus generator: a learnable synthetic language.
+//!
+//! Three interleaved sources (weights chosen so all are well-represented):
+//! 1. **Bigram language** — each content token has a sparse successor
+//!    distribution (8 preferred successors); the model can reach low loss
+//!    only by learning it.
+//! 2. **Knowledge statements** — `[BOS s r o EOS]` for every (s, r) pair in
+//!    the world's fact table, the substrate of the MMLU-like benchmark.
+//! 3. **Sentiment fields** — runs of positive or negative tokens bracketed
+//!    by content, giving the SST-like task a pretrained feature to exploit.
+
+use super::vocabulary::{Vocab, BOS, EOS, SEP};
+use crate::util::rng::Rng;
+
+/// The world's ground-truth fact table: object(s, r) = deterministic hash.
+pub fn fact_object(v: &Vocab, s: usize, r: usize) -> usize {
+    // splitmix-style mixing for a fixed, seed-independent fact table
+    let mut x = (s as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (r as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 29;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 32;
+    (x as usize) % v.n_obj
+}
+
+pub struct Corpus {
+    pub vocab: Vocab,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(vocab: Vocab, seed: u64) -> Self {
+        Corpus { vocab, rng: Rng::new(seed) }
+    }
+
+    /// Preferred successors of a content token (sparse bigram structure).
+    fn successor(&mut self, t: i32) -> i32 {
+        let v = &self.vocab;
+        let base = (t - v.content0) as u64;
+        let slot = self.rng.below(8) as u64;
+        let mut x = base.wrapping_mul(0x2545F4914F6CDD1D) ^ slot.wrapping_mul(0x9E3779B97F4A7C15);
+        x ^= x >> 31;
+        v.content0 + (x as usize % v.n_content) as i32
+    }
+
+    fn content_run(&mut self, out: &mut Vec<i32>, len: usize) {
+        let v = &self.vocab;
+        let mut t = v.content0 + self.rng.below(v.n_content) as i32;
+        out.push(t);
+        for _ in 1..len {
+            t = self.successor(t);
+            out.push(t);
+        }
+    }
+
+    fn fact_statement(&mut self, out: &mut Vec<i32>) {
+        let s = self.rng.below(self.vocab.n_subj);
+        let r = self.rng.below(self.vocab.n_rel);
+        let o = fact_object(&self.vocab, s, r);
+        out.push(BOS);
+        out.push(self.vocab.subj(s));
+        out.push(self.vocab.rel(r));
+        out.push(self.vocab.obj(o));
+        out.push(EOS);
+    }
+
+    fn sentiment_field(&mut self, out: &mut Vec<i32>) {
+        let v = self.vocab.clone();
+        let positive = self.rng.bool(0.5);
+        let base = if positive { v.pos0 } else { v.neg0 };
+        for _ in 0..self.rng.range(3, 7) {
+            out.push(base + self.rng.below(v.n_sent) as i32);
+        }
+        // Annotate half the fields with their verbalizer — the pretraining
+        // co-occurrence that makes label verbalizers meaningful (real corpora
+        // tie sentiment-bearing text to words like "great"/"terrible").
+        if self.rng.bool(0.5) {
+            out.push(SEP);
+            out.push(v.label(if positive { 1 } else { 0 }));
+            out.push(EOS);
+        }
+    }
+
+    /// Paraphrase statement: [BOS a.. SEP b.. SEP verbalizer EOS] where b is
+    /// the synonym-mapped (or an unrelated) span — gives the pretrained model
+    /// the pairwise-similarity concept the MRPC/QQP/STS-B tasks probe.
+    fn paraphrase_statement(&mut self, out: &mut Vec<i32>) {
+        let v = self.vocab.clone();
+        let len = self.rng.range(3, 6);
+        let start = out.len();
+        out.push(BOS);
+        self.content_run(out, len);
+        let a: Vec<i32> = out[start + 1..].to_vec();
+        out.push(SEP);
+        let paraphrase = self.rng.bool(0.5);
+        if paraphrase {
+            for &t in &a {
+                out.push(v.synonym(t));
+            }
+        } else {
+            self.content_run(out, len);
+        }
+        out.push(SEP);
+        out.push(v.label(if paraphrase { 1 } else { 0 }));
+        out.push(EOS);
+    }
+
+    /// Emit a token stream of exactly `len` tokens.
+    pub fn tokens(&mut self, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len + 16);
+        while out.len() < len {
+            match self.rng.below(10) {
+                0..=2 => self.fact_statement(&mut out),       // 30%: facts
+                3..=4 => self.sentiment_field(&mut out),      // 20%: sentiment
+                5 => self.paraphrase_statement(&mut out),     // 10%: paraphrase
+                _ => {
+                    let run = self.rng.range(4, 12);
+                    self.content_run(&mut out, run);          // 40%: language
+                }
+            }
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// One LM training sequence: tokens + next-token targets + full mask.
+    pub fn lm_example(&mut self, seq: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let toks = self.tokens(seq + 1);
+        let inputs = toks[..seq].to_vec();
+        let targets = toks[1..].to_vec();
+        (inputs, targets, vec![1.0; seq])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let v = Vocab::new(512);
+        let a = Corpus::new(v.clone(), 7).tokens(256);
+        let b = Corpus::new(v, 7).tokens(256);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let v = Vocab::new(512);
+        let toks = Corpus::new(v.clone(), 1).tokens(2048);
+        assert!(toks.iter().all(|&t| (t as usize) < v.size && t >= 0));
+    }
+
+    #[test]
+    fn facts_consistent() {
+        let v = Vocab::new(512);
+        // the fact table is a function: same (s, r) -> same o, spread over objects
+        let o1 = fact_object(&v, 3, 2);
+        let o2 = fact_object(&v, 3, 2);
+        assert_eq!(o1, o2);
+        let distinct: std::collections::HashSet<usize> =
+            (0..50).map(|s| fact_object(&v, s, 1)).collect();
+        assert!(distinct.len() > 25, "facts must spread over objects");
+    }
+
+    #[test]
+    fn corpus_contains_fact_statements() {
+        let v = Vocab::new(512);
+        let toks = Corpus::new(v.clone(), 3).tokens(4096);
+        // count [BOS subj rel obj EOS] windows and verify they match the table
+        let mut found = 0;
+        for w in toks.windows(5) {
+            if w[0] == BOS && w[4] == EOS {
+                let s = (w[1] - v.subj0) as usize;
+                let r = (w[2] - v.rel0) as usize;
+                if w[1] >= v.subj0 && s < v.n_subj && w[2] >= v.rel0 && r < v.n_rel {
+                    assert_eq!(w[3], v.obj(fact_object(&v, s, r)), "fact mismatch in corpus");
+                    found += 1;
+                }
+            }
+        }
+        assert!(found > 50, "expected many fact statements, found {found}");
+    }
+
+    #[test]
+    fn lm_example_shapes() {
+        let v = Vocab::new(256);
+        let (i, t, m) = Corpus::new(v, 5).lm_example(64);
+        assert_eq!(i.len(), 64);
+        assert_eq!(t.len(), 64);
+        assert_eq!(m.len(), 64);
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // successor distribution must be sparse: the same token's successors
+        // concentrate on <= 8 values
+        let v = Vocab::new(512);
+        let mut c = Corpus::new(v.clone(), 11);
+        let mut succ: std::collections::HashMap<i32, std::collections::HashSet<i32>> =
+            Default::default();
+        let toks = c.tokens(20_000);
+        for w in toks.windows(2) {
+            if v.is_content(w[0]) && v.is_content(w[1]) {
+                succ.entry(w[0]).or_default().insert(w[1]);
+            }
+        }
+        let avg: f64 = succ.values().map(|s| s.len() as f64).sum::<f64>() / succ.len() as f64;
+        // runs are length >= 4, so most transitions are in-run (sparse);
+        // run boundaries add a few extras
+        assert!(avg < 16.0, "bigram fan-out too high: {avg}");
+    }
+}

@@ -1,0 +1,287 @@
+//! GLUE-like synthetic task family (paper Table 1).
+//!
+//! Eight tasks mirroring the benchmark's shapes: single- or paired-sequence
+//! classification / regression, each built on structure the backbone saw in
+//! pretraining.  Every task has a train/eval generator returning
+//! `(tokens, label)` where the label is one of the reserved label tokens and
+//! prediction happens at the final SEP position (LM-head reuse, as in the
+//! paper).
+
+use super::batcher::ClsExample;
+use super::corpus::Corpus;
+use super::vocabulary::{Vocab, BOS, SEP};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GlueTask {
+    Rte,   // 2-way entailment
+    Mrpc,  // 2-way paraphrase
+    Stsb,  // 5-bucket similarity regression (Pearson reported)
+    Cola,  // 2-way acceptability (bigram-grammar violations)
+    Sst2,  // 2-way sentiment
+    Qnli,  // 2-way answerability
+    Qqp,   // 2-way paraphrase (noisier than MRPC)
+    Mnli,  // 3-way entailment
+}
+
+pub const ALL_TASKS: [GlueTask; 8] = [
+    GlueTask::Rte, GlueTask::Mrpc, GlueTask::Stsb, GlueTask::Cola,
+    GlueTask::Sst2, GlueTask::Qnli, GlueTask::Qqp, GlueTask::Mnli,
+];
+
+impl GlueTask {
+    pub fn name(self) -> &'static str {
+        match self {
+            GlueTask::Rte => "RTE",
+            GlueTask::Mrpc => "MRPC",
+            GlueTask::Stsb => "STS-B",
+            GlueTask::Cola => "CoLA",
+            GlueTask::Sst2 => "SST-2",
+            GlueTask::Qnli => "QNLI",
+            GlueTask::Qqp => "QQP",
+            GlueTask::Mnli => "MNLI",
+        }
+    }
+
+    pub fn n_classes(self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            GlueTask::Stsb => 5,
+            _ => 2,
+        }
+    }
+
+    /// STS-B reports Pearson correlation over bucket scores.
+    pub fn is_regression(self) -> bool {
+        matches!(self, GlueTask::Stsb)
+    }
+}
+
+pub struct GlueGen {
+    pub task: GlueTask,
+    pub vocab: Vocab,
+    corpus: Corpus,
+    rng: Rng,
+    seq: usize,
+}
+
+impl GlueGen {
+    pub fn new(task: GlueTask, vocab: Vocab, seq: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ (task as u64) << 32);
+        let corpus = Corpus::new(vocab.clone(), rng.next_u64());
+        GlueGen { task, vocab, corpus, rng, seq }
+    }
+
+    fn content_span(&mut self, len: usize) -> Vec<i32> {
+        let mut toks = self.corpus.tokens(len * 2);
+        toks.retain(|&t| self.vocab.is_content(t));
+        toks.truncate(len);
+        while toks.len() < len {
+            toks.push(self.vocab.content0 + self.rng.below(self.vocab.n_content) as i32);
+        }
+        toks
+    }
+
+    /// Synonym map shared with the pretraining corpus.
+    fn synonym(&self, t: i32) -> i32 {
+        self.vocab.synonym(t)
+    }
+
+    /// Pack `[BOS a... SEP b... SEP]` right-padded to seq; label position is
+    /// the last SEP.
+    fn pack_pair(&mut self, a: &[i32], b: &[i32]) -> (Vec<i32>, usize) {
+        let mut toks = vec![BOS];
+        toks.extend_from_slice(a);
+        toks.push(SEP);
+        toks.extend_from_slice(b);
+        toks.push(SEP);
+        toks.truncate(self.seq);
+        let pos = toks.len() - 1;
+        toks.resize(self.seq, super::vocabulary::PAD);
+        (toks, pos)
+    }
+
+    pub fn example(&mut self) -> ClsExample {
+        let span = (self.seq / 2).saturating_sub(3).max(4);
+        let (tokens, pos, label) = match self.task {
+            GlueTask::Rte | GlueTask::Mnli => {
+                // premise; hypothesis ⊂ premise => entail; overlapping-but-
+                // shuffled => neutral (MNLI); disjoint => contradict/not-entail
+                let prem = self.content_span(span);
+                let kind = self.rng.below(self.task.n_classes());
+                let hyp: Vec<i32> = match kind {
+                    0 => {
+                        let idx = self.rng.choose_k(prem.len(), (prem.len() / 2).max(2));
+                        let mut v: Vec<i32> = idx.iter().map(|&i| prem[i]).collect();
+                        v.sort();
+                        v
+                    }
+                    1 => self.content_span(span / 2 + 1),
+                    _ => {
+                        let mut v = prem.clone();
+                        self.rng.shuffle(&mut v);
+                        v.truncate(span / 2 + 1);
+                        let extra = self.content_span(2);
+                        [v, extra].concat()
+                    }
+                };
+                let (t, p) = self.pack_pair(&prem, &hyp);
+                (t, p, kind)
+            }
+            GlueTask::Mrpc | GlueTask::Qqp => {
+                let a = self.content_span(span);
+                let paraphrase = self.rng.bool(0.5);
+                let noise = if self.task == GlueTask::Qqp { 0.25 } else { 0.1 };
+                let b: Vec<i32> = if paraphrase {
+                    a.iter()
+                        .map(|&t| if self.rng.bool(1.0 - noise) { self.synonym(t) } else { t })
+                        .collect()
+                } else {
+                    self.content_span(span)
+                };
+                let (t, p) = self.pack_pair(&a, &b);
+                (t, p, if paraphrase { 1 } else { 0 })
+            }
+            GlueTask::Stsb => {
+                // overlap fraction in {0, .25, .5, .75, 1} -> bucket 0..4
+                let a = self.content_span(span);
+                let bucket = self.rng.below(5);
+                let keep = (a.len() * bucket) / 4;
+                let mut b = Vec::with_capacity(a.len());
+                for (i, &t) in a.iter().enumerate() {
+                    if i < keep {
+                        b.push(self.synonym(t));
+                    } else {
+                        b.push(self.vocab.content0
+                            + self.rng.below(self.vocab.n_content) as i32);
+                    }
+                }
+                let (t, p) = self.pack_pair(&a, &b);
+                (t, p, bucket)
+            }
+            GlueTask::Cola => {
+                // acceptable = a bigram-language span; unacceptable = shuffled
+                let mut a = Vec::new();
+                self.corpus_run(&mut a, span);
+                let ok = self.rng.bool(0.5);
+                if !ok {
+                    self.rng.shuffle(&mut a);
+                }
+                let (t, p) = self.pack_pair(&a, &[]);
+                (t, p, if ok { 1 } else { 0 })
+            }
+            GlueTask::Sst2 => {
+                let v = self.vocab.clone();
+                let positive = self.rng.bool(0.5);
+                let mut a = self.content_span(span);
+                let base = if positive { v.pos0 } else { v.neg0 };
+                for _ in 0..3 {
+                    let i = self.rng.below(a.len());
+                    a[i] = base + self.rng.below(v.n_sent) as i32;
+                }
+                let (t, p) = self.pack_pair(&a, &[]);
+                (t, p, if positive { 1 } else { 0 })
+            }
+            GlueTask::Qnli => {
+                // question = [subj rel QMARK]; context answers it iff it
+                // contains the fact's object token
+                let v = self.vocab.clone();
+                let s = self.rng.below(v.n_subj);
+                let r = self.rng.below(v.n_rel);
+                let o = super::corpus::fact_object(&v, s, r);
+                let q = vec![v.subj(s), v.rel(r), super::vocabulary::QMARK];
+                let mut ctx = self.content_span(span);
+                let answerable = self.rng.bool(0.5);
+                if answerable {
+                    let i = self.rng.below(ctx.len());
+                    ctx[i] = v.obj(o);
+                }
+                let (t, p) = self.pack_pair(&q, &ctx);
+                (t, p, if answerable { 1 } else { 0 })
+            }
+        };
+        ClsExample { tokens, label_pos: pos, label_tok: self.vocab.label(label), label }
+    }
+
+    fn corpus_run(&mut self, out: &mut Vec<i32>, len: usize) {
+        let toks = self.corpus.tokens(len * 3);
+        for t in toks {
+            if self.vocab.is_content(t) {
+                out.push(t);
+                if out.len() == len {
+                    return;
+                }
+            }
+        }
+        while out.len() < len {
+            out.push(self.vocab.content0);
+        }
+    }
+
+    pub fn examples(&mut self, n: usize) -> Vec<ClsExample> {
+        (0..n).map(|_| self.example()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(task: GlueTask) -> GlueGen {
+        GlueGen::new(task, Vocab::new(512), 32, 42)
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        for task in ALL_TASKS {
+            let mut g = gen(task);
+            for ex in g.examples(32) {
+                assert_eq!(ex.tokens.len(), 32, "{task:?}");
+                assert!(ex.label < task.n_classes(), "{task:?}");
+                assert_eq!(ex.tokens[ex.label_pos], SEP, "{task:?} label pos must be SEP");
+                assert!(ex.tokens.iter().all(|&t| (t as usize) < 512));
+            }
+        }
+    }
+
+    #[test]
+    fn labels_balanced() {
+        for task in ALL_TASKS {
+            let mut g = gen(task);
+            let exs = g.examples(300);
+            let mut counts = vec![0usize; task.n_classes()];
+            for e in &exs {
+                counts[e.label] += 1;
+            }
+            for (k, &c) in counts.iter().enumerate() {
+                assert!(
+                    c as f64 > 300.0 / task.n_classes() as f64 * 0.5,
+                    "{task:?} class {k} underrepresented: {counts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<_> = gen(GlueTask::Rte).examples(10).iter().map(|e| e.tokens.clone()).collect();
+        let b: Vec<_> = gen(GlueTask::Rte).examples(10).iter().map(|e| e.tokens.clone()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sst2_signal_present() {
+        // positive examples contain positive-region tokens, negatives don't
+        let mut g = gen(GlueTask::Sst2);
+        let v = Vocab::new(512);
+        for e in g.examples(100) {
+            let has_pos = e.tokens.iter().any(|&t| t >= v.pos0 && t < v.neg0);
+            let has_neg = e.tokens.iter().any(|&t| t >= v.neg0 && t < v.content0);
+            if e.label == 1 {
+                assert!(has_pos && !has_neg);
+            } else {
+                assert!(has_neg && !has_pos);
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! MMLU-like 5-shot knowledge benchmark (paper Table 2, Figure 1b).
+//!
+//! Questions probe the fact table the backbone saw during pretraining:
+//! a 5-shot prompt of `[s r o]` exemplars, then the query `[s r QMARK]`.
+//! The model answers by ranking 4 candidate object tokens at the query
+//! position — exactly the "pick the best choice token" scoring MMLU uses.
+//! Finetuning data (the Alpaca stand-in) is instruction-formatted fact
+//! recall, so tuning helps without leaking eval queries: eval uses a held-out
+//! subject range.
+
+use super::corpus::fact_object;
+use super::vocabulary::{Vocab, BOS, QMARK};
+use crate::util::rng::Rng;
+
+pub struct MmluItem {
+    /// right-padded prompt tokens
+    pub tokens: Vec<i32>,
+    /// index of QMARK — the model predicts the answer at this position
+    pub pos: usize,
+    /// 4 candidate object tokens
+    pub choices: [i32; 4],
+    /// index of the correct choice
+    pub answer: usize,
+}
+
+pub struct MmluGen {
+    pub vocab: Vocab,
+    rng: Rng,
+    seq: usize,
+    /// eval items use subjects in [holdout_lo, n_subj) — never in finetune data
+    holdout_lo: usize,
+}
+
+impl MmluGen {
+    pub fn new(vocab: Vocab, seq: usize, seed: u64) -> Self {
+        let holdout_lo = vocab.n_subj * 3 / 4;
+        MmluGen { vocab, rng: Rng::new(seed), seq, holdout_lo }
+    }
+
+    /// One k-shot item. `eval` draws query subjects from the held-out range.
+    pub fn item(&mut self, k_shot: usize, eval: bool) -> MmluItem {
+        let v = self.vocab.clone();
+        let mut toks = vec![BOS];
+        for _ in 0..k_shot {
+            let s = self.rng.below(self.holdout_lo);
+            let r = self.rng.below(v.n_rel);
+            toks.push(v.subj(s));
+            toks.push(v.rel(r));
+            toks.push(v.obj(fact_object(&v, s, r)));
+        }
+        let s = if eval {
+            self.rng.range(self.holdout_lo, v.n_subj)
+        } else {
+            self.rng.below(self.holdout_lo)
+        };
+        let r = self.rng.below(v.n_rel);
+        let correct_obj = fact_object(&v, s, r);
+        toks.push(v.subj(s));
+        toks.push(v.rel(r));
+        let pos = toks.len();
+        toks.push(QMARK);
+        assert!(toks.len() <= self.seq, "seq too short for {k_shot}-shot");
+        toks.resize(self.seq, super::vocabulary::PAD);
+
+        // distractors: 3 distinct wrong objects
+        let mut choices = [0i32; 4];
+        let answer = self.rng.below(4);
+        let mut used = vec![correct_obj];
+        for (i, c) in choices.iter_mut().enumerate() {
+            if i == answer {
+                *c = v.obj(correct_obj);
+            } else {
+                let mut o = self.rng.below(v.n_obj);
+                while used.contains(&o) {
+                    o = self.rng.below(v.n_obj);
+                }
+                used.push(o);
+                *c = v.obj(o);
+            }
+        }
+        MmluItem { tokens: toks, pos, choices, answer }
+    }
+
+    /// Instruction-style finetuning sequence (the Alpaca stand-in): a few
+    /// fact recalls in instruction format, loss-masked to the answers.
+    pub fn finetune_example(&mut self, seq: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let v = self.vocab.clone();
+        let mut toks = vec![BOS];
+        let mut answer_pos = vec![];
+        while toks.len() + 5 <= seq {
+            let s = self.rng.below(self.holdout_lo);
+            let r = self.rng.below(v.n_rel);
+            toks.push(v.subj(s));
+            toks.push(v.rel(r));
+            toks.push(QMARK);
+            answer_pos.push(toks.len());
+            toks.push(v.obj(fact_object(&v, s, r)));
+        }
+        toks.resize(seq + 1, super::vocabulary::PAD);
+        let inputs = toks[..seq].to_vec();
+        let targets = toks[1..].to_vec();
+        // mask: only positions whose *target* is an answer token count
+        let mut mask = vec![0f32; seq];
+        for p in answer_pos {
+            if p - 1 < seq {
+                mask[p - 1] = 1.0; // predicting toks[p] from position p-1
+            }
+        }
+        (inputs, targets, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_well_formed() {
+        let mut g = MmluGen::new(Vocab::new(512), 64, 9);
+        for _ in 0..50 {
+            let it = g.item(5, true);
+            assert_eq!(it.tokens.len(), 64);
+            assert_eq!(it.tokens[it.pos], QMARK);
+            assert!(it.answer < 4);
+            // choices distinct
+            let set: std::collections::HashSet<i32> = it.choices.iter().copied().collect();
+            assert_eq!(set.len(), 4);
+            // correct choice consistent with the fact table
+            let s = it.tokens[it.pos - 2];
+            let r = it.tokens[it.pos - 1];
+            let v = Vocab::new(512);
+            let o = fact_object(&v, (s - v.subj0) as usize, (r - v.rel0) as usize);
+            assert_eq!(it.choices[it.answer], v.obj(o));
+        }
+    }
+
+    #[test]
+    fn eval_uses_holdout_subjects() {
+        let v = Vocab::new(512);
+        let mut g = MmluGen::new(v.clone(), 64, 1);
+        let lo = v.n_subj * 3 / 4;
+        for _ in 0..50 {
+            let it = g.item(5, true);
+            let s = (it.tokens[it.pos - 2] - v.subj0) as usize;
+            assert!(s >= lo, "eval subject {s} not held out");
+            let it = g.item(5, false);
+            let s = (it.tokens[it.pos - 2] - v.subj0) as usize;
+            assert!(s < lo, "train subject {s} leaked from holdout");
+        }
+    }
+
+    #[test]
+    fn finetune_mask_targets_answers() {
+        let v = Vocab::new(512);
+        let mut g = MmluGen::new(v.clone(), 64, 2);
+        let (inp, tgt, mask) = g.finetune_example(64);
+        assert_eq!(inp.len(), 64);
+        let n_masked: f32 = mask.iter().sum();
+        assert!(n_masked >= 4.0, "expect several answer positions");
+        for (i, &m) in mask.iter().enumerate() {
+            if m > 0.0 {
+                assert_eq!(inp[i], QMARK, "mask must sit on QMARK positions");
+                let o = tgt[i];
+                assert!(o >= v.obj0 && o < v.pos0, "target must be an object token");
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic benchmark substrate (DESIGN.md §4).
+//!
+//! The sandbox has no GLUE/MMLU/Alpaca access, so this module *is* the
+//! datasets: a deterministic token world with (a) a bigram-grammar language,
+//! (b) a knowledge base of (subject, relation, object) triples embedded in
+//! the pretraining corpus, and (c) sentiment/paraphrase structure — enough
+//! signal that every task family the paper evaluates has a learnable,
+//! pretraining-dependent analogue.
+
+pub mod batcher;
+pub mod corpus;
+pub mod glue;
+pub mod instruct;
+pub mod mmlu;
+pub mod vocabulary;
+
+pub use batcher::{Batch, ClsExample, LmExample};
+pub use vocabulary::Vocab;

@@ -1,0 +1,137 @@
+//! Token-id layout of the synthetic world.
+//!
+//! Fixed specials at the bottom of the id space, then contiguous regions for
+//! subjects/relations/objects (the knowledge base), sentiment-bearing tokens,
+//! and plain "content" tokens of the bigram language.  The layout scales with
+//! the model's vocab size so every config gets proportionate structure.
+
+/// Reserved special tokens (stable across all vocab sizes).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+/// Classification label tokens L0..L4 (the LM head predicts these).
+pub const LABEL0: i32 = 4;
+pub const N_LABELS: usize = 5;
+/// Question marker for MMLU/instruction formats.
+pub const QMARK: i32 = 9;
+/// Instruction marker ("### Response:" analogue).
+pub const RESP: i32 = 10;
+pub const N_SPECIALS: usize = 11;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    /// knowledge-base regions
+    pub subj0: i32,
+    pub n_subj: usize,
+    pub rel0: i32,
+    pub n_rel: usize,
+    pub obj0: i32,
+    pub n_obj: usize,
+    /// sentiment-bearing tokens: [pos0, pos0+n_sent) positive, then negative
+    pub pos0: i32,
+    pub neg0: i32,
+    pub n_sent: usize,
+    /// plain content tokens for the bigram language
+    pub content0: i32,
+    pub n_content: usize,
+}
+
+impl Vocab {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 128, "vocab too small for the synthetic world");
+        let budget = size - N_SPECIALS;
+        // fixed fractions of the non-special space
+        let n_subj = budget / 8;
+        let n_rel = (budget / 16).max(4);
+        let n_obj = budget / 8;
+        let n_sent = budget / 16;
+        let used = n_subj + n_rel + n_obj + 2 * n_sent;
+        let n_content = budget - used;
+        let subj0 = N_SPECIALS as i32;
+        let rel0 = subj0 + n_subj as i32;
+        let obj0 = rel0 + n_rel as i32;
+        let pos0 = obj0 + n_obj as i32;
+        let neg0 = pos0 + n_sent as i32;
+        let content0 = neg0 + n_sent as i32;
+        Vocab { size, subj0, n_subj, rel0, n_rel, obj0, n_obj, pos0, neg0, n_sent, content0, n_content }
+    }
+
+    /// Label *verbalizer* token for class k.
+    ///
+    /// Real GLUE finetuning maps labels onto words the model saw in
+    /// pretraining ("great"/"terrible"); with a tied LM head, tokens that
+    /// never occurred in the corpus get their embeddings uniformly pushed
+    /// toward -mean(h) by the softmax, collapsing the distinction between
+    /// classes.  We therefore verbalize labels as tokens from the *object*
+    /// region (trained by the fact statements) — the reserved LABEL0..4 ids
+    /// remain for formats that need untrained markers.
+    pub fn label(&self, k: usize) -> i32 {
+        assert!(k < N_LABELS);
+        self.obj0 + (self.n_obj - 1 - k) as i32
+    }
+
+    pub fn subj(&self, i: usize) -> i32 {
+        self.subj0 + (i % self.n_subj) as i32
+    }
+
+    pub fn rel(&self, i: usize) -> i32 {
+        self.rel0 + (i % self.n_rel) as i32
+    }
+
+    pub fn obj(&self, i: usize) -> i32 {
+        self.obj0 + (i % self.n_obj) as i32
+    }
+
+    /// Fixed synonym involution over content tokens (used by the paraphrase
+    /// tasks and by the corpus' paraphrase statements — same pairing).
+    pub fn synonym(&self, t: i32) -> i32 {
+        let i = (t - self.content0) as usize;
+        let j = if i % 2 == 0 { (i + 1) % self.n_content } else { i - 1 };
+        self.content0 + j as i32
+    }
+
+    pub fn is_content(&self, t: i32) -> bool {
+        t >= self.content0 && (t as usize) < self.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_disjoint_and_in_range() {
+        for size in [256usize, 512, 1024, 2048] {
+            let v = Vocab::new(size);
+            let ends = [
+                (v.subj0, v.n_subj),
+                (v.rel0, v.n_rel),
+                (v.obj0, v.n_obj),
+                (v.pos0, v.n_sent),
+                (v.neg0, v.n_sent),
+                (v.content0, v.n_content),
+            ];
+            let mut prev_end = N_SPECIALS as i32;
+            for (start, n) in ends {
+                assert_eq!(start, prev_end, "regions must be contiguous");
+                prev_end = start + n as i32;
+            }
+            assert_eq!(prev_end as usize, size);
+            assert!(v.n_content > 0);
+        }
+    }
+
+    #[test]
+    fn label_verbalizers_distinct_and_pretrained() {
+        let v = Vocab::new(512);
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..N_LABELS {
+            let t = v.label(k);
+            // verbalizers live in the object region (trained in pretraining)
+            assert!(t >= v.obj0 && t < v.pos0);
+            assert!(seen.insert(t), "verbalizers must be distinct");
+        }
+    }
+}

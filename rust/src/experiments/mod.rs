@@ -1,0 +1,38 @@
+//! Experiment harness: one regenerator per paper table/figure.
+//! `qst experiments --id <id>` prints the paper's numbers next to ours and
+//! appends machine-readable results under `runs/results/`.
+
+pub mod common;
+pub mod report;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+pub fn run(id: &str, fast: bool) -> Result<()> {
+    match id {
+        "table1" => tables::table1(fast),
+        "table2" => tables::table2(fast),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(fast),
+        "table5" => tables::table5(fast),
+        "table6" => tables::table6(fast),
+        "table7" => tables::table7(fast),
+        "fig1a" => tables::fig1a(),
+        "fig1b" => tables::fig1b(fast),
+        "fig4" => tables::fig4(),
+        "fig5" => tables::fig5(fast),
+        "fig6" => tables::fig6(fast),
+        "calib" => tables::calibrate(),
+        "all" => {
+            for id in [
+                "fig1a", "fig4", "table3", "calib", "table1", "table2", "fig1b",
+                "table4", "table5", "table6", "fig5", "table7", "fig6",
+            ] {
+                println!("\n════════════════════════ {id} ════════════════════════");
+                run(id, fast)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment id '{other}' (see --help)"),
+    }
+}

@@ -1,0 +1,55 @@
+//! # QST — Quantized Side Tuning (ACL 2024) reproduction
+//!
+//! A three-layer Rust + JAX + Pallas system: this crate is **Layer 3**, the
+//! training coordinator.  It loads AOT-compiled HLO artifacts (lowered once by
+//! `python/compile/aot.py` — Python never runs on the training path), manages
+//! checkpoints and 4-bit quantization of frozen backbones, generates the
+//! synthetic benchmark suites, runs the finetuning loops, and regenerates
+//! every table and figure of the paper's evaluation.
+//!
+//! Module map (see DESIGN.md §9):
+//! * [`tensor`]     — host tensors + PJRT literal marshaling
+//! * [`quant`]      — NF4/FP4 blockwise + double quantization (mirrors `python/compile/quant.py`)
+//! * [`runtime`]    — PJRT client, artifact manifests, executor with device-resident state
+//! * [`coordinator`] — trainer, evaluator, LR schedules, checkpoints, metrics
+//! * [`data`]       — deterministic synthetic corpus + GLUE/MMLU/instruction suites
+//! * [`costmodel`]  — analytical memory/FLOPs models at the paper's true dims
+//! * [`experiments`] — one regenerator per paper table/figure
+//! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Repo-relative artifact directory (override with `QST_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("QST_ARTIFACTS") {
+        return d.into();
+    }
+    // Walk up from CWD until we find an `artifacts/` directory.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// Run directory for checkpoints/metrics (override with `QST_RUNS`).
+pub fn runs_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("QST_RUNS") {
+        return d.into();
+    }
+    artifacts_dir().parent().unwrap_or(std::path::Path::new(".")).join("runs")
+}

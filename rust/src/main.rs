@@ -1,0 +1,149 @@
+//! `qst` — the Layer-3 coordinator CLI.
+//!
+//! Python never runs here: every command executes AOT-compiled HLO artifacts
+//! via PJRT.  See `qst help` for the command list.
+
+use anyhow::{bail, Context, Result};
+
+use qst::cli::{Args, USAGE};
+use qst::coordinator::pipeline;
+use qst::coordinator::Checkpoint;
+use qst::data::glue::{GlueTask, ALL_TASKS};
+use qst::runtime::Runtime;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn glue_task(name: &str) -> Result<GlueTask> {
+    ALL_TASKS
+        .into_iter()
+        .find(|t| t.name().eq_ignore_ascii_case(name))
+        .with_context(|| format!("unknown GLUE task '{name}'"))
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "info" => {
+            let rt = Runtime::with_default_dir()?;
+            println!("platform: {} ({} devices)", rt.client.platform_name(), rt.client.device_count());
+            println!("artifacts dir: {}", qst::artifacts_dir().display());
+            println!("runs dir: {}", qst::runs_dir().display());
+            println!("artifacts available: {}", rt.available().len());
+            Ok(())
+        }
+        "artifacts" => {
+            let rt = Runtime::with_default_dir()?;
+            for name in rt.available() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "pretrain" => {
+            let cfg = args.require("config")?.to_string();
+            let steps = args.usize_or("steps", 300)?;
+            let lr = args.f32_or("lr", 3e-3)?;
+            let mut rt = Runtime::with_default_dir()?;
+            let (ckpt, report) = pipeline::pretrain(&mut rt, &cfg, steps, lr, 0, true)?;
+            let path = pipeline::base_ckpt_path(&cfg);
+            ckpt.save(&path)?;
+            println!(
+                "pretrained {cfg}: loss {:.3} -> {:.3} in {:.1}s; saved {}",
+                report.metrics.losses.first().copied().unwrap_or(f32::NAN),
+                report.metrics.mean_loss_tail(10),
+                report.wall_secs,
+                path.display()
+            );
+            Ok(())
+        }
+        "quantize" => {
+            let cfg = args.require("config")?.to_string();
+            let qdtype = args.str_or("qdtype", "nf4");
+            let path = pipeline::base_ckpt_path(&cfg);
+            let ckpt = Checkpoint::load(&path)
+                .with_context(|| format!("no base checkpoint at {} — run pretrain", path.display()))?;
+            let mut total = 0usize;
+            let mut qbytes = 0usize;
+            let mut mse_sum = 0.0f64;
+            let mut mats = 0usize;
+            for (name, t) in &ckpt.tensors {
+                if t.shape.len() == 2 && name.contains("layers") && t.shape[0] % 64 == 0 {
+                    let w = t.as_f32()?;
+                    let (p, s) = qst::quant::quantize_matrix_raw(&w, t.shape[0], t.shape[1], &qdtype, 64);
+                    let back = qst::quant::dequantize_matrix_raw(&p, &s, t.shape[0], t.shape[1], &qdtype, 64);
+                    mse_sum += w.iter().zip(&back).map(|(a, b)| (a - b).powi(2) as f64).sum::<f64>()
+                        / w.len() as f64;
+                    mats += 1;
+                    total += t.bytes();
+                    qbytes += p.len() + s.len() / 2; // packed + ~8-bit scales
+                }
+            }
+            println!(
+                "{cfg}: quantized {mats} matrices ({} -> {}, {:.2} bits/param), mean MSE {:.3e}",
+                qst::util::human_bytes(total as f64),
+                qst::util::human_bytes(qbytes as f64),
+                qst::quant::storage_bits_per_param(64, 256),
+                mse_sum / mats.max(1) as f64
+            );
+            Ok(())
+        }
+        "finetune" => {
+            let cfg = args.require("config")?.to_string();
+            let method = args.require("method")?.to_string();
+            let task = args.str_or("task", "cls");
+            let steps = args.usize_or("steps", 150)?;
+            let mut rt = Runtime::with_default_dir()?;
+            let base = qst::experiments::common::base_for(&mut rt, &cfg, false)?;
+            let out = if task == "cls" {
+                let gtask = glue_task(&args.str_or("glue-task", "SST-2"))?;
+                let out = qst::experiments::common::finetune_glue(
+                    &mut rt, &cfg, &method, gtask, steps, &base, "",
+                )?;
+                let acc = qst::experiments::common::eval_glue(&mut rt, &cfg, &method, gtask, &out, 256)?;
+                println!("{cfg}/{method}/{}: final loss {:.4}, eval score {:.3}", gtask.name(), out.final_loss, acc);
+                out
+            } else {
+                let out = qst::experiments::common::finetune_mmlu(&mut rt, &cfg, &method, steps, &base, "")?;
+                let acc = qst::experiments::common::eval_mmlu(&mut rt, &cfg, &method, &out, 150, "")?;
+                println!("{cfg}/{method}/lm: final loss {:.4}, MMLU-like acc {:.3}", out.final_loss, acc);
+                out
+            };
+            let ckpt_path = qst::runs_dir().join(format!("{cfg}__{method}__{task}.ckpt"));
+            Checkpoint::new(out.trainable).save(&ckpt_path)?;
+            println!("saved trainable state to {}", ckpt_path.display());
+            Ok(())
+        }
+        "generate" => {
+            let cfg = args.require("config")?.to_string();
+            let method = args.str_or("method", "qst");
+            let max_new = args.usize_or("max-new", 16)?;
+            let mut rt = Runtime::with_default_dir()?;
+            let base = qst::experiments::common::base_for(&mut rt, &cfg, false)?;
+            let out = qst::experiments::common::finetune_mmlu(&mut rt, &cfg, &method, 50, &base, "")?;
+            let gen_name = format!("{cfg}__{method}__generate");
+            let g = qst::coordinator::evaluator::Generator::new(&mut rt, &gen_name)?;
+            let vocab = qst::data::Vocab::new(rt.load(&gen_name)?.manifest.cfg.usize("vocab"));
+            let mut ig = qst::data::instruct::InstructGen::new(vocab, 7);
+            let (prompt, _) = ig.pair(qst::data::instruct::Category::Writing);
+            let toks = g.greedy(&out.trainable, &out.frozen, &prompt, max_new)?;
+            println!("prompt: {prompt:?}");
+            println!("generated: {toks:?}");
+            println!("repetition rate: {:.2}", qst::coordinator::evaluator::repetition_rate(&toks));
+            Ok(())
+        }
+        "experiments" => {
+            let id = args.str_or("id", "all");
+            qst::experiments::run(&id, args.has("fast"))
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}

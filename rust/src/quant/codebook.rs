@@ -1,0 +1,93 @@
+//! NF4 / FP4 codebooks — byte-identical to `python/compile/quant.py`.
+
+/// NF4 (Dettmers et al. 2023): quantile-optimal 4-bit type for N(0,1) data.
+pub const NF4: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// FP4 e2m1 magnitudes {0,.5,1,1.5,2,3,4,6}/6, sign-symmetric; layout matches
+/// the Python `FP4_CODE` construction: [pos..., -pos[1:]..., -1].
+pub const FP4: [f32; 16] = [
+    0.0,
+    0.5 / 6.0,
+    1.0 / 6.0,
+    1.5 / 6.0,
+    2.0 / 6.0,
+    3.0 / 6.0,
+    4.0 / 6.0,
+    1.0,
+    -0.5 / 6.0,
+    -1.0 / 6.0,
+    -1.5 / 6.0,
+    -2.0 / 6.0,
+    -3.0 / 6.0,
+    -4.0 / 6.0,
+    -1.0,
+    -1.0, // FP4_CODE has 15 entries from concat + explicit -1 tail
+];
+
+pub fn codebook(qdtype: &str) -> &'static [f32; 16] {
+    match qdtype {
+        "nf4" => &NF4,
+        "fp4" => &FP4,
+        other => panic!("unknown qdtype {other}"),
+    }
+}
+
+/// Index of the nearest codebook entry (ties -> lowest index, matching
+/// `jnp.argmin` semantics in the Python quantizer).
+pub fn nearest_code(v: f32, code: &[f32; 16]) -> u8 {
+    let mut best = 0usize;
+    let mut bd = f32::INFINITY;
+    for (i, &c) in code.iter().enumerate() {
+        let d = (v - c).abs();
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    best as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nf4_monotone() {
+        for w in NF4.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(NF4[7], 0.0);
+    }
+
+    #[test]
+    fn nearest_endpoints() {
+        assert_eq!(nearest_code(1.0, &NF4), 15);
+        assert_eq!(nearest_code(-1.0, &NF4), 0);
+        assert_eq!(nearest_code(0.0, &NF4), 7);
+        assert_eq!(nearest_code(100.0, &NF4), 15);
+    }
+
+    #[test]
+    fn nearest_ties_lowest_index() {
+        // exactly between entries 7 (0.0) and 8 (0.0796) -> argmin picks 7
+        let mid = (NF4[7] + NF4[8]) / 2.0;
+        assert_eq!(nearest_code(mid, &NF4), 7);
+    }
+}

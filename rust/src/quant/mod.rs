@@ -1,0 +1,245 @@
+//! 4-bit blockwise quantization with double-quantized scales — the Rust
+//! mirror of `python/compile/quant.py` (paper §3.1).
+//!
+//! The coordinator quantizes pretrained checkpoints itself before a QST or
+//! QLoRA run, producing exactly the `q.<name>.{packed,qscales,gabs,gmean}`
+//! tensors the artifacts expect.  The nibble convention (code 2i in the low
+//! nibble of byte i, nibbles running down the K axis of a `W[K, N]` matrix)
+//! and the scale layout are bit-identical to the Python side; the
+//! cross-language golden tests in `rust/tests/golden.rs` pin this.
+
+pub mod codebook;
+
+use crate::tensor::{DType, HostTensor};
+use codebook::{codebook, nearest_code};
+
+/// Per-block absmax scales for a column-stripe layout: W[K, N] split into
+/// (qblock x 1) stripes. Returns (packed u8[K/2, N], scales f32[K/qblock, N]).
+pub fn quantize_matrix_raw(w: &[f32], k: usize, n: usize, qdtype: &str, qblock: usize)
+    -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(k % qblock, 0, "K must divide by qblock");
+    assert_eq!(k % 2, 0);
+    let code = codebook(qdtype);
+    let kb = k / qblock;
+    let mut scales = vec![0f32; kb * n];
+    // absmax per (stripe, col)
+    for b in 0..kb {
+        for c in 0..n {
+            let mut m = 0f32;
+            for r in 0..qblock {
+                m = m.max(w[(b * qblock + r) * n + c].abs());
+            }
+            scales[b * n + c] = m;
+        }
+    }
+    // nearest-code packing: codes for rows 2i (low) and 2i+1 (high)
+    let mut packed = vec![0u8; (k / 2) * n];
+    for half in 0..k / 2 {
+        for c in 0..n {
+            let get_code = |row: usize| -> u8 {
+                let s = scales[(row / qblock) * n + c];
+                let safe = if s == 0.0 { 1.0 } else { s };
+                nearest_code(w[row * n + c] / safe, code)
+            };
+            let lo = get_code(2 * half);
+            let hi = get_code(2 * half + 1);
+            packed[half * n + c] = lo | (hi << 4);
+        }
+    }
+    (packed, scales)
+}
+
+/// Dequantize a column-stripe matrix back to f32 (for tests / analysis).
+pub fn dequantize_matrix_raw(packed: &[u8], scales: &[f32], k: usize, n: usize,
+                             qdtype: &str, qblock: usize) -> Vec<f32> {
+    let code = codebook(qdtype);
+    let mut w = vec![0f32; k * n];
+    for half in 0..k / 2 {
+        for c in 0..n {
+            let byte = packed[half * n + c];
+            for (off, nib) in [(0usize, byte & 0xF), (1, byte >> 4)] {
+                let row = 2 * half + off;
+                let s = scales[(row / qblock) * n + c];
+                w[row * n + c] = code[nib as usize] * s;
+            }
+        }
+    }
+    w
+}
+
+/// Double quantization of scales (paper: 8-bit quantized quantization
+/// constants): group by `qgroup`, subtract group mean, symmetric int8.
+pub fn quantize_scales(scales: &[f32], qgroup: usize) -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+    let n = scales.len();
+    let ngroups = n.div_ceil(qgroup);
+    let mut q8 = vec![0i8; n];
+    let mut gabs = vec![0f32; ngroups];
+    let mut gmean = vec![0f32; ngroups];
+    for g in 0..ngroups {
+        let lo = g * qgroup;
+        let hi = (lo + qgroup).min(n);
+        let cnt = (hi - lo) as f32;
+        let mean: f32 = scales[lo..hi].iter().sum::<f32>() / cnt;
+        let mut amax = 0f32;
+        for &s in &scales[lo..hi] {
+            amax = amax.max((s - mean).abs());
+        }
+        gmean[g] = mean;
+        gabs[g] = amax;
+        let safe = if amax == 0.0 { 1.0 } else { amax };
+        for i in lo..hi {
+            // jnp.round rounds half-to-even; .round() would round half-away
+            q8[i] = ((scales[i] - mean) / safe * 127.0).round_ties_even() as i8;
+        }
+    }
+    (q8, gabs, gmean)
+}
+
+pub fn dequantize_scales(q8: &[i8], gabs: &[f32], gmean: &[f32], qgroup: usize) -> Vec<f32> {
+    q8.iter()
+        .enumerate()
+        .map(|(i, &q)| {
+            let g = i / qgroup;
+            q as f32 / 127.0 * gabs[g] + gmean[g]
+        })
+        .collect()
+}
+
+/// The 4 artifact tensors for one quantized matrix, keyed by field name.
+pub struct QMatrix {
+    pub packed: HostTensor,
+    pub qscales: HostTensor,
+    pub gabs: HostTensor,
+    pub gmean: HostTensor,
+}
+
+/// Full pipeline: f32 weight matrix -> QST storage format (matches
+/// `quant.quantize_matrix` in Python and the shapes in the artifact manifests).
+pub fn quantize_matrix(w: &HostTensor, qdtype: &str, qblock: usize, qgroup: usize) -> QMatrix {
+    assert_eq!(w.dtype, DType::F32);
+    assert_eq!(w.shape.len(), 2, "quantize_matrix wants [K, N]");
+    let (k, n) = (w.shape[0], w.shape[1]);
+    let vals = w.as_f32().expect("f32 weight");
+    let (packed, scales) = quantize_matrix_raw(&vals, k, n, qdtype, qblock);
+    let (q8, gabs, gmean) = quantize_scales(&scales, qgroup);
+    QMatrix {
+        packed: HostTensor::from_u8(&[k / 2, n], packed),
+        qscales: HostTensor::from_i8(&[q8.len()], &q8),
+        gabs: HostTensor::from_f32(&[gabs.len()], &gabs),
+        gmean: HostTensor::from_f32(&[gmean.len()], &gmean),
+    }
+}
+
+/// Effective storage bits per parameter (paper: ~4.127 b/param at 64/256).
+pub fn storage_bits_per_param(qblock: usize, qgroup: usize) -> f64 {
+    4.0 + 8.0 / qblock as f64 + 64.0 / (qblock as f64 * qgroup as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn rand_matrix(rng: &mut Rng, k: usize, n: usize, scale: f32) -> Vec<f32> {
+        (0..k * n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(0);
+        let (k, n) = (128, 32);
+        let w = rand_matrix(&mut rng, k, n, 0.5);
+        let (packed, scales) = quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let back = dequantize_matrix_raw(&packed, &scales, k, n, "nf4", 64);
+        let amax = w.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        // widest NF4 gap is ~0.30 -> worst case error ~0.15*absmax
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.16 * amax + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn absmax_exact() {
+        // the absmax of each block must round-trip exactly (maps to ±1 code)
+        let k = 64;
+        let mut w = vec![0.1f32; k];
+        w[17] = -3.5;
+        let (p, s) = quantize_matrix_raw(&w, k, 1, "nf4", 64);
+        let back = dequantize_matrix_raw(&p, &s, k, 1, "nf4", 64);
+        assert_eq!(back[17], -3.5);
+        assert_eq!(s[0], 3.5);
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let w = vec![0f32; 128];
+        let (p, s) = quantize_matrix_raw(&w, 128, 1, "nf4", 64);
+        let back = dequantize_matrix_raw(&p, &s, 128, 1, "nf4", 64);
+        assert!(back.iter().all(|&v| v == 0.0));
+        assert!(s.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scales_double_quant_roundtrip() {
+        let mut rng = Rng::new(1);
+        let scales: Vec<f32> = (0..600).map(|_| rng.f32() + 0.01).collect();
+        let (q8, gabs, gmean) = quantize_scales(&scales, 256);
+        assert_eq!(gabs.len(), 3); // 600 -> 3 groups
+        let back = dequantize_scales(&q8, &gabs, &gmean, 256);
+        let tol = gabs.iter().fold(0f32, |a, &b| a.max(b)) / 127.0 + 1e-6;
+        for (a, b) in scales.iter().zip(&back) {
+            assert!((a - b).abs() <= tol);
+        }
+    }
+
+    #[test]
+    fn storage_bits_matches_paper() {
+        assert!((storage_bits_per_param(64, 256) - 4.127).abs() < 0.01);
+    }
+
+    #[test]
+    fn qmatrix_shapes_match_manifest_convention() {
+        let w = HostTensor::from_f32(&[128, 16], &vec![0.5f32; 128 * 16]);
+        let q = quantize_matrix(&w, "nf4", 64, 256);
+        assert_eq!(q.packed.shape, vec![64, 16]);
+        assert_eq!(q.qscales.shape, vec![32]); // (128/64)*16 blocks
+        assert_eq!(q.gabs.shape, vec![1]);
+        assert_eq!(q.gmean.shape, vec![1]);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_dtypes() {
+        prop::check(24, 0xDEC0DE, |rng| {
+            let k = 64 * rng.range(1, 4);
+            let n = rng.range(1, 24);
+            let qdtype = if rng.bool(0.5) { "nf4" } else { "fp4" };
+            let scale = (rng.f32() * 3.0 + 0.01) as f32;
+            let w = rand_matrix(rng, k, n, scale);
+            let (p, s) = quantize_matrix_raw(&w, k, n, qdtype, 64);
+            assert_eq!(p.len(), k / 2 * n);
+            assert_eq!(s.len(), k / 64 * n);
+            let back = dequantize_matrix_raw(&p, &s, k, n, qdtype, 64);
+            let amax = w.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            // FP4's widest gap (normalized) is 2/6 -> error <= amax/6 + eps
+            let bound = 0.17f32 * amax + 1e-6;
+            for (a, b) in w.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_nf4_beats_fp4_on_gaussian() {
+        prop::check(8, 0xFACE, |rng| {
+            let (k, n) = (256, 16);
+            let w = rand_matrix(rng, k, n, 1.0);
+            let mse = |dt: &str| {
+                let (p, s) = quantize_matrix_raw(&w, k, n, dt, 64);
+                let back = dequantize_matrix_raw(&p, &s, k, n, dt, 64);
+                w.iter().zip(&back).map(|(a, b)| (a - b).powi(2)).sum::<f32>()
+            };
+            assert!(mse("nf4") < mse("fp4"), "NF4 must beat FP4 on N(0,1) data");
+        });
+    }
+}

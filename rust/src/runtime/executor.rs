@@ -1,0 +1,160 @@
+//! Step executor: persistent device-resident input slots for an artifact.
+//!
+//! The xla crate's PJRT shim returns multi-output computations as a single
+//! tuple buffer, so state threading works as: frozen inputs are uploaded
+//! **once** and stay device-resident; each step uploads only the small
+//! mutable state (trainable params + optimizer moments + scalars + batch),
+//! executes, and decomposes the output tuple into host literals.  Output →
+//! input rewiring is by slot *name* (trainable/opt/step names match across
+//! the train graph's signature by construction in `aot.py`).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Artifact, Role, Runtime};
+use crate::tensor::HostTensor;
+
+pub struct Executor {
+    pub artifact: Rc<Artifact>,
+    slots: Vec<Option<xla::PjRtBuffer>>,
+    /// output index -> input index for state threading (matched by name)
+    rewire: Vec<(usize, usize)>,
+    /// input name -> index
+    by_name: HashMap<String, usize>,
+    pub steps: u64,
+}
+
+impl Executor {
+    pub fn new(artifact: Rc<Artifact>) -> Self {
+        let m = &artifact.manifest;
+        let mut by_name = HashMap::new();
+        for (i, s) in m.inputs.iter().enumerate() {
+            by_name.insert(s.name.clone(), i);
+        }
+        let mut rewire = vec![];
+        for (oi, os) in m.outputs.iter().enumerate() {
+            if matches!(os.role, Role::Trainable | Role::OptM | Role::OptV | Role::Step) {
+                if let Some(&ii) = by_name.get(&os.name) {
+                    rewire.push((oi, ii));
+                }
+            }
+        }
+        let n = m.inputs.len();
+        Executor { artifact, slots: (0..n).map(|_| None).collect(), rewire, by_name, steps: 0 }
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .with_context(|| format!("no input named '{name}' in {}", self.artifact.name))
+    }
+
+    /// Upload a host tensor into input slot `i` (validates the manifest spec).
+    pub fn set(&mut self, rt: &Runtime, i: usize, t: &HostTensor) -> Result<()> {
+        let spec = &self.artifact.manifest.inputs[i];
+        if t.shape != spec.shape || t.dtype != spec.dtype {
+            bail!(
+                "slot {} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                i, spec.name, spec.dtype, spec.shape, t.dtype, t.shape
+            );
+        }
+        self.slots[i] = Some(rt.upload(t)?);
+        Ok(())
+    }
+
+    pub fn set_by_name(&mut self, rt: &Runtime, name: &str, t: &HostTensor) -> Result<()> {
+        let i = self.input_index(name)?;
+        self.set(rt, i, t)
+    }
+
+    /// Upload a whole named map (e.g. frozen checkpoint) into matching slots.
+    /// Returns how many slots were filled.
+    pub fn set_many(&mut self, rt: &Runtime, tensors: &HashMap<String, HostTensor>) -> Result<usize> {
+        let mut n = 0;
+        let idx: Vec<(usize, String)> = self
+            .artifact
+            .manifest
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.name.clone()))
+            .collect();
+        for (i, name) in idx {
+            if let Some(t) = tensors.get(&name) {
+                self.set(rt, i, t)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Which input slots are still empty (must be filled before `step`).
+    pub fn missing(&self) -> Vec<&str> {
+        self.artifact
+            .manifest
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.slots[*i].is_none())
+            .map(|(_, s)| s.name.as_str())
+            .collect()
+    }
+
+    /// Execute one step.  Outputs come back as host tensors; any output whose
+    /// role is state (trainable/opt/step) is re-uploaded into its input slot.
+    pub fn step(&mut self, rt: &Runtime) -> Result<Vec<HostTensor>> {
+        let missing = self.missing();
+        if !missing.is_empty() {
+            bail!("{}: unset inputs: {:?}", self.artifact.name, &missing[..missing.len().min(5)]);
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = self.slots.iter().map(|b| b.as_ref().unwrap()).collect();
+        let out = self.artifact.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let row = &out[0];
+        let mut outputs = Vec::with_capacity(self.artifact.manifest.outputs.len());
+        if row.len() == 1 && self.artifact.manifest.outputs.len() > 1 {
+            // single tuple buffer: pull to host and decompose
+            let mut lit = row[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            for p in &parts {
+                outputs.push(HostTensor::from_literal(p)?);
+            }
+        } else {
+            for b in row {
+                outputs.push(HostTensor::from_literal(&b.to_literal_sync()?)?);
+            }
+        }
+        if outputs.len() != self.artifact.manifest.outputs.len() {
+            bail!(
+                "{}: output arity {} != manifest {}",
+                self.artifact.name, outputs.len(), self.artifact.manifest.outputs.len()
+            );
+        }
+        // thread state outputs back into input slots
+        for &(oi, ii) in &self.rewire.clone() {
+            self.set(rt, ii, &outputs[oi].clone())?;
+        }
+        self.steps += 1;
+        Ok(outputs)
+    }
+
+    /// Read back the current value of an input slot (e.g. final params).
+    pub fn read_slot(&self, i: usize) -> Result<HostTensor> {
+        let buf = self.slots[i].as_ref().context("slot empty")?;
+        let lit = buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+
+    /// Collect all current tensors of a role (by input slot), keyed by name.
+    pub fn read_role(&self, role: Role) -> Result<HashMap<String, HostTensor>> {
+        let mut out = HashMap::new();
+        for (i, s) in self.artifact.manifest.inputs.iter().enumerate() {
+            if s.role == role {
+                out.insert(s.name.clone(), self.read_slot(i)?);
+            }
+        }
+        Ok(out)
+    }
+}

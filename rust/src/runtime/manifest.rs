@@ -1,0 +1,238 @@
+//! Artifact manifest parser — the line-based `.meta.txt` format emitted by
+//! `python/compile/aot.py`.  The manifest is the only contract between the
+//! Python build path and the Rust runtime: ordered input/output tensor specs
+//! (name, dtype, shape, role) plus the model configuration echo.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+
+/// Role of an input/output in a graph (drives the trainer's buffer wiring).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Trainable,
+    OptM,
+    OptV,
+    Step,
+    Lr,
+    Frozen,
+    Data,
+    Seed,
+    Loss,
+    Gnorm,
+    Logits,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "trainable" => Role::Trainable,
+            "optm" => Role::OptM,
+            "optv" => Role::OptV,
+            "step" => Role::Step,
+            "lr" => Role::Lr,
+            "frozen" => Role::Frozen,
+            "data" => Role::Data,
+            "seed" => Role::Seed,
+            "loss" => Role::Loss,
+            "gnorm" => Role::Gnorm,
+            "logits" => Role::Logits,
+            other => bail!("unknown role '{other}'"),
+        })
+    }
+}
+
+/// One input or output tensor slot.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub index: usize,
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub role: Role,
+}
+
+impl Slot {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Echo of the Python `ModelConfig` (subset the coordinator needs).
+#[derive(Clone, Debug, Default)]
+pub struct CfgEcho {
+    pub fields: HashMap<String, String>,
+}
+
+impl CfgEcho {
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.fields.get(k).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, k: &str) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(0)
+    }
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: String,
+    pub method: String,
+    pub graph: String,
+    pub task: String,
+    pub batch: Option<(usize, usize)>,
+    pub cfg: CfgEcho,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if header.trim() != "qst-manifest-v1" {
+            bail!("bad manifest header '{header}'");
+        }
+        let mut m = Manifest {
+            config: String::new(),
+            method: String::new(),
+            graph: String::new(),
+            task: String::new(),
+            batch: None,
+            cfg: CfgEcho::default(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            match kind {
+                "config" => m.config = parts.next().context("config")?.into(),
+                "method" => m.method = parts.next().context("method")?.into(),
+                "graph" => m.graph = parts.next().context("graph")?.into(),
+                "task" => m.task = parts.next().context("task")?.into(),
+                "batch" => {
+                    let b: usize = parts.next().context("batch b")?.parse()?;
+                    let s: usize = parts.next().context("batch s")?.parse()?;
+                    m.batch = Some((b, s));
+                }
+                "cfgfield" => {
+                    let k = parts.next().context("cfgfield key")?;
+                    let v = parts.next().unwrap_or("");
+                    m.cfg.fields.insert(k.into(), v.into());
+                }
+                "meta" => {
+                    let k = parts.next().context("meta key")?;
+                    let v = parts.next().unwrap_or("");
+                    m.cfg.fields.insert(format!("meta.{k}"), v.into());
+                }
+                "input" | "output" => {
+                    let index: usize = parts.next().context("slot index")?.parse()?;
+                    let name = parts.next().context("slot name")?.to_string();
+                    let dtype = DType::parse(parts.next().context("slot dtype")?)?;
+                    let dims = parts.next().context("slot dims")?;
+                    let shape = if dims == "scalar" {
+                        vec![]
+                    } else {
+                        dims.split('x')
+                            .map(|d| d.parse::<usize>().map_err(Into::into))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    let role_kv = parts.next().context("slot role")?;
+                    let role = Role::parse(role_kv.strip_prefix("role=").context("role=")?)?;
+                    let slot = Slot { index, name, dtype, shape, role };
+                    let list = if kind == "input" { &mut m.inputs } else { &mut m.outputs };
+                    if slot.index != list.len() {
+                        bail!("non-contiguous slot index {} (expected {})", slot.index, list.len());
+                    }
+                    list.push(slot);
+                }
+                other => bail!("unknown manifest line kind '{other}'"),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn inputs_with_role(&self, role: Role) -> impl Iterator<Item = &Slot> {
+        self.inputs.iter().filter(move |s| s.role == role)
+    }
+
+    pub fn outputs_with_role(&self, role: Role) -> impl Iterator<Item = &Slot> {
+        self.outputs.iter().filter(move |s| s.role == role)
+    }
+
+    /// Index of the first input with the given role.
+    pub fn input_index(&self, role: Role) -> Option<usize> {
+        self.inputs.iter().position(|s| s.role == role)
+    }
+
+    pub fn output_index(&self, role: Role) -> Option<usize> {
+        self.outputs.iter().position(|s| s.role == role)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "qst-manifest-v1\n\
+config tiny-opt\n\
+method qst\n\
+graph train\n\
+task cls\n\
+batch 8 32\n\
+cfgfield d_model 128\n\
+cfgfield reduction 8\n\
+input 0 g.alpha f32 scalar role=trainable\n\
+input 1 g.down.00.l1 f32 128x8 role=trainable\n\
+input 2 opt.step f32 scalar role=step\n\
+input 3 batch.tokens i32 8x32 role=data\n\
+output 0 g.alpha f32 scalar role=trainable\n\
+output 1 loss f32 scalar role=loss\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config, "tiny-opt");
+        assert_eq!(m.method, "qst");
+        assert_eq!(m.batch, Some((8, 32)));
+        assert_eq!(m.cfg.usize("d_model"), 128);
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.inputs[1].shape, vec![128, 8]);
+        assert_eq!(m.inputs[3].dtype, DType::I32);
+        assert_eq!(m.output_index(Role::Loss), Some(1));
+        assert_eq!(m.inputs_with_role(Role::Trainable).count(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_gap_in_indices() {
+        let bad = "qst-manifest-v1\ninput 1 x f32 scalar role=data\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_is_empty() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.inputs[0].shape.is_empty());
+        assert_eq!(m.inputs[0].numel(), 1);
+    }
+}

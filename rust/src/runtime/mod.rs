@@ -1,0 +1,161 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute with
+//! device-resident state.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py`): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids.  Compiled executables are cached per artifact
+//! name; training state stays on device as `PjRtBuffer`s between steps.
+
+pub mod executor;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use executor::Executor;
+pub use manifest::{Manifest, Role, Slot};
+
+use crate::tensor::HostTensor;
+
+/// Process-wide PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Rc<Artifact>>,
+}
+
+/// One loaded artifact: manifest + compiled executable.
+pub struct Artifact {
+    pub name: String,
+    pub manifest: Manifest,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifact_dir, cache: HashMap::new() })
+    }
+
+    pub fn with_default_dir() -> Result<Self> {
+        Self::new(crate::artifacts_dir())
+    }
+
+    /// List artifact names available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names = vec![];
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let f = e.file_name().to_string_lossy().to_string();
+                if let Some(stem) = f.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let meta = self.dir.join(format!("{name}.meta.txt"));
+        if !hlo.exists() {
+            bail!(
+                "artifact '{name}' not found in {} — run `make artifacts` first",
+                self.dir.display()
+            );
+        }
+        let manifest = Manifest::load(&meta)?;
+        let proto = xla::HloModuleProto::from_text_file(hlo.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let art = Rc::new(Artifact { name: name.to_string(), manifest, exe });
+        self.cache.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Upload a host tensor to the device.
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the bytes
+    /// are copied synchronously) — NOT `buffer_from_host_literal`, whose
+    /// transfer is async in the xla crate's shim and races with the
+    /// literal's drop.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        use crate::tensor::DType;
+        let dims = &t.shape;
+        let buf = match t.dtype {
+            DType::F32 => self.client.buffer_from_host_buffer::<f32>(&t.as_f32()?, dims, None),
+            DType::I32 => self.client.buffer_from_host_buffer::<i32>(&t.as_i32()?, dims, None),
+            DType::U32 => {
+                let v: Vec<u32> = t
+                    .data
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                self.client.buffer_from_host_buffer::<u32>(&v, dims, None)
+            }
+            DType::U8 => self.client.buffer_from_host_buffer::<u8>(&t.data, dims, None),
+            DType::I8 => {
+                let v: Vec<i8> = t.data.iter().map(|&b| b as i8).collect();
+                self.client.buffer_from_host_buffer::<i8>(&v, dims, None)
+            }
+            DType::F16 => anyhow::bail!("f16 upload unsupported"),
+        };
+        buf.context("uploading host buffer to device")
+    }
+}
+
+impl Artifact {
+    /// Validate that host tensors match the manifest's input slots.
+    pub fn check_inputs(&self, tensors: &[HostTensor]) -> Result<()> {
+        let ins = &self.manifest.inputs;
+        if tensors.len() != ins.len() {
+            bail!("{}: expected {} inputs, got {}", self.name, ins.len(), tensors.len());
+        }
+        for (t, s) in tensors.iter().zip(ins) {
+            if t.shape != s.shape || t.dtype != s.dtype {
+                bail!(
+                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.name, s.name, s.dtype, s.shape, t.dtype, t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns all outputs as host tensors.
+    /// (Convenience path — the trainer uses the buffer path below.)
+    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        let result = out[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in &parts {
+            tensors.push(HostTensor::from_literal(p)?);
+        }
+        if tensors.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name, tensors.len(), self.manifest.outputs.len()
+            );
+        }
+        Ok(tensors)
+    }
+
+    /// Fetch one output buffer back to the host.
+    pub fn fetch(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+}

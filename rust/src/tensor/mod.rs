@@ -1,0 +1,287 @@
+//! Host-side tensors and PJRT literal marshaling.
+//!
+//! [`HostTensor`] is the coordinator's universal value type: a dtype, a shape
+//! and a flat byte buffer, convertible to/from `xla::Literal` for artifact
+//! execution and serialized by `coordinator::checkpoint`.
+
+use anyhow::{bail, Context, Result};
+
+/// Element types used by the artifacts (subset of XLA's PrimitiveType).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I32,
+    U32,
+    U8,
+    I8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F16 => 2,
+            DType::U8 | DType::I8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "u8" => DType::U8,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+            DType::U8 => "u8",
+            DType::I8 => "i8",
+        }
+    }
+
+    pub fn primitive(self) -> xla::PrimitiveType {
+        match self {
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::F16 => xla::PrimitiveType::F16,
+            DType::I32 => xla::PrimitiveType::S32,
+            DType::U32 => xla::PrimitiveType::U32,
+            DType::U8 => xla::PrimitiveType::U8,
+            DType::I8 => xla::PrimitiveType::S8,
+        }
+    }
+}
+
+/// A dense host tensor: dtype + shape + row-major bytes.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor { dtype, shape: shape.to_vec(), data: vec![0; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], vals: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_u8(shape: &[usize], vals: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        HostTensor { dtype: DType::U8, shape: shape.to_vec(), data: vals }
+    }
+
+    pub fn from_i8(shape: &[usize], vals: &[i8]) -> Self {
+        let data = vals.iter().map(|&v| v as u8).collect();
+        HostTensor { dtype: DType::I8, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], &[v])
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostTensor { dtype: DType::U32, shape: vec![], data: v.to_le_bytes().to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("as_f32 on {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("as_i32 on {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn f32_at(&self, i: usize) -> f32 {
+        let c = &self.data[i * 4..i * 4 + 4];
+        f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+    }
+
+    /// Scalar convenience (loss/gnorm outputs).
+    pub fn scalar(&self) -> f32 {
+        self.f32_at(0)
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        let mut lit = xla::Literal::create_from_shape(self.dtype.primitive(), &dims);
+        if lit.size_bytes() != self.data.len() {
+            bail!(
+                "literal size mismatch for shape {:?} {:?}: {} vs {}",
+                self.shape,
+                self.dtype,
+                lit.size_bytes(),
+                self.data.len()
+            );
+        }
+        // copy_raw_from is typed; route through the element type
+        match self.dtype {
+            DType::F32 => lit.copy_raw_from::<f32>(&self.as_f32()?)?,
+            DType::I32 => lit.copy_raw_from::<i32>(&self.as_i32()?)?,
+            DType::U32 => {
+                let vals: Vec<u32> = self
+                    .data
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                lit.copy_raw_from::<u32>(&vals)?
+            }
+            DType::U8 => lit.copy_raw_from::<u8>(&self.data)?,
+            DType::I8 => {
+                let vals: Vec<i8> = self.data.iter().map(|&b| b as i8).collect();
+                lit.copy_raw_from::<i8>(&vals)?
+            }
+            DType::F16 => bail!("f16 host tensors are storage-only"),
+        }
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::U32 => DType::U32,
+            xla::ElementType::U8 => DType::U8,
+            xla::ElementType::S8 => DType::I8,
+            xla::ElementType::F16 => DType::F16,
+            other => bail!("unsupported literal type {other:?}"),
+        };
+        let mut out = HostTensor::zeros(dtype, &dims);
+        match dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                out = HostTensor::from_f32(&dims, &v);
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>()?;
+                out = HostTensor::from_i32(&dims, &v);
+            }
+            DType::U32 => {
+                let v = lit.to_vec::<u32>()?;
+                let mut data = Vec::with_capacity(v.len() * 4);
+                for x in v {
+                    data.extend_from_slice(&x.to_le_bytes());
+                }
+                out.data = data;
+            }
+            DType::U8 => {
+                out.data = lit.to_vec::<u8>()?;
+            }
+            DType::I8 => {
+                let v = lit.to_vec::<i8>()?;
+                out.data = v.iter().map(|&x| x as u8).collect();
+            }
+            DType::F16 => bail!("f16 readback unsupported"),
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.f32_at(4), 5.0);
+    }
+
+    #[test]
+    fn zeros_sizing() {
+        let t = HostTensor::zeros(DType::U8, &[7, 3]);
+        assert_eq!(t.bytes(), 21);
+        let t = HostTensor::zeros(DType::F32, &[7, 3]);
+        assert_eq!(t.bytes(), 84);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 2], &[1., -2., 3.5, 0.25]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_u8_i32() {
+        let t = HostTensor::from_u8(&[4], vec![7, 0, 255, 128]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.data, t.data);
+
+        let t = HostTensor::from_i32(&[3], &[-1, 0, 42]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), vec![-1, 0, 42]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = HostTensor::scalar_f32(3.25);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.scalar(), 3.25);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("u8").unwrap(), DType::U8);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! Small in-repo substrates: deterministic RNG, timing, property-test driver.
+//!
+//! The sandbox has no network access to crates.io beyond the vendored `xla`
+//! closure, so `rand`, `proptest`, and `criterion` equivalents live here.
+
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Peak resident set size of this process in bytes (Linux, /proc/self/status).
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Format a byte count as a human string (GiB with 1 decimal for big values).
+pub fn human_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.1} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else {
+        format!("{:.1} KB", b / 1e3)
+    }
+}

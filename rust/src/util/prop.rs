@@ -1,0 +1,42 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! `check(n, seed, |rng| ...)` runs a property n times with derived seeds and
+//! reports the first failing seed so failures are reproducible:
+//!
+//! ```text
+//! prop::check(64, 0xC0FFEE, |rng| {
+//!     let x = rng.below(100);
+//!     assert!(x < 100);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` `n` times with independent RNGs; panic with the failing seed.
+pub fn check(n: usize, seed: u64, f: impl Fn(&mut Rng)) {
+    for i in 0..n {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {i} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        check(32, 1, |rng| assert!(rng.below(10) < 10));
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failure() {
+        check(32, 2, |rng| assert!(rng.below(10) < 5));
+    }
+}

@@ -1,0 +1,202 @@
+//! Integration tests over the real AOT artifacts: manifest/executable
+//! consistency, init determinism, training-loop behavior, the quantized
+//! frozen path, and checkpoint round-trips through the trainer.
+//!
+//! These need `make artifacts` to have run; each test skips (with a stderr
+//! note) if the artifact set is absent so `cargo test` stays usable on a
+//! fresh clone.
+
+use std::collections::HashMap;
+
+use qst::coordinator::pipeline::{self, frozen_from_checkpoint};
+use qst::coordinator::{Checkpoint, TrainConfig, Trainer};
+use qst::data::batcher::{lm_batch, LmExample};
+use qst::data::{corpus::Corpus, Vocab};
+use qst::runtime::{Role, Runtime};
+use qst::tensor::HostTensor;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::with_default_dir().ok()?;
+    if rt.available().is_empty() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(rt)
+}
+
+fn nano_batch(vocab_size: usize, b: usize, s: usize, seed: u64) -> qst::data::Batch {
+    let mut corpus = Corpus::new(Vocab::new(vocab_size), seed);
+    let exs: Vec<LmExample> = (0..b)
+        .map(|_| {
+            let (t, tg, m) = corpus.lm_example(s);
+            LmExample { tokens: t, targets: tg, mask: m }
+        })
+        .collect();
+    lm_batch(&exs, s)
+}
+
+#[test]
+fn manifests_match_compiled_signatures() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // loading compiles; PJRT rejects artifacts whose ENTRY arity mismatches
+    // only at execute time, so run the cheapest graph end-to-end.
+    for name in ["nano-opt__full__init", "nano-llama__full__init"] {
+        let art = rt.load(name).unwrap();
+        let out = art.run_host(&[HostTensor::scalar_u32(0)]).unwrap();
+        assert_eq!(out.len(), art.manifest.outputs.len(), "{name}");
+        for (t, s) in out.iter().zip(&art.manifest.outputs) {
+            assert_eq!(t.shape, s.shape, "{name}/{}", s.name);
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let art = rt.load("nano-opt__full__init").unwrap();
+    let a = art.run_host(&[HostTensor::scalar_u32(7)]).unwrap();
+    let b = art.run_host(&[HostTensor::scalar_u32(7)]).unwrap();
+    let c = art.run_host(&[HostTensor::scalar_u32(8)]).unwrap();
+    assert_eq!(a[0].data, b[0].data, "same seed must reproduce");
+    assert_ne!(a[0].data, c[0].data, "different seed must differ");
+}
+
+#[test]
+fn full_train_reduces_lm_loss() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let frozen = HashMap::new();
+    let mut trainer =
+        Trainer::new(&mut rt, "nano-opt__full__init", "nano-opt__full__lm__train", &frozen, 0)
+            .unwrap();
+    let (b, s) = trainer.batch_dims();
+    let batch = nano_batch(256, b, s, 42);
+    // overfit a single batch: loss must drop substantially
+    let (first, _) = trainer.step(&rt, &batch, 3e-3).unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        let (l, g) = trainer.step(&rt, &batch, 3e-3).unwrap();
+        assert!(g.is_finite());
+        last = l;
+    }
+    assert!(last < first - 0.5, "loss {first} -> {last}");
+}
+
+#[test]
+fn qst_pipeline_pretrain_quantize_finetune() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // pretrain a base (fast), then QST-finetune via the quantized frozen
+    // path built by rust/src/quant.
+    let (base, _) = pipeline::pretrain(&mut rt, "tiny-llama", 30, 3e-3, 1, false).unwrap();
+    let art = rt.load("tiny-llama__qst__lm__train").unwrap();
+    let frozen = frozen_from_checkpoint(&art.manifest, &base).unwrap();
+    // every frozen slot is covered, with exactly matching shapes
+    for slot in art.manifest.inputs_with_role(Role::Frozen) {
+        let t = frozen.get(&slot.name).unwrap_or_else(|| panic!("missing {}", slot.name));
+        assert_eq!(t.shape, slot.shape, "{}", slot.name);
+        assert_eq!(t.dtype, slot.dtype, "{}", slot.name);
+    }
+
+    let mut trainer =
+        Trainer::new(&mut rt, "tiny-llama__qst__init", "tiny-llama__qst__lm__train", &frozen, 3)
+            .unwrap();
+    let (b, s) = trainer.batch_dims();
+    let batch = nano_batch(512, b, s, 5);
+    let (first, _) = trainer.step(&rt, &batch, 2e-3).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = trainer.step(&rt, &batch, 2e-3).unwrap().0;
+    }
+    assert!(last < first, "QST loss must decrease on an overfit batch: {first} -> {last}");
+}
+
+#[test]
+fn fp4_variant_uses_fp4_packing() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (base, _) = pipeline::pretrain(&mut rt, "tiny-llama", 10, 3e-3, 1, false).unwrap();
+    let nf4 = frozen_from_checkpoint(&rt.load("tiny-llama__qst__lm__train").unwrap().manifest, &base).unwrap();
+    let fp4 = frozen_from_checkpoint(
+        &rt.load("tiny-llama__qst__lm__train__fp4").unwrap().manifest,
+        &base,
+    )
+    .unwrap();
+    // same shapes, different bytes (different codebooks)
+    let key = nf4.keys().find(|k| k.ends_with(".packed")).unwrap().clone();
+    assert_eq!(nf4[&key].shape, fp4[&key].shape);
+    assert_ne!(nf4[&key].data, fp4[&key].data, "FP4 packing must differ from NF4");
+}
+
+#[test]
+fn trainer_state_survives_checkpoint_roundtrip() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let frozen = HashMap::new();
+    let mut trainer =
+        Trainer::new(&mut rt, "nano-opt__full__init", "nano-opt__full__lm__train", &frozen, 0)
+            .unwrap();
+    let (b, s) = trainer.batch_dims();
+    let batch = nano_batch(256, b, s, 9);
+    for _ in 0..3 {
+        trainer.step(&rt, &batch, 1e-3).unwrap();
+    }
+    let params = trainer.trainable().unwrap();
+    let path = std::env::temp_dir().join(format!("qst_it_{}.ckpt", std::process::id()));
+    Checkpoint::new(params.clone()).save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.tensors.len(), params.len());
+    for (k, v) in &params {
+        assert_eq!(back.tensors[k].data, v.data, "{k}");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn train_run_loop_and_metrics() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let frozen = HashMap::new();
+    let mut trainer =
+        Trainer::new(&mut rt, "nano-opt__full__init", "nano-opt__full__lm__train", &frozen, 0)
+            .unwrap();
+    let (b, s) = trainer.batch_dims();
+    let mut corpus = Corpus::new(Vocab::new(256), 77);
+    let cfg = TrainConfig::quick(12, 2e-3);
+    let report = trainer
+        .run(&rt, &cfg, |_| {
+            let exs: Vec<LmExample> = (0..b)
+                .map(|_| {
+                    let (t, tg, m) = corpus.lm_example(s);
+                    LmExample { tokens: t, targets: tg, mask: m }
+                })
+                .collect();
+            lm_batch(&exs, s)
+        })
+        .unwrap();
+    assert_eq!(report.metrics.losses.len(), 12);
+    assert!(!report.metrics.diverged());
+    assert!(report.metrics.mean_loss_tail(4) < report.metrics.losses[0]);
+    assert!(!report.trainable.is_empty());
+}
+
+#[test]
+fn eval_graph_runs_and_scores() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (base, _) = pipeline::pretrain(&mut rt, "tiny-opt", 40, 3e-3, 2, false).unwrap();
+    let out = qst::experiments::common::finetune_glue(
+        &mut rt,
+        "tiny-opt",
+        "qst",
+        qst::data::glue::GlueTask::Sst2,
+        25,
+        &base,
+        "",
+    )
+    .unwrap();
+    let acc = qst::experiments::common::eval_glue(
+        &mut rt,
+        "tiny-opt",
+        "qst",
+        qst::data::glue::GlueTask::Sst2,
+        &out,
+        64,
+    )
+    .unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
