@@ -1,0 +1,21 @@
+# Repo entry points.  `make check` is the tier-1 verify plus format hygiene;
+# `make artifacts` lowers the AOT HLO artifacts the Rust coordinator executes;
+# `make fixtures` regenerates the cross-language quantizer golden fixture;
+# `make bench-serve` runs the serving benchmark and refreshes BENCH_serve.json.
+
+.PHONY: check test artifacts fixtures bench-serve
+
+check:
+	./scripts/check.sh
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts
+
+fixtures:
+	python3 scripts/gen_quant_fixture.py
+
+bench-serve:
+	cargo run --release -p qst --bin qst -- bench-serve

@@ -1,0 +1,77 @@
+//! Serving-path benchmark: repeated-prompt workload over multiple side
+//! networks sharing one frozen backbone.
+//!
+//! Measures (a) the raw backbone-vs-side cost asymmetry that motivates the
+//! hidden-state cache, and (b) end-to-end server throughput with the cache
+//! enabled vs disabled on the same workload.  Writes `BENCH_serve.json`
+//! (same schema as `qst bench-serve`) plus the usual CSV log, so the perf
+//! trajectory accumulates across PRs.
+
+use std::rc::Rc;
+
+use qst::benchkit::Bench;
+use qst::serve::workload::{run_bench, BenchServeOpts};
+use qst::serve::{Engine, Hidden, Registry, SyntheticEngine};
+
+fn main() {
+    let mut results = vec![];
+    let seq = 64;
+
+    // raw component costs: one backbone row vs one side forward
+    let mut engine = SyntheticEngine::small(0, seq);
+    let row: Vec<i32> = (0..seq as i32).map(|i| 1 + (i * 7) % 200).collect();
+    let r = Bench::quick("serve: backbone forward 1x64").run(|| {
+        engine.backbone(std::slice::from_ref(&row)).unwrap()
+    });
+    r.throughput("token", seq as f64);
+    results.push(r);
+
+    let hidden: Vec<Rc<Hidden>> = engine
+        .backbone(std::slice::from_ref(&row))
+        .unwrap()
+        .into_iter()
+        .map(Rc::new)
+        .collect();
+    let mut reg = Registry::new(1 << 20);
+    reg.register_synthetic("bench", 42, 4096).unwrap();
+    let net = reg.get("bench").unwrap();
+    let rows = vec![row.clone()];
+    let r = Bench::quick("serve: side forward 1x64 (cache hit path)").run(|| {
+        engine.side(&net, &hidden, &rows).unwrap()
+    });
+    r.throughput("token", seq as f64);
+    results.push(r);
+
+    // end-to-end: cached vs uncached throughput on a repeated-prompt stream
+    let opts = BenchServeOpts {
+        tasks: 3,
+        requests: 384,
+        unique_prompts: 24,
+        prompt_len: 48,
+        seq,
+        max_batch: 8,
+        cache_bytes: 64 << 20,
+        registry_bytes: 64 << 20,
+        burst: 48,
+        seed: 0,
+    };
+    let report = run_bench(&opts).expect("bench workload");
+    println!("{}", report.summary());
+    println!(
+        "serve: backbone rows cached={} uncached={} | cache {:.1}% hits, {} evictions",
+        report.cached.backbone_rows,
+        report.uncached.backbone_rows,
+        report.cached.hit_rate * 100.0,
+        report.cached.cache_evictions
+    );
+    assert!(
+        report.speedup() >= 2.0,
+        "hidden-state cache must deliver >=2x throughput on a repeated-prompt \
+         workload (got {:.2}x) — see ISSUE acceptance criteria",
+        report.speedup()
+    );
+    std::fs::write("BENCH_serve.json", report.to_json()).expect("writing BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+
+    qst::benchkit::log_csv(&qst::runs_dir().join("bench_serve.csv"), &results).ok();
+}

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 /// Flags that never take a value (so `--verbose positional` parses right).
-const KNOWN_SWITCHES: &[&str] = &["verbose", "fast", "force", "help"];
+const KNOWN_SWITCHES: &[&str] = &["verbose", "fast", "force", "help", "synthetic"];
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -66,6 +66,17 @@ impl Args {
         }
     }
 
+    /// u64 flag accessor (byte budgets, seeds — values that can exceed
+    /// 32 bits and must never be negative).
+    pub fn u64_or(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{k} expects a non-negative integer, got '{v}'")),
+        }
+    }
+
     pub fn f32_or(&self, k: &str, default: f32) -> Result<f32> {
         match self.get(k) {
             None => Ok(default),
@@ -98,6 +109,17 @@ COMMANDS:
   generate     --config <name> --method <m> [--prompt-len N] [--max-new N]
   experiments  --id table1|table2|table3|table4|table5|table6|table7|
                     fig1a|fig1b|fig4|fig5|fig6|calib|all  [--fast]
+  serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
+               [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N] [--seed N]
+               In-process multi-task inference server: one shared frozen
+               backbone, per-task side networks, hidden-state cache.
+               Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
+  bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
+               [--seq N] [--batch N] [--burst N] [--cache-bytes N]
+               [--registry-bytes N] [--seed N] [--json PATH]
+               Repeated-prompt serving benchmark over >=2 side networks;
+               reports cached vs uncached throughput, cache hit rate and
+               p50/p95 latency; writes BENCH_serve.json
   artifacts    List available AOT artifacts
   info         Print environment / runtime info
   help         This message
@@ -138,6 +160,24 @@ mod tests {
     fn bad_int_errors() {
         let a = parse(&["x", "--steps", "abc"]);
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn u64_parses_defaults_and_rejects() {
+        let a = parse(&["x", "--cache-bytes", "68719476736"]); // 64 GiB > u32
+        assert_eq!(a.u64_or("cache-bytes", 0).unwrap(), 68_719_476_736);
+        assert_eq!(a.u64_or("seed", 7).unwrap(), 7, "missing flag falls back to default");
+        let bad = parse(&["x", "--cache-bytes", "-1"]);
+        assert!(bad.u64_or("cache-bytes", 0).is_err(), "negative must be rejected");
+        let junk = parse(&["x", "--cache-bytes", "12MB"]);
+        assert!(junk.u64_or("cache-bytes", 0).is_err());
+    }
+
+    #[test]
+    fn u64_zero_is_valid() {
+        // `--cache-bytes 0` is the documented cache-off switch
+        let a = parse(&["x", "--cache-bytes", "0"]);
+        assert_eq!(a.u64_or("cache-bytes", 1).unwrap(), 0);
     }
 
     #[test]

@@ -18,6 +18,9 @@ use anyhow::{bail, Context, Result};
 use crate::tensor::{DType, HostTensor};
 
 const MAGIC: &[u8; 8] = b"QSTCKPT1";
+/// Sanity caps for load-time validation (far above anything `save` emits).
+const MAX_NAME_LEN: u64 = 4096;
+const MAX_NDIM: usize = 8;
 
 fn dtype_code(d: DType) -> u8 {
     match d {
@@ -53,6 +56,16 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        // enforce the same caps load() validates, so save can never produce
+        // a file that load refuses
+        for (name, t) in &self.tensors {
+            if name.is_empty() || name.len() as u64 > MAX_NAME_LEN {
+                bail!("tensor name length {} out of range 1..={MAX_NAME_LEN}", name.len());
+            }
+            if t.shape.len() > MAX_NDIM {
+                bail!("tensor '{name}' has {} dims (max {MAX_NDIM})", t.shape.len());
+            }
+        }
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -74,37 +87,76 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load a checkpoint, validating every header-declared size against the
+    /// actual file length before allocating.  Serving loads run directories
+    /// it does not control, so a truncated or corrupt file must fail with a
+    /// clear error — never a huge allocation or a panic.
     pub fn load(path: &Path) -> Result<Self> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
+        let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut r = std::io::BufReader::new(file);
+        let corrupt = |what: &str| {
+            anyhow::anyhow!("corrupt checkpoint {}: {}", path.display(), what)
+        };
+        fn take(remaining: &mut u64, n: u64, path: &Path) -> Result<()> {
+            if n > *remaining {
+                bail!(
+                    "corrupt checkpoint {}: header declares {n} bytes but only {} remain (truncated file?)",
+                    path.display(),
+                    remaining
+                );
+            }
+            *remaining -= n;
+            Ok(())
+        }
+        let mut remaining = file_len;
         let mut magic = [0u8; 8];
+        take(&mut remaining, 8, path)?;
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
             bail!("{} is not a QST checkpoint", path.display());
         }
         let mut u32buf = [0u8; 4];
+        take(&mut remaining, 4, path)?;
         r.read_exact(&mut u32buf)?;
         let count = u32::from_le_bytes(u32buf);
+        // each entry takes >= 4 (name_len) + 2 (dtype+ndim) bytes
+        if count as u64 * 6 > remaining {
+            return Err(corrupt(&format!("implausible tensor count {count} for a {file_len}-byte file")));
+        }
         let mut tensors = HashMap::with_capacity(count as usize);
-        for _ in 0..count {
+        for i in 0..count {
+            take(&mut remaining, 4, path)?;
             r.read_exact(&mut u32buf)?;
-            let nlen = u32::from_le_bytes(u32buf) as usize;
-            let mut nbuf = vec![0u8; nlen];
+            let nlen = u32::from_le_bytes(u32buf) as u64;
+            if nlen == 0 || nlen > MAX_NAME_LEN {
+                return Err(corrupt(&format!("entry {i} name length {nlen} (max {MAX_NAME_LEN})")));
+            }
+            take(&mut remaining, nlen, path)?;
+            let mut nbuf = vec![0u8; nlen as usize];
             r.read_exact(&mut nbuf)?;
-            let name = String::from_utf8(nbuf)?;
+            let name = String::from_utf8(nbuf).map_err(|_| corrupt(&format!("entry {i} name is not UTF-8")))?;
             let mut hdr = [0u8; 2];
+            take(&mut remaining, 2, path)?;
             r.read_exact(&mut hdr)?;
             let dtype = code_dtype(hdr[0])?;
             let ndim = hdr[1] as usize;
+            if ndim > MAX_NDIM {
+                return Err(corrupt(&format!("'{name}' has {ndim} dims (max {MAX_NDIM})")));
+            }
             let mut shape = Vec::with_capacity(ndim);
             let mut u64buf = [0u8; 8];
             for _ in 0..ndim {
+                take(&mut remaining, 8, path)?;
                 r.read_exact(&mut u64buf)?;
                 shape.push(u64::from_le_bytes(u64buf) as usize);
             }
-            let numel: usize = shape.iter().product();
-            let mut data = vec![0u8; numel * dtype.size()];
+            let numel = shape.iter().try_fold(1u64, |acc, &d| acc.checked_mul(d as u64));
+            let nbytes = numel.and_then(|n| n.checked_mul(dtype.size() as u64));
+            let nbytes = nbytes
+                .ok_or_else(|| corrupt(&format!("'{name}' shape {shape:?} overflows a byte count")))?;
+            take(&mut remaining, nbytes, path).with_context(|| format!("reading tensor '{name}'"))?;
+            let mut data = vec![0u8; nbytes as usize];
             r.read_exact(&mut data)?;
             tensors.insert(name, HostTensor { dtype, shape, data });
         }
@@ -163,5 +215,87 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    fn valid_bytes() -> Vec<u8> {
+        let mut tensors = HashMap::new();
+        tensors.insert("w".into(), HostTensor::from_f32(&[8, 4], &[0.25; 32]));
+        let ck = Checkpoint::new(tensors);
+        let path = tmpfile("valid_src.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(path).ok();
+        bytes
+    }
+
+    fn load_bytes(name: &str, bytes: &[u8]) -> Result<Checkpoint> {
+        let path = tmpfile(name);
+        std::fs::write(&path, bytes).unwrap();
+        let r = Checkpoint::load(&path);
+        std::fs::remove_file(path).ok();
+        r
+    }
+
+    #[test]
+    fn truncated_file_fails_cleanly() {
+        let bytes = valid_bytes();
+        // cut the file at every prefix length: must error, never panic
+        for cut in [8, 12, 13, 20, 30, bytes.len() - 1] {
+            let err = load_bytes("trunc.ckpt", &bytes[..cut]);
+            assert!(err.is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn huge_name_len_rejected_without_allocation() {
+        let mut bytes = valid_bytes();
+        // entry header starts right after magic(8) + count(4)
+        bytes[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_bytes("bigname.ckpt", &bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("name length"), "{err:#}");
+    }
+
+    #[test]
+    fn huge_dim_rejected_against_file_length() {
+        let mut bytes = valid_bytes();
+        // dims start after magic(8)+count(4)+name_len(4)+"w"(1)+dtype+ndim(2)
+        let dims_at = 8 + 4 + 4 + 1 + 2;
+        bytes[dims_at..dims_at + 8].copy_from_slice(&(u64::MAX / 8).to_le_bytes());
+        let err = load_bytes("bigdim.ckpt", &bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("remain") || msg.contains("overflow"), "{msg}");
+    }
+
+    #[test]
+    fn overflowing_shape_product_rejected() {
+        let mut bytes = valid_bytes();
+        let dims_at = 8 + 4 + 4 + 1 + 2;
+        // two dims of 2^40: numel overflows nothing (2^80 > u64) -> checked_mul trips
+        bytes[dims_at..dims_at + 8].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes[dims_at + 8..dims_at + 16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        let err = load_bytes("ovfl.ckpt", &bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("overflow") || msg.contains("remain"), "{msg}");
+    }
+
+    #[test]
+    fn save_refuses_what_load_would_reject() {
+        let mut tensors = HashMap::new();
+        tensors.insert("x".repeat(5000), HostTensor::scalar_f32(1.0));
+        let err = Checkpoint::new(tensors).save(&tmpfile("longname.ckpt")).unwrap_err();
+        assert!(format!("{err:#}").contains("name length"));
+
+        let mut tensors = HashMap::new();
+        tensors.insert("t".into(), HostTensor::zeros(crate::tensor::DType::F32, &[1; 9]));
+        let err = Checkpoint::new(tensors).save(&tmpfile("deepdims.ckpt")).unwrap_err();
+        assert!(format!("{err:#}").contains("dims"));
+    }
+
+    #[test]
+    fn implausible_count_rejected() {
+        let mut bytes = valid_bytes();
+        bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_bytes("bigcount.ckpt", &bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("count"), "{err:#}");
     }
 }

@@ -81,6 +81,13 @@ pub fn memory_bytes(m: &PaperModel, method: Method, b: usize, s: usize) -> Memor
     memory_bytes_r(m, method, b, s, r)
 }
 
+/// Inference-residency bytes of one QST side network (16-bit params, no
+/// optimizer state, no activations) — the unit of the serving registry's
+/// byte budget (`serve::registry`).
+pub fn side_network_bytes(m: &PaperModel, r: usize) -> f64 {
+    m.side_params(r, "adapter", 16) * B16
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +157,17 @@ mod tests {
         let lst = memory_bytes(m, Method::Lst, 4, 512).total() / GB;
         let qst = memory_bytes(m, Method::Qst, 4, 512).total() / GB;
         assert!(lst - qst > 80.0, "LST {lst:.0} vs QST {qst:.0}");
+    }
+
+    #[test]
+    fn side_network_residency_is_tiny_vs_backbone() {
+        // multi-tenant serving premise: dozens of side networks cost less
+        // than one extra backbone copy
+        let m = paper_model("LLaMA-2-70B").unwrap();
+        let side = side_network_bytes(m, 16);
+        let backbone_4bit = m.params * NF4_BITS / 8.0;
+        assert!(side > 0.0);
+        assert!(32.0 * side < backbone_4bit, "32 side nets {side:.3e} vs backbone {backbone_4bit:.3e}");
     }
 
     #[test]

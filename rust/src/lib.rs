@@ -15,6 +15,8 @@
 //! * [`data`]       — deterministic synthetic corpus + GLUE/MMLU/instruction suites
 //! * [`costmodel`]  — analytical memory/FLOPs models at the paper's true dims
 //! * [`experiments`] — one regenerator per paper table/figure
+//! * [`serve`]      — multi-task inference: shared-backbone hidden-state
+//!   cache, side-network registry, micro-batching, serving telemetry
 //! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
 
 pub mod benchkit;
@@ -25,6 +27,7 @@ pub mod data;
 pub mod experiments;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

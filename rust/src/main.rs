@@ -3,13 +3,14 @@
 //! Python never runs here: every command executes AOT-compiled HLO artifacts
 //! via PJRT.  See `qst help` for the command list.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use qst::cli::{Args, USAGE};
 use qst::coordinator::pipeline;
 use qst::coordinator::Checkpoint;
 use qst::data::glue::{GlueTask, ALL_TASKS};
 use qst::runtime::Runtime;
+use qst::serve::{self, Engine, ServeConfig, Server};
 
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
@@ -144,6 +145,167 @@ fn run(argv: &[String]) -> Result<()> {
             let id = args.str_or("id", "all");
             qst::experiments::run(&id, args.has("fast"))
         }
-        other => bail!("unknown command '{other}'\n{USAGE}"),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
+        other => {
+            eprintln!("error: unknown command '{other}'\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
     }
+}
+
+/// Shared serve tuning from flags.
+fn serve_config(args: &Args) -> Result<ServeConfig> {
+    Ok(ServeConfig {
+        cache_bytes: args.u64_or("cache-bytes", 64 << 20)? as usize,
+        registry_bytes: args.u64_or("registry-bytes", 256 << 20)? as usize,
+        max_batch: args.usize_or("batch", 8)?,
+    })
+}
+
+/// stdin-driven request loop: one request per line, `<task> <tok> <tok> ...`.
+///
+/// On a TTY every line is answered immediately; on piped input requests
+/// accumulate until `--batch` pending (or EOF), so the micro-batcher and
+/// the hidden-state cache's within-batch dedupe actually engage.
+fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
+    use std::io::{BufRead, IsTerminal};
+    let interactive = std::io::stdin().is_terminal();
+    eprintln!(
+        "serving tasks {:?} (seq {}, cache {}, batch {}{}); one request per line: '<task> <tok> ...'",
+        server.registry.known_tasks(),
+        server.engine.seq_len(),
+        if server.cache.enabled() {
+            qst::util::human_bytes(server.cache.budget() as f64)
+        } else {
+            "off".into()
+        },
+        server.max_batch(),
+        if interactive { ", interactive" } else { ", piped" }
+    );
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "stats" {
+            println!("{}", server.stats.summary(server.cache.hit_rate()));
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let task = parts.next().unwrap().to_string();
+        let tokens: Vec<i32> = match parts.map(|t| t.parse()).collect::<Result<_, _>>() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bad request (tokens must be integers): {e}");
+                continue;
+            }
+        };
+        if let Err(e) = server.submit(&task, &tokens) {
+            eprintln!("rejected: {e:#}");
+            continue;
+        }
+        // interactive: answer every line; piped: let micro-batches fill
+        if interactive || server.pending() >= server.max_batch() {
+            drain_and_print(server);
+        }
+    }
+    drain_and_print(server); // EOF: flush the final partial batch
+    println!("{}", server.stats.summary(server.cache.hit_rate()));
+    println!(
+        "cache: {} entries, {} | registry: {} resident, {} evictions",
+        server.cache.len(),
+        qst::util::human_bytes(server.cache.bytes() as f64),
+        server.registry.resident_count(),
+        server.registry.evictions
+    );
+    Ok(())
+}
+
+fn drain_and_print<E: Engine>(server: &mut Server<E>) {
+    match server.drain() {
+        Err(e) => eprintln!("request failed: {e:#}"),
+        Ok(responses) => {
+            for r in responses {
+                let (tok, logit) = r.top1();
+                println!(
+                    "{}#{}: next-token {} (logit {:.4}) [{}]",
+                    r.task,
+                    r.id,
+                    tok,
+                    logit,
+                    if r.cache_hit { "cache hit" } else { "backbone" }
+                );
+            }
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config(args)?;
+    if args.has("synthetic") || args.get("config").is_none() {
+        let seq = args.usize_or("seq", 64)?;
+        let seed = args.u64_or("seed", 0)?;
+        let n_tasks = args.usize_or("num-tasks", 2)?.max(1);
+        let engine = serve::SyntheticEngine::small(seed, seq);
+        let mut server = Server::new(engine, cfg);
+        for i in 0..n_tasks {
+            server.registry.register_synthetic(&format!("task{i}"), seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
+        }
+        return serve_loop(&mut server);
+    }
+    // artifact mode: per-task eval graphs over one shared quantized backbone
+    let cfg_name = args.require("config")?.to_string();
+    let method = args.str_or("method", "qst");
+    let tasks: Vec<String> =
+        args.str_or("tasks", "cls").split(',').map(|s| s.trim().to_string()).collect();
+    let rt = Runtime::with_default_dir()?;
+    let mut engine = serve::ExecutorEngine::new(rt);
+    let base = Checkpoint::load(&pipeline::base_ckpt_path(&cfg_name)).with_context(|| {
+        format!("no base checkpoint for '{cfg_name}' — run `qst pretrain --config {cfg_name}`")
+    })?;
+    let mut server_registry = serve::Registry::new(cfg.registry_bytes);
+    for (i, task) in tasks.iter().enumerate() {
+        let artifact = format!("{cfg_name}__{method}__{task}__eval");
+        let side_path = qst::runs_dir().join(format!("{cfg_name}__{method}__{task}.ckpt"));
+        let side = Checkpoint::load(&side_path).with_context(|| {
+            format!(
+                "no side checkpoint for task '{task}' — run `qst finetune --config {cfg_name} --method {method} --task {task}`"
+            )
+        })?;
+        let man = engine.rt.load(&artifact)?.manifest.clone();
+        let frozen = pipeline::frozen_from_checkpoint(&man, &base)?;
+        engine.bind_task(task, &artifact, &side.tensors, &frozen)?;
+        // the executor keeps the side state device-resident, so the registry
+        // only tracks a lightweight handle (no tensor residency to thrash)
+        server_registry.register_synthetic(task, i as u64 + 1, 1 << 12)?;
+    }
+    let mut server = Server::new(engine, cfg);
+    server.registry = server_registry;
+    serve_loop(&mut server)
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let opts = serve::workload::BenchServeOpts {
+        tasks: args.usize_or("tasks", 3)?.max(2), // the point is multi-task sharing
+        requests: args.usize_or("requests", 512)?,
+        unique_prompts: args.usize_or("unique-prompts", 32)?,
+        prompt_len: args.usize_or("prompt-len", 48)?,
+        seq: args.usize_or("seq", 64)?,
+        max_batch: args.usize_or("batch", 8)?,
+        cache_bytes: args.u64_or("cache-bytes", 64 << 20)? as usize,
+        registry_bytes: args.u64_or("registry-bytes", 64 << 20)? as usize,
+        burst: args.usize_or("burst", 64)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let report = serve::workload::run_bench(&opts)?;
+    println!("{}", report.summary());
+    let json_path = args.str_or("json", "BENCH_serve.json");
+    std::fs::write(&json_path, report.to_json())
+        .with_context(|| format!("writing {json_path}"))?;
+    println!("wrote {json_path}");
+    Ok(())
 }

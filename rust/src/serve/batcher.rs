@@ -1,0 +1,173 @@
+//! Request queue + per-task micro-batching.
+//!
+//! Requests for different tasks can't share one side-network dispatch, so
+//! the queue groups pending requests by task and forms micro-batches of up
+//! to `max_batch`.  Task selection is arrival-ordered (the task owning the
+//! oldest pending request goes first) so no task starves.  Rows are padded
+//! to the engine's fixed sequence length — the artifact graphs are
+//! shape-specialized, so padding happens here, once, before dispatch.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::vocabulary::PAD;
+
+/// One pending inference request.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+/// A batch of same-task requests ready for dispatch.
+#[derive(Debug)]
+pub struct MicroBatch {
+    pub task: String,
+    pub requests: Vec<QueuedRequest>,
+}
+
+/// Multi-task FIFO queue with per-task micro-batching.
+#[derive(Default)]
+pub struct RequestQueue {
+    next_id: u64,
+    queues: HashMap<String, VecDeque<QueuedRequest>>,
+    /// global arrival order (id, task); stale entries are skipped lazily
+    arrivals: VecDeque<(u64, String)>,
+    pending_ids: HashSet<u64>,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending_ids.is_empty()
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn push(&mut self, task: &str, tokens: Vec<i32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = QueuedRequest { id, task: task.to_string(), tokens, enqueued: Instant::now() };
+        self.queues.entry(task.to_string()).or_default().push_back(req);
+        self.arrivals.push_back((id, task.to_string()));
+        self.pending_ids.insert(id);
+        id
+    }
+
+    /// Next micro-batch: up to `max_batch` requests of the task owning the
+    /// oldest pending request.  Returns `None` when the queue is empty.
+    pub fn next_batch(&mut self, max_batch: usize) -> Option<MicroBatch> {
+        let max_batch = max_batch.max(1);
+        loop {
+            let (id, task) = self.arrivals.pop_front()?;
+            if !self.pending_ids.contains(&id) {
+                continue; // already served as part of an earlier batch
+            }
+            let q = self.queues.get_mut(&task).expect("pending id implies queue");
+            let n = q.len().min(max_batch);
+            let requests: Vec<QueuedRequest> = q.drain(..n).collect();
+            for r in &requests {
+                self.pending_ids.remove(&r.id);
+            }
+            return Some(MicroBatch { task, requests });
+        }
+    }
+}
+
+/// Right-pad a token row with PAD to `seq`; a row longer than `seq` is a
+/// caller error (the transport should have truncated or rejected it).
+pub fn pad_row(tokens: &[i32], seq: usize) -> Result<Vec<i32>> {
+    if tokens.len() > seq {
+        bail!("request of {} tokens exceeds the artifact sequence length {}", tokens.len(), seq);
+    }
+    let mut row = tokens.to_vec();
+    row.resize(seq, PAD);
+    Ok(row)
+}
+
+/// Index of the last non-PAD token of a padded row (0 for an all-PAD row):
+/// the position whose logits answer a next-token request.
+pub fn query_pos(row: &[i32]) -> usize {
+    row.iter().rposition(|&t| t != PAD).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_and_rejects_overflow() {
+        assert_eq!(pad_row(&[5, 6], 4).unwrap(), vec![5, 6, PAD, PAD]);
+        assert_eq!(pad_row(&[], 2).unwrap(), vec![PAD, PAD]);
+        assert!(pad_row(&[1, 2, 3], 2).is_err());
+    }
+
+    #[test]
+    fn query_pos_is_last_non_pad() {
+        assert_eq!(query_pos(&[7, 8, PAD, PAD]), 1);
+        assert_eq!(query_pos(&[7, PAD, 9, PAD]), 2);
+        assert_eq!(query_pos(&[PAD, PAD]), 0);
+    }
+
+    #[test]
+    fn batches_group_by_task_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        q.push("a", vec![1]);
+        q.push("b", vec![2]);
+        q.push("a", vec![3]);
+        q.push("b", vec![4]);
+        let b1 = q.next_batch(8).unwrap();
+        assert_eq!(b1.task, "a");
+        assert_eq!(b1.requests.len(), 2);
+        let b2 = q.next_batch(8).unwrap();
+        assert_eq!(b2.task, "b");
+        assert_eq!(b2.requests.len(), 2);
+        assert!(q.next_batch(8).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch_and_fifo_within_task() {
+        let mut q = RequestQueue::new();
+        for i in 0..5 {
+            q.push("a", vec![i]);
+        }
+        let b1 = q.next_batch(2).unwrap();
+        assert_eq!(b1.requests.iter().map(|r| r.tokens[0]).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = q.next_batch(2).unwrap();
+        assert_eq!(b2.requests.iter().map(|r| r.tokens[0]).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(q.next_batch(2).unwrap().requests.len(), 1);
+    }
+
+    #[test]
+    fn no_starvation_across_tasks() {
+        let mut q = RequestQueue::new();
+        q.push("hot", vec![0]);
+        q.push("cold", vec![1]);
+        q.push("hot", vec![2]);
+        // serving "hot" consumes both hot requests; "cold" must be next even
+        // though more "hot" arrivals sit in the arrival queue
+        assert_eq!(q.next_batch(8).unwrap().task, "hot");
+        q.push("hot", vec![3]);
+        assert_eq!(q.next_batch(8).unwrap().task, "cold");
+        assert_eq!(q.next_batch(8).unwrap().task, "hot");
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotonic() {
+        let mut q = RequestQueue::new();
+        let a = q.push("t", vec![]);
+        let b = q.push("t", vec![]);
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,241 @@
+//! Backbone hidden-state cache: the serving-side payoff of QST's frozen
+//! shared backbone.
+//!
+//! Every task's side network reads the *same* frozen hidden states for a
+//! given prompt, so the expensive backbone forward is cacheable across
+//! requests AND across tasks.  Keys are a 64-bit FNV-1a hash of the padded
+//! token ids mixed with the backbone identity; entries are byte-budgeted
+//! with strict LRU eviction; hit/miss/eviction counters feed
+//! [`super::stats::ServeStats`] and `BENCH_serve.json`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use super::Hidden;
+
+/// Cache key for a prompt: FNV-1a over the padded token ids, mixed with the
+/// backbone identity so two different backbones never share entries.
+pub fn prompt_key(backbone_id: u64, tokens: &[i32]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET ^ backbone_id.wrapping_mul(FNV_PRIME);
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// LRU, byte-budgeted cache of backbone hidden states.
+///
+/// A budget of 0 disables the cache entirely (`get` always misses, `insert`
+/// is a no-op) — that is the `--cache-bytes 0` baseline of `bench-serve`.
+pub struct HiddenCache {
+    budget: usize,
+    entries: HashMap<u64, (Rc<Hidden>, u64)>,
+    /// tick -> key, oldest first (ticks are unique, monotonically increasing)
+    lru: BTreeMap<u64, u64>,
+    bytes: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// key collisions detected (entry present but for a different prompt)
+    pub collisions: u64,
+    /// inserts dropped because a single entry exceeded the whole budget
+    pub oversize_skips: u64,
+}
+
+impl HiddenCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        HiddenCache {
+            budget: budget_bytes,
+            entries: HashMap::new(),
+            lru: BTreeMap::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            collisions: 0,
+            oversize_skips: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Look up a prompt's hidden states, counting the hit/miss and marking
+    /// the entry most-recently-used on a hit.  The stored prompt is compared
+    /// against `tokens`, so a 64-bit key collision is a (counted) miss —
+    /// never silently another prompt's hidden states.
+    pub fn get(&mut self, key: u64, tokens: &[i32]) -> Option<Rc<Hidden>> {
+        match self.entries.get_mut(&key) {
+            Some((h, tick)) if h.tokens == tokens => {
+                self.hits += 1;
+                self.lru.remove(tick);
+                self.tick += 1;
+                *tick = self.tick;
+                self.lru.insert(self.tick, key);
+                Some(h.clone())
+            }
+            Some(_) => {
+                self.collisions += 1;
+                self.misses += 1;
+                None
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert hidden states for a prompt, evicting least-recently-used
+    /// entries until the budget holds.  Entries bigger than the whole budget
+    /// are skipped (never worth evicting everything for one prompt).
+    pub fn insert(&mut self, key: u64, hidden: Rc<Hidden>) {
+        if self.budget == 0 {
+            return;
+        }
+        let sz = hidden.bytes();
+        if sz > self.budget {
+            self.oversize_skips += 1;
+            return;
+        }
+        if let Some((old, tick)) = self.entries.remove(&key) {
+            self.bytes -= old.bytes();
+            self.lru.remove(&tick);
+        }
+        while self.bytes + sz > self.budget {
+            let Some((&oldest_tick, &oldest_key)) = self.lru.iter().next() else { break };
+            self.lru.remove(&oldest_tick);
+            if let Some((old, _)) = self.entries.remove(&oldest_key) {
+                self.bytes -= old.bytes();
+                self.evictions += 1;
+            }
+        }
+        self.tick += 1;
+        self.lru.insert(self.tick, key);
+        self.entries.insert(key, (hidden, self.tick));
+        self.bytes += sz;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hidden(key: u64, floats: usize) -> Rc<Hidden> {
+        Rc::new(Hidden { key, tokens: vec![key as i32], data: vec![0.5; floats] })
+    }
+
+    fn get(c: &mut HiddenCache, key: u64) -> Option<Rc<Hidden>> {
+        c.get(key, &[key as i32])
+    }
+
+    #[test]
+    fn key_is_order_sensitive_and_backbone_scoped() {
+        let a = prompt_key(1, &[1, 2, 3]);
+        assert_eq!(a, prompt_key(1, &[1, 2, 3]));
+        assert_ne!(a, prompt_key(1, &[3, 2, 1]));
+        assert_ne!(a, prompt_key(2, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = HiddenCache::new(1 << 20);
+        let k = prompt_key(0, &[5, 6]);
+        assert!(get(&mut c, k).is_none());
+        c.insert(k, hidden(k, 16));
+        assert!(get(&mut c, k).is_some());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_lru_under_byte_budget() {
+        // each entry is 100 floats = 400 bytes; budget fits two
+        let mut c = HiddenCache::new(900);
+        c.insert(1, hidden(1, 100));
+        c.insert(2, hidden(2, 100));
+        assert_eq!(c.len(), 2);
+        // touch 1 so 2 becomes LRU
+        assert!(get(&mut c, 1).is_some());
+        c.insert(3, hidden(3, 100));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions, 1);
+        assert!(get(&mut c, 1).is_some(), "recently-used entry must survive");
+        assert!(get(&mut c, 3).is_some());
+        assert!(get(&mut c, 2).is_none(), "LRU entry must be evicted");
+        assert!(c.bytes() <= 900);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let mut c = HiddenCache::new(0);
+        c.insert(1, hidden(1, 4));
+        assert!(!c.enabled());
+        assert_eq!(c.len(), 0);
+        assert!(get(&mut c, 1).is_none());
+    }
+
+    #[test]
+    fn oversize_entry_skipped() {
+        let mut c = HiddenCache::new(100);
+        c.insert(1, hidden(1, 100)); // 400 bytes > 100 budget
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.oversize_skips, 1);
+    }
+
+    #[test]
+    fn key_collision_is_a_counted_miss_not_a_wrong_hit() {
+        let mut c = HiddenCache::new(1 << 20);
+        c.insert(42, hidden(42, 8)); // stored with tokens [42]
+        // same key, different prompt: must NOT return the stored entry
+        assert!(c.get(42, &[9, 9, 9]).is_none());
+        assert_eq!(c.collisions, 1);
+        assert_eq!(c.misses, 1);
+        // the genuine prompt still hits
+        assert!(c.get(42, &[42]).is_some());
+        assert_eq!(c.hits, 1);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leak() {
+        let mut c = HiddenCache::new(10_000);
+        c.insert(1, hidden(1, 100));
+        c.insert(1, hidden(1, 200));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 804);
+    }
+}

@@ -1,0 +1,484 @@
+//! Serving engines: how backbone and side-network forwards are computed.
+//!
+//! Two backends implement [`Engine`]:
+//!
+//! * [`SyntheticEngine`] — a deterministic host-side reference of the QST
+//!   inference split: a frozen backbone (embedding + L residual tanh
+//!   layers) whose per-layer hidden states feed per-task ladder side
+//!   networks at width d/r.  The backbone forward is O(L·S·d²) while a
+//!   side forward is O(L·S·d·(d/r)) — the same asymmetry as the paper's
+//!   models — so this is the backend that makes the hidden-state cache's
+//!   benefit measurable without GPUs or artifacts.  Same-row outputs are
+//!   bit-identical regardless of batch composition or cache state.
+//! * [`ExecutorEngine`] — dispatches micro-batches through
+//!   [`crate::runtime::Executor`] over per-task AOT eval artifacts, with
+//!   the trainable and frozen tensors uploaded once and kept
+//!   device-resident.  Today's artifacts are monolithic (tokens → logits),
+//!   so this backend reports `cacheable() == false` and the server bypasses
+//!   the hidden-state cache for it; when `aot.py` grows a split backbone
+//!   artifact the cache applies unchanged.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::query_pos;
+use super::registry::SideNetwork;
+use super::Hidden;
+use crate::runtime::{Executor, Role, Runtime};
+use crate::tensor::{DType, HostTensor};
+use crate::util::rng::Rng;
+
+/// A serving backend: a frozen shared backbone plus per-task side networks.
+pub trait Engine {
+    /// Fixed sequence length rows are padded to.
+    fn seq_len(&self) -> usize;
+    /// Stable identity of the frozen backbone (part of every cache key).
+    fn backbone_id(&self) -> u64;
+    /// Whether the backbone forward is separable (and hence cacheable).
+    fn cacheable(&self) -> bool {
+        true
+    }
+    /// Frozen forward for padded rows; one hidden-state bundle per row.
+    fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>>;
+    /// Side-network forward for one task: per-row logits (vocab-sized).
+    fn side(
+        &mut self,
+        net: &SideNetwork,
+        hiddens: &[Rc<Hidden>],
+        rows: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>>;
+}
+
+fn seeded_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Vec<f32> {
+    (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Per-task side weights derived deterministically from the task seed.
+struct SideWeights {
+    dg: usize,
+    /// [d, dg] shared downsampler
+    down: Vec<f32>,
+    /// layers × [dg, dg] ladder mixers
+    mix: Vec<Vec<f32>>,
+    /// [dg, vocab] output head
+    head: Vec<f32>,
+}
+
+/// Deterministic host-side QST serving reference (see module doc).
+pub struct SyntheticEngine {
+    pub d: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// side-network reduction factor (paper default 16; must divide d)
+    pub r: usize,
+    embed: Vec<f32>,
+    /// layers × [d, d]
+    w: Vec<Vec<f32>>,
+    side_cache: HashMap<u64, Rc<SideWeights>>,
+    id: u64,
+    /// rows that actually ran the frozen forward (cache-skipped rows don't)
+    pub backbone_rows: u64,
+}
+
+impl SyntheticEngine {
+    pub fn new(seed: u64, d: usize, layers: usize, vocab: usize, seq: usize, r: usize) -> Self {
+        assert!(d % r == 0 && d / r >= 2, "reduction {r} must divide d={d} with width >= 2");
+        assert!(layers >= 1 && vocab >= 2 && seq >= 1);
+        let mut rng = Rng::new(seed ^ 0x5157_5345_5256_4531); // "QWSE RVE1"-ish tag
+        let scale = 1.0 / (d as f64).sqrt();
+        let embed = seeded_matrix(&mut rng, vocab, d, scale);
+        let w = (0..layers).map(|_| seeded_matrix(&mut rng, d, d, scale)).collect();
+        SyntheticEngine {
+            d,
+            layers,
+            vocab,
+            seq,
+            r,
+            embed,
+            w,
+            side_cache: HashMap::new(),
+            id: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xB5,
+            backbone_rows: 0,
+        }
+    }
+
+    /// Vocab of the [`SyntheticEngine::small`] configuration.
+    pub const SMALL_VOCAB: usize = 256;
+
+    /// Small default used by tests and `bench-serve`: heavy backbone
+    /// (d=96, 6 layers) vs light side nets (width 8).
+    pub fn small(seed: u64, seq: usize) -> Self {
+        SyntheticEngine::new(seed, 96, 6, Self::SMALL_VOCAB, seq, 12)
+    }
+
+    /// Bytes of one row's hidden-state bundle (for cache sizing): the
+    /// per-layer states plus the verification copy of the prompt tokens.
+    pub fn hidden_bytes(&self) -> usize {
+        ((self.layers + 1) * self.seq * self.d + self.seq) * 4
+    }
+
+    fn side_weights(&mut self, net: &SideNetwork) -> Rc<SideWeights> {
+        let (d, layers, vocab, r) = (self.d, self.layers, self.vocab, self.r);
+        self.side_cache
+            .entry(net.seed)
+            .or_insert_with(|| {
+                let dg = d / r;
+                let mut rng = Rng::new(net.seed ^ 0x5349_4445); // "SIDE"
+                let down = seeded_matrix(&mut rng, d, dg, 1.0 / (d as f64).sqrt());
+                let mix = (0..layers)
+                    .map(|_| seeded_matrix(&mut rng, dg, dg, 1.0 / (dg as f64).sqrt()))
+                    .collect();
+                let head = seeded_matrix(&mut rng, dg, vocab, 1.0 / (dg as f64).sqrt());
+                Rc::new(SideWeights { dg, down, mix, head })
+            })
+            .clone()
+    }
+}
+
+impl Engine for SyntheticEngine {
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn backbone_id(&self) -> u64 {
+        self.id
+    }
+
+    fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>> {
+        let (d, seq) = (self.d, self.seq);
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows {
+            if row.len() != seq {
+                bail!("backbone row must be padded to {seq} (got {})", row.len());
+            }
+            let mut data = Vec::with_capacity((self.layers + 1) * seq * d);
+            // h0 = embedding lookup
+            let mut h = vec![0f32; seq * d];
+            for (t, &tok) in row.iter().enumerate() {
+                let tok = (tok.max(0) as usize) % self.vocab;
+                h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+            }
+            data.extend_from_slice(&h);
+            // residual tanh layers: h' = tanh(h·W + h)
+            for wl in &self.w {
+                let mut next = vec![0f32; seq * d];
+                for t in 0..seq {
+                    let hrow = &h[t * d..(t + 1) * d];
+                    let nrow = &mut next[t * d..(t + 1) * d];
+                    for (j, &hj) in hrow.iter().enumerate() {
+                        if hj == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wl[j * d..(j + 1) * d];
+                        for o in 0..d {
+                            nrow[o] += hj * wrow[o];
+                        }
+                    }
+                    for (o, n) in nrow.iter_mut().enumerate() {
+                        *n = (*n + hrow[o]).tanh();
+                    }
+                }
+                data.extend_from_slice(&next);
+                h = next;
+            }
+            self.backbone_rows += 1;
+            out.push(Hidden {
+                key: super::cache::prompt_key(self.id, row),
+                tokens: row.clone(),
+                data,
+            });
+        }
+        Ok(out)
+    }
+
+    fn side(
+        &mut self,
+        net: &SideNetwork,
+        hiddens: &[Rc<Hidden>],
+        rows: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if hiddens.len() != rows.len() {
+            bail!("side: {} hiddens for {} rows", hiddens.len(), rows.len());
+        }
+        let sw = self.side_weights(net);
+        let (d, seq, layers, vocab) = (self.d, self.seq, self.layers, self.vocab);
+        let dg = sw.dg;
+        let per_layer = seq * d;
+        let mut out = Vec::with_capacity(rows.len());
+        for (hidden, row) in hiddens.iter().zip(rows) {
+            if hidden.data.len() != (layers + 1) * per_layer {
+                bail!(
+                    "hidden bundle has {} floats, expected {} — wrong backbone?",
+                    hidden.data.len(),
+                    (layers + 1) * per_layer
+                );
+            }
+            // ladder: z = tanh(z·mix + down(h_l)), seeded by z0 = down(h0)
+            let pos = query_pos(row);
+            let down_at = |l: usize, z: &mut [f32]| {
+                let h = &hidden.data[l * per_layer + pos * d..l * per_layer + (pos + 1) * d];
+                for (j, &hj) in h.iter().enumerate() {
+                    if hj == 0.0 {
+                        continue;
+                    }
+                    let drow = &sw.down[j * dg..(j + 1) * dg];
+                    for g in 0..dg {
+                        z[g] += hj * drow[g];
+                    }
+                }
+            };
+            let mut z = vec![0f32; dg];
+            down_at(0, &mut z);
+            for l in 1..=layers {
+                let mut next = vec![0f32; dg];
+                down_at(l, &mut next);
+                let mixl = &sw.mix[l - 1];
+                for (g, nz) in next.iter_mut().enumerate() {
+                    let mut acc = *nz;
+                    for (j, &zj) in z.iter().enumerate() {
+                        acc += zj * mixl[j * dg + g];
+                    }
+                    *nz = acc.tanh();
+                }
+                z = next;
+            }
+            let mut logits = vec![0f32; vocab];
+            for (g, &zg) in z.iter().enumerate() {
+                let hrow = &sw.head[g * vocab..(g + 1) * vocab];
+                for v in 0..vocab {
+                    logits[v] += zg * hrow[v];
+                }
+            }
+            out.push(logits);
+        }
+        Ok(out)
+    }
+}
+
+/// One bound task on the executor backend.
+struct TaskExec {
+    exec: Executor,
+    logits_out: usize,
+    batch: usize,
+}
+
+/// Artifact-backed engine: per-task eval graphs through [`Executor`] with
+/// device-resident trainable + frozen state (uploaded once per task).
+pub struct ExecutorEngine {
+    pub rt: Runtime,
+    seq: usize,
+    tasks: HashMap<String, TaskExec>,
+    id: u64,
+}
+
+impl ExecutorEngine {
+    pub fn new(rt: Runtime) -> Self {
+        ExecutorEngine { rt, seq: 0, tasks: HashMap::new(), id: 0 }
+    }
+
+    /// Bind a task to an eval artifact, uploading its trainable state and
+    /// the shared frozen backbone once.  All bound artifacts must agree on
+    /// sequence length (they share the prompt shape).
+    pub fn bind_task(
+        &mut self,
+        task: &str,
+        artifact: &str,
+        trainable: &HashMap<String, HostTensor>,
+        frozen: &HashMap<String, HostTensor>,
+    ) -> Result<()> {
+        let art = self.rt.load(artifact)?;
+        let (b, s) = art
+            .manifest
+            .batch
+            .with_context(|| format!("artifact {artifact} has no batch dims"))?;
+        if self.seq == 0 {
+            self.seq = s;
+        } else if self.seq != s {
+            bail!("artifact {artifact} has seq {s}, server is bound to {}", self.seq);
+        }
+        let logits_out = art.manifest.output_index(Role::Logits).unwrap_or(0);
+        let mut exec = Executor::new(art.clone());
+        exec.set_many(&self.rt, trainable)?;
+        exec.set_many(&self.rt, frozen)?;
+        // after binding, only data slots may remain unset
+        for slot in &art.manifest.inputs {
+            if slot.role != Role::Data && exec.missing().contains(&slot.name.as_str()) {
+                bail!("artifact {artifact}: input '{}' ({:?}) not covered by trainable/frozen maps", slot.name, slot.role);
+            }
+        }
+        // fold the artifact identity into the backbone id (cache hygiene,
+        // even though this backend is not cacheable today)
+        for byte in artifact.bytes() {
+            self.id = (self.id ^ byte as u64).wrapping_mul(0x100000001b3);
+        }
+        self.tasks.insert(task.to_string(), TaskExec { exec, logits_out, batch: b });
+        Ok(())
+    }
+}
+
+impl Engine for ExecutorEngine {
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn backbone_id(&self) -> u64 {
+        self.id
+    }
+
+    fn cacheable(&self) -> bool {
+        false // monolithic artifacts recompute the frozen forward internally
+    }
+
+    fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>> {
+        // hidden states live inside the fused graph; emit empty markers
+        Ok(rows
+            .iter()
+            .map(|row| Hidden {
+                key: super::cache::prompt_key(self.id, row),
+                tokens: row.clone(),
+                data: vec![],
+            })
+            .collect())
+    }
+
+    fn side(
+        &mut self,
+        net: &SideNetwork,
+        _hiddens: &[Rc<Hidden>],
+        rows: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let te = self
+            .tasks
+            .get_mut(&net.task)
+            .with_context(|| format!("task '{}' not bound to an artifact", net.task))?;
+        let seq = self.seq;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(te.batch) {
+            // pad the ragged tail to the artifact batch by repeating the last row
+            let mut padded: Vec<&Vec<i32>> = chunk.iter().collect();
+            while padded.len() < te.batch {
+                padded.push(chunk.last().expect("non-empty chunk"));
+            }
+            let b = te.batch;
+            let mut tokens = Vec::with_capacity(b * seq);
+            let mut positions = Vec::with_capacity(b);
+            for row in &padded {
+                if row.len() != seq {
+                    bail!("row must be padded to {seq}");
+                }
+                tokens.extend_from_slice(row);
+                positions.push(query_pos(row) as i32);
+            }
+            // fill data slots by shape: [B,S] i32 -> tokens, [B] i32 -> query
+            // positions, anything else -> zeros (loss-only aux inputs)
+            let mut filled_tokens = false;
+            let mut filled_pos = false;
+            let specs: Vec<(usize, DType, Vec<usize>)> = te
+                .exec
+                .artifact
+                .manifest
+                .inputs
+                .iter()
+                .filter(|sl| sl.role == Role::Data)
+                .map(|sl| (sl.index, sl.dtype, sl.shape.clone()))
+                .collect();
+            for (idx, dtype, shape) in specs {
+                let t = if !filled_tokens && dtype == DType::I32 && shape == [b, seq] {
+                    filled_tokens = true;
+                    HostTensor::from_i32(&[b, seq], &tokens)
+                } else if !filled_pos && dtype == DType::I32 && shape == [b] {
+                    filled_pos = true;
+                    HostTensor::from_i32(&[b], &positions)
+                } else {
+                    HostTensor::zeros(dtype, &shape)
+                };
+                te.exec.set(&self.rt, idx, &t)?;
+            }
+            if !filled_tokens {
+                bail!("artifact for task '{}' has no [B,S] i32 data slot for tokens", net.task);
+            }
+            let outputs = te.exec.step(&self.rt)?;
+            let logits = outputs
+                .get(te.logits_out)
+                .with_context(|| format!("missing logits output {}", te.logits_out))?;
+            if logits.shape.len() != 2 || logits.shape[0] != b {
+                bail!("logits shape {:?} (expected [{}, V])", logits.shape, b);
+            }
+            let v = logits.shape[1];
+            let flat = logits.as_f32()?;
+            for i in 0..chunk.len() {
+                out.push(flat[i * v..(i + 1) * v].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_net(task: &str, seed: u64) -> SideNetwork {
+        // mirror Registry::register_synthetic without needing a registry
+        let mut reg = super::super::registry::Registry::new(1 << 20);
+        reg.register_synthetic(task, seed, 100).unwrap();
+        (*reg.get(task).unwrap()).clone()
+    }
+
+    #[test]
+    fn backbone_is_deterministic_and_batch_invariant() {
+        let mut e = SyntheticEngine::small(1, 16);
+        let a = vec![3i32, 4, 5, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let b = vec![9i32, 8, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let solo = e.backbone(std::slice::from_ref(&a)).unwrap();
+        let both = e.backbone(&[b.clone(), a.clone()]).unwrap();
+        assert_eq!(solo[0].data, both[1].data, "same row must give same hiddens");
+        assert_ne!(both[0].data, both[1].data, "different rows must differ");
+    }
+
+    #[test]
+    fn side_outputs_differ_per_task_but_share_backbone() {
+        let mut e = SyntheticEngine::small(1, 16);
+        let row = vec![7i32; 16];
+        let h: Vec<Rc<Hidden>> =
+            e.backbone(std::slice::from_ref(&row)).unwrap().into_iter().map(Rc::new).collect();
+        let n1 = synth_net("t1", 11);
+        let n2 = synth_net("t2", 22);
+        let rows = vec![row];
+        let l1 = e.side(&n1, &h, &rows).unwrap();
+        let l1b = e.side(&n1, &h, &rows).unwrap();
+        let l2 = e.side(&n2, &h, &rows).unwrap();
+        assert_eq!(l1[0].len(), e.vocab);
+        assert_eq!(l1[0], l1b[0], "side forward must be deterministic");
+        assert_ne!(l1[0], l2[0], "different tasks must give different logits");
+        assert!(l1[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn side_cost_is_much_smaller_than_backbone_cost() {
+        // the premise of the hidden-state cache: frozen forward dominates.
+        // compare arithmetic volume rather than wall time (robust in CI).
+        let e = SyntheticEngine::small(0, 64);
+        let backbone_flops = e.layers * e.seq * e.d * e.d;
+        let dg = e.d / e.r;
+        let side_flops = (e.layers + 1) * e.d * dg + e.layers * dg * dg + dg * e.vocab;
+        assert!(backbone_flops > 10 * side_flops, "{backbone_flops} vs {side_flops}");
+    }
+
+    #[test]
+    fn rejects_unpadded_rows() {
+        let mut e = SyntheticEngine::small(1, 16);
+        assert!(e.backbone(&[vec![1, 2, 3]]).is_err());
+    }
+
+    #[test]
+    fn side_rejects_foreign_hiddens() {
+        let mut e = SyntheticEngine::small(1, 8);
+        let net = synth_net("t", 5);
+        let bogus = vec![Rc::new(Hidden { key: 1, tokens: vec![0; 8], data: vec![0.0; 3] })];
+        assert!(e.side(&net, &bogus, &[vec![0i32; 8]]).is_err());
+    }
+}

@@ -1,0 +1,427 @@
+//! Multi-task inference serving with a shared-backbone hidden-state cache.
+//!
+//! # Design
+//!
+//! QST's defining property carries from training straight into serving: the
+//! 4-bit backbone is frozen and *shared* by every finetuned task — only a
+//! tiny side network differs per task.  At inference time that means the
+//! expensive part of a forward pass (the frozen backbone) depends only on
+//! the prompt, not on the task, so its hidden states can be computed once
+//! per distinct prompt, cached, and fanned out to any number of side
+//! networks:
+//!
+//! ```text
+//!   request(task, tokens)
+//!        │ submit
+//!        ▼
+//!   [batcher]  per-task micro-batches, padded to the artifact shapes
+//!        │ drain
+//!        ▼
+//!   [cache]    hidden-state lookup by hash(backbone, tokens)
+//!        │ miss                                  │ hit
+//!        ▼                                       │
+//!   [engine.backbone]  frozen forward (heavy) ───┘
+//!        ▼
+//!   [engine.side]      per-task ladder forward (light, uses registry)
+//!        ▼
+//!   response(logits) + [stats]
+//! ```
+//!
+//! * [`cache`] — LRU, byte-budgeted hidden-state cache with hit/miss
+//!   accounting.  Repeated or shared prompts (classification fan-out,
+//!   retries, A/B-ing two side networks over one prompt) skip the frozen
+//!   forward entirely.
+//! * [`registry`] — hot-swappable side-network residency (load via
+//!   `coordinator::checkpoint`, LRU-evict under a byte budget, reload on
+//!   demand), so one server can advertise more tasks than fit in memory.
+//! * [`batcher`] — multi-task FIFO queue forming per-task micro-batches.
+//! * [`engine`] — pluggable backends: a deterministic host-side reference
+//!   of the QST split (used by tests and `bench-serve`) and an
+//!   [`crate::runtime::Executor`]-backed artifact path with device-resident
+//!   per-task state.
+//! * [`stats`] — throughput, batch shape, and p50/p95 latency telemetry.
+//! * [`workload`] — synthetic repeated-prompt workloads + the
+//!   `bench-serve` runner emitting `BENCH_serve.json`.
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod registry;
+pub mod stats;
+pub mod workload;
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+pub use batcher::{MicroBatch, RequestQueue};
+pub use cache::HiddenCache;
+pub use engine::{Engine, ExecutorEngine, SyntheticEngine};
+pub use registry::{Registry, SideNetwork};
+pub use stats::ServeStats;
+
+/// One prompt's frozen-backbone hidden states (engine-defined layout).
+#[derive(Clone, Debug)]
+pub struct Hidden {
+    /// cache key this bundle was computed under
+    pub key: u64,
+    /// the padded prompt itself — verified on every cache hit so a 64-bit
+    /// key collision can never serve another prompt's hidden states
+    pub tokens: Vec<i32>,
+    pub data: Vec<f32>,
+}
+
+impl Hidden {
+    /// Payload bytes counted against the cache budget.
+    pub fn bytes(&self) -> usize {
+        (self.data.len() + self.tokens.len()) * 4
+    }
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// hidden-state cache budget; 0 disables the cache
+    pub cache_bytes: usize,
+    /// side-network residency budget
+    pub registry_bytes: usize,
+    /// micro-batch size cap
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { cache_bytes: 64 << 20, registry_bytes: 256 << 20, max_batch: 8 }
+    }
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub task: String,
+    /// vocab-sized next-token logits at the prompt's query position
+    pub logits: Vec<f32>,
+    pub cache_hit: bool,
+}
+
+impl Response {
+    /// Argmax token and its logit.
+    pub fn top1(&self) -> (usize, f32) {
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (i, &v) in self.logits.iter().enumerate() {
+            if v > bestv {
+                bestv = v;
+                best = i;
+            }
+        }
+        (best, bestv)
+    }
+}
+
+/// The in-process multi-task inference server: queue → cache → backbone →
+/// side network, with residency and telemetry.  `submit` enqueues;
+/// `drain` processes everything pending and returns responses.
+pub struct Server<E: Engine> {
+    pub engine: E,
+    pub registry: Registry,
+    pub cache: HiddenCache,
+    pub stats: ServeStats,
+    queue: RequestQueue,
+    max_batch: usize,
+}
+
+impl<E: Engine> Server<E> {
+    pub fn new(engine: E, cfg: ServeConfig) -> Self {
+        Server {
+            engine,
+            registry: Registry::new(cfg.registry_bytes),
+            cache: HiddenCache::new(cfg.cache_bytes),
+            stats: ServeStats::new(),
+            queue: RequestQueue::new(),
+            max_batch: cfg.max_batch.max(1),
+        }
+    }
+
+    /// Enqueue a request; rejects unknown tasks and over-length prompts
+    /// up front so errors surface at submit time, not mid-batch.
+    pub fn submit(&mut self, task: &str, tokens: &[i32]) -> Result<u64> {
+        if !self.registry.contains(task) {
+            bail!("unknown task '{task}' (registered: {:?})", self.registry.known_tasks());
+        }
+        if tokens.len() > self.engine.seq_len() {
+            bail!(
+                "prompt of {} tokens exceeds the serving sequence length {}",
+                tokens.len(),
+                self.engine.seq_len()
+            );
+        }
+        Ok(self.queue.push(task, tokens.to_vec()))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Process every pending request; responses come back in completion
+    /// order (batched per task), each tagged with its request id.
+    ///
+    /// A failing micro-batch (side network unloadable, engine error) drops
+    /// only its own requests — counted in `stats.dropped` and logged — and
+    /// the drain continues; already-computed responses are never discarded.
+    /// `Err` is returned only when nothing at all could be served.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut responses = Vec::with_capacity(self.queue.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        while let Some(mb) = self.queue.next_batch(self.max_batch) {
+            let n = mb.requests.len();
+            let task = mb.task.clone();
+            if let Err(e) = self.process_batch(mb, &mut responses) {
+                self.stats.dropped += n as u64;
+                eprintln!("serve: dropping {n} request(s) for task '{task}': {e:#}");
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) if responses.is_empty() => Err(e),
+            _ => Ok(responses),
+        }
+    }
+
+    /// One micro-batch: cache lookup → backbone for the distinct misses →
+    /// side network → responses.
+    fn process_batch(&mut self, mb: MicroBatch, responses: &mut Vec<Response>) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let seq = self.engine.seq_len();
+        let use_cache = self.engine.cacheable() && self.cache.enabled();
+        let net = self.registry.get(&mb.task)?;
+        let rows: Vec<Vec<i32>> = mb
+            .requests
+            .iter()
+            .map(|r| batcher::pad_row(&r.tokens, seq))
+            .collect::<Result<_>>()?;
+        // resolve hidden states: cache hits, then one backbone dispatch
+        // covering each *distinct* missing prompt exactly once
+        let bid = self.engine.backbone_id();
+        let mut hiddens: Vec<Option<Rc<Hidden>>> = vec![None; rows.len()];
+        let mut hits: Vec<bool> = vec![false; rows.len()];
+        let mut miss_rows: Vec<Vec<i32>> = Vec::new();
+        let mut miss_keys: Vec<u64> = Vec::new();
+        let mut owners: Vec<Vec<usize>> = Vec::new(); // miss index -> row indices
+        for (i, row) in rows.iter().enumerate() {
+            let key = cache::prompt_key(bid, row);
+            if use_cache {
+                if let Some(h) = self.cache.get(key, row) {
+                    hiddens[i] = Some(h);
+                    hits[i] = true;
+                    continue;
+                }
+            }
+            match miss_keys.iter().position(|&k| k == key) {
+                Some(m) => owners[m].push(i), // duplicate within this batch
+                None => {
+                    miss_keys.push(key);
+                    miss_rows.push(row.clone());
+                    owners.push(vec![i]);
+                }
+            }
+        }
+        if !miss_rows.is_empty() {
+            let fresh = self.engine.backbone(&miss_rows)?;
+            if fresh.len() != miss_rows.len() {
+                bail!("backbone returned {} bundles for {} rows", fresh.len(), miss_rows.len());
+            }
+            for ((h, key), row_idxs) in fresh.into_iter().zip(&miss_keys).zip(&owners) {
+                let h = Rc::new(h);
+                if use_cache {
+                    self.cache.insert(*key, h.clone());
+                }
+                for &i in row_idxs {
+                    hiddens[i] = Some(h.clone());
+                }
+            }
+        }
+        let hiddens: Vec<Rc<Hidden>> =
+            hiddens.into_iter().map(|h| h.expect("all rows resolved")).collect();
+        let logits = self.engine.side(&net, &hiddens, &rows)?;
+        if logits.len() != rows.len() {
+            bail!("side returned {} rows for {}", logits.len(), rows.len());
+        }
+        let mut latencies = Vec::with_capacity(mb.requests.len());
+        let mut tok_count = 0usize;
+        for ((req, lg), hit) in mb.requests.into_iter().zip(logits).zip(hits) {
+            latencies.push(req.enqueued.elapsed().as_secs_f64());
+            tok_count += req.tokens.len();
+            responses.push(Response { id: req.id, task: req.task, logits: lg, cache_hit: hit });
+        }
+        self.stats.record_batch(latencies.len(), tok_count, t0.elapsed().as_secs_f64(), &latencies);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(cache_bytes: usize) -> Server<SyntheticEngine> {
+        let engine = SyntheticEngine::small(42, 16);
+        let mut s = Server::new(
+            engine,
+            ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4 },
+        );
+        s.registry.register_synthetic("sst2", 100, 1000).unwrap();
+        s.registry.register_synthetic("mnli", 200, 1000).unwrap();
+        s
+    }
+
+    #[test]
+    fn submit_validates_task_and_length() {
+        let mut s = server(1 << 20);
+        assert!(s.submit("nope", &[1, 2]).is_err());
+        assert!(s.submit("sst2", &vec![1; 17]).is_err());
+        assert!(s.submit("sst2", &[1, 2]).is_ok());
+        assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn repeated_prompts_hit_the_cache_and_skip_the_backbone() {
+        let mut s = server(16 << 20);
+        let prompt = [3i32, 7, 11];
+        for _ in 0..3 {
+            s.submit("sst2", &prompt).unwrap();
+        }
+        let r1 = s.drain().unwrap();
+        assert_eq!(r1.len(), 3);
+        // all three identical prompts in one batch: one backbone row total
+        assert_eq!(s.engine.backbone_rows, 1);
+        // next wave hits the cache outright
+        s.submit("sst2", &prompt).unwrap();
+        s.submit("mnli", &prompt).unwrap(); // different task, same backbone!
+        let r2 = s.drain().unwrap();
+        assert_eq!(s.engine.backbone_rows, 1, "cache must serve both tasks");
+        assert!(r2.iter().all(|r| r.cache_hit));
+        assert!(s.cache.hits >= 2);
+        // same prompt, different tasks -> different logits
+        assert_ne!(r2[0].logits, r2[1].logits);
+    }
+
+    #[test]
+    fn disabled_cache_recomputes_but_matches() {
+        let prompt = [5i32, 9];
+        let run = |cache_bytes: usize| {
+            let mut s = server(cache_bytes);
+            for _ in 0..2 {
+                s.submit("sst2", &prompt).unwrap();
+            }
+            let mut r = s.drain().unwrap();
+            s.submit("sst2", &prompt).unwrap();
+            r.extend(s.drain().unwrap());
+            (r, s.engine.backbone_rows)
+        };
+        let (with_cache, rows_cached) = run(16 << 20);
+        let (without, rows_uncached) = run(0);
+        assert!(rows_uncached > rows_cached);
+        for (a, b) in with_cache.iter().zip(&without) {
+            assert_eq!(a.logits, b.logits, "cache must not change results");
+        }
+        assert!(without.iter().all(|r| !r.cache_hit));
+    }
+
+    #[test]
+    fn batched_equals_unbatched() {
+        // the server (batching + dedupe + cache) must be a pure optimization
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4], vec![1, 2, 3], vec![9, 9]];
+        let mut s = server(16 << 20);
+        let mut ids = vec![];
+        for p in &prompts {
+            ids.push(s.submit("sst2", p).unwrap());
+        }
+        let mut got = s.drain().unwrap();
+        got.sort_by_key(|r| r.id);
+
+        // reference: fresh engine, one request at a time, no cache
+        let mut eng = SyntheticEngine::small(42, 16);
+        let net = (*s.registry.get("sst2").unwrap()).clone();
+        for (resp, p) in got.iter().zip(&prompts) {
+            let row = batcher::pad_row(p, 16).unwrap();
+            let h: Vec<Rc<Hidden>> =
+                eng.backbone(std::slice::from_ref(&row)).unwrap().into_iter().map(Rc::new).collect();
+            let want = eng.side(&net, &h, std::slice::from_ref(&row)).unwrap();
+            assert_eq!(resp.logits, want[0], "batched path must match unbatched");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = server(1 << 20);
+        for i in 0..10 {
+            s.submit(if i % 2 == 0 { "sst2" } else { "mnli" }, &[i]).unwrap();
+        }
+        s.drain().unwrap();
+        assert_eq!(s.stats.requests, 10);
+        assert!(s.stats.batches >= 2, "two tasks force at least two micro-batches");
+        assert!(s.stats.p95_secs() >= s.stats.p50_secs());
+        assert_eq!(s.pending(), 0);
+    }
+
+    /// Engine that refuses prompts containing the token 666 — for testing
+    /// partial-failure semantics of drain().
+    struct FlakyEngine(SyntheticEngine);
+
+    impl Engine for FlakyEngine {
+        fn seq_len(&self) -> usize {
+            self.0.seq_len()
+        }
+        fn backbone_id(&self) -> u64 {
+            self.0.backbone_id()
+        }
+        fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>> {
+            if rows.iter().any(|r| r.contains(&666)) {
+                bail!("simulated backbone failure");
+            }
+            self.0.backbone(rows)
+        }
+        fn side(
+            &mut self,
+            net: &SideNetwork,
+            hiddens: &[Rc<Hidden>],
+            rows: &[Vec<i32>],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.0.side(net, hiddens, rows)
+        }
+    }
+
+    #[test]
+    fn failing_batch_drops_only_its_requests() {
+        let mut s = Server::new(
+            FlakyEngine(SyntheticEngine::small(42, 16)),
+            ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 20, max_batch: 4 },
+        );
+        s.registry.register_synthetic("good", 1, 100).unwrap();
+        s.registry.register_synthetic("bad", 2, 100).unwrap();
+        let good_id = s.submit("good", &[1, 2, 3]).unwrap();
+        s.submit("bad", &[666]).unwrap();
+        let r = s.drain().unwrap();
+        assert_eq!(r.len(), 1, "healthy task must still be served");
+        assert_eq!(r[0].id, good_id);
+        assert_eq!(s.stats.dropped, 1);
+        assert_eq!(s.pending(), 0, "failed requests are dropped, not stuck");
+        // when *nothing* can be served, drain surfaces the error
+        s.submit("bad", &[666, 667]).unwrap();
+        assert!(s.drain().is_err());
+        assert_eq!(s.stats.dropped, 2);
+    }
+
+    #[test]
+    fn top1_picks_argmax() {
+        let r = Response { id: 0, task: "t".into(), logits: vec![0.1, 0.9, -3.0], cache_hit: false };
+        assert_eq!(r.top1().0, 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Hot-swappable side-network registry.
+//!
+//! One quantized backbone is shared by every task; what differs per task is
+//! a tiny side network (≤1% of backbone params).  The registry keeps side
+//! networks resident under a byte budget with LRU eviction, remembers where
+//! each one came from (a `coordinator::checkpoint` file or a synthetic
+//! seed), and transparently reloads evicted entries on demand — so a server
+//! can advertise far more tasks than fit in memory at once.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Checkpoint;
+use crate::costmodel::paperdims::PaperModel;
+use crate::tensor::HostTensor;
+
+/// A loaded side network: the per-task trainable state bound to the shared
+/// backbone.  `seed` is a stable fingerprint of the weights (used by the
+/// synthetic engine to derive deterministic per-task functions; the
+/// executor engine uses `tensors` directly).
+#[derive(Clone, Debug)]
+pub struct SideNetwork {
+    pub task: String,
+    pub seed: u64,
+    pub tensors: HashMap<String, HostTensor>,
+    bytes: usize,
+}
+
+impl SideNetwork {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// Where a side network can be (re)loaded from after eviction.
+#[derive(Clone, Debug)]
+enum Source {
+    Checkpoint(PathBuf),
+    Synthetic { seed: u64, bytes: usize },
+}
+
+/// LRU, byte-budgeted residency manager for side networks.
+pub struct Registry {
+    budget: usize,
+    resident: HashMap<String, (Rc<SideNetwork>, u64)>,
+    /// tick -> task, oldest first
+    lru: BTreeMap<u64, String>,
+    sources: HashMap<String, Source>,
+    bytes: usize,
+    tick: u64,
+    /// cold loads from a source (initial registration + post-eviction reloads)
+    pub loads: u64,
+    pub evictions: u64,
+}
+
+/// Fingerprint a checkpoint's tensors (name-sorted FNV-1a over names+bytes).
+fn fingerprint(tensors: &HashMap<String, HostTensor>) -> u64 {
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut names: Vec<&String> = tensors.keys().collect();
+    names.sort();
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |bytes: &[u8], h: &mut u64| {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for name in names {
+        mix(name.as_bytes(), &mut h);
+        mix(&tensors[name].data, &mut h);
+    }
+    h
+}
+
+impl Registry {
+    pub fn new(budget_bytes: usize) -> Self {
+        Registry {
+            budget: budget_bytes,
+            resident: HashMap::new(),
+            lru: BTreeMap::new(),
+            sources: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            loads: 0,
+            evictions: 0,
+        }
+    }
+
+    /// A sensible residency budget for `n_tasks` QST side networks of a
+    /// paper-scale model: the cost model's 16-bit side-network footprint
+    /// plus 25% slack for per-task bookkeeping.
+    pub fn suggested_budget(m: &PaperModel, n_tasks: usize) -> usize {
+        let per_task = crate::costmodel::memory::side_network_bytes(m, 16) * 1.25;
+        (per_task as usize).max(1) * n_tasks.max(1)
+    }
+
+    /// Register a task backed by a side checkpoint on disk and load it.
+    pub fn register_checkpoint(&mut self, task: &str, path: &std::path::Path) -> Result<()> {
+        self.sources.insert(task.to_string(), Source::Checkpoint(path.to_path_buf()));
+        self.load(task)?;
+        Ok(())
+    }
+
+    /// Register a synthetic task (no tensors; the engine derives weights
+    /// from `seed`).  `approx_bytes` is what it counts against the budget.
+    pub fn register_synthetic(&mut self, task: &str, seed: u64, approx_bytes: usize) -> Result<()> {
+        self.sources.insert(task.to_string(), Source::Synthetic { seed, bytes: approx_bytes });
+        self.load(task)?;
+        Ok(())
+    }
+
+    /// Is this task known (resident or reloadable)?
+    pub fn contains(&self, task: &str) -> bool {
+        self.sources.contains_key(task)
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn known_tasks(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.sources.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Resident tasks in LRU order (oldest first) — for tests/introspection.
+    pub fn resident_lru_order(&self) -> Vec<String> {
+        self.lru.values().cloned().collect()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Fetch a task's side network, marking it most-recently-used.  Evicted
+    /// entries are reloaded from their source (counted in `loads`).
+    pub fn get(&mut self, task: &str) -> Result<Rc<SideNetwork>> {
+        if !self.resident.contains_key(task) {
+            self.load(task)?;
+        }
+        let (net, tick) = self.resident.get_mut(task).expect("loaded above");
+        self.lru.remove(tick);
+        self.tick += 1;
+        *tick = self.tick;
+        self.lru.insert(self.tick, task.to_string());
+        Ok(net.clone())
+    }
+
+    fn load(&mut self, task: &str) -> Result<()> {
+        let source = self
+            .sources
+            .get(task)
+            .with_context(|| format!("task '{task}' is not registered"))?
+            .clone();
+        let net = match source {
+            Source::Checkpoint(path) => {
+                let ckpt = Checkpoint::load(&path)
+                    .with_context(|| format!("loading side network for '{task}'"))?;
+                if ckpt.tensors.is_empty() {
+                    bail!("side checkpoint {} has no tensors", path.display());
+                }
+                let bytes = ckpt.total_bytes();
+                SideNetwork { task: task.to_string(), seed: fingerprint(&ckpt.tensors), tensors: ckpt.tensors, bytes }
+            }
+            Source::Synthetic { seed, bytes } => {
+                SideNetwork { task: task.to_string(), seed, tensors: HashMap::new(), bytes }
+            }
+        };
+        // hot-swap: drop any previous residency of this task first
+        if let Some((old, tick)) = self.resident.remove(task) {
+            self.lru.remove(&tick);
+            self.bytes -= old.bytes;
+        }
+        // evict LRU entries until the new network fits; a single network
+        // larger than the whole budget is allowed to reside alone.
+        while self.bytes + net.bytes > self.budget && !self.lru.is_empty() {
+            let (&oldest_tick, _) = self.lru.iter().next().expect("non-empty");
+            let victim = self.lru.remove(&oldest_tick).expect("tick present");
+            if let Some((old, _)) = self.resident.remove(&victim) {
+                self.bytes -= old.bytes;
+                self.evictions += 1;
+            }
+        }
+        self.bytes += net.bytes;
+        self.tick += 1;
+        self.lru.insert(self.tick, task.to_string());
+        self.resident.insert(task.to_string(), (Rc::new(net), self.tick));
+        self.loads += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("qst_serve_reg_{}_{}", std::process::id(), name))
+    }
+
+    fn side_ckpt(path: &std::path::Path, tag: f32, floats: usize) {
+        let mut tensors = HashMap::new();
+        tensors.insert("side.w".to_string(), HostTensor::from_f32(&[floats], &vec![tag; floats]));
+        Checkpoint::new(tensors).save(path).unwrap();
+    }
+
+    #[test]
+    fn loads_checkpoint_and_fingerprints() {
+        let p = tmpfile("a.ckpt");
+        side_ckpt(&p, 1.0, 8);
+        let mut r = Registry::new(1 << 20);
+        r.register_checkpoint("a", &p).unwrap();
+        let net = r.get("a").unwrap();
+        assert_eq!(net.task, "a");
+        assert_eq!(net.bytes(), 32);
+        assert!(net.seed != 0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn distinct_checkpoints_distinct_seeds() {
+        let (pa, pb) = (tmpfile("fa.ckpt"), tmpfile("fb.ckpt"));
+        side_ckpt(&pa, 1.0, 8);
+        side_ckpt(&pb, 2.0, 8);
+        let mut r = Registry::new(1 << 20);
+        r.register_checkpoint("a", &pa).unwrap();
+        r.register_checkpoint("b", &pb).unwrap();
+        assert_ne!(r.get("a").unwrap().seed, r.get("b").unwrap().seed);
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn evicts_lru_and_reloads_from_disk() {
+        let paths: Vec<PathBuf> = (0..3).map(|i| tmpfile(&format!("ev{i}.ckpt"))).collect();
+        for (i, p) in paths.iter().enumerate() {
+            side_ckpt(p, i as f32, 64); // 256 bytes each
+        }
+        let mut r = Registry::new(600); // fits two
+        r.register_checkpoint("t0", &paths[0]).unwrap();
+        r.register_checkpoint("t1", &paths[1]).unwrap();
+        assert_eq!(r.resident_count(), 2);
+        r.get("t0").unwrap(); // t1 becomes LRU
+        r.register_checkpoint("t2", &paths[2]).unwrap();
+        assert_eq!(r.resident_count(), 2);
+        assert_eq!(r.evictions, 1);
+        assert_eq!(r.resident_lru_order(), vec!["t0", "t2"]);
+        // evicted task transparently reloads, evicting the current LRU (t0)
+        let loads_before = r.loads;
+        let net = r.get("t1").unwrap();
+        assert_eq!(net.task, "t1");
+        assert_eq!(r.loads, loads_before + 1);
+        assert!(r.bytes() <= 600);
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn synthetic_tasks_need_no_disk() {
+        let mut r = Registry::new(1 << 20);
+        r.register_synthetic("s0", 7, 1000).unwrap();
+        let net = r.get("s0").unwrap();
+        assert_eq!(net.seed, 7);
+        assert!(net.tensors.is_empty());
+        assert_eq!(r.bytes(), 1000);
+    }
+
+    #[test]
+    fn suggested_budget_scales_with_tasks() {
+        let m = crate::costmodel::paper_model("LLaMA-2-7B").unwrap();
+        let one = Registry::suggested_budget(m, 1);
+        let ten = Registry::suggested_budget(m, 10);
+        assert!(one > 0);
+        assert_eq!(ten, one * 10);
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        let mut r = Registry::new(1 << 20);
+        assert!(r.get("nope").is_err());
+        assert!(!r.contains("nope"));
+    }
+
+    #[test]
+    fn hot_swap_replaces_without_leaking_bytes() {
+        let p = tmpfile("swap.ckpt");
+        side_ckpt(&p, 1.0, 64);
+        let mut r = Registry::new(1 << 20);
+        r.register_checkpoint("a", &p).unwrap();
+        let seed1 = r.get("a").unwrap().seed;
+        side_ckpt(&p, 9.0, 64); // new weights, same path
+        r.register_checkpoint("a", &p).unwrap();
+        assert_eq!(r.resident_count(), 1);
+        assert_eq!(r.bytes(), 256);
+        assert_ne!(r.get("a").unwrap().seed, seed1, "swap must pick up new weights");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn oversize_network_resides_alone() {
+        let mut r = Registry::new(100);
+        r.register_synthetic("small", 1, 50).unwrap();
+        r.register_synthetic("big", 2, 500).unwrap();
+        assert_eq!(r.resident_count(), 1);
+        assert_eq!(r.resident_lru_order(), vec!["big"]);
+    }
+}

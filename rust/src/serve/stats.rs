@@ -1,0 +1,254 @@
+//! Serving telemetry: request/token throughput, batch shapes, and a
+//! latency distribution (p50/p95) — plus a tiny JSON writer (serde is
+//! unavailable offline) so `bench-serve` can persist `BENCH_serve.json`.
+
+use std::time::Instant;
+
+/// Cap on retained latency samples; at the cap the reservoir is decimated
+/// (every 2nd sample kept) so memory stays bounded and the distribution
+/// stays representative for long-running servers.
+const LAT_CAP: usize = 65_536;
+
+pub struct ServeStats {
+    started: Instant,
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    /// requests dropped by failing micro-batches (see `Server::drain`)
+    pub dropped: u64,
+    /// seconds spent actually processing batches — the throughput
+    /// denominator, so idle time (waiting on stdin/transport) between
+    /// requests doesn't dilute req/s
+    pub busy_secs: f64,
+    /// request latencies in seconds (queue + compute), decimated reservoir
+    lat: Vec<f64>,
+    /// decimation factor (each retained sample stands for this many)
+    lat_stride: u64,
+    lat_skip: u64,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        ServeStats {
+            started: Instant::now(),
+            requests: 0,
+            batches: 0,
+            tokens: 0,
+            dropped: 0,
+            busy_secs: 0.0,
+            lat: Vec::new(),
+            lat_stride: 1,
+            lat_skip: 0,
+        }
+    }
+
+    /// Record one completed micro-batch of `n` requests covering `tokens`
+    /// prompt tokens, processed in `batch_secs`, with per-request latencies.
+    pub fn record_batch(&mut self, n: usize, tokens: usize, batch_secs: f64, latencies_secs: &[f64]) {
+        self.batches += 1;
+        self.requests += n as u64;
+        self.tokens += tokens as u64;
+        self.busy_secs += batch_secs.max(0.0);
+        for &l in latencies_secs {
+            self.lat_skip += 1;
+            if self.lat_skip < self.lat_stride {
+                continue;
+            }
+            self.lat_skip = 0;
+            if self.lat.len() >= LAT_CAP {
+                let mut keep = false;
+                self.lat.retain(|_| {
+                    keep = !keep;
+                    keep
+                });
+                self.lat_stride *= 2;
+            }
+            self.lat.push(l);
+        }
+    }
+
+    /// Wall time since the server came up (includes idle).
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Serving throughput over *busy* time — an interactive session with
+    /// long idle gaps between requests still reports real speed.
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / self.busy_secs.max(1e-9)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.busy_secs.max(1e-9)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Nearest-rank percentile of recorded latencies, in seconds.
+    pub fn latency_pct(&self, p: f64) -> f64 {
+        if self.lat.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.lat.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
+    }
+
+    pub fn p50_secs(&self) -> f64 {
+        self.latency_pct(50.0)
+    }
+
+    pub fn p95_secs(&self) -> f64 {
+        self.latency_pct(95.0)
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self, cache_hit_rate: f64) -> String {
+        let dropped = if self.dropped > 0 { format!(" | {} dropped", self.dropped) } else { String::new() };
+        format!(
+            "{} req in {} batches ({:.1} req/batch) | {:.1} req/s, {:.0} tok/s | p50 {:.2} ms, p95 {:.2} ms | cache hit rate {:.1}%{dropped}",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.requests_per_sec(),
+            self.tokens_per_sec(),
+            self.p50_secs() * 1e3,
+            self.p95_secs() * 1e3,
+            cache_hit_rate * 100.0
+        )
+    }
+}
+
+/// Minimal JSON object writer (flat objects of numbers/strings — all the
+/// bench reports need).
+pub struct Json {
+    buf: String,
+    first: bool,
+}
+
+impl Default for Json {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Json {
+    pub fn new() -> Self {
+        Json { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('\n');
+        self.buf.push_str("  \"");
+        self.buf.push_str(k);
+        self.buf.push_str("\": ");
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.6}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push('"');
+        for c in v.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                c if (c as u32) < 0x20 => self.buf.push_str(&format!("\\u{:04x}", c as u32)),
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push_str("\n}\n");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = ServeStats::new();
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        s.record_batch(100, 400, 0.25, &lats);
+        assert!((s.p50_secs() - 0.050).abs() < 1e-9);
+        assert!((s.p95_secs() - 0.095).abs() < 1e-9);
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.tokens, 400);
+        assert_eq!(s.batches, 1);
+        // throughput uses busy time, not wall time since construction
+        assert!((s.requests_per_sec() - 400.0).abs() < 1e-6);
+        assert!((s.tokens_per_sec() - 1600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = ServeStats::new();
+        assert_eq!(s.p50_secs(), 0.0);
+        assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut s = ServeStats::new();
+        let chunk = vec![0.001f64; 1000];
+        for _ in 0..200 {
+            s.record_batch(1000, 1000, 0.001, &chunk);
+        }
+        assert!(s.lat.len() <= LAT_CAP);
+        assert_eq!(s.requests, 200_000);
+        assert!((s.p95_secs() - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_escapes_and_shapes() {
+        let s = Json::new().str("name", "a\"b\\c").int("n", 3).num("x", 1.5).finish();
+        assert!(s.starts_with('{') && s.ends_with("}\n"));
+        assert!(s.contains("\"name\": \"a\\\"b\\\\c\""));
+        assert!(s.contains("\"n\": 3"));
+        assert!(s.contains("\"x\": 1.5"));
+    }
+
+    #[test]
+    fn json_nonfinite_is_null() {
+        let s = Json::new().num("bad", f64::NAN).finish();
+        assert!(s.contains("\"bad\": null"));
+    }
+}

@@ -1,0 +1,307 @@
+//! Synthetic serving workloads + the `bench-serve` runner.
+//!
+//! Production prompt streams are heavy-tailed: a small set of prompts (and
+//! prompt prefixes) recurs across requests and across tenants.  The
+//! workload here models that with a pool of `unique_prompts` distinct
+//! prompts sampled uniformly by `requests` requests spread over `tasks`
+//! side networks — so the expected cache hit rate is
+//! `1 - unique_prompts/requests` once the cache is warm.
+//!
+//! `run_bench` drives the same workload twice over the deterministic
+//! synthetic engine — once with the hidden-state cache enabled, once
+//! disabled — and reports both throughputs, the speedup, the hit rate,
+//! and p50/p95 latencies; `bench-serve` persists this as
+//! `BENCH_serve.json` so the perf trajectory accumulates across PRs.
+
+use anyhow::{ensure, Result};
+
+use super::stats::Json;
+use super::{ServeConfig, Server, SyntheticEngine};
+use crate::util::rng::Rng;
+
+/// Workload + engine shape for a serving benchmark run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchServeOpts {
+    pub tasks: usize,
+    pub requests: usize,
+    pub unique_prompts: usize,
+    /// prompt length in tokens (≤ seq)
+    pub prompt_len: usize,
+    pub seq: usize,
+    pub max_batch: usize,
+    pub cache_bytes: usize,
+    pub registry_bytes: usize,
+    /// requests submitted between drains (burst size)
+    pub burst: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchServeOpts {
+    fn default() -> Self {
+        BenchServeOpts {
+            tasks: 3,
+            requests: 512,
+            unique_prompts: 32,
+            prompt_len: 48,
+            seq: 64,
+            max_batch: 8,
+            cache_bytes: 64 << 20,
+            registry_bytes: 64 << 20,
+            burst: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// One measured pass (cache on or off).
+#[derive(Clone, Copy, Debug)]
+pub struct PassReport {
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub tokens_per_sec: f64,
+    pub hit_rate: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub backbone_rows: u64,
+    pub cache_evictions: u64,
+}
+
+/// The full cached-vs-uncached comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchServeReport {
+    pub opts: BenchServeOpts,
+    pub cached: PassReport,
+    pub uncached: PassReport,
+}
+
+impl BenchServeReport {
+    pub fn speedup(&self) -> f64 {
+        self.cached.requests_per_sec / self.uncached.requests_per_sec.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::new()
+            .str("bench", "serve")
+            .int("tasks", self.opts.tasks as u64)
+            .int("requests", self.opts.requests as u64)
+            .int("unique_prompts", self.opts.unique_prompts as u64)
+            .int("prompt_len", self.opts.prompt_len as u64)
+            .int("seq", self.opts.seq as u64)
+            .int("max_batch", self.opts.max_batch as u64)
+            .int("cache_bytes", self.opts.cache_bytes as u64)
+            .int("seed", self.opts.seed)
+            .num("cached_rps", self.cached.requests_per_sec)
+            .num("cached_tokens_per_sec", self.cached.tokens_per_sec)
+            .num("cached_hit_rate", self.cached.hit_rate)
+            .num("cached_p50_ms", self.cached.p50_ms)
+            .num("cached_p95_ms", self.cached.p95_ms)
+            .int("cached_backbone_rows", self.cached.backbone_rows)
+            .int("cache_evictions", self.cached.cache_evictions)
+            .num("uncached_rps", self.uncached.requests_per_sec)
+            .num("uncached_p50_ms", self.uncached.p50_ms)
+            .num("uncached_p95_ms", self.uncached.p95_ms)
+            .int("uncached_backbone_rows", self.uncached.backbone_rows)
+            .num("speedup", self.speedup())
+            .finish()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "serve bench: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x",
+            self.opts.requests,
+            self.opts.tasks,
+            self.opts.unique_prompts,
+            self.cached.requests_per_sec,
+            self.cached.hit_rate * 100.0,
+            self.cached.p50_ms,
+            self.cached.p95_ms,
+            self.uncached.requests_per_sec,
+            self.speedup()
+        )
+    }
+}
+
+/// How many distinct prompts of `len` tokens the pool can stamp (base
+/// vocab-1 positional encoding of the index, saturating).
+pub fn prompt_pool_capacity(len: usize, vocab: usize) -> usize {
+    let base = (vocab.saturating_sub(1)).max(2);
+    let mut cap: usize = 1;
+    for _ in 0..len.max(1).min(8) {
+        cap = cap.saturating_mul(base);
+    }
+    cap
+}
+
+/// Deterministic prompt pool: `n` rows of `len` tokens, guaranteed pairwise
+/// distinct by stamping the pool index in base vocab-1 over the leading
+/// positions.  Panics if `n` exceeds [`prompt_pool_capacity`] — callers
+/// ([`run_bench`]) validate first, so the benchmark's unique-prompt count
+/// (the hit-rate denominator) is always what was asked for.
+pub fn prompt_pool(rng: &mut Rng, n: usize, len: usize, vocab: usize) -> Vec<Vec<i32>> {
+    assert!(
+        n <= prompt_pool_capacity(len, vocab),
+        "{n} unique prompts don't fit in {len} tokens over a {vocab}-token vocab"
+    );
+    let base = (vocab.saturating_sub(1)).max(2);
+    (0..n)
+        .map(|i| {
+            let mut p: Vec<i32> = (0..len.max(1))
+                .map(|_| rng.range(1, vocab.max(3)) as i32) // avoid PAD=0
+                .collect();
+            // stamp index digits (token ids 1..=base, never PAD)
+            let mut rest = i;
+            for slot in p.iter_mut() {
+                *slot = 1 + (rest % base) as i32;
+                rest /= base;
+                if rest == 0 {
+                    break;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+fn run_pass(opts: &BenchServeOpts, cache_bytes: usize) -> Result<PassReport> {
+    let engine = SyntheticEngine::small(opts.seed, opts.seq);
+    let vocab = engine.vocab;
+    let mut server = Server::new(
+        engine,
+        ServeConfig {
+            cache_bytes,
+            registry_bytes: opts.registry_bytes,
+            max_batch: opts.max_batch,
+        },
+    );
+    let names: Vec<String> = (0..opts.tasks).map(|i| format!("task{i}")).collect();
+    for (i, name) in names.iter().enumerate() {
+        // side nets are seed-derived; charge a nominal footprint
+        server.registry.register_synthetic(name, opts.seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
+    }
+    let mut rng = Rng::new(opts.seed.wrapping_add(0xBEAC));
+    let pool = prompt_pool(&mut rng, opts.unique_prompts, opts.prompt_len, vocab);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    while submitted < opts.requests {
+        let burst = opts.burst.min(opts.requests - submitted);
+        for _ in 0..burst {
+            let task = &names[rng.below(names.len())];
+            let prompt = &pool[rng.below(pool.len())];
+            server.submit(task, prompt)?;
+            submitted += 1;
+        }
+        completed += server.drain()?.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ensure!(completed == opts.requests, "completed {completed} of {} requests", opts.requests);
+    Ok(PassReport {
+        wall_secs: wall,
+        requests_per_sec: opts.requests as f64 / wall.max(1e-12),
+        tokens_per_sec: server.stats.tokens as f64 / wall.max(1e-12),
+        hit_rate: server.cache.hit_rate(),
+        p50_ms: server.stats.p50_secs() * 1e3,
+        p95_ms: server.stats.p95_secs() * 1e3,
+        backbone_rows: server.engine.backbone_rows,
+        cache_evictions: server.cache.evictions,
+    })
+}
+
+/// Run the repeated-prompt workload with the cache as configured and again
+/// with the cache disabled; the workload streams (and its results) are
+/// identical — only the backbone recompute count differs.
+pub fn run_bench(opts: &BenchServeOpts) -> Result<BenchServeReport> {
+    ensure!(opts.tasks >= 1 && opts.requests >= 1 && opts.unique_prompts >= 1);
+    ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
+    let capacity = prompt_pool_capacity(opts.prompt_len, SyntheticEngine::SMALL_VOCAB);
+    ensure!(
+        opts.unique_prompts <= capacity,
+        "--unique-prompts {} exceeds the {} distinct prompts expressible at --prompt-len {}",
+        opts.unique_prompts,
+        capacity,
+        opts.prompt_len
+    );
+    let cached = run_pass(opts, opts.cache_bytes)?;
+    let uncached = run_pass(opts, 0)?;
+    Ok(BenchServeReport { opts: *opts, cached, uncached })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchServeOpts {
+        BenchServeOpts {
+            tasks: 2,
+            requests: 48,
+            unique_prompts: 4,
+            prompt_len: 12,
+            seq: 16,
+            max_batch: 4,
+            cache_bytes: 16 << 20,
+            registry_bytes: 1 << 20,
+            burst: 16,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn prompt_pool_is_distinct_and_padfree() {
+        let mut rng = Rng::new(1);
+        let pool = prompt_pool(&mut rng, 16, 8, 256);
+        for p in &pool {
+            assert_eq!(p.len(), 8);
+            assert!(p.iter().all(|&t| t > 0));
+        }
+        for i in 0..pool.len() {
+            for j in i + 1..pool.len() {
+                assert_ne!(pool[i], pool[j], "prompts {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn bench_shows_cache_effect() {
+        let rep = run_bench(&tiny()).unwrap();
+        // the cached pass must run the frozen forward at most once per
+        // distinct prompt; the uncached pass once per *request* modulo
+        // within-batch dedupe
+        assert!(rep.cached.backbone_rows <= tiny().unique_prompts as u64);
+        assert!(rep.uncached.backbone_rows > rep.cached.backbone_rows);
+        assert!(rep.cached.hit_rate > 0.5, "hit rate {}", rep.cached.hit_rate);
+        // wall-clock speedup is asserted in benches/bench_serve.rs where the
+        // workload is big enough to dominate timer noise; here assert the
+        // deterministic work ratio that produces it
+        assert!(rep.uncached.backbone_rows >= 2 * rep.cached.backbone_rows);
+    }
+
+    #[test]
+    fn json_report_is_wellformed() {
+        let rep = run_bench(&tiny()).unwrap();
+        let j = rep.to_json();
+        assert!(j.contains("\"bench\": \"serve\""));
+        assert!(j.contains("\"speedup\""));
+        assert!(j.contains("\"cached_hit_rate\""));
+        assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn pool_capacity_enforced_and_len1_distinct() {
+        let mut rng = Rng::new(2);
+        let pool = prompt_pool(&mut rng, 200, 1, 256);
+        let set: std::collections::HashSet<_> = pool.iter().cloned().collect();
+        assert_eq!(set.len(), 200, "len-1 prompts must still be pairwise distinct");
+        assert_eq!(prompt_pool_capacity(1, 256), 255);
+        let mut o = tiny();
+        o.unique_prompts = 300;
+        o.prompt_len = 1;
+        assert!(run_bench(&o).is_err(), "over-capacity unique-prompts must be rejected");
+    }
+
+    #[test]
+    fn rejects_overlong_prompts() {
+        let mut o = tiny();
+        o.prompt_len = 32; // > seq 16
+        assert!(run_bench(&o).is_err());
+    }
+}

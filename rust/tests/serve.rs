@@ -1,0 +1,244 @@
+//! Integration tests for the `serve` subsystem.
+//!
+//! The first group runs everywhere (deterministic synthetic engine, no
+//! artifacts needed): two tasks' requests flow through one shared backbone
+//! and the batched/cached server path must reproduce the unbatched
+//! single-request path bit-for-bit.  The artifact-gated test at the bottom
+//! drives the `ExecutorEngine` over real AOT eval graphs and compares
+//! against the plain `run_host` eval path; like the other integration
+//! tests it skips when `make artifacts` has not run.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use qst::serve::{
+    batcher, Engine, ExecutorEngine, Hidden, Registry, ServeConfig, Server, SyntheticEngine,
+};
+use qst::tensor::HostTensor;
+
+const SEQ: usize = 24;
+
+fn synthetic_server(cache_bytes: usize) -> Server<SyntheticEngine> {
+    let mut s = Server::new(
+        SyntheticEngine::small(7, SEQ),
+        ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4 },
+    );
+    s.registry.register_synthetic("sentiment", 101, 4096).unwrap();
+    s.registry.register_synthetic("paraphrase", 202, 4096).unwrap();
+    s
+}
+
+/// The tentpole property: two tasks share one frozen backbone; the server's
+/// batching, dedup, and hidden-state cache are pure optimizations — every
+/// response matches running the same request alone through a fresh engine.
+#[test]
+fn two_tasks_one_backbone_match_unbatched_eval() {
+    let mut server = synthetic_server(32 << 20);
+    // interleaved multi-task workload with heavy prompt reuse
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![5, 6, 7, 8],
+        vec![9, 10],
+        vec![5, 6, 7, 8], // repeat of prompt 0
+        vec![11, 12, 13],
+    ];
+    let mut submitted: Vec<(u64, String, Vec<i32>)> = vec![];
+    let mut all: HashMap<u64, Vec<f32>> = HashMap::new();
+    for (i, p) in prompts.iter().enumerate() {
+        for task in ["sentiment", "paraphrase"] {
+            let id = server.submit(task, p).unwrap();
+            submitted.push((id, task.to_string(), p.clone()));
+        }
+        // drain mid-stream once so the test covers warm-cache batches too
+        if i == 1 {
+            for r in server.drain().unwrap() {
+                all.insert(r.id, r.logits);
+            }
+        }
+    }
+    for r in server.drain().unwrap() {
+        all.insert(r.id, r.logits);
+    }
+    assert_eq!(all.len(), submitted.len());
+    // 4 prompts × 2 tasks = 8 requests, but only 3 *distinct* prompts ever
+    // reached the frozen forward (dedupe within batches + cache across them):
+    assert_eq!(server.engine.backbone_rows, 3, "3 distinct prompts after dedupe+cache");
+    assert!(server.cache.hits > 0);
+
+    // unbatched reference: fresh engine, one request at a time, no cache
+    let mut reference = SyntheticEngine::small(7, SEQ);
+    let mut ref_reg = Registry::new(1 << 20);
+    ref_reg.register_synthetic("sentiment", 101, 4096).unwrap();
+    ref_reg.register_synthetic("paraphrase", 202, 4096).unwrap();
+    for (id, task, prompt) in &submitted {
+        let row = batcher::pad_row(prompt, SEQ).unwrap();
+        let h: Vec<Rc<Hidden>> = reference
+            .backbone(std::slice::from_ref(&row))
+            .unwrap()
+            .into_iter()
+            .map(Rc::new)
+            .collect();
+        let net = ref_reg.get(task).unwrap();
+        let want = reference.side(&net, &h, std::slice::from_ref(&row)).unwrap();
+        let got = all.remove(id).unwrap_or_else(|| panic!("no response for request {id}"));
+        assert_eq!(got, want[0], "request {id} ({task}) must match the unbatched path");
+    }
+}
+
+#[test]
+fn cache_disabled_matches_cache_enabled() {
+    let run = |cache: usize| {
+        let mut s = synthetic_server(cache);
+        for rep in 0..3 {
+            for t in ["sentiment", "paraphrase"] {
+                s.submit(t, &[40, 41, 42, rep]).unwrap();
+            }
+        }
+        let mut r = s.drain().unwrap();
+        r.sort_by_key(|x| x.id);
+        (r, s.engine.backbone_rows)
+    };
+    let (cached, rows_cached) = run(32 << 20);
+    let (uncached, rows_uncached) = run(0);
+    assert_eq!(cached.len(), uncached.len());
+    for (a, b) in cached.iter().zip(&uncached) {
+        assert_eq!(a.logits, b.logits);
+    }
+    assert!(rows_cached <= rows_uncached);
+}
+
+#[test]
+fn eviction_pressure_does_not_corrupt_results() {
+    // cache big enough for exactly one hidden bundle: constant eviction
+    let one = SyntheticEngine::small(7, SEQ).hidden_bytes() + 64;
+    let mut tiny = synthetic_server(one);
+    let mut big = synthetic_server(256 << 20);
+    let prompts: Vec<Vec<i32>> = (0..6).map(|i| vec![i + 1, i + 2, i + 3]).collect();
+    for p in &prompts {
+        tiny.submit("sentiment", p).unwrap();
+        big.submit("sentiment", p).unwrap();
+    }
+    let rt: Vec<_> = tiny.drain().unwrap();
+    let rb: Vec<_> = big.drain().unwrap();
+    for (a, b) in rt.iter().zip(&rb) {
+        assert_eq!(a.logits, b.logits, "eviction must never change results");
+    }
+    assert!(tiny.cache.evictions > 0 || tiny.cache.len() <= 1);
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: ExecutorEngine over real AOT eval graphs
+// ---------------------------------------------------------------------------
+
+fn runtime_or_skip() -> Option<qst::runtime::Runtime> {
+    let rt = qst::runtime::Runtime::with_default_dir().ok()?;
+    if rt.available().is_empty() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn executor_engine_matches_run_host_eval() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cfg = "tiny-opt";
+    let eval_name = format!("{cfg}__qst__cls__eval");
+    if rt.load(&eval_name).is_err() {
+        eprintln!("SKIP: artifact {eval_name} missing");
+        return;
+    }
+    // shared backbone from a short pretrain; two "tasks" = two side-network
+    // states from differently-seeded init graphs
+    let (base, _) = qst::coordinator::pipeline::pretrain(&mut rt, cfg, 20, 3e-3, 1, false).unwrap();
+    let art = rt.load(&eval_name).unwrap();
+    let man = art.manifest.clone();
+    let frozen = qst::coordinator::pipeline::frozen_from_checkpoint(&man, &base).unwrap();
+    let init = rt.load(&format!("{cfg}__qst__init")).unwrap();
+    let mut task_states: Vec<HashMap<String, HostTensor>> = vec![];
+    for seed in [3u32, 4u32] {
+        let outs = init.run_host(&[HostTensor::scalar_u32(seed)]).unwrap();
+        let mut state = HashMap::new();
+        for (t, slot) in outs.into_iter().zip(&init.manifest.outputs) {
+            state.insert(slot.name.clone(), t);
+        }
+        task_states.push(state);
+    }
+    let (b, s) = man.batch.unwrap();
+
+    // serve path: ExecutorEngine + Server, both tasks bound to one backbone
+    let mut engine = ExecutorEngine::new(qst::runtime::Runtime::with_default_dir().unwrap());
+    engine.bind_task("taskA", &eval_name, &task_states[0], &frozen).unwrap();
+    engine.bind_task("taskB", &eval_name, &task_states[1], &frozen).unwrap();
+    let mut server = Server::new(
+        engine,
+        ServeConfig { cache_bytes: 0, registry_bytes: 1 << 30, max_batch: b },
+    );
+    server.registry.register_synthetic("taskA", 1, 1 << 20).unwrap();
+    server.registry.register_synthetic("taskB", 2, 1 << 20).unwrap();
+
+    let prompts: Vec<Vec<i32>> = (0..b).map(|i| {
+        let mut p = vec![20 + i as i32; s.min(6)];
+        p[0] = 15 + i as i32;
+        p
+    }).collect();
+    let mut ids = vec![];
+    for p in &prompts {
+        for t in ["taskA", "taskB"] {
+            ids.push((server.submit(t, p).unwrap(), t, p.clone()));
+        }
+    }
+    let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+    for r in server.drain().unwrap() {
+        got.insert(r.id, r.logits);
+    }
+
+    // reference path: assemble the same batch by hand and run_host it
+    for (which, task) in ["taskA", "taskB"].iter().enumerate() {
+        let mut tokens = vec![];
+        let mut positions = vec![];
+        for p in &prompts {
+            let row = batcher::pad_row(p, s).unwrap();
+            positions.push(batcher::query_pos(&row) as i32);
+            tokens.extend_from_slice(&row);
+        }
+        let mut inputs = vec![];
+        for slot in &man.inputs {
+            use qst::runtime::Role;
+            let t = match slot.role {
+                Role::Trainable => task_states[which][&slot.name].clone(),
+                Role::Frozen => frozen[&slot.name].clone(),
+                Role::Data => {
+                    if slot.dtype == qst::tensor::DType::I32 && slot.shape == vec![b, s] {
+                        HostTensor::from_i32(&[b, s], &tokens)
+                    } else if slot.dtype == qst::tensor::DType::I32 && slot.shape == vec![b] {
+                        HostTensor::from_i32(&[b], &positions)
+                    } else {
+                        HostTensor::zeros(slot.dtype, &slot.shape)
+                    }
+                }
+                other => panic!("unexpected role {other:?}"),
+            };
+            inputs.push(t);
+        }
+        let outs = art.run_host(&inputs).unwrap();
+        let logits_idx = man.output_index(qst::runtime::Role::Logits).unwrap_or(0);
+        let logits = &outs[logits_idx];
+        let v = logits.shape[1];
+        let flat = logits.as_f32().unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            let want = &flat[i * v..(i + 1) * v];
+            let (id, _, _) = ids
+                .iter()
+                .find(|(_, t, pp)| *t == *task && pp == p)
+                .unwrap();
+            let have = &got[id];
+            assert_eq!(have.len(), v);
+            let max_diff = have
+                .iter()
+                .zip(want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_diff < 1e-4, "{task} row {i}: max diff {max_diff}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Tier-1 verification + hygiene, in one command: `make check`.
+#
+#   1. cargo build --release      (the tier-1 build)
+#   2. cargo test -q              (unit + integration tests; artifact-gated
+#                                  tests self-skip when `make artifacts`
+#                                  hasn't run)
+#   3. cargo fmt --check          (skipped with a warning if rustfmt is absent)
+#
+# Exits non-zero on the first failure.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install the Rust toolchain (the image bakes it in)" >&2
+    exit 1
+fi
+
+# regenerate the quantizer golden fixture if it vanished (best effort — the
+# committed fixture is the normal source; needs python3 + jax)
+if [ ! -f rust/tests/fixtures/quant_golden.txt ]; then
+    echo "== regenerating rust/tests/fixtures/quant_golden.txt =="
+    python3 scripts/gen_quant_fixture.py \
+        || echo "warning: could not regenerate golden fixture; golden test will self-skip" >&2
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "warning: rustfmt unavailable; skipping format check" >&2
+fi
+
+echo "check: OK"

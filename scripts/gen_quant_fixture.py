@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Generate the cross-language quantizer golden fixture.
+
+Writes rust/tests/fixtures/quant_golden.txt: a seeded random weight matrix
+and its NF4/FP4 packed bytes + double-quantized scale metadata as computed
+by python/compile/quant.py (the reference implementation).  The Rust
+quantizer must reproduce the packed bytes bit-for-bit
+(rust/tests/golden.rs).
+
+Deterministic: same seed -> byte-identical fixture.  Regenerate only when
+the storage format itself changes.
+
+Usage: python3 scripts/gen_quant_fixture.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import numpy as np
+
+from compile import quant  # noqa: E402
+
+K, N = 128, 16
+SEED = 20240731
+
+
+def fmt(values, kind):
+    if kind == "int":
+        return " ".join(str(int(v)) for v in values)
+    # %.9g round-trips any float32 exactly through decimal
+    return " ".join("%.9g" % float(v) for v in values)
+
+
+def main():
+    rng = np.random.default_rng(SEED)
+    w = rng.standard_normal((K, N)).astype(np.float32) * 0.5
+    lines = [
+        f"k {K}",
+        f"n {N}",
+        "w " + fmt(w.reshape(-1), "f32"),
+    ]
+    for qdtype in ["nf4", "fp4"]:
+        q = quant.quantize_matrix(w, qdtype=qdtype, qblock=64, qgroup=256)
+        lines.append(f"{qdtype}.packed " + fmt(np.asarray(q["packed"]).reshape(-1), "int"))
+        lines.append(f"{qdtype}.qscales " + fmt(np.asarray(q["qscales"]).reshape(-1), "int"))
+        lines.append(f"{qdtype}.gabs " + fmt(np.asarray(q["gabs"]).reshape(-1), "f32"))
+        lines.append(f"{qdtype}.gmean " + fmt(np.asarray(q["gmean"]).reshape(-1), "f32"))
+    out = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures", "quant_golden.txt")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {os.path.normpath(out)} ({len(lines)} keys)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+//! Minimal `anyhow` work-alike: context-chained error type, `Result` alias,
+//! and the `anyhow!` / `bail!` / `ensure!` macros — exactly the surface the
+//! `qst` crate uses.  `{e}` displays the outermost message; `{e:#}` displays
+//! the whole context chain (`outer: inner: root`), matching real anyhow.
+
+use std::fmt;
+
+/// Context-chained error: a message plus an optional wrapped cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn new_msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl Into<String>) -> Self {
+        Error { msg: msg.into(), source: Some(Box::new(self)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket From possible.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain: Vec<String> = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error { msg, source: err.map(Box::new) });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result` / `Option` errors.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::new_msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new_msg(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::new_msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err()).context("opening ckpt").unwrap_err();
+        assert_eq!(format!("{e}"), "opening ckpt");
+        assert_eq!(format!("{e:#}"), "opening ckpt: file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "slot")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing slot");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{:#}", f(5).unwrap_err()).contains("five"));
+        assert!(format!("{:#}", f(50).unwrap_err()).contains("too big"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("condition failed"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

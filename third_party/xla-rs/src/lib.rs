@@ -1,0 +1,289 @@
+//! Stub of the xla-rs API surface used by `qst` (see Cargo.toml).
+//!
+//! * [`Literal`] is fully functional: dtype + dims + host bytes, typed
+//!   copy-in/copy-out — `HostTensor` marshaling round-trips for real.
+//! * PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`], [`PjRtBuffer`])
+//!   exist but every runtime operation fails with [`STUB_MSG`]; nothing
+//!   can be executed without the real bindings.
+
+use std::fmt;
+
+pub const STUB_MSG: &str =
+    "XLA runtime unavailable: built against the std-only stub (third_party/xla-rs); \
+     point the path dependency at the real vendored xla-rs to execute artifacts";
+
+/// Error type matching the real crate's role (std::error::Error, so it
+/// converts into anyhow::Error at call sites).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    F16,
+    S32,
+    U32,
+    U8,
+    S8,
+}
+
+impl PrimitiveType {
+    fn size(self) -> usize {
+        match self {
+            PrimitiveType::F32 | PrimitiveType::S32 | PrimitiveType::U32 => 4,
+            PrimitiveType::F16 => 2,
+            PrimitiveType::U8 | PrimitiveType::S8 => 1,
+        }
+    }
+
+    fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F16 => ElementType::F16,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::U32 => ElementType::U32,
+            PrimitiveType::U8 => ElementType::U8,
+            PrimitiveType::S8 => ElementType::S8,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F16,
+    S32,
+    U32,
+    U8,
+    S8,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Element types marshalable through a [`Literal`].
+pub trait NativeType: Copy {
+    const PRIMITIVE: PrimitiveType;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $prim:expr, $n:expr) => {
+        impl NativeType for $t {
+            const PRIMITIVE: PrimitiveType = $prim;
+            fn write_le(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; $n];
+                buf.copy_from_slice(&bytes[..$n]);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+native!(f32, PrimitiveType::F32, 4);
+native!(i32, PrimitiveType::S32, 4);
+native!(u32, PrimitiveType::U32, 4);
+native!(u8, PrimitiveType::U8, 1);
+native!(i8, PrimitiveType::S8, 1);
+
+/// Host-side literal: dtype + dims + row-major little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    primitive: PrimitiveType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let numel: usize = dims.iter().product();
+        Literal {
+            primitive: ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: vec![0u8; numel * ty.size()],
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.primitive.element_type() })
+    }
+
+    pub fn copy_raw_from<T: NativeType>(&mut self, vals: &[T]) -> Result<()> {
+        if T::PRIMITIVE != self.primitive {
+            return Err(Error(format!(
+                "copy_raw_from type mismatch: literal is {:?}, values are {:?}",
+                self.primitive,
+                T::PRIMITIVE
+            )));
+        }
+        let mut data = Vec::with_capacity(self.data.len());
+        for v in vals {
+            v.write_le(&mut data);
+        }
+        if data.len() != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_from size mismatch: {} bytes for a {}-byte literal",
+                data.len(),
+                self.data.len()
+            )));
+        }
+        self.data = data;
+        Ok(())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::PRIMITIVE != self.primitive {
+            return Err(Error(format!(
+                "to_vec type mismatch: literal is {:?}, requested {:?}",
+                self.primitive,
+                T::PRIMITIVE
+            )));
+        }
+        let sz = self.primitive.size();
+        Ok(self.data.chunks_exact(sz).map(T::read_le).collect())
+    }
+
+    /// Tuple literals only come out of executions, which the stub can't do.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+pub struct PjRtLoadedExecutable;
+pub struct PjRtBuffer;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub_err()
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(lit.size_bytes(), 24);
+        lit.copy_raw_from::<f32>(&[1.0, -2.0, 3.5, 0.25, 5.0, 6.0]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5, 0.25, 5.0, 6.0]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn type_and_size_mismatches_error() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2]);
+        assert!(lit.copy_raw_from::<i32>(&[1, 2]).is_err());
+        assert!(lit.copy_raw_from::<f32>(&[1.0]).is_err());
+        assert!(lit.to_vec::<u8>().is_err());
+    }
+
+    #[test]
+    fn runtime_is_stubbed() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}
