@@ -1,9 +1,10 @@
 # Repo entry points.  `make check` is the tier-1 verify plus format hygiene;
 # `make artifacts` lowers the AOT HLO artifacts the Rust coordinator executes;
 # `make fixtures` regenerates the cross-language quantizer golden fixture;
-# `make bench-serve` runs the serving benchmark and refreshes BENCH_serve.json.
+# `make bench-serve` runs the serving benchmark and refreshes BENCH_serve.json;
+# `make bench-kernels` refreshes BENCH_kernels.json (host GEMM/W4 kernels).
 
-.PHONY: check test artifacts fixtures bench-serve
+.PHONY: check test artifacts fixtures bench-serve bench-kernels
 
 check:
 	./scripts/check.sh
@@ -19,3 +20,6 @@ fixtures:
 
 bench-serve:
 	cargo run --release -p qst --bin qst -- bench-serve
+
+bench-kernels:
+	cargo run --release -p qst --bin qst -- bench-kernels

@@ -54,6 +54,7 @@ fn main() {
         registry_bytes: 64 << 20,
         burst: 48,
         seed: 0,
+        ..BenchServeOpts::default()
     };
     let report = run_bench(&opts).expect("bench workload");
     println!("{}", report.summary());

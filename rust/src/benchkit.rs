@@ -100,6 +100,75 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Minimal JSON object writer (flat objects of numbers/strings — all the
+/// bench reports need; serde is unavailable offline).  Used by
+/// `bench-serve` (`BENCH_serve.json`) and `bench-kernels`
+/// (`BENCH_kernels.json`).
+pub struct Json {
+    buf: String,
+    first: bool,
+}
+
+impl Default for Json {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Json {
+    pub fn new() -> Self {
+        Json { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('\n');
+        self.buf.push_str("  \"");
+        self.buf.push_str(k);
+        self.buf.push_str("\": ");
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.6}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push('"');
+        for c in v.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                c if (c as u32) < 0x20 => self.buf.push_str(&format!("\\u{:04x}", c as u32)),
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push_str("\n}\n");
+        self.buf
+    }
+}
+
 /// Append results to a CSV log (created with a header if absent).
 pub fn log_csv(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
     use std::io::Write;
@@ -134,5 +203,20 @@ mod tests {
         assert!(fmt_secs(2.0).contains("s"));
         assert!(fmt_secs(2e-3).contains("ms"));
         assert!(fmt_secs(2e-6).contains("µs"));
+    }
+
+    #[test]
+    fn json_escapes_and_shapes() {
+        let s = Json::new().str("name", "a\"b\\c").int("n", 3).num("x", 1.5).finish();
+        assert!(s.starts_with('{') && s.ends_with("}\n"));
+        assert!(s.contains("\"name\": \"a\\\"b\\\\c\""));
+        assert!(s.contains("\"n\": 3"));
+        assert!(s.contains("\"x\": 1.5"));
+    }
+
+    #[test]
+    fn json_nonfinite_is_null() {
+        let s = Json::new().num("bad", f64::NAN).finish();
+        assert!(s.contains("\"bad\": null"));
     }
 }

@@ -110,16 +110,25 @@ COMMANDS:
   experiments  --id table1|table2|table3|table4|table5|table6|table7|
                     fig1a|fig1b|fig4|fig5|fig6|calib|all  [--fast]
   serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
-               [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N] [--seed N]
+               [--preset small|large] [--threads N] [--cache-bytes N]
+               [--registry-bytes N] [--batch N] [--seq N] [--seed N]
                In-process multi-task inference server: one shared frozen
                backbone, per-task side networks, hidden-state cache.
+               --threads N runs the host kernels on N workers (bit-identical
+               results for any N); --preset large is d=256, 8 layers.
                Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
   bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
-               [--registry-bytes N] [--seed N] [--json PATH]
+               [--registry-bytes N] [--seed N] [--preset small|large]
+               [--threads N] [--json PATH]
                Repeated-prompt serving benchmark over >=2 side networks;
                reports cached vs uncached throughput, cache hit rate and
                p50/p95 latency; writes BENCH_serve.json
+  bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
+               Host kernel microbenchmarks: naive vs cache-blocked vs
+               blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs
+               dequantize-then-matmul; verifies exact equivalence, then
+               writes BENCH_kernels.json (--threads defaults to all cores)
   artifacts    List available AOT artifacts
   info         Print environment / runtime info
   help         This message

@@ -88,14 +88,20 @@ impl GlueGen {
     }
 
     /// Pack `[BOS a... SEP b... SEP]` right-padded to seq; label position is
-    /// the last SEP.
+    /// the last SEP.  When the pair overflows `seq`, truncation replaces the
+    /// final kept token with SEP — otherwise the label position would land
+    /// on a content token and the model would be supervised there.
     fn pack_pair(&mut self, a: &[i32], b: &[i32]) -> (Vec<i32>, usize) {
         let mut toks = vec![BOS];
         toks.extend_from_slice(a);
         toks.push(SEP);
         toks.extend_from_slice(b);
         toks.push(SEP);
+        let truncated = toks.len() > self.seq;
         toks.truncate(self.seq);
+        if truncated {
+            *toks.last_mut().expect("seq >= 1") = SEP;
+        }
         let pos = toks.len() - 1;
         toks.resize(self.seq, super::vocabulary::PAD);
         (toks, pos)
@@ -258,6 +264,41 @@ mod tests {
                     c as f64 > 300.0 / task.n_classes() as f64 * 0.5,
                     "{task:?} class {k} underrepresented: {counts:?}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn label_pos_is_sep_at_every_seq_len() {
+        // truncation at small seq used to leave a content token at
+        // label_pos; every task/seq combination must supervise at SEP
+        for task in ALL_TASKS {
+            for seq in [8usize, 12, 16, 32] {
+                let mut g = GlueGen::new(task, Vocab::new(512), seq, 7);
+                for ex in g.examples(64) {
+                    assert_eq!(ex.tokens.len(), seq, "{task:?} seq {seq}");
+                    assert_eq!(
+                        ex.tokens[ex.label_pos],
+                        SEP,
+                        "{task:?} seq {seq}: label pos must be SEP"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paraphrase_pairs_agree_with_vocab_synonyms_at_odd_content_sizes() {
+        // vocab 300 has an odd content region — the synonym involution fix
+        // must keep MRPC positives consistent with Vocab::synonym
+        let vocab = Vocab::new(300);
+        let mut g = GlueGen::new(GlueTask::Mrpc, vocab.clone(), 32, 11);
+        for ex in g.examples(200) {
+            assert!(ex.label < 2);
+            for &t in &ex.tokens {
+                if vocab.is_content(t) {
+                    assert_eq!(vocab.synonym(vocab.synonym(t)), t);
+                }
             }
         }
     }

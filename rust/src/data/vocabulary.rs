@@ -86,9 +86,25 @@ impl Vocab {
 
     /// Fixed synonym involution over content tokens (used by the paraphrase
     /// tasks and by the corpus' paraphrase statements — same pairing).
+    ///
+    /// Adjacent content tokens pair up (0↔1, 2↔3, …); when `n_content` is
+    /// odd the last token is its own synonym — the old `(i + 1) %
+    /// n_content` wrap sent it to token 0 while 0 mapped to 1, silently
+    /// breaking the involution (and hence MRPC/QQP/STS-B labels) for vocab
+    /// sizes with odd content regions.  Non-content tokens (which used to
+    /// underflow the index math) pass through unchanged.
     pub fn synonym(&self, t: i32) -> i32 {
+        if !self.is_content(t) {
+            return t;
+        }
         let i = (t - self.content0) as usize;
-        let j = if i % 2 == 0 { (i + 1) % self.n_content } else { i - 1 };
+        let j = if i + 1 == self.n_content && self.n_content % 2 == 1 {
+            i // odd region: last token is a fixed point
+        } else if i % 2 == 0 {
+            i + 1
+        } else {
+            i - 1
+        };
         self.content0 + j as i32
     }
 
@@ -120,6 +136,41 @@ mod tests {
             }
             assert_eq!(prev_end as usize, size);
             assert!(v.n_content > 0);
+        }
+    }
+
+    #[test]
+    fn synonym_is_an_involution_for_every_content_token() {
+        // 300 and 517 give odd n_content, the rest even — both parities of
+        // the pairing (including the odd-region fixed point) must hold
+        let mut saw_odd = false;
+        let mut saw_even = false;
+        for size in [128usize, 256, 300, 512, 517, 1024, 2048] {
+            let v = Vocab::new(size);
+            match v.n_content % 2 {
+                1 => saw_odd = true,
+                _ => saw_even = true,
+            }
+            for i in 0..v.n_content {
+                let t = v.content0 + i as i32;
+                let s = v.synonym(t);
+                assert!(v.is_content(s), "synonym must stay in the content region");
+                assert_eq!(v.synonym(s), t, "size {size}: synonym must be an involution");
+                if v.n_content % 2 == 1 && i + 1 == v.n_content {
+                    assert_eq!(s, t, "odd region: last token is its own synonym");
+                } else {
+                    assert_ne!(s, t, "paired tokens must actually differ");
+                }
+            }
+        }
+        assert!(saw_odd && saw_even, "test sizes must cover both parities");
+    }
+
+    #[test]
+    fn synonym_passes_non_content_tokens_through() {
+        let v = Vocab::new(512);
+        for t in [PAD, BOS, SEP, v.subj0, v.rel0, v.obj0, v.pos0, v.neg0, v.content0 - 1] {
+            assert_eq!(v.synonym(t), t, "non-content token {t} must be unchanged");
         }
     }
 

@@ -1,0 +1,215 @@
+//! `qst bench-kernels`: host-kernel microbenchmarks → `BENCH_kernels.json`.
+//!
+//! Two comparisons per matrix size, each verified for exact equivalence
+//! before timing so a bench run doubles as an integration check:
+//!
+//! 1. f32 GEMM (`m×d·d×d`): naive triple loop vs cache-blocked vs
+//!    blocked+threaded — the backbone-forward shape that caps `bench-serve`.
+//! 2. W4 path: dequantize-to-f32-then-matmul vs the fused dequant-GEMM
+//!    (serial and threaded) straight from packed nibbles.
+
+use anyhow::{bail, Result};
+
+use super::gemm::{matmul, matmul_naive};
+use super::qgemm::w4_matmul;
+use super::threads::Threads;
+use crate::benchkit::{Bench, Json};
+use crate::quant::{dequantize_matrix_raw, quantize_matrix_raw};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct BenchKernelsOpts {
+    /// matrix sizes: each `d` benches an `m × d · d × d` GEMM
+    pub dims: Vec<usize>,
+    /// left-operand rows (a sequence's worth of hidden states)
+    pub m: usize,
+    /// worker count for the threaded variants
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchKernelsOpts {
+    fn default() -> Self {
+        BenchKernelsOpts { dims: vec![96, 256], m: 64, threads: 2, seed: 0 }
+    }
+}
+
+/// Median timings (ms) for one size; speedups are vs `naive_ms` for the
+/// GEMM family and vs `w4_dequant_ms` for the fused family.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelRow {
+    pub d: usize,
+    pub qblock: usize,
+    pub naive_ms: f64,
+    pub blocked_ms: f64,
+    pub threaded_ms: f64,
+    pub w4_dequant_ms: f64,
+    pub w4_fused_ms: f64,
+    pub w4_fused_threaded_ms: f64,
+}
+
+impl KernelRow {
+    pub fn blocked_speedup(&self) -> f64 {
+        self.naive_ms / self.blocked_ms.max(1e-12)
+    }
+
+    pub fn threaded_speedup(&self) -> f64 {
+        self.naive_ms / self.threaded_ms.max(1e-12)
+    }
+
+    pub fn fused_speedup(&self) -> f64 {
+        self.w4_dequant_ms / self.w4_fused_ms.max(1e-12)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchKernelsReport {
+    pub m: usize,
+    pub threads: usize,
+    pub rows: Vec<KernelRow>,
+}
+
+impl BenchKernelsReport {
+    pub fn to_json(&self) -> String {
+        let mut j = Json::new()
+            .str("bench", "kernels")
+            .int("m", self.m as u64)
+            .int("threads", self.threads as u64);
+        for r in &self.rows {
+            let d = r.d;
+            j = j
+                .num(&format!("gemm_d{d}_naive_ms"), r.naive_ms)
+                .num(&format!("gemm_d{d}_blocked_ms"), r.blocked_ms)
+                .num(&format!("gemm_d{d}_threaded_ms"), r.threaded_ms)
+                .num(&format!("gemm_d{d}_blocked_speedup"), r.blocked_speedup())
+                .num(&format!("gemm_d{d}_threaded_speedup"), r.threaded_speedup())
+                .int(&format!("w4_d{d}_qblock"), r.qblock as u64)
+                .num(&format!("w4_d{d}_dequant_matmul_ms"), r.w4_dequant_ms)
+                .num(&format!("w4_d{d}_fused_ms"), r.w4_fused_ms)
+                .num(&format!("w4_d{d}_fused_threaded_ms"), r.w4_fused_threaded_ms)
+                .num(&format!("w4_d{d}_fused_speedup"), r.fused_speedup());
+        }
+        j.finish()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            out.push_str(&format!(
+                "kernels d={}: naive {:.2} ms | blocked {:.2} ms ({:.2}x) | +{} threads {:.2} ms ({:.2}x) | w4 dequant+matmul {:.2} ms vs fused {:.2} ms ({:.2}x)\n",
+                r.d,
+                r.naive_ms,
+                r.blocked_ms,
+                r.blocked_speedup(),
+                self.threads,
+                r.threaded_ms,
+                r.threaded_speedup(),
+                r.w4_dequant_ms,
+                r.w4_fused_ms,
+                r.fused_speedup()
+            ));
+        }
+        out.pop();
+        out
+    }
+}
+
+/// Largest qblock in the quantizer's range that divides `d`.
+fn qblock_for(d: usize) -> Result<usize> {
+    for qb in [64usize, 32, 16, 8, 4, 2] {
+        if d % qb == 0 {
+            return Ok(qb);
+        }
+    }
+    bail!("dim {d} must be even to bench the W4 path");
+}
+
+pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
+    let m = opts.m.max(1);
+    let serial = Threads::new(1);
+    let pool = Threads::new(opts.threads.max(1));
+    let mut rows = Vec::with_capacity(opts.dims.len());
+    for &d in &opts.dims {
+        let qblock = qblock_for(d)?;
+        let mut rng = Rng::new(opts.seed ^ d as u64);
+        let a: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let (packed, scales) = quantize_matrix_raw(&b, d, d, "nf4", qblock);
+
+        // equivalence gate: never publish timings for mismatched kernels
+        let want = matmul_naive(&a, &b, m, d, d);
+        if matmul(&serial, &a, &b, m, d, d) != want || matmul(&pool, &a, &b, m, d, d) != want {
+            bail!("blocked/threaded GEMM diverged from naive at d={d}");
+        }
+        let wd = dequantize_matrix_raw(&packed, &scales, d, d, "nf4", qblock);
+        let w4_want = matmul(&serial, &a, &wd, m, d, d);
+        if w4_matmul(&serial, &a, &packed, &scales, m, d, d, "nf4", qblock) != w4_want
+            || w4_matmul(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock) != w4_want
+        {
+            bail!("fused dequant-GEMM diverged from dequantize-then-matmul at d={d}");
+        }
+
+        let naive = Bench::quick(&format!("kernels: naive gemm {m}x{d}x{d}"))
+            .run(|| matmul_naive(&a, &b, m, d, d));
+        let blocked = Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d}"))
+            .run(|| matmul(&serial, &a, &b, m, d, d));
+        let threaded =
+            Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d} ({} threads)", pool.count()))
+                .run(|| matmul(&pool, &a, &b, m, d, d));
+        let dequant = Bench::quick(&format!("kernels: w4 dequantize+matmul {m}x{d}x{d}")).run(|| {
+            let w = dequantize_matrix_raw(&packed, &scales, d, d, "nf4", qblock);
+            matmul(&serial, &a, &w, m, d, d)
+        });
+        let fused = Bench::quick(&format!("kernels: w4 fused dequant-gemm {m}x{d}x{d}"))
+            .run(|| w4_matmul(&serial, &a, &packed, &scales, m, d, d, "nf4", qblock));
+        let fused_threaded = Bench::quick(&format!(
+            "kernels: w4 fused dequant-gemm {m}x{d}x{d} ({} threads)",
+            pool.count()
+        ))
+        .run(|| w4_matmul(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock));
+
+        let gflop = 2.0 * (m * d * d) as f64 / 1e9;
+        threaded.throughput("GFLOP", gflop);
+        rows.push(KernelRow {
+            d,
+            qblock,
+            naive_ms: naive.median_secs * 1e3,
+            blocked_ms: blocked.median_secs * 1e3,
+            threaded_ms: threaded.median_secs * 1e3,
+            w4_dequant_ms: dequant.median_secs * 1e3,
+            w4_fused_ms: fused.median_secs * 1e3,
+            w4_fused_threaded_ms: fused_threaded.median_secs * 1e3,
+        });
+    }
+    Ok(BenchKernelsReport { m, threads: pool.count(), rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_runs_and_reports() {
+        // one small size keeps this a smoke test, not a benchmark
+        let rep = run_bench(&BenchKernelsOpts {
+            dims: vec![32],
+            m: 4,
+            threads: 2,
+            seed: 1,
+        })
+        .unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        let j = rep.to_json();
+        assert!(j.contains("\"bench\": \"kernels\""));
+        assert!(j.contains("gemm_d32_threaded_speedup"));
+        assert!(j.contains("w4_d32_fused_speedup"));
+        assert!(rep.summary().contains("d=32"));
+    }
+
+    #[test]
+    fn odd_dims_rejected() {
+        let mut o = BenchKernelsOpts::default();
+        o.dims = vec![33];
+        assert!(run_bench(&o).is_err());
+    }
+}

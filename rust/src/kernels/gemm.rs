@@ -1,0 +1,140 @@
+//! Cache-blocked f32 GEMM with deterministic row-partitioned threading.
+//!
+//! All variants compute `out[i,j] = Σ_l a[i,l]·b[l,j]` with the reduction
+//! over `l` performed in ascending order, so the naive, blocked, and
+//! threaded paths are **bit-identical**: blocking tiles only the `l` and
+//! `j` loops (which never reorders the additions contributing to one
+//! output element) and threading partitions output rows `i` across
+//! workers.  The kernels equivalence tests pin this with exact equality.
+
+use super::threads::Threads;
+
+/// k-tile: one stripe of `a`'s row plus the matching `b` rows stay hot.
+const KC: usize = 64;
+/// j-tile: 256 f32 = 1 KiB output/b-row segments, L1-friendly.
+const JC: usize = 256;
+
+/// Reference triple loop (ascending `l` accumulation). Kept for the
+/// equivalence tests and the `bench-kernels` baseline.
+pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Cache-blocked serial GEMM accumulating into `out` (callers must pass
+/// zeroed or partial-sum rows).  Inner loop runs contiguously over a
+/// `j`-segment of one `b` row and one `out` row, so it vectorizes.
+pub fn matmul_blocked_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(out.len(), m * n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + KC).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + JC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + j0..i * n + j1];
+                for l in l0..l1 {
+                    let al = arow[l];
+                    let brow = &b[l * n + j0..l * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += al * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        l0 = l1;
+    }
+}
+
+/// Blocked + threaded GEMM: `a[m,k] · b[k,n]`, output rows partitioned
+/// across `threads` workers.  Bit-identical to [`matmul_naive`].
+pub fn matmul(threads: &Threads, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    threads.par_rows(&mut out, n, |row0, run| {
+        let rows = run.len() / n;
+        matmul_blocked_into(run, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn rand(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise() {
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(1, 8, 8), (3, 64, 5), (17, 96, 96), (8, 300, 130)] {
+            let a = rand(&mut rng, m * k);
+            let b = rand(&mut rng, k * n);
+            let want = matmul_naive(&a, &b, m, k, n);
+            let mut got = vec![0f32; m * n];
+            matmul_blocked_into(&mut got, &a, &b, m, k, n);
+            assert_eq!(got, want, "blocked must be bit-identical ({m}x{k}x{n})");
+        }
+    }
+
+    #[test]
+    fn threaded_matches_naive_bitwise_all_counts() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (13, 128, 70);
+        let a = rand(&mut rng, m * k);
+        let b = rand(&mut rng, k * n);
+        let want = matmul_naive(&a, &b, m, k, n);
+        for t in [1usize, 2, 3, 4, 8] {
+            let got = matmul(&Threads::new(t), &a, &b, m, k, n);
+            assert_eq!(got, want, "threads={t} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn prop_gemm_equivalence() {
+        prop::check(16, 0x6E44, |rng| {
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 200);
+            let n = rng.range(1, 80);
+            let a = rand(rng, m * k);
+            let b = rand(rng, k * n);
+            let want = matmul_naive(&a, &b, m, k, n);
+            let got = matmul(&Threads::new(rng.range(1, 5)), &a, &b, m, k, n);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn identity_and_zero() {
+        let k = 32;
+        let mut eye = vec![0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        let mut rng = Rng::new(9);
+        let a = rand(&mut rng, 4 * k);
+        assert_eq!(matmul(&Threads::new(2), &a, &eye, 4, k, k), a);
+        let z = vec![0f32; k * 8];
+        assert!(matmul(&Threads::new(2), &a, &z, 4, k, 8).iter().all(|&v| v == 0.0));
+    }
+}

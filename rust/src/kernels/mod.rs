@@ -1,0 +1,29 @@
+//! Shared host compute layer: the kernels every host-side forward runs on.
+//!
+//! The paper's speed claim rests on the frozen 4-bit backbone dominating
+//! compute while the side network stays cheap; on the host-side reference
+//! backend that dominant cost is a handful of GEMM shapes.  This module
+//! centralizes them so serving ([`crate::serve::SyntheticEngine`]), the
+//! quantizer ([`crate::quant`]), and the benchmarks all share one tuned
+//! implementation instead of hand-rolled triple loops:
+//!
+//! * [`threads`] — [`Threads`], a scoped-thread pool that partitions
+//!   kernel *outputs* into disjoint whole-row runs; results are
+//!   bit-identical for any thread count (`--threads` is wall-clock only).
+//! * [`gemm`] — naive reference, cache-blocked serial, and
+//!   blocked+threaded f32 GEMM, all bit-identical by construction.
+//! * [`qgemm`] — fused W4 dequant-GEMM multiplying straight from packed
+//!   nibbles + double-quantized scales, exactly matching
+//!   dequantize-then-matmul without materializing the f32 weight.
+//! * [`bench`] — the `qst bench-kernels` runner emitting
+//!   `BENCH_kernels.json` (naive vs blocked vs blocked+threaded, fused
+//!   vs dequantize-then-matmul).
+
+pub mod bench;
+pub mod gemm;
+pub mod qgemm;
+pub mod threads;
+
+pub use gemm::{matmul, matmul_blocked_into, matmul_naive};
+pub use qgemm::{w4_matmul, w4_matmul_dq};
+pub use threads::{default_threads, set_default_threads, Threads};

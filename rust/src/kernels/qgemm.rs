@@ -1,0 +1,172 @@
+//! Fused W4 dequant-GEMM: multiply straight out of the packed nibble
+//! stream.
+//!
+//! `y[m,n] = x[m,k] · Ŵ[k,n]` where `Ŵ[l,j] = code[nibble(l,j)] ·
+//! scale[l/qblock, j]` — the quantized weight is never materialized as a
+//! full f32 matrix.  The only f32 side table is the per-block scale
+//! stripe (`k/qblock × n`, 1/qblock-th of the weight count), which the
+//! double-quantized entry point reconstructs once via
+//! [`crate::quant::dequantize_scales`].
+//!
+//! Floating-point order is pinned to the reference path: for each output
+//! element the `l` reduction ascends, and each decoded weight is the same
+//! single-rounded product `code * scale` the dequantizer produces — so
+//! the fused result is **exactly equal** to `dequantize_matrix_raw`
+//! followed by [`super::gemm::matmul`], which the equivalence tests
+//! assert bit-for-bit.  Threading partitions output rows, as everywhere
+//! in [`super`].
+
+use super::threads::Threads;
+use crate::quant::codebook::codebook;
+use crate::quant::dequantize_scales;
+
+/// Fused dequant-GEMM from packed nibbles + f32 block scales.
+///
+/// Layouts match [`crate::quant::quantize_matrix_raw`]: `packed[k/2, n]`
+/// holds row `2i` in the low nibble and `2i+1` in the high nibble of byte
+/// `[i, j]`; `scales[k/qblock, n]` are per-(stripe, column) absmax.
+pub fn w4_matmul(
+    threads: &Threads,
+    x: &[f32],
+    packed: &[u8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qdtype: &str,
+    qblock: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(k % 2, 0);
+    assert_eq!(packed.len(), (k / 2) * n);
+    assert_eq!(k % qblock, 0, "K must divide by qblock");
+    assert_eq!(qblock % 2, 0, "qblock must be even (nibble pairs share a block)");
+    assert_eq!(scales.len(), (k / qblock) * n);
+    let code = codebook(qdtype);
+    let mut out = vec![0f32; m * n];
+    // each run re-decodes the full nibble stream (O(k·n), independent of its
+    // row count), so cap workers at m/16: with ≥16 rows per run the MAC work
+    // (2·rows·k·n flops) keeps duplicated decode under ~3% of the total
+    let threads = Threads::new(threads.count().min((m / 16).max(1)));
+    threads.par_rows(&mut out, n, |row0, run| {
+        let rows = run.len() / n;
+        // decode each nibble row-pair once per run, then rank-1-update all
+        // of this run's output rows from the two decoded rows — the only
+        // f32 weight state alive is this 2×n pair, never the full matrix
+        let mut w0 = vec![0f32; n];
+        let mut w1 = vec![0f32; n];
+        for half in 0..k / 2 {
+            // rows 2·half and 2·half+1 share a scale stripe (qblock even)
+            let srow = &scales[(2 * half / qblock) * n..][..n];
+            let prow = &packed[half * n..(half + 1) * n];
+            for j in 0..n {
+                let s = srow[j];
+                w0[j] = code[(prow[j] & 0xF) as usize] * s;
+                w1[j] = code[(prow[j] >> 4) as usize] * s;
+            }
+            for r in 0..rows {
+                let x0 = x[(row0 + r) * k + 2 * half];
+                let x1 = x[(row0 + r) * k + 2 * half + 1];
+                let orow = &mut run[r * n..(r + 1) * n];
+                // two separate passes keep the ascending-l rounding order
+                for (o, &wv) in orow.iter_mut().zip(&w0) {
+                    *o += x0 * wv;
+                }
+                for (o, &wv) in orow.iter_mut().zip(&w1) {
+                    *o += x1 * wv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Fused dequant-GEMM from the *double-quantized* storage format
+/// (8-bit scales + per-group `gabs`/`gmean`) — the exact tensor set a
+/// [`crate::quant::QMatrix`] carries.
+#[allow(clippy::too_many_arguments)]
+pub fn w4_matmul_dq(
+    threads: &Threads,
+    x: &[f32],
+    packed: &[u8],
+    q8: &[i8],
+    gabs: &[f32],
+    gmean: &[f32],
+    qgroup: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    qdtype: &str,
+    qblock: usize,
+) -> Vec<f32> {
+    let scales = dequantize_scales(q8, gabs, gmean, qgroup);
+    w4_matmul(threads, x, packed, &scales, m, k, n, qdtype, qblock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::matmul;
+    use crate::quant::{dequantize_matrix_raw, quantize_matrix_raw, quantize_scales};
+    use crate::util::{prop, rng::Rng};
+
+    fn rand(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn fused_matches_dequant_then_matmul_exactly() {
+        let mut rng = Rng::new(21);
+        // m=5 collapses to the serial path (worker cap is m/16); m=64 runs
+        // 3 genuine workers, covering the row-partitioned fused path
+        for (m, k, n) in [(5usize, 128usize, 48usize), (64, 128, 48)] {
+            for qdtype in ["nf4", "fp4"] {
+                let w = rand(&mut rng, k * n, 0.4);
+                let x = rand(&mut rng, m * k, 1.0);
+                let (packed, scales) = quantize_matrix_raw(&w, k, n, qdtype, 64);
+                let t = Threads::new(3);
+                let fused = w4_matmul(&t, &x, &packed, &scales, m, k, n, qdtype, 64);
+                let wd = dequantize_matrix_raw(&packed, &scales, k, n, qdtype, 64);
+                let reference = matmul(&t, &x, &wd, m, k, n);
+                assert_eq!(
+                    fused, reference,
+                    "{qdtype} m={m}: fused must match dequant+matmul bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn double_quant_entry_matches_scale_roundtrip() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (3, 256, 20);
+        let w = rand(&mut rng, k * n, 0.7);
+        let x = rand(&mut rng, m * k, 1.0);
+        let (packed, scales) = quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let (q8, gabs, gmean) = quantize_scales(&scales, 256);
+        let t = Threads::new(2);
+        let fused = w4_matmul_dq(&t, &x, &packed, &q8, &gabs, &gmean, 256, m, k, n, "nf4", 64);
+        let scales_back = crate::quant::dequantize_scales(&q8, &gabs, &gmean, 256);
+        let want = w4_matmul(&t, &x, &packed, &scales_back, m, k, n, "nf4", 64);
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn prop_fused_equivalence_all_thread_counts() {
+        prop::check(12, 0x5734, |rng| {
+            let m = rng.range(1, 80); // spans the serial (<16) and threaded regimes
+            let k = 64 * rng.range(1, 4);
+            let n = rng.range(1, 40);
+            let qdtype = if rng.bool(0.5) { "nf4" } else { "fp4" };
+            let w = rand(rng, k * n, 0.5);
+            let x = rand(rng, m * k, 1.0);
+            let (packed, scales) = quantize_matrix_raw(&w, k, n, qdtype, 64);
+            let wd = dequantize_matrix_raw(&packed, &scales, k, n, qdtype, 64);
+            let want = matmul(&Threads::new(1), &x, &wd, m, k, n);
+            for t in [1usize, 2, 4] {
+                let got = w4_matmul(&Threads::new(t), &x, &packed, &scales, m, k, n, qdtype, 64);
+                assert_eq!(got, want, "{qdtype} threads={t}");
+            }
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Scoped-thread pool for host kernels (std only).
+//!
+//! Every parallel kernel in this crate partitions its *output* into
+//! disjoint runs of whole rows and hands each run to one scoped thread.
+//! Each row is computed by exactly one thread with the same serial
+//! per-row algorithm, so results are bit-identical for any thread count
+//! — the `--threads` flag is a pure wall-clock knob, never a numerics
+//! knob (the serve tests assert this by comparing N=1 against N=4).
+//!
+//! The process-wide default is 1 thread; `set_default_threads` (wired to
+//! `--threads` in `cli.rs`/`main.rs`) raises it for code that constructs
+//! [`Threads::default()`], while kernels callers that need an explicit
+//! count use [`Threads::new`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Serializes tests that mutate the process-wide default (kernel results
+/// never depend on it, but assertions *about* the global itself do).
+#[cfg(test)]
+pub(crate) static TEST_GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Set the process-wide default worker count (clamped to >= 1).
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current process-wide default worker count.
+pub fn default_threads() -> usize {
+    DEFAULT_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// A worker-count handle for row-partitioned kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Threads {
+    n: usize,
+}
+
+impl Default for Threads {
+    fn default() -> Self {
+        Threads { n: default_threads() }
+    }
+}
+
+impl Threads {
+    pub fn new(n: usize) -> Self {
+        Threads { n: n.max(1) }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Split `out` into up to `count()` contiguous runs of whole rows
+    /// (`row_len` elements each) and run `f(first_row, run)` for every run,
+    /// on scoped threads when more than one run is formed.
+    ///
+    /// `f` must compute each row of its run independently of the split —
+    /// the single-threaded path calls `f(0, out)` once, so any `f` that
+    /// only reads shared inputs and writes its own rows is automatically
+    /// deterministic across thread counts.
+    pub fn par_rows<T, F>(&self, out: &mut [T], row_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(row_len > 0, "row_len must be positive");
+        assert_eq!(out.len() % row_len, 0, "output must be whole rows");
+        let rows = out.len() / row_len;
+        let workers = self.n.min(rows).max(1);
+        if workers == 1 {
+            f(0, out);
+            return;
+        }
+        let per = rows.div_ceil(workers);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = out;
+            let mut first_row = 0usize;
+            while !rest.is_empty() {
+                let take = per.min(rest.len() / row_len);
+                let (run, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+                rest = tail;
+                let row0 = first_row;
+                scope.spawn(move || f(row0, run));
+                first_row += take;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let mut out = vec![0u32; 12];
+        Threads::new(1).par_rows(&mut out, 4, |row0, run| {
+            for (r, row) in run.chunks_mut(4).enumerate() {
+                row.fill((row0 + r) as u32);
+            }
+        });
+        assert_eq!(out, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn every_row_visited_exactly_once_any_count() {
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let rows = 13;
+            let mut out = vec![0u32; rows * 3];
+            Threads::new(threads).par_rows(&mut out, 3, |row0, run| {
+                for (r, row) in run.chunks_mut(3).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + r) as u32 + 1; // += exposes double visits
+                    }
+                }
+            });
+            let want: Vec<u32> =
+                (0..rows).flat_map(|r| [r as u32 + 1; 3]).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows_is_fine() {
+        let mut out = vec![0u8; 2];
+        Threads::new(64).par_rows(&mut out, 1, |row0, run| {
+            run[0] = row0 as u8 + 1;
+        });
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn default_threads_clamps_and_roundtrips() {
+        let _guard = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = default_threads();
+        set_default_threads(0);
+        assert_eq!(default_threads(), 1);
+        set_default_threads(3);
+        assert_eq!(default_threads(), 3);
+        assert_eq!(Threads::default().count(), 3);
+        set_default_threads(before);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_output_rejected() {
+        let mut out = vec![0f32; 5];
+        Threads::new(2).par_rows(&mut out, 2, |_, _| {});
+    }
+}

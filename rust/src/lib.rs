@@ -9,6 +9,8 @@
 //!
 //! Module map (see DESIGN.md §9):
 //! * [`tensor`]     — host tensors + PJRT literal marshaling
+//! * [`kernels`]    — shared host compute layer: blocked/threaded f32 GEMM +
+//!   fused W4 dequant-GEMM (serve forwards, quantizer, `bench-kernels`)
 //! * [`quant`]      — NF4/FP4 blockwise + double quantization (mirrors `python/compile/quant.py`)
 //! * [`runtime`]    — PJRT client, artifact manifests, executor with device-resident state
 //! * [`coordinator`] — trainer, evaluator, LR schedules, checkpoints, metrics
@@ -25,6 +27,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

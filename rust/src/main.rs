@@ -29,6 +29,11 @@ fn glue_task(name: &str) -> Result<GlueTask> {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    if args.get("threads").is_some() {
+        // host kernels (serve forwards, quantizer) honor --threads globally;
+        // results are bit-identical for any value — wall-clock only
+        qst::kernels::set_default_threads(args.usize_or("threads", 1)?);
+    }
     match args.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -85,7 +90,10 @@ fn run(argv: &[String]) -> Result<()> {
                         / w.len() as f64;
                     mats += 1;
                     total += t.bytes();
-                    qbytes += p.len() + s.len() / 2; // packed + ~8-bit scales
+                    // packed nibbles + 8-bit double-quantized scales (1 byte
+                    // each) + per-group f32 gabs/gmean — matches the 64/256
+                    // storage_bits_per_param reported below
+                    qbytes += p.len() + s.len() + 8 * s.len().div_ceil(256);
                 }
             }
             println!(
@@ -147,6 +155,7 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "bench-kernels" => cmd_bench_kernels(&args),
         other => {
             eprintln!("error: unknown command '{other}'\n");
             eprint!("{USAGE}");
@@ -250,7 +259,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let seq = args.usize_or("seq", 64)?;
         let seed = args.u64_or("seed", 0)?;
         let n_tasks = args.usize_or("num-tasks", 2)?.max(1);
-        let engine = serve::SyntheticEngine::small(seed, seq);
+        let preset = serve::EnginePreset::parse(&args.str_or("preset", "small"))?;
+        let mut engine = preset.build(seed, seq);
+        engine.set_threads(args.usize_or("threads", 1)?);
         let mut server = Server::new(engine, cfg);
         for i in 0..n_tasks {
             server.registry.register_synthetic(&format!("task{i}"), seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
@@ -300,10 +311,38 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         registry_bytes: args.u64_or("registry-bytes", 64 << 20)? as usize,
         burst: args.usize_or("burst", 64)?,
         seed: args.u64_or("seed", 0)?,
+        threads: args.usize_or("threads", 1)?,
+        preset: serve::EnginePreset::parse(&args.str_or("preset", "small"))?,
     };
     let report = serve::workload::run_bench(&opts)?;
     println!("{}", report.summary());
     let json_path = args.str_or("json", "BENCH_serve.json");
+    std::fs::write(&json_path, report.to_json())
+        .with_context(|| format!("writing {json_path}"))?;
+    println!("wrote {json_path}");
+    Ok(())
+}
+
+fn cmd_bench_kernels(args: &Args) -> Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let dims: Vec<usize> = args
+        .str_or("dims", "96,256")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .with_context(|| format!("--dims expects comma-separated integers, got '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    let opts = qst::kernels::bench::BenchKernelsOpts {
+        dims,
+        m: args.usize_or("m", 64)?,
+        threads: args.usize_or("threads", cores)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let report = qst::kernels::bench::run_bench(&opts)?;
+    println!("{}", report.summary());
+    let json_path = args.str_or("json", "BENCH_kernels.json");
     std::fs::write(&json_path, report.to_json())
         .with_context(|| format!("writing {json_path}"))?;
     println!("wrote {json_path}");

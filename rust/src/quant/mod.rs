@@ -10,61 +10,77 @@
 
 pub mod codebook;
 
+use crate::kernels::Threads;
 use crate::tensor::{DType, HostTensor};
 use codebook::{codebook, nearest_code};
 
 /// Per-block absmax scales for a column-stripe layout: W[K, N] split into
 /// (qblock x 1) stripes. Returns (packed u8[K/2, N], scales f32[K/qblock, N]).
+///
+/// Both passes run row-partitioned on [`Threads::default`] (scale stripes,
+/// then packed nibble rows); every output element has exactly one writer,
+/// so results are identical for any worker count.
 pub fn quantize_matrix_raw(w: &[f32], k: usize, n: usize, qdtype: &str, qblock: usize)
     -> (Vec<u8>, Vec<f32>) {
     assert_eq!(w.len(), k * n);
     assert_eq!(k % qblock, 0, "K must divide by qblock");
     assert_eq!(k % 2, 0);
     let code = codebook(qdtype);
+    let threads = Threads::default();
     let kb = k / qblock;
-    let mut scales = vec![0f32; kb * n];
     // absmax per (stripe, col)
-    for b in 0..kb {
-        for c in 0..n {
-            let mut m = 0f32;
-            for r in 0..qblock {
-                m = m.max(w[(b * qblock + r) * n + c].abs());
+    let mut scales = vec![0f32; kb * n];
+    threads.par_rows(&mut scales, n, |b0, run| {
+        for (bb, srow) in run.chunks_mut(n).enumerate() {
+            let b = b0 + bb;
+            for (c, s) in srow.iter_mut().enumerate() {
+                let mut m = 0f32;
+                for r in 0..qblock {
+                    m = m.max(w[(b * qblock + r) * n + c].abs());
+                }
+                *s = m;
             }
-            scales[b * n + c] = m;
         }
-    }
+    });
     // nearest-code packing: codes for rows 2i (low) and 2i+1 (high)
     let mut packed = vec![0u8; (k / 2) * n];
-    for half in 0..k / 2 {
-        for c in 0..n {
-            let get_code = |row: usize| -> u8 {
-                let s = scales[(row / qblock) * n + c];
-                let safe = if s == 0.0 { 1.0 } else { s };
-                nearest_code(w[row * n + c] / safe, code)
-            };
-            let lo = get_code(2 * half);
-            let hi = get_code(2 * half + 1);
-            packed[half * n + c] = lo | (hi << 4);
+    let scales_ref = &scales;
+    threads.par_rows(&mut packed, n, |half0, run| {
+        for (hh, prow) in run.chunks_mut(n).enumerate() {
+            let half = half0 + hh;
+            for (c, p) in prow.iter_mut().enumerate() {
+                let get_code = |row: usize| -> u8 {
+                    let s = scales_ref[(row / qblock) * n + c];
+                    let safe = if s == 0.0 { 1.0 } else { s };
+                    nearest_code(w[row * n + c] / safe, code)
+                };
+                *p = get_code(2 * half) | (get_code(2 * half + 1) << 4);
+            }
         }
-    }
+    });
     (packed, scales)
 }
 
-/// Dequantize a column-stripe matrix back to f32 (for tests / analysis).
+/// Dequantize a column-stripe matrix back to f32 (for tests / analysis),
+/// row-partitioned on [`Threads::default`] with contiguous row writes.
 pub fn dequantize_matrix_raw(packed: &[u8], scales: &[f32], k: usize, n: usize,
                              qdtype: &str, qblock: usize) -> Vec<f32> {
+    assert_eq!(k % 2, 0);
+    assert_eq!(packed.len(), (k / 2) * n);
     let code = codebook(qdtype);
     let mut w = vec![0f32; k * n];
-    for half in 0..k / 2 {
-        for c in 0..n {
-            let byte = packed[half * n + c];
-            for (off, nib) in [(0usize, byte & 0xF), (1, byte >> 4)] {
-                let row = 2 * half + off;
-                let s = scales[(row / qblock) * n + c];
-                w[row * n + c] = code[nib as usize] * s;
+    Threads::default().par_rows(&mut w, n, |row0, run| {
+        for (rr, wrow) in run.chunks_mut(n).enumerate() {
+            let row = row0 + rr;
+            let prow = &packed[(row / 2) * n..(row / 2 + 1) * n];
+            let srow = &scales[(row / qblock) * n..][..n];
+            let hi = row % 2 == 1;
+            for ((v, &byte), &s) in wrow.iter_mut().zip(prow).zip(srow) {
+                let nib = if hi { byte >> 4 } else { byte & 0xF };
+                *v = code[nib as usize] * s;
             }
         }
-    }
+    });
     w
 }
 
@@ -196,6 +212,25 @@ mod tests {
     #[test]
     fn storage_bits_matches_paper() {
         assert!((storage_bits_per_param(64, 256) - 4.127).abs() < 0.01);
+    }
+
+    #[test]
+    fn quantize_identical_across_thread_counts() {
+        let mut rng = Rng::new(5);
+        let (k, n) = (256, 33);
+        let w = rand_matrix(&mut rng, k, n, 0.8);
+        let baseline = quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let back1 = dequantize_matrix_raw(&baseline.0, &baseline.1, k, n, "nf4", 64);
+        let _guard = crate::kernels::threads::TEST_GLOBAL_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let before = crate::kernels::default_threads();
+        crate::kernels::set_default_threads(4);
+        let threaded = quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let back4 = dequantize_matrix_raw(&threaded.0, &threaded.1, k, n, "nf4", 64);
+        crate::kernels::set_default_threads(before);
+        assert_eq!(baseline, threaded, "packing must not depend on worker count");
+        assert_eq!(back1, back4, "dequant must not depend on worker count");
     }
 
     #[test]

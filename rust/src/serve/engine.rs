@@ -26,6 +26,7 @@ use anyhow::{bail, Context, Result};
 use super::batcher::query_pos;
 use super::registry::SideNetwork;
 use super::Hidden;
+use crate::kernels::{gemm, Threads};
 use crate::runtime::{Executor, Role, Runtime};
 use crate::tensor::{DType, HostTensor};
 use crate::util::rng::Rng;
@@ -66,6 +67,47 @@ struct SideWeights {
     head: Vec<f32>,
 }
 
+/// Built-in [`SyntheticEngine`] shapes, selectable via `--preset`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnginePreset {
+    /// d=96, 6 layers — the seed default for tests and quick benches.
+    Small,
+    /// d=256, 8 layers — intractable on the seed's naive triple loops;
+    /// unlocked by the blocked/threaded kernels.
+    Large,
+}
+
+impl EnginePreset {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "small" => Ok(EnginePreset::Small),
+            "large" => Ok(EnginePreset::Large),
+            other => bail!("unknown preset '{other}' (expected 'small' or 'large')"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnginePreset::Small => "small",
+            EnginePreset::Large => "large",
+        }
+    }
+
+    pub fn vocab(self) -> usize {
+        match self {
+            EnginePreset::Small => SyntheticEngine::SMALL_VOCAB,
+            EnginePreset::Large => SyntheticEngine::LARGE_VOCAB,
+        }
+    }
+
+    pub fn build(self, seed: u64, seq: usize) -> SyntheticEngine {
+        match self {
+            EnginePreset::Small => SyntheticEngine::small(seed, seq),
+            EnginePreset::Large => SyntheticEngine::large(seed, seq),
+        }
+    }
+}
+
 /// Deterministic host-side QST serving reference (see module doc).
 pub struct SyntheticEngine {
     pub d: usize,
@@ -79,6 +121,9 @@ pub struct SyntheticEngine {
     w: Vec<Vec<f32>>,
     side_cache: HashMap<u64, Rc<SideWeights>>,
     id: u64,
+    /// worker count for the blocked GEMM kernels; results are bit-identical
+    /// for any value (see [`crate::kernels::threads`])
+    threads: Threads,
     /// rows that actually ran the frozen forward (cache-skipped rows don't)
     pub backbone_rows: u64,
 }
@@ -101,6 +146,7 @@ impl SyntheticEngine {
             w,
             side_cache: HashMap::new(),
             id: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xB5,
+            threads: Threads::default(),
             backbone_rows: 0,
         }
     }
@@ -108,10 +154,30 @@ impl SyntheticEngine {
     /// Vocab of the [`SyntheticEngine::small`] configuration.
     pub const SMALL_VOCAB: usize = 256;
 
+    /// Vocab of the [`SyntheticEngine::large`] configuration.
+    pub const LARGE_VOCAB: usize = 512;
+
     /// Small default used by tests and `bench-serve`: heavy backbone
     /// (d=96, 6 layers) vs light side nets (width 8).
     pub fn small(seed: u64, seq: usize) -> Self {
         SyntheticEngine::new(seed, 96, 6, Self::SMALL_VOCAB, seq, 12)
+    }
+
+    /// Big preset (d=256, 8 layers, width-16 side nets): ~9x the backbone
+    /// FLOPs of [`SyntheticEngine::small`], serviceable only because the
+    /// forwards run on the blocked/threaded kernels.
+    pub fn large(seed: u64, seq: usize) -> Self {
+        SyntheticEngine::new(seed, 256, 8, Self::LARGE_VOCAB, seq, 16)
+    }
+
+    /// Set the kernel worker count (clamped to >= 1).  Purely a wall-clock
+    /// knob: every forward is bit-identical across thread counts.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = Threads::new(n);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads.count()
     }
 
     /// Bytes of one row's hidden-state bundle (for cache sizing): the
@@ -149,41 +215,54 @@ impl Engine for SyntheticEngine {
 
     fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>> {
         let (d, seq) = (self.d, self.seq);
-        let mut out = Vec::with_capacity(rows.len());
+        if rows.is_empty() {
+            return Ok(vec![]);
+        }
         for row in rows {
             if row.len() != seq {
                 bail!("backbone row must be padded to {seq} (got {})", row.len());
             }
-            let mut data = Vec::with_capacity((self.layers + 1) * seq * d);
-            // h0 = embedding lookup
-            let mut h = vec![0f32; seq * d];
+        }
+        // All prompts run as one [rows·seq, d] activation so the blocked
+        // kernels see enough rows to partition; every activation row depends
+        // only on its own prompt, so outputs stay batch-invariant.
+        let total = rows.len() * seq;
+        let mut h0 = vec![0f32; total * d];
+        for (r, row) in rows.iter().enumerate() {
             for (t, &tok) in row.iter().enumerate() {
                 let tok = (tok.max(0) as usize) % self.vocab;
-                h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+                h0[(r * seq + t) * d..(r * seq + t + 1) * d]
+                    .copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
             }
-            data.extend_from_slice(&h);
-            // residual tanh layers: h' = tanh(h·W + h)
-            for wl in &self.w {
-                let mut next = vec![0f32; seq * d];
-                for t in 0..seq {
-                    let hrow = &h[t * d..(t + 1) * d];
-                    let nrow = &mut next[t * d..(t + 1) * d];
-                    for (j, &hj) in hrow.iter().enumerate() {
-                        if hj == 0.0 {
-                            continue;
-                        }
-                        let wrow = &wl[j * d..(j + 1) * d];
-                        for o in 0..d {
-                            nrow[o] += hj * wrow[o];
-                        }
-                    }
-                    for (o, n) in nrow.iter_mut().enumerate() {
-                        *n = (*n + hrow[o]).tanh();
+        }
+        // residual tanh layers: h' = tanh(h·W + h).  Each layer's states are
+        // sliced into the per-row bundles as soon as they're produced, so
+        // only the current/next activations stay alive beyond the bundles.
+        let mut datas: Vec<Vec<f32>> =
+            rows.iter().map(|_| Vec::with_capacity((self.layers + 1) * seq * d)).collect();
+        fn append_level(datas: &mut [Vec<f32>], level: &[f32], per_row: usize) {
+            for (r, data) in datas.iter_mut().enumerate() {
+                data.extend_from_slice(&level[r * per_row..(r + 1) * per_row]);
+            }
+        }
+        append_level(&mut datas, &h0, seq * d);
+        let mut h = h0;
+        for wl in &self.w {
+            let mut next = gemm::matmul(&self.threads, &h, wl, total, d, d);
+            let h_ref = &h;
+            self.threads.par_rows(&mut next, d, |row0, run| {
+                for (rr, nrow) in run.chunks_mut(d).enumerate() {
+                    let hrow = &h_ref[(row0 + rr) * d..(row0 + rr + 1) * d];
+                    for (n, &hv) in nrow.iter_mut().zip(hrow) {
+                        *n = (*n + hv).tanh();
                     }
                 }
-                data.extend_from_slice(&next);
-                h = next;
-            }
+            });
+            append_level(&mut datas, &next, seq * d);
+            h = next;
+        }
+        let mut out = Vec::with_capacity(rows.len());
+        for (row, data) in rows.iter().zip(datas) {
             self.backbone_rows += 1;
             out.push(Hidden {
                 key: super::cache::prompt_key(self.id, row),
@@ -207,8 +286,7 @@ impl Engine for SyntheticEngine {
         let (d, seq, layers, vocab) = (self.d, self.seq, self.layers, self.vocab);
         let dg = sw.dg;
         let per_layer = seq * d;
-        let mut out = Vec::with_capacity(rows.len());
-        for (hidden, row) in hiddens.iter().zip(rows) {
+        for hidden in hiddens {
             if hidden.data.len() != (layers + 1) * per_layer {
                 bail!(
                     "hidden bundle has {} floats, expected {} — wrong backbone?",
@@ -216,45 +294,35 @@ impl Engine for SyntheticEngine {
                     (layers + 1) * per_layer
                 );
             }
-            // ladder: z = tanh(z·mix + down(h_l)), seeded by z0 = down(h0)
-            let pos = query_pos(row);
-            let down_at = |l: usize, z: &mut [f32]| {
-                let h = &hidden.data[l * per_layer + pos * d..l * per_layer + (pos + 1) * d];
-                for (j, &hj) in h.iter().enumerate() {
-                    if hj == 0.0 {
-                        continue;
-                    }
-                    let drow = &sw.down[j * dg..(j + 1) * dg];
-                    for g in 0..dg {
-                        z[g] += hj * drow[g];
-                    }
-                }
-            };
-            let mut z = vec![0f32; dg];
-            down_at(0, &mut z);
-            for l in 1..=layers {
-                let mut next = vec![0f32; dg];
-                down_at(l, &mut next);
-                let mixl = &sw.mix[l - 1];
-                for (g, nz) in next.iter_mut().enumerate() {
-                    let mut acc = *nz;
-                    for (j, &zj) in z.iter().enumerate() {
-                        acc += zj * mixl[j * dg + g];
-                    }
-                    *nz = acc.tanh();
-                }
-                z = next;
-            }
-            let mut logits = vec![0f32; vocab];
-            for (g, &zg) in z.iter().enumerate() {
-                let hrow = &sw.head[g * vocab..(g + 1) * vocab];
-                for v in 0..vocab {
-                    logits[v] += zg * hrow[v];
-                }
-            }
-            out.push(logits);
         }
-        Ok(out)
+        if rows.is_empty() {
+            return Ok(vec![]);
+        }
+        // Batch the whole micro-batch through each ladder step: one
+        // [rows, d] gather per layer feeds the shared GEMM kernels; rows
+        // stay independent, so per-request results are batch-invariant.
+        let nr = rows.len();
+        let gather = |l: usize| -> Vec<f32> {
+            let mut g = vec![0f32; nr * d];
+            for (r, (hidden, row)) in hiddens.iter().zip(rows).enumerate() {
+                let pos = query_pos(row);
+                let src = &hidden.data[l * per_layer + pos * d..l * per_layer + (pos + 1) * d];
+                g[r * d..(r + 1) * d].copy_from_slice(src);
+            }
+            g
+        };
+        // ladder: z = tanh(z·mix + down(h_l)), seeded by z0 = down(h0)
+        let mut z = gemm::matmul(&self.threads, &gather(0), &sw.down, nr, d, dg);
+        for l in 1..=layers {
+            let mut next = gemm::matmul(&self.threads, &gather(l), &sw.down, nr, d, dg);
+            gemm::matmul_blocked_into(&mut next, &z, &sw.mix[l - 1], nr, dg, dg);
+            for v in next.iter_mut() {
+                *v = v.tanh();
+            }
+            z = next;
+        }
+        let logits = gemm::matmul(&self.threads, &z, &sw.head, nr, dg, vocab);
+        Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
     }
 }
 
@@ -472,6 +540,52 @@ mod tests {
     fn rejects_unpadded_rows() {
         let mut e = SyntheticEngine::small(1, 16);
         assert!(e.backbone(&[vec![1, 2, 3]]).is_err());
+    }
+
+    #[test]
+    fn threaded_forward_bit_identical_to_single_threaded() {
+        let rows: Vec<Vec<i32>> = (0..5).map(|i| vec![i + 2; 16]).collect();
+        let net = synth_net("t", 9);
+        let run = |threads: usize| {
+            let mut e = SyntheticEngine::small(3, 16);
+            e.set_threads(threads);
+            let h: Vec<Rc<Hidden>> =
+                e.backbone(&rows).unwrap().into_iter().map(Rc::new).collect();
+            let logits = e.side(&net, &h, &rows).unwrap();
+            (h.iter().map(|x| x.data.clone()).collect::<Vec<_>>(), logits)
+        };
+        let (h1, l1) = run(1);
+        for t in [2usize, 4, 8] {
+            let (ht, lt) = run(t);
+            assert_eq!(h1, ht, "backbone must be bit-identical at {t} threads");
+            assert_eq!(l1, lt, "side must be bit-identical at {t} threads");
+        }
+    }
+
+    #[test]
+    fn large_preset_serves_deterministically() {
+        let mut e = SyntheticEngine::large(5, 8);
+        assert_eq!((e.d, e.layers, e.vocab), (256, 8, SyntheticEngine::LARGE_VOCAB));
+        e.set_threads(2);
+        let row = vec![17i32, 300, 2, 0, 0, 0, 0, 0];
+        let h: Vec<Rc<Hidden>> =
+            e.backbone(std::slice::from_ref(&row)).unwrap().into_iter().map(Rc::new).collect();
+        let net = synth_net("big", 77);
+        let rows = vec![row];
+        let a = e.side(&net, &h, &rows).unwrap();
+        let b = e.side(&net, &h, &rows).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), SyntheticEngine::LARGE_VOCAB);
+        assert!(a[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn preset_parse_roundtrip() {
+        for p in [EnginePreset::Small, EnginePreset::Large] {
+            assert_eq!(EnginePreset::parse(p.name()).unwrap(), p);
+            assert_eq!(p.build(1, 8).vocab, p.vocab());
+        }
+        assert!(EnginePreset::parse("huge").is_err());
     }
 
     #[test]

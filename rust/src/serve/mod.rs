@@ -36,7 +36,8 @@
 //!   demand), so one server can advertise more tasks than fit in memory.
 //! * [`batcher`] — multi-task FIFO queue forming per-task micro-batches.
 //! * [`engine`] — pluggable backends: a deterministic host-side reference
-//!   of the QST split (used by tests and `bench-serve`) and an
+//!   of the QST split (used by tests and `bench-serve`, forwards running
+//!   on the blocked/threaded GEMMs in [`crate::kernels`]) and an
 //!   [`crate::runtime::Executor`]-backed artifact path with device-resident
 //!   per-task state.
 //! * [`stats`] — throughput, batch shape, and p50/p95 latency telemetry.
@@ -56,7 +57,7 @@ use anyhow::{bail, Result};
 
 pub use batcher::{MicroBatch, RequestQueue};
 pub use cache::HiddenCache;
-pub use engine::{Engine, ExecutorEngine, SyntheticEngine};
+pub use engine::{Engine, EnginePreset, ExecutorEngine, SyntheticEngine};
 pub use registry::{Registry, SideNetwork};
 pub use stats::ServeStats;
 
@@ -336,25 +337,39 @@ mod tests {
 
     #[test]
     fn batched_equals_unbatched() {
-        // the server (batching + dedupe + cache) must be a pure optimization
-        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4], vec![1, 2, 3], vec![9, 9]];
-        let mut s = server(16 << 20);
-        let mut ids = vec![];
-        for p in &prompts {
-            ids.push(s.submit("sst2", p).unwrap());
-        }
-        let mut got = s.drain().unwrap();
-        got.sort_by_key(|r| r.id);
+        // the server (batching + dedupe + cache + threading) must be a pure
+        // optimization; the single-threaded unbatched reference is the spec
+        // for every thread count (`--threads 4` acceptance criterion)
+        for threads in [1usize, 4] {
+            let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4], vec![1, 2, 3], vec![9, 9]];
+            let mut s = server(16 << 20);
+            s.engine.set_threads(threads);
+            let mut ids = vec![];
+            for p in &prompts {
+                ids.push(s.submit("sst2", p).unwrap());
+            }
+            let mut got = s.drain().unwrap();
+            got.sort_by_key(|r| r.id);
 
-        // reference: fresh engine, one request at a time, no cache
-        let mut eng = SyntheticEngine::small(42, 16);
-        let net = (*s.registry.get("sst2").unwrap()).clone();
-        for (resp, p) in got.iter().zip(&prompts) {
-            let row = batcher::pad_row(p, 16).unwrap();
-            let h: Vec<Rc<Hidden>> =
-                eng.backbone(std::slice::from_ref(&row)).unwrap().into_iter().map(Rc::new).collect();
-            let want = eng.side(&net, &h, std::slice::from_ref(&row)).unwrap();
-            assert_eq!(resp.logits, want[0], "batched path must match unbatched");
+            // reference: fresh engine, one request at a time, no cache,
+            // single-threaded
+            let mut eng = SyntheticEngine::small(42, 16);
+            eng.set_threads(1);
+            let net = (*s.registry.get("sst2").unwrap()).clone();
+            for (resp, p) in got.iter().zip(&prompts) {
+                let row = batcher::pad_row(p, 16).unwrap();
+                let h: Vec<Rc<Hidden>> = eng
+                    .backbone(std::slice::from_ref(&row))
+                    .unwrap()
+                    .into_iter()
+                    .map(Rc::new)
+                    .collect();
+                let want = eng.side(&net, &h, std::slice::from_ref(&row)).unwrap();
+                assert_eq!(
+                    resp.logits, want[0],
+                    "batched path must match unbatched ({threads} threads)"
+                );
+            }
         }
     }
 

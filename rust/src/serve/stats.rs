@@ -1,8 +1,12 @@
 //! Serving telemetry: request/token throughput, batch shapes, and a
-//! latency distribution (p50/p95) — plus a tiny JSON writer (serde is
-//! unavailable offline) so `bench-serve` can persist `BENCH_serve.json`.
+//! latency distribution (p50/p95).  The [`Json`] writer `bench-serve`
+//! uses to persist `BENCH_serve.json` lives in [`crate::benchkit`]
+//! (it's a generic substrate, also used by `bench-kernels`) and is
+//! re-exported here for the serve-side callers.
 
 use std::time::Instant;
+
+pub use crate::benchkit::Json;
 
 /// Cap on retained latency samples; at the cap the reservoir is decimated
 /// (every 2nd sample kept) so memory stays bounded and the distribution
@@ -20,8 +24,11 @@ pub struct ServeStats {
     /// denominator, so idle time (waiting on stdin/transport) between
     /// requests doesn't dilute req/s
     pub busy_secs: f64,
-    /// request latencies in seconds (queue + compute), decimated reservoir
+    /// request latencies in seconds (queue + compute), decimated reservoir;
+    /// kept sorted lazily — see [`ServeStats::sorted_lat`]
     lat: Vec<f64>,
+    /// whether `lat` has unsorted appends since the last percentile read
+    lat_dirty: bool,
     /// decimation factor (each retained sample stands for this many)
     lat_stride: u64,
     lat_skip: u64,
@@ -43,6 +50,7 @@ impl ServeStats {
             dropped: 0,
             busy_secs: 0.0,
             lat: Vec::new(),
+            lat_dirty: false,
             lat_stride: 1,
             lat_skip: 0,
         }
@@ -62,6 +70,8 @@ impl ServeStats {
             }
             self.lat_skip = 0;
             if self.lat.len() >= LAT_CAP {
+                // decimation keeps every 2nd retained sample; `lat` may be
+                // in sorted order here, which thins the distribution evenly
                 let mut keep = false;
                 self.lat.retain(|_| {
                     keep = !keep;
@@ -70,6 +80,7 @@ impl ServeStats {
                 self.lat_stride *= 2;
             }
             self.lat.push(l);
+            self.lat_dirty = true;
         }
     }
 
@@ -96,106 +107,50 @@ impl ServeStats {
         }
     }
 
+    /// The reservoir in sorted order, re-sorting in place only when new
+    /// samples arrived since the last read — `summary()` reads two
+    /// percentiles per request line in interactive serving, so this must
+    /// not clone-and-sort 64Ki samples per call.
+    fn sorted_lat(&mut self) -> &[f64] {
+        if self.lat_dirty {
+            self.lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.lat_dirty = false;
+        }
+        &self.lat
+    }
+
     /// Nearest-rank percentile of recorded latencies, in seconds.
-    pub fn latency_pct(&self, p: f64) -> f64 {
-        if self.lat.is_empty() {
+    pub fn latency_pct(&mut self, p: f64) -> f64 {
+        let v = self.sorted_lat();
+        if v.is_empty() {
             return 0.0;
         }
-        let mut v = self.lat.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
         v[rank.clamp(1, v.len()) - 1]
     }
 
-    pub fn p50_secs(&self) -> f64 {
+    pub fn p50_secs(&mut self) -> f64 {
         self.latency_pct(50.0)
     }
 
-    pub fn p95_secs(&self) -> f64 {
+    pub fn p95_secs(&mut self) -> f64 {
         self.latency_pct(95.0)
     }
 
     /// One-line human summary for the CLI.
-    pub fn summary(&self, cache_hit_rate: f64) -> String {
+    pub fn summary(&mut self, cache_hit_rate: f64) -> String {
         let dropped = if self.dropped > 0 { format!(" | {} dropped", self.dropped) } else { String::new() };
+        let p50_ms = self.p50_secs() * 1e3;
+        let p95_ms = self.p95_secs() * 1e3;
         format!(
-            "{} req in {} batches ({:.1} req/batch) | {:.1} req/s, {:.0} tok/s | p50 {:.2} ms, p95 {:.2} ms | cache hit rate {:.1}%{dropped}",
+            "{} req in {} batches ({:.1} req/batch) | {:.1} req/s, {:.0} tok/s | p50 {p50_ms:.2} ms, p95 {p95_ms:.2} ms | cache hit rate {:.1}%{dropped}",
             self.requests,
             self.batches,
             self.mean_batch_size(),
             self.requests_per_sec(),
             self.tokens_per_sec(),
-            self.p50_secs() * 1e3,
-            self.p95_secs() * 1e3,
             cache_hit_rate * 100.0
         )
-    }
-}
-
-/// Minimal JSON object writer (flat objects of numbers/strings — all the
-/// bench reports need).
-pub struct Json {
-    buf: String,
-    first: bool,
-}
-
-impl Default for Json {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Json {
-    pub fn new() -> Self {
-        Json { buf: String::from("{"), first: true }
-    }
-
-    fn key(&mut self, k: &str) {
-        if !self.first {
-            self.buf.push(',');
-        }
-        self.first = false;
-        self.buf.push('\n');
-        self.buf.push_str("  \"");
-        self.buf.push_str(k);
-        self.buf.push_str("\": ");
-    }
-
-    pub fn num(mut self, k: &str, v: f64) -> Self {
-        self.key(k);
-        if v.is_finite() {
-            self.buf.push_str(&format!("{v:.6}"));
-        } else {
-            self.buf.push_str("null");
-        }
-        self
-    }
-
-    pub fn int(mut self, k: &str, v: u64) -> Self {
-        self.key(k);
-        self.buf.push_str(&v.to_string());
-        self
-    }
-
-    pub fn str(mut self, k: &str, v: &str) -> Self {
-        self.key(k);
-        self.buf.push('"');
-        for c in v.chars() {
-            match c {
-                '"' => self.buf.push_str("\\\""),
-                '\\' => self.buf.push_str("\\\\"),
-                '\n' => self.buf.push_str("\\n"),
-                c if (c as u32) < 0x20 => self.buf.push_str(&format!("\\u{:04x}", c as u32)),
-                c => self.buf.push(c),
-            }
-        }
-        self.buf.push('"');
-        self
-    }
-
-    pub fn finish(mut self) -> String {
-        self.buf.push_str("\n}\n");
-        self.buf
     }
 }
 
@@ -220,9 +175,22 @@ mod tests {
 
     #[test]
     fn empty_stats_are_zero() {
-        let s = ServeStats::new();
+        let mut s = ServeStats::new();
         assert_eq!(s.p50_secs(), 0.0);
         assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_track_interleaved_reads_and_writes() {
+        // the lazily-sorted reservoir must re-sort after every new batch
+        let mut s = ServeStats::new();
+        s.record_batch(2, 4, 0.01, &[0.010, 0.020]);
+        assert!((s.p95_secs() - 0.020).abs() < 1e-12);
+        s.record_batch(2, 4, 0.01, &[0.100, 0.005]);
+        assert!((s.p95_secs() - 0.100).abs() < 1e-12, "new max must surface");
+        assert!((s.p50_secs() - 0.010).abs() < 1e-12); // rank 2 of [5,10,20,100]ms
+        // repeated reads with no writes are stable (and hit the cached sort)
+        assert_eq!(s.p95_secs(), s.p95_secs());
     }
 
     #[test]
@@ -237,18 +205,4 @@ mod tests {
         assert!((s.p95_secs() - 0.001).abs() < 1e-9);
     }
 
-    #[test]
-    fn json_escapes_and_shapes() {
-        let s = Json::new().str("name", "a\"b\\c").int("n", 3).num("x", 1.5).finish();
-        assert!(s.starts_with('{') && s.ends_with("}\n"));
-        assert!(s.contains("\"name\": \"a\\\"b\\\\c\""));
-        assert!(s.contains("\"n\": 3"));
-        assert!(s.contains("\"x\": 1.5"));
-    }
-
-    #[test]
-    fn json_nonfinite_is_null() {
-        let s = Json::new().num("bad", f64::NAN).finish();
-        assert!(s.contains("\"bad\": null"));
-    }
 }

@@ -16,7 +16,7 @@
 use anyhow::{ensure, Result};
 
 use super::stats::Json;
-use super::{ServeConfig, Server, SyntheticEngine};
+use super::{EnginePreset, ServeConfig, Server};
 use crate::util::rng::Rng;
 
 /// Workload + engine shape for a serving benchmark run.
@@ -34,6 +34,10 @@ pub struct BenchServeOpts {
     /// requests submitted between drains (burst size)
     pub burst: usize,
     pub seed: u64,
+    /// kernel worker count for the engine forwards (`--threads`)
+    pub threads: usize,
+    /// engine shape (`--preset small|large`)
+    pub preset: EnginePreset,
 }
 
 impl Default for BenchServeOpts {
@@ -49,6 +53,8 @@ impl Default for BenchServeOpts {
             registry_bytes: 64 << 20,
             burst: 64,
             seed: 0,
+            threads: 1,
+            preset: EnginePreset::Small,
         }
     }
 }
@@ -82,6 +88,8 @@ impl BenchServeReport {
     pub fn to_json(&self) -> String {
         Json::new()
             .str("bench", "serve")
+            .str("preset", self.opts.preset.name())
+            .int("threads", self.opts.threads as u64)
             .int("tasks", self.opts.tasks as u64)
             .int("requests", self.opts.requests as u64)
             .int("unique_prompts", self.opts.unique_prompts as u64)
@@ -107,7 +115,9 @@ impl BenchServeReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "serve bench: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x",
+            "serve bench [{} preset, {} threads]: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x",
+            self.opts.preset.name(),
+            self.opts.threads,
             self.opts.requests,
             self.opts.tasks,
             self.opts.unique_prompts,
@@ -163,7 +173,8 @@ pub fn prompt_pool(rng: &mut Rng, n: usize, len: usize, vocab: usize) -> Vec<Vec
 }
 
 fn run_pass(opts: &BenchServeOpts, cache_bytes: usize) -> Result<PassReport> {
-    let engine = SyntheticEngine::small(opts.seed, opts.seq);
+    let mut engine = opts.preset.build(opts.seed, opts.seq);
+    engine.set_threads(opts.threads);
     let vocab = engine.vocab;
     let mut server = Server::new(
         engine,
@@ -213,7 +224,7 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize) -> Result<PassReport> {
 pub fn run_bench(opts: &BenchServeOpts) -> Result<BenchServeReport> {
     ensure!(opts.tasks >= 1 && opts.requests >= 1 && opts.unique_prompts >= 1);
     ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
-    let capacity = prompt_pool_capacity(opts.prompt_len, SyntheticEngine::SMALL_VOCAB);
+    let capacity = prompt_pool_capacity(opts.prompt_len, opts.preset.vocab());
     ensure!(
         opts.unique_prompts <= capacity,
         "--unique-prompts {} exceeds the {} distinct prompts expressible at --prompt-len {}",
@@ -242,6 +253,8 @@ mod tests {
             registry_bytes: 1 << 20,
             burst: 16,
             seed: 3,
+            threads: 1,
+            preset: EnginePreset::Small,
         }
     }
 
@@ -280,9 +293,36 @@ mod tests {
         let rep = run_bench(&tiny()).unwrap();
         let j = rep.to_json();
         assert!(j.contains("\"bench\": \"serve\""));
+        assert!(j.contains("\"preset\": \"small\""));
+        assert!(j.contains("\"threads\": 1"));
         assert!(j.contains("\"speedup\""));
         assert!(j.contains("\"cached_hit_rate\""));
         assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn threaded_pass_preserves_work_counts() {
+        // threading is a wall-clock knob: the deterministic work accounting
+        // (backbone rows, hit rate) must not move with the worker count
+        let base = run_bench(&tiny()).unwrap();
+        let mut o = tiny();
+        o.threads = 4;
+        let threaded = run_bench(&o).unwrap();
+        assert_eq!(base.cached.backbone_rows, threaded.cached.backbone_rows);
+        assert_eq!(base.uncached.backbone_rows, threaded.uncached.backbone_rows);
+        assert_eq!(base.cached.hit_rate, threaded.cached.hit_rate);
+    }
+
+    #[test]
+    fn large_preset_runs_the_same_workload() {
+        let mut o = tiny();
+        o.preset = EnginePreset::Large;
+        o.requests = 12;
+        o.burst = 6;
+        o.threads = 2;
+        let rep = run_bench(&o).unwrap();
+        assert!(rep.cached.backbone_rows <= o.unique_prompts as u64);
+        assert!(rep.to_json().contains("\"preset\": \"large\""));
     }
 
     #[test]

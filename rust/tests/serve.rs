@@ -85,6 +85,30 @@ fn two_tasks_one_backbone_match_unbatched_eval() {
 }
 
 #[test]
+fn threaded_serving_matches_single_threaded_bitwise() {
+    // `--threads N` must be a pure wall-clock knob on the serve path: the
+    // whole request stream (batching + cache + threaded kernels) produces
+    // identical logits for every worker count
+    let run = |threads: usize| {
+        let mut s = synthetic_server(32 << 20);
+        s.engine.set_threads(threads);
+        for rep in 0..2 {
+            for (i, task) in ["sentiment", "paraphrase"].iter().enumerate() {
+                s.submit(task, &[3, 1 + rep, 4 + i as i32, 1, 5]).unwrap();
+                s.submit(task, &[9, 2, 6]).unwrap();
+            }
+        }
+        let mut r = s.drain().unwrap();
+        r.sort_by_key(|x| x.id);
+        r.into_iter().map(|x| x.logits).collect::<Vec<_>>()
+    };
+    let single = run(1);
+    for threads in [2usize, 4] {
+        assert_eq!(single, run(threads), "{threads} threads must match single-threaded");
+    }
+}
+
+#[test]
 fn cache_disabled_matches_cache_enabled() {
     let run = |cache: usize| {
         let mut s = synthetic_server(cache);

@@ -31,7 +31,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-if cargo fmt --version >/dev/null 2>&1; then
+if [ "${QST_SKIP_FMT:-0}" = "1" ]; then
+    # the seed predates rustfmt availability and has no rustfmt.toml; CI
+    # sets this until a dedicated formatting pass lands
+    echo "note: QST_SKIP_FMT=1; skipping format check" >&2
+elif cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
 else
