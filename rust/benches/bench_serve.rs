@@ -11,7 +11,7 @@ use std::rc::Rc;
 
 use qst::benchkit::Bench;
 use qst::serve::workload::{run_bench, BenchServeOpts};
-use qst::serve::{Engine, Hidden, Registry, SyntheticEngine};
+use qst::serve::{BackboneKind, Engine, EnginePreset, Hidden, Registry, SyntheticEngine};
 
 fn main() {
     let mut results = vec![];
@@ -71,8 +71,32 @@ fn main() {
          workload (got {:.2}x) — see ISSUE acceptance criteria",
         report.speedup()
     );
+    assert!(
+        report.backbone_bytes_ratio() >= 5.0,
+        "packed W4 backbone must be at least 5x smaller resident than f32 \
+         (got {:.2}x) — see ISSUE 3 acceptance criteria",
+        report.backbone_bytes_ratio()
+    );
     std::fs::write("BENCH_serve.json", report.to_json()).expect("writing BENCH_serve.json");
     println!("wrote BENCH_serve.json");
+
+    // large preset, W4 primary: the memory story at the bigger shape —
+    // packed backbone serves end-to-end with the f32 comparison inline
+    let large = BenchServeOpts {
+        requests: 96,
+        unique_prompts: 12,
+        burst: 24,
+        preset: EnginePreset::Large,
+        backbone: BackboneKind::W4,
+        threads: 2,
+        ..opts
+    };
+    let large_report = run_bench(&large).expect("large w4 bench workload");
+    println!("{}", large_report.summary());
+    assert!(large_report.backbone_bytes_ratio() >= 5.0);
+    std::fs::write("BENCH_serve_large.json", large_report.to_json())
+        .expect("writing BENCH_serve_large.json");
+    println!("wrote BENCH_serve_large.json");
 
     qst::benchkit::log_csv(&qst::runs_dir().join("bench_serve.csv"), &results).ok();
 }

@@ -110,20 +110,24 @@ COMMANDS:
   experiments  --id table1|table2|table3|table4|table5|table6|table7|
                     fig1a|fig1b|fig4|fig5|fig6|calib|all  [--fast]
   serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
-               [--preset small|large] [--threads N] [--cache-bytes N]
-               [--registry-bytes N] [--batch N] [--seq N] [--seed N]
+               [--preset small|large] [--backbone f32|w4] [--threads N]
+               [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N]
+               [--seed N]
                In-process multi-task inference server: one shared frozen
                backbone, per-task side networks, hidden-state cache.
                --threads N runs the host kernels on N workers (bit-identical
-               results for any N); --preset large is d=256, 8 layers.
+               results for any N); --preset large is d=256, 8 layers;
+               --backbone w4 keeps the frozen backbone packed in 4 bits and
+               serves through the fused dequant-GEMM (~7x less resident).
                Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
   bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
                [--registry-bytes N] [--seed N] [--preset small|large]
-               [--threads N] [--json PATH]
+               [--backbone f32|w4] [--threads N] [--json PATH]
                Repeated-prompt serving benchmark over >=2 side networks;
-               reports cached vs uncached throughput, cache hit rate and
-               p50/p95 latency; writes BENCH_serve.json
+               reports cached vs uncached throughput, cache hit rate,
+               p50/p95 latency, and f32-vs-W4 backbone residency + latency
+               side-by-side; writes BENCH_serve.json
   bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
                blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs

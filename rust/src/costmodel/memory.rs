@@ -13,6 +13,9 @@
 //!   window of the frozen forward + the logits buffer.
 
 use super::paperdims::{Method, PaperModel};
+use crate::nn::{w4_resident_bytes, BackboneKind};
+use crate::quant::qblock_for;
+use crate::serve::EnginePreset;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemoryBreakdown {
@@ -86,6 +89,26 @@ pub fn memory_bytes(m: &PaperModel, method: Method, b: usize, s: usize) -> Memor
 /// byte budget (`serve::registry`).
 pub fn side_network_bytes(m: &PaperModel, r: usize) -> f64 {
     m.side_params(r, "adapter", 16) * B16
+}
+
+/// Resident bytes of a [`crate::serve::SyntheticEngine`] frozen backbone
+/// (embedding `[vocab, d]` + `layers` × `[d, d]`) under the given storage
+/// kind.  This is the analytical twin of
+/// `SyntheticEngine::backbone_resident_bytes` — a costmodel test pins the
+/// two to exact agreement, so `BENCH_serve.json` figures are auditable
+/// without building an engine.
+pub fn backbone_resident_bytes(preset: EnginePreset, backbone: BackboneKind) -> usize {
+    let (d, layers, vocab, _r) = preset.shape();
+    match backbone {
+        BackboneKind::F32 => 4 * (vocab * d + layers * d * d),
+        BackboneKind::W4 => {
+            let mat = |k: usize, n: usize| {
+                let qb = qblock_for(k).expect("engine dims are even");
+                w4_resident_bytes(k, n, qb, crate::nn::linear::QGROUP)
+            };
+            mat(vocab, d) + layers * mat(d, d)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +191,27 @@ mod tests {
         let backbone_4bit = m.params * NF4_BITS / 8.0;
         assert!(side > 0.0);
         assert!(32.0 * side < backbone_4bit, "32 side nets {side:.3e} vs backbone {backbone_4bit:.3e}");
+    }
+
+    #[test]
+    fn backbone_resident_bytes_matches_real_engines() {
+        // the analytical figure must equal the bytes an actual engine holds,
+        // and the W4 form must be at least 5x smaller (ISSUE acceptance)
+        for preset in [EnginePreset::Small, EnginePreset::Large] {
+            for kind in [BackboneKind::F32, BackboneKind::W4] {
+                let engine = preset.build_backbone(3, 8, kind);
+                assert_eq!(
+                    backbone_resident_bytes(preset, kind),
+                    engine.backbone_resident_bytes(),
+                    "{} {}",
+                    preset.name(),
+                    kind.name()
+                );
+            }
+            let f32b = backbone_resident_bytes(preset, BackboneKind::F32);
+            let w4b = backbone_resident_bytes(preset, BackboneKind::W4);
+            assert!(w4b * 5 <= f32b, "{}: {w4b} vs {f32b}", preset.name());
+        }
     }
 
     #[test]

@@ -110,8 +110,17 @@ impl InstructGen {
 
     /// Full SFT sequence `[BOS prompt RESP response ...pad]` with loss mask on
     /// the response tokens only.
+    ///
+    /// When the pair overflows `seq`, the *prompt* is clipped so that RESP
+    /// plus at least one response token always survive — otherwise
+    /// truncation would silently produce an all-zero loss mask (the PR-2
+    /// truncation class: the supervised position clobbered off the row).
     pub fn sft_example(&mut self, cat: Category, seq: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
-        let (prompt, resp) = self.pair(cat);
+        assert!(seq >= 2, "seq must hold [BOS RESP] plus a response target");
+        let (mut prompt, resp) = self.pair(cat);
+        // BOS + prompt + RESP within `seq` leaves the first response token
+        // at index <= seq, i.e. still inside inputs/targets after truncation
+        prompt.truncate(seq - 2);
         let mut toks = vec![BOS];
         toks.extend(&prompt);
         toks.push(RESP);
@@ -162,6 +171,30 @@ mod tests {
             // inside the response
             let first = mask.iter().position(|&m| m > 0.0).unwrap();
             assert_eq!(inp[first], RESP, "{cat:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_rows_still_supervise_the_response() {
+        // the PR-2 truncation class: at every (category, seq) combination —
+        // including ones where prompt+response overflow — the mask must
+        // cover at least one surviving response token, sitting right after
+        // the RESP marker
+        for seq in [2usize, 3, 4, 6, 9, 64] {
+            let mut g = InstructGen::new(Vocab::new(512), 21);
+            for cat in CATEGORIES {
+                let (inp, tgt, mask) = g.sft_example(cat, seq);
+                assert_eq!(inp.len(), seq);
+                let total: f32 = mask.iter().sum();
+                assert!(total >= 1.0, "{cat:?} seq {seq}: empty loss mask");
+                let first = mask.iter().position(|&m| m > 0.0).unwrap();
+                assert_eq!(inp[first], RESP, "{cat:?} seq {seq}: mask must start at RESP");
+                assert_ne!(
+                    tgt[first],
+                    super::super::vocabulary::PAD,
+                    "{cat:?} seq {seq}: supervised target must be a real token"
+                );
+            }
         }
     }
 

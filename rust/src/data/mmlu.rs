@@ -38,8 +38,16 @@ impl MmluGen {
     }
 
     /// One k-shot item. `eval` draws query subjects from the held-out range.
+    ///
+    /// Shots are capped to what `seq` can hold alongside the query triple,
+    /// so a short sequence degrades to fewer shots instead of truncation
+    /// clobbering the QMARK label position (the PR-2 GLUE truncation class)
+    /// — `tokens[pos]` is QMARK at every `seq`/`k_shot` combination.
     pub fn item(&mut self, k_shot: usize, eval: bool) -> MmluItem {
         let v = self.vocab.clone();
+        assert!(self.seq >= 4, "seq must hold [BOS s r QMARK]");
+        // BOS + 3 per shot + the 3-token query must fit in seq
+        let k_shot = k_shot.min((self.seq - 4) / 3);
         let mut toks = vec![BOS];
         for _ in 0..k_shot {
             let s = self.rng.below(self.holdout_lo);
@@ -131,6 +139,24 @@ mod tests {
             let v = Vocab::new(512);
             let o = fact_object(&v, (s - v.subj0) as usize, (r - v.rel0) as usize);
             assert_eq!(it.choices[it.answer], v.obj(o));
+        }
+    }
+
+    #[test]
+    fn short_seq_caps_shots_instead_of_clobbering_qmark() {
+        // the PR-2 truncation class: a row that does not fit must still
+        // supervise at the QMARK position, never at an overwritten token
+        for seq in [4usize, 5, 7, 10, 16] {
+            let mut g = MmluGen::new(Vocab::new(512), seq, 4);
+            for _ in 0..20 {
+                let it = g.item(5, false);
+                assert_eq!(it.tokens.len(), seq, "seq {seq}");
+                assert_eq!(it.tokens[it.pos], QMARK, "seq {seq}: label pos must be QMARK");
+                // the query triple right before QMARK survived intact
+                let v = Vocab::new(512);
+                let s = it.tokens[it.pos - 2];
+                assert!(s >= v.subj0, "seq {seq}: query subject clobbered");
+            }
         }
     }
 

@@ -1,11 +1,14 @@
 //! `qst bench-kernels`: host-kernel microbenchmarks → `BENCH_kernels.json`.
 //!
-//! Two comparisons per matrix size, each verified for exact equivalence
+//! Three comparisons per matrix size, each verified for exact equivalence
 //! before timing so a bench run doubles as an integration check:
 //!
 //! 1. f32 GEMM (`m×d·d×d`): naive triple loop vs cache-blocked vs
 //!    blocked+threaded — the backbone-forward shape that caps `bench-serve`.
-//! 2. W4 path: dequantize-to-f32-then-matmul vs the fused dequant-GEMM
+//! 2. Threading medium: the same blocked GEMM on the persistent worker
+//!    pool vs scoped spawn-per-call threads — the pool's amortization
+//!    delta (`scoped_ms / threaded_ms`).
+//! 3. W4 path: dequantize-to-f32-then-matmul vs the fused dequant-GEMM
 //!    (serial and threaded) straight from packed nibbles.
 
 use anyhow::{bail, Result};
@@ -35,14 +38,18 @@ impl Default for BenchKernelsOpts {
 }
 
 /// Median timings (ms) for one size; speedups are vs `naive_ms` for the
-/// GEMM family and vs `w4_dequant_ms` for the fused family.
+/// GEMM family, vs `scoped_ms` for the pool, and vs `w4_dequant_ms` for
+/// the fused family.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelRow {
     pub d: usize,
     pub qblock: usize,
     pub naive_ms: f64,
     pub blocked_ms: f64,
+    /// blocked GEMM on the persistent worker pool
     pub threaded_ms: f64,
+    /// blocked GEMM with scoped spawn-per-call threads (pre-pool baseline)
+    pub scoped_ms: f64,
     pub w4_dequant_ms: f64,
     pub w4_fused_ms: f64,
     pub w4_fused_threaded_ms: f64,
@@ -55,6 +62,12 @@ impl KernelRow {
 
     pub fn threaded_speedup(&self) -> f64 {
         self.naive_ms / self.threaded_ms.max(1e-12)
+    }
+
+    /// Spawn-per-GEMM over persistent-pool wall time (>1 means the pool
+    /// amortization pays for itself at this size).
+    pub fn pool_speedup(&self) -> f64 {
+        self.scoped_ms / self.threaded_ms.max(1e-12)
     }
 
     pub fn fused_speedup(&self) -> f64 {
@@ -81,8 +94,10 @@ impl BenchKernelsReport {
                 .num(&format!("gemm_d{d}_naive_ms"), r.naive_ms)
                 .num(&format!("gemm_d{d}_blocked_ms"), r.blocked_ms)
                 .num(&format!("gemm_d{d}_threaded_ms"), r.threaded_ms)
+                .num(&format!("gemm_d{d}_scoped_ms"), r.scoped_ms)
                 .num(&format!("gemm_d{d}_blocked_speedup"), r.blocked_speedup())
                 .num(&format!("gemm_d{d}_threaded_speedup"), r.threaded_speedup())
+                .num(&format!("gemm_d{d}_pool_speedup"), r.pool_speedup())
                 .int(&format!("w4_d{d}_qblock"), r.qblock as u64)
                 .num(&format!("w4_d{d}_dequant_matmul_ms"), r.w4_dequant_ms)
                 .num(&format!("w4_d{d}_fused_ms"), r.w4_fused_ms)
@@ -96,7 +111,7 @@ impl BenchKernelsReport {
         let mut out = String::new();
         for r in &self.rows {
             out.push_str(&format!(
-                "kernels d={}: naive {:.2} ms | blocked {:.2} ms ({:.2}x) | +{} threads {:.2} ms ({:.2}x) | w4 dequant+matmul {:.2} ms vs fused {:.2} ms ({:.2}x)\n",
+                "kernels d={}: naive {:.2} ms | blocked {:.2} ms ({:.2}x) | +{} threads {:.2} ms ({:.2}x; pool vs scoped-spawn {:.2} ms = {:.2}x) | w4 dequant+matmul {:.2} ms vs fused {:.2} ms ({:.2}x)\n",
                 r.d,
                 r.naive_ms,
                 r.blocked_ms,
@@ -104,6 +119,8 @@ impl BenchKernelsReport {
                 self.threads,
                 r.threaded_ms,
                 r.threaded_speedup(),
+                r.scoped_ms,
+                r.pool_speedup(),
                 r.w4_dequant_ms,
                 r.w4_fused_ms,
                 r.fused_speedup()
@@ -116,18 +133,17 @@ impl BenchKernelsReport {
 
 /// Largest qblock in the quantizer's range that divides `d`.
 fn qblock_for(d: usize) -> Result<usize> {
-    for qb in [64usize, 32, 16, 8, 4, 2] {
-        if d % qb == 0 {
-            return Ok(qb);
-        }
+    match crate::quant::qblock_for(d) {
+        Some(qb) => Ok(qb),
+        None => bail!("dim {d} must be even to bench the W4 path"),
     }
-    bail!("dim {d} must be even to bench the W4 path");
 }
 
 pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
     let m = opts.m.max(1);
     let serial = Threads::new(1);
     let pool = Threads::new(opts.threads.max(1));
+    let scoped = Threads::scoped(opts.threads.max(1));
     let mut rows = Vec::with_capacity(opts.dims.len());
     for &d in &opts.dims {
         let qblock = qblock_for(d)?;
@@ -138,7 +154,10 @@ pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
 
         // equivalence gate: never publish timings for mismatched kernels
         let want = matmul_naive(&a, &b, m, d, d);
-        if matmul(&serial, &a, &b, m, d, d) != want || matmul(&pool, &a, &b, m, d, d) != want {
+        if matmul(&serial, &a, &b, m, d, d) != want
+            || matmul(&pool, &a, &b, m, d, d) != want
+            || matmul(&scoped, &a, &b, m, d, d) != want
+        {
             bail!("blocked/threaded GEMM diverged from naive at d={d}");
         }
         let wd = dequantize_matrix_raw(&packed, &scales, d, d, "nf4", qblock);
@@ -156,6 +175,11 @@ pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
         let threaded =
             Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d} ({} threads)", pool.count()))
                 .run(|| matmul(&pool, &a, &b, m, d, d));
+        let scoped_t = Bench::quick(&format!(
+            "kernels: blocked gemm {m}x{d}x{d} ({} scoped-spawn threads)",
+            scoped.count()
+        ))
+        .run(|| matmul(&scoped, &a, &b, m, d, d));
         let dequant = Bench::quick(&format!("kernels: w4 dequantize+matmul {m}x{d}x{d}")).run(|| {
             let w = dequantize_matrix_raw(&packed, &scales, d, d, "nf4", qblock);
             matmul(&serial, &a, &w, m, d, d)
@@ -176,6 +200,7 @@ pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
             naive_ms: naive.median_secs * 1e3,
             blocked_ms: blocked.median_secs * 1e3,
             threaded_ms: threaded.median_secs * 1e3,
+            scoped_ms: scoped_t.median_secs * 1e3,
             w4_dequant_ms: dequant.median_secs * 1e3,
             w4_fused_ms: fused.median_secs * 1e3,
             w4_fused_threaded_ms: fused_threaded.median_secs * 1e3,
@@ -202,6 +227,8 @@ mod tests {
         let j = rep.to_json();
         assert!(j.contains("\"bench\": \"kernels\""));
         assert!(j.contains("gemm_d32_threaded_speedup"));
+        assert!(j.contains("gemm_d32_scoped_ms"));
+        assert!(j.contains("gemm_d32_pool_speedup"));
         assert!(j.contains("w4_d32_fused_speedup"));
         assert!(rep.summary().contains("d=32"));
     }

@@ -7,17 +7,22 @@
 //! quantizer ([`crate::quant`]), and the benchmarks all share one tuned
 //! implementation instead of hand-rolled triple loops:
 //!
-//! * [`threads`] — [`Threads`], a scoped-thread pool that partitions
-//!   kernel *outputs* into disjoint whole-row runs; results are
-//!   bit-identical for any thread count (`--threads` is wall-clock only).
+//! * [`threads`] — [`Threads`], a persistent channel-fed worker pool that
+//!   partitions kernel *outputs* into disjoint whole-row runs; workers are
+//!   spawned lazily once and reused across every kernel call (no
+//!   spawn/join per GEMM), and results are bit-identical for any thread
+//!   count (`--threads` is wall-clock only).  [`Threads::scoped`] keeps
+//!   the old spawn-per-call path as a benchmark baseline.
 //! * [`gemm`] — naive reference, cache-blocked serial, and
 //!   blocked+threaded f32 GEMM, all bit-identical by construction.
 //! * [`qgemm`] — fused W4 dequant-GEMM multiplying straight from packed
 //!   nibbles + double-quantized scales, exactly matching
-//!   dequantize-then-matmul without materializing the f32 weight.
+//!   dequantize-then-matmul without materializing the f32 weight.  This is
+//!   the kernel a `--backbone w4` [`crate::serve::SyntheticEngine`] serves
+//!   every backbone matmul through (via [`crate::nn::Linear`]).
 //! * [`bench`] — the `qst bench-kernels` runner emitting
-//!   `BENCH_kernels.json` (naive vs blocked vs blocked+threaded, fused
-//!   vs dequantize-then-matmul).
+//!   `BENCH_kernels.json` (naive vs blocked vs blocked+threaded, pooled vs
+//!   scoped-spawn threading, fused vs dequantize-then-matmul).
 
 pub mod bench;
 pub mod gemm;
@@ -26,4 +31,4 @@ pub mod threads;
 
 pub use gemm::{matmul, matmul_blocked_into, matmul_naive};
 pub use qgemm::{w4_matmul, w4_matmul_dq};
-pub use threads::{default_threads, set_default_threads, Threads};
+pub use threads::{default_threads, pool_workers, set_default_threads, Threads};

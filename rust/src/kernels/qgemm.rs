@@ -3,10 +3,13 @@
 //!
 //! `y[m,n] = x[m,k] · Ŵ[k,n]` where `Ŵ[l,j] = code[nibble(l,j)] ·
 //! scale[l/qblock, j]` — the quantized weight is never materialized as a
-//! full f32 matrix.  The only f32 side table is the per-block scale
-//! stripe (`k/qblock × n`, 1/qblock-th of the weight count), which the
-//! double-quantized entry point reconstructs once via
-//! [`crate::quant::dequantize_scales`].
+//! full f32 matrix.  The only f32 scale state alive is one stripe's row
+//! (`n` floats): [`w4_matmul`] copies it out of the caller's scale table,
+//! while the double-quantized entry point [`w4_matmul_dq`] — the serving
+//! hot path behind a `--backbone w4` [`crate::nn::Linear`] — decodes it
+//! straight from the 8-bit `q8`/`gabs`/`gmean` tensors, stripe by stripe,
+//! with the exact arithmetic of [`crate::quant::dequantize_scales`] (so
+//! the full `k/qblock × n` scale matrix is never allocated per call).
 //!
 //! Floating-point order is pinned to the reference path: for each output
 //! element the `l` reduction ascends, and each decoded weight is the same
@@ -18,51 +21,59 @@
 
 use super::threads::Threads;
 use crate::quant::codebook::codebook;
-use crate::quant::dequantize_scales;
 
-/// Fused dequant-GEMM from packed nibbles + f32 block scales.
-///
-/// Layouts match [`crate::quant::quantize_matrix_raw`]: `packed[k/2, n]`
-/// holds row `2i` in the low nibble and `2i+1` in the high nibble of byte
-/// `[i, j]`; `scales[k/qblock, n]` are per-(stripe, column) absmax.
-pub fn w4_matmul(
+/// Shared fused-kernel body: `fill_scales(stripe, buf)` writes the `n`
+/// scales of one K-stripe into `buf` whenever the reduction crosses into a
+/// new stripe.  Both entry points route here, so the nibble/MAC loops and
+/// their rounding order exist exactly once.
+#[allow(clippy::too_many_arguments)]
+fn w4_matmul_impl<S>(
     threads: &Threads,
     x: &[f32],
     packed: &[u8],
-    scales: &[f32],
+    fill_scales: S,
     m: usize,
     k: usize,
     n: usize,
     qdtype: &str,
     qblock: usize,
-) -> Vec<f32> {
+) -> Vec<f32>
+where
+    S: Fn(usize, &mut [f32]) + Sync,
+{
     assert_eq!(x.len(), m * k);
     assert_eq!(k % 2, 0);
     assert_eq!(packed.len(), (k / 2) * n);
     assert_eq!(k % qblock, 0, "K must divide by qblock");
     assert_eq!(qblock % 2, 0, "qblock must be even (nibble pairs share a block)");
-    assert_eq!(scales.len(), (k / qblock) * n);
     let code = codebook(qdtype);
     let mut out = vec![0f32; m * n];
     // each run re-decodes the full nibble stream (O(k·n), independent of its
     // row count), so cap workers at m/16: with ≥16 rows per run the MAC work
     // (2·rows·k·n flops) keeps duplicated decode under ~3% of the total
-    let threads = Threads::new(threads.count().min((m / 16).max(1)));
+    let threads = threads.with_count(threads.count().min((m / 16).max(1)));
     threads.par_rows(&mut out, n, |row0, run| {
         let rows = run.len() / n;
         // decode each nibble row-pair once per run, then rank-1-update all
         // of this run's output rows from the two decoded rows — the only
-        // f32 weight state alive is this 2×n pair, never the full matrix
+        // f32 weight state alive is this 2×n pair plus one stripe of
+        // scales, never a full matrix
         let mut w0 = vec![0f32; n];
         let mut w1 = vec![0f32; n];
+        let mut srow = vec![0f32; n];
+        let mut stripe = usize::MAX;
         for half in 0..k / 2 {
             // rows 2·half and 2·half+1 share a scale stripe (qblock even)
-            let srow = &scales[(2 * half / qblock) * n..][..n];
+            let s = 2 * half / qblock;
+            if s != stripe {
+                stripe = s;
+                fill_scales(s, &mut srow);
+            }
             let prow = &packed[half * n..(half + 1) * n];
             for j in 0..n {
-                let s = srow[j];
-                w0[j] = code[(prow[j] & 0xF) as usize] * s;
-                w1[j] = code[(prow[j] >> 4) as usize] * s;
+                let sc = srow[j];
+                w0[j] = code[(prow[j] & 0xF) as usize] * sc;
+                w1[j] = code[(prow[j] >> 4) as usize] * sc;
             }
             for r in 0..rows {
                 let x0 = x[(row0 + r) * k + 2 * half];
@@ -81,9 +92,37 @@ pub fn w4_matmul(
     out
 }
 
+/// Fused dequant-GEMM from packed nibbles + f32 block scales.
+///
+/// Layouts match [`crate::quant::quantize_matrix_raw`]: `packed[k/2, n]`
+/// holds row `2i` in the low nibble and `2i+1` in the high nibble of byte
+/// `[i, j]`; `scales[k/qblock, n]` are per-(stripe, column) absmax.
+pub fn w4_matmul(
+    threads: &Threads,
+    x: &[f32],
+    packed: &[u8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qdtype: &str,
+    qblock: usize,
+) -> Vec<f32> {
+    assert!(qblock > 0 && k % qblock == 0);
+    assert_eq!(scales.len(), (k / qblock) * n);
+    let fill = |stripe: usize, buf: &mut [f32]| {
+        buf.copy_from_slice(&scales[stripe * n..(stripe + 1) * n]);
+    };
+    w4_matmul_impl(threads, x, packed, fill, m, k, n, qdtype, qblock)
+}
+
 /// Fused dequant-GEMM from the *double-quantized* storage format
 /// (8-bit scales + per-group `gabs`/`gmean`) — the exact tensor set a
-/// [`crate::quant::QMatrix`] carries.
+/// [`crate::quant::QMatrix`] carries.  Stripe scales are decoded on the
+/// fly with the exact arithmetic of [`crate::quant::dequantize_scales`]
+/// (single-rounded `q/127·gabs + gmean`), so the result is bit-identical
+/// to materializing the scales first — without the per-call `k/qblock × n`
+/// allocation the serving hot path used to pay.
 #[allow(clippy::too_many_arguments)]
 pub fn w4_matmul_dq(
     threads: &Threads,
@@ -99,8 +138,16 @@ pub fn w4_matmul_dq(
     qdtype: &str,
     qblock: usize,
 ) -> Vec<f32> {
-    let scales = dequantize_scales(q8, gabs, gmean, qgroup);
-    w4_matmul(threads, x, packed, &scales, m, k, n, qdtype, qblock)
+    assert!(qblock > 0 && k % qblock == 0);
+    assert_eq!(q8.len(), (k / qblock) * n);
+    assert!(qgroup > 0);
+    assert!(gabs.len() >= q8.len().div_ceil(qgroup) && gmean.len() >= q8.len().div_ceil(qgroup));
+    let fill = |stripe: usize, buf: &mut [f32]| {
+        for (j, sv) in buf.iter_mut().enumerate() {
+            *sv = crate::quant::scale_at(q8, gabs, gmean, qgroup, stripe * n + j);
+        }
+    };
+    w4_matmul_impl(threads, x, packed, fill, m, k, n, qdtype, qblock)
 }
 
 #[cfg(test)]

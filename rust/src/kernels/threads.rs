@@ -1,11 +1,22 @@
-//! Scoped-thread pool for host kernels (std only).
+//! Persistent worker pool for host kernels (std only).
 //!
 //! Every parallel kernel in this crate partitions its *output* into
-//! disjoint runs of whole rows and hands each run to one scoped thread.
-//! Each row is computed by exactly one thread with the same serial
-//! per-row algorithm, so results are bit-identical for any thread count
-//! — the `--threads` flag is a pure wall-clock knob, never a numerics
-//! knob (the serve tests assert this by comparing N=1 against N=4).
+//! disjoint runs of whole rows and hands each run to one worker.  Each
+//! row is computed by exactly one worker with the same serial per-row
+//! algorithm, so results are bit-identical for any thread count — the
+//! `--threads` flag is a pure wall-clock knob, never a numerics knob
+//! (the serve tests assert this by comparing N=1 against N=4).
+//!
+//! Workers are **long-lived**: a process-wide channel-fed pool spawns
+//! them lazily (first time a run needs them) and reuses them for every
+//! subsequent kernel call, so a serving engine that issues thousands of
+//! small GEMMs per second no longer pays a `thread::spawn` + join per
+//! call.  The caller thread always executes one run itself and then
+//! blocks on a completion latch, which also keeps the borrowed output
+//! slices alive until every pooled run has finished.  The pre-pool
+//! behaviour (scoped spawn per call) is kept behind [`Threads::scoped`]
+//! as the `bench-kernels` baseline, so the amortization is measured,
+//! not assumed.
 //!
 //! The process-wide default is 1 thread; `set_default_threads` (wired to
 //! `--threads` in `cli.rs`/`main.rs`) raises it for code that constructs
@@ -31,30 +42,51 @@ pub fn default_threads() -> usize {
     DEFAULT_THREADS.load(Ordering::Relaxed).max(1)
 }
 
+/// Long-lived workers currently spawned in the process-wide pool.
+pub fn pool_workers() -> usize {
+    pool::worker_count()
+}
+
 /// A worker-count handle for row-partitioned kernels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Threads {
     n: usize,
+    /// spawn scoped threads per call instead of using the persistent pool
+    /// (the `bench-kernels` baseline; numerics are identical either way)
+    scoped: bool,
 }
 
 impl Default for Threads {
     fn default() -> Self {
-        Threads { n: default_threads() }
+        Threads { n: default_threads(), scoped: false }
     }
 }
 
 impl Threads {
     pub fn new(n: usize) -> Self {
-        Threads { n: n.max(1) }
+        Threads { n: n.max(1), scoped: false }
+    }
+
+    /// Like [`Threads::new`] but scope-spawning fresh threads on every
+    /// call — the pre-pool behaviour, kept as a measurable baseline.
+    pub fn scoped(n: usize) -> Self {
+        Threads { n: n.max(1), scoped: true }
     }
 
     pub fn count(&self) -> usize {
         self.n
     }
 
+    /// Same execution medium (pooled or scoped), different worker count —
+    /// for kernels that cap workers below the caller's request.
+    pub fn with_count(&self, n: usize) -> Self {
+        Threads { n: n.max(1), scoped: self.scoped }
+    }
+
     /// Split `out` into up to `count()` contiguous runs of whole rows
-    /// (`row_len` elements each) and run `f(first_row, run)` for every run,
-    /// on scoped threads when more than one run is formed.
+    /// (`row_len` elements each) and run `f(first_row, run)` for every run
+    /// — one run inline on the caller, the rest on pool workers (or scoped
+    /// threads for [`Threads::scoped`]) when more than one run is formed.
     ///
     /// `f` must compute each row of its run independently of the split —
     /// the single-threaded path calls `f(0, out)` once, so any `f` that
@@ -74,19 +106,196 @@ impl Threads {
             return;
         }
         let per = rows.div_ceil(workers);
-        std::thread::scope(|scope| {
+        // identical partition for the scoped and pooled paths: contiguous
+        // whole-row runs of `per` rows (short tail), ascending
+        let mut runs: Vec<(usize, &mut [T])> = Vec::with_capacity(workers);
+        let mut rest = out;
+        let mut first_row = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len() / row_len);
+            let (run, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+            rest = tail;
+            runs.push((first_row, run));
+            first_row += take;
+        }
+        if self.scoped {
+            std::thread::scope(|scope| {
+                let f = &f;
+                for (row0, run) in runs {
+                    scope.spawn(move || f(row0, run));
+                }
+            });
+        } else {
             let f = &f;
-            let mut rest = out;
-            let mut first_row = 0usize;
-            while !rest.is_empty() {
-                let take = per.min(rest.len() / row_len);
-                let (run, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
-                rest = tail;
-                let row0 = first_row;
-                scope.spawn(move || f(row0, run));
-                first_row += take;
+            pool::run(
+                runs.into_iter()
+                    .map(|(row0, run)| {
+                        Box::new(move || f(row0, run)) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect(),
+            );
+        }
+    }
+}
+
+/// The process-wide persistent worker pool: a mutex-guarded job queue fed
+/// by [`pool::run`], drained by detached workers that live for the rest of
+/// the process.
+mod pool {
+    use std::any::Any;
+    use std::collections::VecDeque;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    type Job = Box<dyn FnOnce() + Send + 'static>;
+
+    struct Queue {
+        jobs: VecDeque<Job>,
+        /// workers blocked in `cv.wait` right now
+        idle: usize,
+        /// workers ever spawned (they never exit)
+        workers: usize,
+    }
+
+    struct Shared {
+        q: Mutex<Queue>,
+        cv: Condvar,
+    }
+
+    /// Backstop on pool size.  Growth is demand-driven (one worker per
+    /// concurrently-queued job that finds no idle worker), so real runs
+    /// sit at `--threads - 1` workers.  NOTE: *nested* `par_rows` from
+    /// inside a pooled run is not supported — a worker that blocks on a
+    /// sub-latch while the pool is at this cap can deadlock, because
+    /// waiting callers do not steal queued jobs.  No kernel in this crate
+    /// nests; keep it that way (or add job-stealing first).
+    const MAX_WORKERS: usize = 256;
+
+    static SHARED: OnceLock<Arc<Shared>> = OnceLock::new();
+
+    fn shared() -> &'static Arc<Shared> {
+        SHARED.get_or_init(|| {
+            Arc::new(Shared {
+                q: Mutex::new(Queue { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+                cv: Condvar::new(),
+            })
+        })
+    }
+
+    pub(super) fn worker_count() -> usize {
+        shared().q.lock().unwrap_or_else(|e| e.into_inner()).workers
+    }
+
+    fn worker_loop(sh: Arc<Shared>) {
+        loop {
+            let job = {
+                let mut q = sh.q.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(j) = q.jobs.pop_front() {
+                        break j;
+                    }
+                    q.idle += 1;
+                    q = sh.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                    q.idle -= 1;
+                }
+            };
+            job(); // panics are caught inside the wrapper run() queued
+        }
+    }
+
+    /// Completion latch: `run` returns (or unwinds) only after every
+    /// submitted job has finished, which is what makes the lifetime
+    /// erasure below sound.
+    struct Latch {
+        left: Mutex<usize>,
+        done: Condvar,
+        panic: Mutex<Option<Box<dyn Any + Send>>>,
+    }
+
+    impl Latch {
+        fn finish(&self, panic: Option<Box<dyn Any + Send>>) {
+            if let Some(p) = panic {
+                self.panic.lock().unwrap_or_else(|e| e.into_inner()).get_or_insert(p);
             }
+            let mut left = self.left.lock().unwrap_or_else(|e| e.into_inner());
+            *left -= 1;
+            if *left == 0 {
+                self.done.notify_all();
+            }
+        }
+
+        fn wait(&self) {
+            let mut left = self.left.lock().unwrap_or_else(|e| e.into_inner());
+            while *left > 0 {
+                left = self.done.wait(left).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+
+    /// Waits for the latch even if the inline run unwinds, so borrowed
+    /// output slices outlive every pooled job no matter what.
+    struct WaitOnDrop<'a>(&'a Latch);
+
+    impl Drop for WaitOnDrop<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+
+    /// Execute `jobs` to completion: the last job runs inline on the
+    /// caller, the rest go to pool workers (spawning new ones only when no
+    /// idle worker is available).  A panic in any job is re-raised on the
+    /// caller after all jobs finish.
+    pub(super) fn run<'a>(mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let Some(inline) = jobs.pop() else { return };
+        let latch = Arc::new(Latch {
+            left: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
         });
+        if !jobs.is_empty() {
+            let sh = shared();
+            {
+                let mut q = sh.q.lock().unwrap_or_else(|e| e.into_inner());
+                let spawn = jobs
+                    .len()
+                    .saturating_sub(q.idle)
+                    .min(MAX_WORKERS.saturating_sub(q.workers));
+                for _ in 0..spawn {
+                    q.workers += 1;
+                    let sh = Arc::clone(sh);
+                    std::thread::Builder::new()
+                        .name("qst-kernel-pool".into())
+                        .spawn(move || worker_loop(sh))
+                        .expect("spawning kernel pool worker");
+                }
+                for job in jobs {
+                    // SAFETY: `job` borrows the caller's stack (output run +
+                    // kernel closure).  Those borrows stay valid because this
+                    // function cannot return or unwind before the latch
+                    // reaches zero: the normal path waits via WaitOnDrop's
+                    // scope below, and the unwind path waits in its Drop.
+                    let job: Job = unsafe {
+                        std::mem::transmute::<
+                            Box<dyn FnOnce() + Send + 'a>,
+                            Box<dyn FnOnce() + Send + 'static>,
+                        >(job)
+                    };
+                    let latch = Arc::clone(&latch);
+                    q.jobs.push_back(Box::new(move || {
+                        let result = catch_unwind(AssertUnwindSafe(job));
+                        latch.finish(result.err());
+                    }));
+                }
+            }
+            sh.cv.notify_all();
+        }
+        let guard = WaitOnDrop(&*latch);
+        inline();
+        drop(guard); // blocks until every pooled job is done
+        if let Some(p) = latch.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            resume_unwind(p);
+        }
     }
 }
 
@@ -108,18 +317,20 @@ mod tests {
     #[test]
     fn every_row_visited_exactly_once_any_count() {
         for threads in [1usize, 2, 3, 4, 7, 16] {
-            let rows = 13;
-            let mut out = vec![0u32; rows * 3];
-            Threads::new(threads).par_rows(&mut out, 3, |row0, run| {
-                for (r, row) in run.chunks_mut(3).enumerate() {
-                    for v in row.iter_mut() {
-                        *v += (row0 + r) as u32 + 1; // += exposes double visits
+            for scoped in [false, true] {
+                let rows = 13;
+                let mut out = vec![0u32; rows * 3];
+                let t = if scoped { Threads::scoped(threads) } else { Threads::new(threads) };
+                t.par_rows(&mut out, 3, |row0, run| {
+                    for (r, row) in run.chunks_mut(3).enumerate() {
+                        for v in row.iter_mut() {
+                            *v += (row0 + r) as u32 + 1; // += exposes double visits
+                        }
                     }
-                }
-            });
-            let want: Vec<u32> =
-                (0..rows).flat_map(|r| [r as u32 + 1; 3]).collect();
-            assert_eq!(out, want, "threads={threads}");
+                });
+                let want: Vec<u32> = (0..rows).flat_map(|r| [r as u32 + 1; 3]).collect();
+                assert_eq!(out, want, "threads={threads} scoped={scoped}");
+            }
         }
     }
 
@@ -130,6 +341,60 @@ mod tests {
             run[0] = row0 as u8 + 1;
         });
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn pooled_matches_scoped_bitwise() {
+        // the pool changes only where runs execute, never what they compute
+        let compute = |t: Threads| {
+            let mut out = vec![0f32; 64 * 9];
+            t.par_rows(&mut out, 9, |row0, run| {
+                for (r, row) in run.chunks_mut(9).enumerate() {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = ((row0 + r) as f32).sin() * (j as f32 + 0.5);
+                    }
+                }
+            });
+            out
+        };
+        let want = compute(Threads::new(1));
+        for n in [2usize, 3, 8] {
+            assert_eq!(compute(Threads::new(n)), want, "pooled n={n}");
+            assert_eq!(compute(Threads::scoped(n)), want, "scoped n={n}");
+        }
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_calls() {
+        let t = Threads::new(4);
+        let run_once = || {
+            let mut out = vec![0u64; 16];
+            t.par_rows(&mut out, 1, |row0, run| {
+                run[0] = row0 as u64;
+            });
+        };
+        run_once(); // warm the pool
+        let after_warmup = pool_workers();
+        assert!(after_warmup >= 1, "4-way run must have spawned pool workers");
+        for _ in 0..50 {
+            run_once();
+        }
+        // other tests share the pool, so only assert it stays bounded by
+        // the hard cap rather than exactly flat
+        assert!(pool_workers() <= 256);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let boom = std::panic::catch_unwind(|| {
+            let mut out = vec![0u32; 8];
+            Threads::new(4).par_rows(&mut out, 1, |row0, _run| {
+                if row0 > 0 {
+                    panic!("worker {row0} exploded");
+                }
+            });
+        });
+        assert!(boom.is_err(), "a pooled worker panic must surface on the caller");
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! * [`tensor`]     — host tensors + PJRT literal marshaling
 //! * [`kernels`]    — shared host compute layer: blocked/threaded f32 GEMM +
 //!   fused W4 dequant-GEMM (serve forwards, quantizer, `bench-kernels`)
+//! * [`nn`]         — [`nn::Linear`]: frozen weights as f32 or packed W4
+//!   behind one forward (the serving backbone's storage abstraction)
 //! * [`quant`]      — NF4/FP4 blockwise + double quantization (mirrors `python/compile/quant.py`)
 //! * [`runtime`]    — PJRT client, artifact manifests, executor with device-resident state
 //! * [`coordinator`] — trainer, evaluator, LR schedules, checkpoints, metrics
@@ -28,6 +30,7 @@ pub mod costmodel;
 pub mod data;
 pub mod experiments;
 pub mod kernels;
+pub mod nn;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

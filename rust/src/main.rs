@@ -260,8 +260,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let seed = args.u64_or("seed", 0)?;
         let n_tasks = args.usize_or("num-tasks", 2)?.max(1);
         let preset = serve::EnginePreset::parse(&args.str_or("preset", "small"))?;
-        let mut engine = preset.build(seed, seq);
+        let backbone = serve::BackboneKind::parse(&args.str_or("backbone", "f32"))?;
+        let mut engine = preset.build_backbone(seed, seq, backbone);
         engine.set_threads(args.usize_or("threads", 1)?);
+        eprintln!(
+            "backbone: {} preset stored as {} ({} resident)",
+            preset.name(),
+            backbone.name(),
+            qst::util::human_bytes(engine.backbone_resident_bytes() as f64)
+        );
         let mut server = Server::new(engine, cfg);
         for i in 0..n_tasks {
             server.registry.register_synthetic(&format!("task{i}"), seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
@@ -313,6 +320,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
         threads: args.usize_or("threads", 1)?,
         preset: serve::EnginePreset::parse(&args.str_or("preset", "small"))?,
+        backbone: serve::BackboneKind::parse(&args.str_or("backbone", "f32"))?,
     };
     let report = serve::workload::run_bench(&opts)?;
     println!("{}", report.summary());

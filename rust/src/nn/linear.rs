@@ -1,0 +1,286 @@
+//! [`Linear`] — a frozen weight matrix stored either as f32 or as packed
+//! W4 nibbles with double-quantized scales, behind one forward entry.
+//!
+//! The QST memory story only materializes if the frozen backbone is
+//! *resident* in 4 bits: quantize once at build time, drop the f32
+//! original, and serve every matmul through the fused dequant-GEMM
+//! ([`crate::kernels::qgemm::w4_matmul_dq`]).  Because that kernel — and
+//! the per-row dequant in [`Linear::row_into`] — reproduce the exact
+//! single-rounded `code * scale` products of
+//! [`crate::quant::dequantize_matrix_raw`], a W4 linear is **bit-identical**
+//! to an f32 linear holding the quantize→dequantize round-trip of the same
+//! weights.  The serve parity tests pin this across presets, batch shapes,
+//! and thread counts.
+
+use crate::kernels::{gemm, qgemm, Threads};
+use crate::quant::codebook::codebook;
+use crate::quant::{
+    dequantize_matrix_raw, dequantize_scales, qblock_for, quantize_matrix_raw, quantize_scales,
+    scale_at,
+};
+
+/// How the frozen backbone weights are held in memory (`--backbone`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackboneKind {
+    /// Plain `Vec<f32>` — the pre-refactor storage; 4 bytes/param.
+    F32,
+    /// Packed 4-bit nibbles + double-quantized scales; ~4.13 bits/param.
+    W4,
+}
+
+impl BackboneKind {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "f32" => Ok(BackboneKind::F32),
+            "w4" => Ok(BackboneKind::W4),
+            other => anyhow::bail!("unknown backbone '{other}' (expected 'f32' or 'w4')"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackboneKind::F32 => "f32",
+            BackboneKind::W4 => "w4",
+        }
+    }
+
+    /// The other storage kind (for side-by-side benchmark passes).
+    pub fn other(self) -> Self {
+        match self {
+            BackboneKind::F32 => BackboneKind::W4,
+            BackboneKind::W4 => BackboneKind::F32,
+        }
+    }
+}
+
+/// Quantized-scale group size used for backbone matrices (paper default).
+pub const QGROUP: usize = 256;
+/// Code table used for backbone matrices (paper default).
+pub const QDTYPE: &str = "nf4";
+
+/// One `[K, N]` matrix in the W4 storage format, raw-vec flavored for the
+/// serving hot path (the tensor-wrapped sibling is [`crate::quant::QMatrix`]).
+pub struct W4Linear {
+    /// `[K/2, N]` nibble pairs (row 2i low, 2i+1 high)
+    pub packed: Vec<u8>,
+    /// `[K/qblock · N]` 8-bit double-quantized scales
+    pub q8: Vec<i8>,
+    /// per-group absmax of the centered scales
+    pub gabs: Vec<f32>,
+    /// per-group mean of the scales
+    pub gmean: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+    pub qblock: usize,
+}
+
+/// Resident bytes of one `[K, N]` matrix in the W4 storage format: packed
+/// nibbles + 1-byte scales + two f32s per scale group.
+pub fn w4_resident_bytes(k: usize, n: usize, qblock: usize, qgroup: usize) -> usize {
+    let nscales = (k / qblock) * n;
+    (k / 2) * n + nscales + 8 * nscales.div_ceil(qgroup)
+}
+
+/// A frozen weight matrix `W[K, N]` with a storage-dispatched forward.
+pub enum Linear {
+    F32 { w: Vec<f32>, k: usize, n: usize },
+    W4(W4Linear),
+}
+
+impl Linear {
+    /// Hold `w` as plain f32 (takes ownership; no copy).
+    pub fn from_f32(w: Vec<f32>, k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        Linear::F32 { w, k, n }
+    }
+
+    /// Quantize `w` to the W4 storage format and drop the f32 original.
+    /// `qblock` defaults to the largest supported stripe dividing `k`.
+    pub fn quantize(w: Vec<f32>, k: usize, n: usize) -> Self {
+        let qblock = qblock_for(k)
+            .unwrap_or_else(|| panic!("K={k} has no even qblock — cannot store as W4"));
+        let (packed, scales) = quantize_matrix_raw(&w, k, n, QDTYPE, qblock);
+        drop(w); // the f32 copy dies here; only the 4-bit form stays resident
+        let (q8, gabs, gmean) = quantize_scales(&scales, QGROUP);
+        Linear::W4(W4Linear { packed, q8, gabs, gmean, k, n, qblock })
+    }
+
+    /// Build with the storage selected by `kind` (`--backbone`).
+    pub fn build(kind: BackboneKind, w: Vec<f32>, k: usize, n: usize) -> Self {
+        match kind {
+            BackboneKind::F32 => Linear::from_f32(w, k, n),
+            BackboneKind::W4 => Linear::quantize(w, k, n),
+        }
+    }
+
+    pub fn kind(&self) -> BackboneKind {
+        match self {
+            Linear::F32 { .. } => BackboneKind::F32,
+            Linear::W4(_) => BackboneKind::W4,
+        }
+    }
+
+    /// `(K, N)`
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Linear::F32 { k, n, .. } => (*k, *n),
+            Linear::W4(q) => (q.k, q.n),
+        }
+    }
+
+    /// `y[m, N] = x[m, K] · W[K, N]`, dispatching to the blocked f32 GEMM
+    /// or the fused W4 dequant-GEMM.  Bit-identical across thread counts
+    /// either way.
+    pub fn forward(&self, threads: &Threads, x: &[f32], m: usize) -> Vec<f32> {
+        match self {
+            Linear::F32 { w, k, n } => gemm::matmul(threads, x, w, m, *k, *n),
+            Linear::W4(q) => qgemm::w4_matmul_dq(
+                threads, x, &q.packed, &q.q8, &q.gabs, &q.gmean, QGROUP, m, q.k, q.n, QDTYPE,
+                q.qblock,
+            ),
+        }
+    }
+
+    /// Copy row `r` (length N) into `out` — the embedding-gather path.
+    /// The W4 arm decodes `code[nibble] · scale` with the same single
+    /// roundings as [`dequantize_matrix_raw`], so gathers match the f32
+    /// round-trip exactly.
+    pub fn row_into(&self, r: usize, out: &mut [f32]) {
+        match self {
+            Linear::F32 { w, k, n } => {
+                assert!(r < *k);
+                out.copy_from_slice(&w[r * n..(r + 1) * n]);
+            }
+            Linear::W4(q) => {
+                assert!(r < q.k);
+                assert_eq!(out.len(), q.n);
+                let code = codebook(QDTYPE);
+                let srow = (r / q.qblock) * q.n;
+                let prow = &q.packed[(r / 2) * q.n..(r / 2 + 1) * q.n];
+                let hi = r % 2 == 1;
+                for (j, (v, &byte)) in out.iter_mut().zip(prow).enumerate() {
+                    let s = scale_at(&q.q8, &q.gabs, &q.gmean, QGROUP, srow + j);
+                    let nib = if hi { byte >> 4 } else { byte & 0xF };
+                    *v = code[nib as usize] * s;
+                }
+            }
+        }
+    }
+
+    /// Bytes this matrix keeps resident (weight payload only).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Linear::F32 { w, .. } => w.len() * 4,
+            Linear::W4(q) => w4_resident_bytes(q.k, q.n, q.qblock, QGROUP),
+        }
+    }
+
+    /// Materialize the full f32 matrix this linear computes with: the raw
+    /// weights for `F32`, the quantize→dequantize round-trip for `W4`.
+    pub fn dequantized(&self) -> Vec<f32> {
+        match self {
+            Linear::F32 { w, .. } => w.clone(),
+            Linear::W4(q) => {
+                let scales = dequantize_scales(&q.q8, &q.gabs, &q.gmean, QGROUP);
+                dequantize_matrix_raw(&q.packed, &scales, q.k, q.n, QDTYPE, q.qblock)
+            }
+        }
+    }
+
+    /// An `F32` linear computing exactly what this one computes — the
+    /// reference the W4 parity tests compare against.
+    pub fn to_f32_roundtrip(&self) -> Linear {
+        let (k, n) = self.shape();
+        Linear::from_f32(self.dequantized(), k, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    #[test]
+    fn backbone_kind_parse_roundtrip() {
+        for k in [BackboneKind::F32, BackboneKind::W4] {
+            assert_eq!(BackboneKind::parse(k.name()).unwrap(), k);
+            assert_eq!(k.other().other(), k);
+        }
+        assert!(BackboneKind::parse("int8").is_err());
+    }
+
+    #[test]
+    fn w4_forward_matches_f32_roundtrip_bitwise() {
+        let mut rng = Rng::new(11);
+        for (k, n) in [(96usize, 96usize), (256, 64), (512, 96)] {
+            let w = rand(&mut rng, k * n);
+            let q = Linear::quantize(w.clone(), k, n);
+            let rt = q.to_f32_roundtrip();
+            for m in [1usize, 5, 40] {
+                let x = rand(&mut rng, m * k);
+                for t in [1usize, 4] {
+                    let threads = Threads::new(t);
+                    assert_eq!(
+                        q.forward(&threads, &x, m),
+                        rt.forward(&threads, &x, m),
+                        "k={k} n={n} m={m} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_gather_matches_dequantized_rows() {
+        let mut rng = Rng::new(12);
+        let (k, n) = (128usize, 48usize);
+        let q = Linear::quantize(rand(&mut rng, k * n), k, n);
+        let full = q.dequantized();
+        let mut row = vec![0f32; n];
+        for r in [0usize, 1, 63, 64, 127] {
+            q.row_into(r, &mut row);
+            assert_eq!(row, full[r * n..(r + 1) * n], "row {r}");
+        }
+    }
+
+    #[test]
+    fn f32_row_and_forward_are_raw() {
+        let mut rng = Rng::new(13);
+        let (k, n) = (8usize, 6usize);
+        let w = rand(&mut rng, k * n);
+        let lin = Linear::from_f32(w.clone(), k, n);
+        let mut row = vec![0f32; n];
+        lin.row_into(3, &mut row);
+        assert_eq!(row, w[3 * n..4 * n]);
+        assert_eq!(lin.resident_bytes(), k * n * 4);
+    }
+
+    #[test]
+    fn w4_resident_bytes_is_much_smaller() {
+        let mut rng = Rng::new(14);
+        for (k, n) in [(96usize, 96usize), (256, 256), (512, 256)] {
+            let w = rand(&mut rng, k * n);
+            let f = Linear::from_f32(w.clone(), k, n);
+            let q = Linear::quantize(w, k, n);
+            assert!(
+                q.resident_bytes() * 5 <= f.resident_bytes(),
+                "{k}x{n}: w4 {} vs f32 {}",
+                q.resident_bytes(),
+                f.resident_bytes()
+            );
+            // accounting helper must match the actual payload sizes
+            if let Linear::W4(ref raw) = q {
+                assert_eq!(
+                    q.resident_bytes(),
+                    raw.packed.len()
+                        + raw.q8.len()
+                        + 4 * (raw.gabs.len() + raw.gmean.len())
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Host-side neural-net building blocks shared by serving and benches.
+//!
+//! Today this is [`Linear`] — the backbone weight abstraction that lets
+//! [`crate::serve::SyntheticEngine`] hold its frozen matrices either as
+//! plain f32 or as packed 4-bit nibbles with double-quantized scales
+//! (the paper's storage format), behind one `forward` entry point.
+
+pub mod linear;
+
+pub use linear::{w4_resident_bytes, BackboneKind, Linear, W4Linear};

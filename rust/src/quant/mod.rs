@@ -112,14 +112,19 @@ pub fn quantize_scales(scales: &[f32], qgroup: usize) -> (Vec<i8>, Vec<f32>, Vec
     (q8, gabs, gmean)
 }
 
+/// Decode one double-quantized scale.  This is THE defining expression of
+/// the 8-bit scale format: every consumer (full decode below, the fused
+/// kernel's stripe fill in [`crate::kernels::qgemm`], the embedding row
+/// gather in [`crate::nn::Linear`]) must call this single-rounded form so
+/// their outputs stay bit-identical to each other.
+#[inline]
+pub fn scale_at(q8: &[i8], gabs: &[f32], gmean: &[f32], qgroup: usize, i: usize) -> f32 {
+    let g = i / qgroup;
+    q8[i] as f32 / 127.0 * gabs[g] + gmean[g]
+}
+
 pub fn dequantize_scales(q8: &[i8], gabs: &[f32], gmean: &[f32], qgroup: usize) -> Vec<f32> {
-    q8.iter()
-        .enumerate()
-        .map(|(i, &q)| {
-            let g = i / qgroup;
-            q as f32 / 127.0 * gabs[g] + gmean[g]
-        })
-        .collect()
+    (0..q8.len()).map(|i| scale_at(q8, gabs, gmean, qgroup, i)).collect()
 }
 
 /// The 4 artifact tensors for one quantized matrix, keyed by field name.
@@ -150,6 +155,13 @@ pub fn quantize_matrix(w: &HostTensor, qdtype: &str, qblock: usize, qgroup: usiz
 /// Effective storage bits per parameter (paper: ~4.127 b/param at 64/256).
 pub fn storage_bits_per_param(qblock: usize, qgroup: usize) -> f64 {
     4.0 + 8.0 / qblock as f64 + 64.0 / (qblock as f64 * qgroup as f64)
+}
+
+/// Largest supported scale-stripe size dividing `k` (the paper's 64 when it
+/// fits, else the next even divisor); `None` for odd `k`, which cannot pack
+/// nibble pairs at all.
+pub fn qblock_for(k: usize) -> Option<usize> {
+    [64usize, 32, 16, 8, 4, 2].into_iter().find(|qb| k % qb == 0)
 }
 
 #[cfg(test)]
@@ -212,6 +224,19 @@ mod tests {
     #[test]
     fn storage_bits_matches_paper() {
         assert!((storage_bits_per_param(64, 256) - 4.127).abs() < 0.01);
+    }
+
+    #[test]
+    fn qblock_for_picks_largest_even_divisor() {
+        assert_eq!(qblock_for(256), Some(64));
+        assert_eq!(qblock_for(96), Some(32)); // the small preset's d
+        assert_eq!(qblock_for(6), Some(2));
+        assert_eq!(qblock_for(33), None, "odd K cannot pack nibble pairs");
+        for k in [96usize, 128, 256, 512] {
+            let qb = qblock_for(k).unwrap();
+            assert_eq!(k % qb, 0);
+            assert_eq!(qb % 2, 0);
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@ use super::batcher::query_pos;
 use super::registry::SideNetwork;
 use super::Hidden;
 use crate::kernels::{gemm, Threads};
+use crate::nn::{BackboneKind, Linear};
 use crate::runtime::{Executor, Role, Runtime};
 use crate::tensor::{DType, HostTensor};
 use crate::util::rng::Rng;
@@ -100,15 +101,34 @@ impl EnginePreset {
         }
     }
 
-    pub fn build(self, seed: u64, seq: usize) -> SyntheticEngine {
+    /// `(d, layers, vocab, r)` of this preset's engine.
+    pub fn shape(self) -> (usize, usize, usize, usize) {
         match self {
-            EnginePreset::Small => SyntheticEngine::small(seed, seq),
-            EnginePreset::Large => SyntheticEngine::large(seed, seq),
+            EnginePreset::Small => (96, 6, SyntheticEngine::SMALL_VOCAB, 12),
+            EnginePreset::Large => (256, 8, SyntheticEngine::LARGE_VOCAB, 16),
         }
+    }
+
+    pub fn build(self, seed: u64, seq: usize) -> SyntheticEngine {
+        self.build_backbone(seed, seq, BackboneKind::F32)
+    }
+
+    /// Build with the backbone storage selected by `--backbone`.
+    pub fn build_backbone(self, seed: u64, seq: usize, kind: BackboneKind) -> SyntheticEngine {
+        let (d, layers, vocab, r) = self.shape();
+        SyntheticEngine::with_backbone(seed, d, layers, vocab, seq, r, kind)
     }
 }
 
 /// Deterministic host-side QST serving reference (see module doc).
+///
+/// The frozen backbone (embedding table + per-layer `[d, d]` matrices) is
+/// held as [`Linear`]s: `--backbone f32` keeps the seeded f32 weights,
+/// `--backbone w4` quantizes them through the paper's packed-nibble +
+/// double-quantized-scale format at build time and drops the f32 originals
+/// — the engine then serves straight through the fused dequant-GEMM.  The
+/// per-task side networks stay full-precision by design (QST trains them in
+/// 16/32-bit; only the frozen backbone is quantized).
 pub struct SyntheticEngine {
     pub d: usize,
     pub layers: usize,
@@ -116,9 +136,10 @@ pub struct SyntheticEngine {
     pub seq: usize,
     /// side-network reduction factor (paper default 16; must divide d)
     pub r: usize,
-    embed: Vec<f32>,
+    /// [vocab, d] embedding table (row-gathered, never matmul'd)
+    embed: Linear,
     /// layers × [d, d]
-    w: Vec<Vec<f32>>,
+    w: Vec<Linear>,
     side_cache: HashMap<u64, Rc<SideWeights>>,
     id: u64,
     /// worker count for the blocked GEMM kernels; results are bit-identical
@@ -130,12 +151,31 @@ pub struct SyntheticEngine {
 
 impl SyntheticEngine {
     pub fn new(seed: u64, d: usize, layers: usize, vocab: usize, seq: usize, r: usize) -> Self {
+        Self::with_backbone(seed, d, layers, vocab, seq, r, BackboneKind::F32)
+    }
+
+    /// Build the seeded backbone, storing it per `kind`.  The f32 matrices
+    /// exist only transiently during quantization: for `W4` nothing
+    /// full-precision stays resident.  Seeding is independent of `kind`, so
+    /// a W4 engine computes exactly what an f32 engine over the
+    /// quantize→dequantize round-trip of the same seed computes.
+    pub fn with_backbone(
+        seed: u64,
+        d: usize,
+        layers: usize,
+        vocab: usize,
+        seq: usize,
+        r: usize,
+        kind: BackboneKind,
+    ) -> Self {
         assert!(d % r == 0 && d / r >= 2, "reduction {r} must divide d={d} with width >= 2");
         assert!(layers >= 1 && vocab >= 2 && seq >= 1);
         let mut rng = Rng::new(seed ^ 0x5157_5345_5256_4531); // "QWSE RVE1"-ish tag
         let scale = 1.0 / (d as f64).sqrt();
-        let embed = seeded_matrix(&mut rng, vocab, d, scale);
-        let w = (0..layers).map(|_| seeded_matrix(&mut rng, d, d, scale)).collect();
+        let embed = Linear::build(kind, seeded_matrix(&mut rng, vocab, d, scale), vocab, d);
+        let w = (0..layers)
+            .map(|_| Linear::build(kind, seeded_matrix(&mut rng, d, d, scale), d, d))
+            .collect();
         SyntheticEngine {
             d,
             layers,
@@ -145,7 +185,13 @@ impl SyntheticEngine {
             embed,
             w,
             side_cache: HashMap::new(),
-            id: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xB5,
+            // the storage kind changes the served numerics (round-tripped
+            // weights), so it must flow into every cache key
+            id: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ match kind {
+                    BackboneKind::F32 => 0xB5,
+                    BackboneKind::W4 => 0x57_34,
+                },
             threads: Threads::default(),
             backbone_rows: 0,
         }
@@ -158,16 +204,17 @@ impl SyntheticEngine {
     pub const LARGE_VOCAB: usize = 512;
 
     /// Small default used by tests and `bench-serve`: heavy backbone
-    /// (d=96, 6 layers) vs light side nets (width 8).
+    /// (d=96, 6 layers) vs light side nets (width 8).  The shape literals
+    /// live in [`EnginePreset::shape`] — the single source of truth.
     pub fn small(seed: u64, seq: usize) -> Self {
-        SyntheticEngine::new(seed, 96, 6, Self::SMALL_VOCAB, seq, 12)
+        EnginePreset::Small.build(seed, seq)
     }
 
     /// Big preset (d=256, 8 layers, width-16 side nets): ~9x the backbone
     /// FLOPs of [`SyntheticEngine::small`], serviceable only because the
     /// forwards run on the blocked/threaded kernels.
     pub fn large(seed: u64, seq: usize) -> Self {
-        SyntheticEngine::new(seed, 256, 8, Self::LARGE_VOCAB, seq, 16)
+        EnginePreset::Large.build(seed, seq)
     }
 
     /// Set the kernel worker count (clamped to >= 1).  Purely a wall-clock
@@ -184,6 +231,38 @@ impl SyntheticEngine {
     /// per-layer states plus the verification copy of the prompt tokens.
     pub fn hidden_bytes(&self) -> usize {
         ((self.layers + 1) * self.seq * self.d + self.seq) * 4
+    }
+
+    /// How the frozen backbone is stored (`--backbone f32|w4`).
+    pub fn backbone_kind(&self) -> BackboneKind {
+        self.embed.kind()
+    }
+
+    /// Bytes the frozen backbone keeps resident (embedding + layer
+    /// matrices) — the figure `bench-serve` reports and
+    /// [`crate::costmodel::memory::backbone_resident_bytes`] models.
+    pub fn backbone_resident_bytes(&self) -> usize {
+        self.embed.resident_bytes() + self.w.iter().map(Linear::resident_bytes).sum::<usize>()
+    }
+
+    /// A fresh engine whose backbone holds, in plain f32, exactly the
+    /// weights this engine computes with (the quantize→dequantize
+    /// round-trip for W4; a copy for f32).  This is the parity-test
+    /// reference: its forwards must match this engine's bit-for-bit.
+    pub fn to_f32_roundtrip(&self) -> SyntheticEngine {
+        SyntheticEngine {
+            d: self.d,
+            layers: self.layers,
+            vocab: self.vocab,
+            seq: self.seq,
+            r: self.r,
+            embed: self.embed.to_f32_roundtrip(),
+            w: self.w.iter().map(Linear::to_f32_roundtrip).collect(),
+            side_cache: HashMap::new(),
+            id: self.id,
+            threads: self.threads,
+            backbone_rows: 0,
+        }
     }
 
     fn side_weights(&mut self, net: &SideNetwork) -> Rc<SideWeights> {
@@ -231,8 +310,7 @@ impl Engine for SyntheticEngine {
         for (r, row) in rows.iter().enumerate() {
             for (t, &tok) in row.iter().enumerate() {
                 let tok = (tok.max(0) as usize) % self.vocab;
-                h0[(r * seq + t) * d..(r * seq + t + 1) * d]
-                    .copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+                self.embed.row_into(tok, &mut h0[(r * seq + t) * d..(r * seq + t + 1) * d]);
             }
         }
         // residual tanh layers: h' = tanh(h·W + h).  Each layer's states are
@@ -248,7 +326,7 @@ impl Engine for SyntheticEngine {
         append_level(&mut datas, &h0, seq * d);
         let mut h = h0;
         for wl in &self.w {
-            let mut next = gemm::matmul(&self.threads, &h, wl, total, d, d);
+            let mut next = wl.forward(&self.threads, &h, total);
             let h_ref = &h;
             self.threads.par_rows(&mut next, d, |row0, run| {
                 for (rr, nrow) in run.chunks_mut(d).enumerate() {
@@ -584,8 +662,50 @@ mod tests {
         for p in [EnginePreset::Small, EnginePreset::Large] {
             assert_eq!(EnginePreset::parse(p.name()).unwrap(), p);
             assert_eq!(p.build(1, 8).vocab, p.vocab());
+            let (d, layers, vocab, r) = p.shape();
+            let e = p.build(1, 8);
+            assert_eq!((e.d, e.layers, e.vocab, e.r), (d, layers, vocab, r));
         }
         assert!(EnginePreset::parse("huge").is_err());
+    }
+
+    #[test]
+    fn w4_backbone_shrinks_residency_at_least_5x() {
+        for p in [EnginePreset::Small, EnginePreset::Large] {
+            let f = p.build_backbone(1, 8, BackboneKind::F32);
+            let q = p.build_backbone(1, 8, BackboneKind::W4);
+            assert_eq!(f.backbone_kind(), BackboneKind::F32);
+            assert_eq!(q.backbone_kind(), BackboneKind::W4);
+            assert!(
+                q.backbone_resident_bytes() * 5 <= f.backbone_resident_bytes(),
+                "{}: w4 {} vs f32 {}",
+                p.name(),
+                q.backbone_resident_bytes(),
+                f.backbone_resident_bytes()
+            );
+            // distinct numerics -> distinct cache identity
+            assert_ne!(f.backbone_id(), q.backbone_id());
+        }
+    }
+
+    #[test]
+    fn w4_engine_matches_f32_roundtrip_engine() {
+        let mut w4 = EnginePreset::Small.build_backbone(9, 12, BackboneKind::W4);
+        let mut rt = w4.to_f32_roundtrip();
+        assert_eq!(rt.backbone_kind(), BackboneKind::F32);
+        let rows: Vec<Vec<i32>> = (0..3).map(|i| vec![i * 11 + 1; 12]).collect();
+        let hq = w4.backbone(&rows).unwrap();
+        let hf = rt.backbone(&rows).unwrap();
+        for (a, b) in hq.iter().zip(&hf) {
+            assert_eq!(a.data, b.data, "w4 hiddens must equal the f32 round-trip's");
+        }
+        let net = synth_net("t", 4);
+        let h: Vec<Rc<Hidden>> = hq.into_iter().map(Rc::new).collect();
+        assert_eq!(
+            w4.side(&net, &h, &rows).unwrap(),
+            rt.side(&net, &h, &rows).unwrap(),
+            "side forwards share f32 weights and identical hiddens"
+        );
     }
 
     #[test]

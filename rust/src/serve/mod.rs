@@ -58,6 +58,7 @@ use anyhow::{bail, Result};
 pub use batcher::{MicroBatch, RequestQueue};
 pub use cache::HiddenCache;
 pub use engine::{Engine, EnginePreset, ExecutorEngine, SyntheticEngine};
+pub use crate::nn::BackboneKind;
 pub use registry::{Registry, SideNetwork};
 pub use stats::ServeStats;
 

@@ -16,7 +16,7 @@
 use anyhow::{ensure, Result};
 
 use super::stats::Json;
-use super::{EnginePreset, ServeConfig, Server};
+use super::{BackboneKind, EnginePreset, ServeConfig, Server};
 use crate::util::rng::Rng;
 
 /// Workload + engine shape for a serving benchmark run.
@@ -38,6 +38,8 @@ pub struct BenchServeOpts {
     pub threads: usize,
     /// engine shape (`--preset small|large`)
     pub preset: EnginePreset,
+    /// frozen-backbone storage (`--backbone f32|w4`) for the primary passes
+    pub backbone: BackboneKind,
 }
 
 impl Default for BenchServeOpts {
@@ -55,11 +57,12 @@ impl Default for BenchServeOpts {
             seed: 0,
             threads: 1,
             preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
         }
     }
 }
 
-/// One measured pass (cache on or off).
+/// One measured pass (cache on or off, one backbone kind).
 #[derive(Clone, Copy, Debug)]
 pub struct PassReport {
     pub wall_secs: f64,
@@ -70,14 +73,20 @@ pub struct PassReport {
     pub p95_ms: f64,
     pub backbone_rows: u64,
     pub cache_evictions: u64,
+    /// bytes the frozen backbone kept resident during this pass
+    pub backbone_bytes: usize,
 }
 
-/// The full cached-vs-uncached comparison.
+/// The full comparison: cached-vs-uncached on the primary backbone kind,
+/// plus one cached pass on the *other* kind so every report carries
+/// f32-vs-W4 latency and resident-bytes side-by-side.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchServeReport {
     pub opts: BenchServeOpts,
     pub cached: PassReport,
     pub uncached: PassReport,
+    /// cached pass over the other backbone storage (same workload stream)
+    pub alt_cached: PassReport,
 }
 
 impl BenchServeReport {
@@ -85,10 +94,32 @@ impl BenchServeReport {
         self.cached.requests_per_sec / self.uncached.requests_per_sec.max(1e-12)
     }
 
+    /// Resident backbone bytes by kind, regardless of which was primary.
+    pub fn backbone_bytes(&self, kind: BackboneKind) -> usize {
+        if kind == self.opts.backbone {
+            self.cached.backbone_bytes
+        } else {
+            self.alt_cached.backbone_bytes
+        }
+    }
+
+    /// f32 resident bytes over W4 resident bytes (~7x for these presets).
+    pub fn backbone_bytes_ratio(&self) -> f64 {
+        self.backbone_bytes(BackboneKind::F32) as f64
+            / self.backbone_bytes(BackboneKind::W4).max(1) as f64
+    }
+
     pub fn to_json(&self) -> String {
+        let (d, layers, vocab, r) = self.opts.preset.shape();
         Json::new()
             .str("bench", "serve")
             .str("preset", self.opts.preset.name())
+            // engine shape, so trajectory files are self-describing
+            .int("d", d as u64)
+            .int("layers", layers as u64)
+            .int("vocab", vocab as u64)
+            .int("reduction", r as u64)
+            .str("backbone", self.opts.backbone.name())
             .int("threads", self.opts.threads as u64)
             .int("tasks", self.opts.tasks as u64)
             .int("requests", self.opts.requests as u64)
@@ -110,13 +141,23 @@ impl BenchServeReport {
             .num("uncached_p95_ms", self.uncached.p95_ms)
             .int("uncached_backbone_rows", self.uncached.backbone_rows)
             .num("speedup", self.speedup())
+            // f32-vs-w4 side-by-side: residency + cached latency
+            .int("backbone_bytes", self.cached.backbone_bytes as u64)
+            .int("backbone_bytes_f32", self.backbone_bytes(BackboneKind::F32) as u64)
+            .int("backbone_bytes_w4", self.backbone_bytes(BackboneKind::W4) as u64)
+            .num("backbone_bytes_ratio", self.backbone_bytes_ratio())
+            .str("alt_backbone", self.opts.backbone.other().name())
+            .num("alt_cached_rps", self.alt_cached.requests_per_sec)
+            .num("alt_cached_p50_ms", self.alt_cached.p50_ms)
+            .num("alt_cached_p95_ms", self.alt_cached.p95_ms)
             .finish()
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "serve bench [{} preset, {} threads]: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x",
+            "serve bench [{} preset, {} backbone, {} threads]: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x | backbone {} resident ({} as {}; f32/w4 = {:.2}x) | {} cached {:.1} req/s",
             self.opts.preset.name(),
+            self.opts.backbone.name(),
             self.opts.threads,
             self.opts.requests,
             self.opts.tasks,
@@ -126,7 +167,13 @@ impl BenchServeReport {
             self.cached.p50_ms,
             self.cached.p95_ms,
             self.uncached.requests_per_sec,
-            self.speedup()
+            self.speedup(),
+            crate::util::human_bytes(self.cached.backbone_bytes as f64),
+            crate::util::human_bytes(self.alt_cached.backbone_bytes as f64),
+            self.opts.backbone.other().name(),
+            self.backbone_bytes_ratio(),
+            self.opts.backbone.other().name(),
+            self.alt_cached.requests_per_sec,
         )
     }
 }
@@ -172,10 +219,11 @@ pub fn prompt_pool(rng: &mut Rng, n: usize, len: usize, vocab: usize) -> Vec<Vec
         .collect()
 }
 
-fn run_pass(opts: &BenchServeOpts, cache_bytes: usize) -> Result<PassReport> {
-    let mut engine = opts.preset.build(opts.seed, opts.seq);
+fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -> Result<PassReport> {
+    let mut engine = opts.preset.build_backbone(opts.seed, opts.seq, backbone);
     engine.set_threads(opts.threads);
     let vocab = engine.vocab;
+    let backbone_bytes = engine.backbone_resident_bytes();
     let mut server = Server::new(
         engine,
         ServeConfig {
@@ -215,12 +263,15 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize) -> Result<PassReport> {
         p95_ms: server.stats.p95_secs() * 1e3,
         backbone_rows: server.engine.backbone_rows,
         cache_evictions: server.cache.evictions,
+        backbone_bytes,
     })
 }
 
 /// Run the repeated-prompt workload with the cache as configured and again
-/// with the cache disabled; the workload streams (and its results) are
-/// identical — only the backbone recompute count differs.
+/// with the cache disabled; the workload streams (and their results) are
+/// identical — only the backbone recompute count differs.  A third, cached
+/// pass runs the same stream over the other backbone storage so the report
+/// always carries the f32-vs-W4 comparison.
 pub fn run_bench(opts: &BenchServeOpts) -> Result<BenchServeReport> {
     ensure!(opts.tasks >= 1 && opts.requests >= 1 && opts.unique_prompts >= 1);
     ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
@@ -232,9 +283,10 @@ pub fn run_bench(opts: &BenchServeOpts) -> Result<BenchServeReport> {
         capacity,
         opts.prompt_len
     );
-    let cached = run_pass(opts, opts.cache_bytes)?;
-    let uncached = run_pass(opts, 0)?;
-    Ok(BenchServeReport { opts: *opts, cached, uncached })
+    let cached = run_pass(opts, opts.cache_bytes, opts.backbone)?;
+    let uncached = run_pass(opts, 0, opts.backbone)?;
+    let alt_cached = run_pass(opts, opts.cache_bytes, opts.backbone.other())?;
+    Ok(BenchServeReport { opts: *opts, cached, uncached, alt_cached })
 }
 
 #[cfg(test)]
@@ -255,6 +307,7 @@ mod tests {
             seed: 3,
             threads: 1,
             preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
         }
     }
 
@@ -297,7 +350,36 @@ mod tests {
         assert!(j.contains("\"threads\": 1"));
         assert!(j.contains("\"speedup\""));
         assert!(j.contains("\"cached_hit_rate\""));
+        // self-describing shape + backbone storage
+        assert!(j.contains("\"d\": 96"));
+        assert!(j.contains("\"layers\": 6"));
+        assert!(j.contains("\"vocab\": 256"));
+        assert!(j.contains("\"backbone\": \"f32\""));
+        assert!(j.contains("\"alt_backbone\": \"w4\""));
+        assert!(j.contains("\"backbone_bytes_f32\""));
+        assert!(j.contains("\"backbone_bytes_w4\""));
         assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn w4_primary_reports_shrunk_residency_and_same_work() {
+        let mut o = tiny();
+        o.backbone = BackboneKind::W4;
+        let rep = run_bench(&o).unwrap();
+        // primary passes served from the packed backbone
+        assert!(rep.to_json().contains("\"backbone\": \"w4\""));
+        assert!(
+            rep.backbone_bytes(BackboneKind::W4) * 5 <= rep.backbone_bytes(BackboneKind::F32),
+            "w4 {} vs f32 {}",
+            rep.backbone_bytes(BackboneKind::W4),
+            rep.backbone_bytes(BackboneKind::F32)
+        );
+        assert!(rep.backbone_bytes_ratio() >= 5.0);
+        // storage kind is a memory knob, not a scheduling knob: identical
+        // deterministic work accounting as the f32 run
+        let f32_rep = run_bench(&tiny()).unwrap();
+        assert_eq!(rep.cached.backbone_rows, f32_rep.cached.backbone_rows);
+        assert_eq!(rep.cached.hit_rate, f32_rep.cached.hit_rate);
     }
 
     #[test]

@@ -12,7 +12,8 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use qst::serve::{
-    batcher, Engine, ExecutorEngine, Hidden, Registry, ServeConfig, Server, SyntheticEngine,
+    batcher, BackboneKind, Engine, EnginePreset, ExecutorEngine, Hidden, Registry, ServeConfig,
+    Server, SyntheticEngine,
 };
 use qst::tensor::HostTensor;
 
@@ -128,6 +129,67 @@ fn cache_disabled_matches_cache_enabled() {
         assert_eq!(a.logits, b.logits);
     }
     assert!(rows_cached <= rows_uncached);
+}
+
+/// W4-vs-f32 engine parity (ISSUE 3 acceptance): an engine serving straight
+/// from the packed 4-bit backbone must produce logits bit-identical to an
+/// f32 engine whose weights were round-tripped through quantize→dequantize
+/// — across both presets, batched and unbatched, at 1 and 4 threads.
+#[test]
+fn w4_backbone_bit_identical_to_f32_roundtrip() {
+    for preset in [EnginePreset::Small, EnginePreset::Large] {
+        let seq = 10;
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![3, 141, 59, 26], vec![5, 35], vec![3, 141, 59, 26], vec![89, 79, 3]];
+        let rows: Vec<Vec<i32>> =
+            prompts.iter().map(|p| batcher::pad_row(p, seq).unwrap()).collect();
+        for threads in [1usize, 4] {
+            let mut w4 = preset.build_backbone(13, seq, BackboneKind::W4);
+            w4.set_threads(threads);
+            let mut f32rt = w4.to_f32_roundtrip();
+            f32rt.set_threads(threads);
+            assert!(
+                w4.backbone_resident_bytes() * 5 <= f32rt.backbone_resident_bytes(),
+                "{}: packed backbone must be at least 5x smaller",
+                preset.name()
+            );
+            let mut reg = Registry::new(1 << 20);
+            reg.register_synthetic("par", 404, 4096).unwrap();
+            let net = reg.get("par").unwrap();
+
+            // batched: all rows through one backbone + side dispatch
+            let hq: Vec<Rc<Hidden>> =
+                w4.backbone(&rows).unwrap().into_iter().map(Rc::new).collect();
+            let hf: Vec<Rc<Hidden>> =
+                f32rt.backbone(&rows).unwrap().into_iter().map(Rc::new).collect();
+            for (a, b) in hq.iter().zip(&hf) {
+                assert_eq!(
+                    a.data, b.data,
+                    "{} t={threads}: batched hiddens must match",
+                    preset.name()
+                );
+            }
+            let lq = w4.side(&net, &hq, &rows).unwrap();
+            let lf = f32rt.side(&net, &hf, &rows).unwrap();
+            assert_eq!(lq, lf, "{} t={threads}: batched logits must match", preset.name());
+
+            // unbatched: one row at a time must agree with the batched runs
+            for (i, row) in rows.iter().enumerate() {
+                let h1: Vec<Rc<Hidden>> = w4
+                    .backbone(std::slice::from_ref(row))
+                    .unwrap()
+                    .into_iter()
+                    .map(Rc::new)
+                    .collect();
+                let solo = w4.side(&net, &h1, std::slice::from_ref(row)).unwrap();
+                assert_eq!(
+                    solo[0], lq[i],
+                    "{} t={threads} row {i}: unbatched w4 must match batched",
+                    preset.name()
+                );
+            }
+        }
+    }
 }
 
 #[test]
