@@ -4,7 +4,7 @@
 # `make bench-serve` runs the serving benchmark and refreshes BENCH_serve.json;
 # `make bench-kernels` refreshes BENCH_kernels.json (host GEMM/W4 kernels).
 
-.PHONY: check test artifacts fixtures bench-serve bench-kernels
+.PHONY: check test artifacts fixtures bench-serve bench-kernels bench-gateway
 
 check:
 	./scripts/check.sh
@@ -23,3 +23,6 @@ bench-serve:
 
 bench-kernels:
 	cargo run --release -p qst --bin qst -- bench-kernels
+
+bench-gateway:
+	cargo run --release -p qst --bin qst -- bench-gateway

@@ -112,22 +112,48 @@ COMMANDS:
   serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
                [--preset small|large] [--backbone f32|w4] [--threads N]
                [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N]
-               [--seed N]
+               [--prefix-block N] [--seed N]
                In-process multi-task inference server: one shared frozen
                backbone, per-task side networks, hidden-state cache.
                --threads N runs the host kernels on N workers (bit-identical
                results for any N); --preset large is d=256, 8 layers;
                --backbone w4 keeps the frozen backbone packed in 4 bits and
-               serves through the fused dequant-GEMM (~7x less resident).
+               serves through the fused dequant-GEMM (~7x less resident);
+               --prefix-block N lets prompts that extend a cached prompt
+               resume the frozen forward from the deepest cached N-token
+               block (0 = whole-prompt caching only).
                Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
+  gateway      [--shards N] [--queue-cap N] [--num-tasks N] [--preset small|large]
+               [--backbone f32|w4] [--threads N] [--cache-bytes N]
+               [--registry-bytes N] [--batch N] [--seq N] [--prefix-block N]
+               [--seed N]
+               Asynchronous sharded serving front-end: N worker shards each
+               hold a private backbone replica + prefix-aware hidden-state
+               cache behind a bounded inbox (full inbox => backpressure, not
+               deadlock); prompts are routed by their leading prefix block so
+               repeats and prefix families stay cache-local.  Same stdin line
+               protocol as serve, but submission is decoupled from execution
+               and responses print in completion order.
   bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
-               [--registry-bytes N] [--seed N] [--preset small|large]
-               [--backbone f32|w4] [--threads N] [--json PATH]
+               [--registry-bytes N] [--prefix-block N] [--seed N]
+               [--preset small|large] [--backbone f32|w4] [--threads N]
+               [--json PATH]
                Repeated-prompt serving benchmark over >=2 side networks;
                reports cached vs uncached throughput, cache hit rate,
                p50/p95 latency, and f32-vs-W4 backbone residency + latency
                side-by-side; writes BENCH_serve.json
+  bench-gateway [--shards N,N,...] [--tasks N] [--requests N] [--families N]
+               [--per-family N] [--prefix-len N] [--prompt-len N] [--seq N]
+               [--batch N] [--cache-bytes N] [--registry-bytes N]
+               [--prefix-block N] [--queue-cap N] [--threads-per-shard N]
+               [--seed N] [--preset small|large] [--backbone f32|w4]
+               [--json PATH]
+               Shard-count scaling sweep under open-loop shared-prefix load:
+               one deterministic request stream per shard count; reports
+               aggregate req/s, merged p50/p95, cache + prefix-hit rates,
+               modeled fleet residency, and proves sharded + prefix-resume
+               parity (bit-identical logits); writes BENCH_gateway.json
   bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
                blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs

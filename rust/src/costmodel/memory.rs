@@ -111,6 +111,26 @@ pub fn backbone_resident_bytes(preset: EnginePreset, backbone: BackboneKind) -> 
     }
 }
 
+/// Resident bytes of a whole serving gateway: `shards` backbone replicas
+/// (each [`backbone_resident_bytes`]) plus each shard's hidden-state cache
+/// budget and its side-network registry charge (`tasks` synthetic networks
+/// at [`crate::serve::registry::SYNTHETIC_TASK_BYTES`] apiece — the same
+/// nominal figure the shards register with, so the model and the live
+/// registry agree exactly).  Reported in `BENCH_gateway.json` per shard
+/// count, mirroring `backbone_resident_bytes` in `BENCH_serve.json`.
+pub fn gateway_resident_bytes(
+    preset: EnginePreset,
+    backbone: BackboneKind,
+    shards: usize,
+    tasks: usize,
+    cache_budget: usize,
+) -> usize {
+    shards
+        * (backbone_resident_bytes(preset, backbone)
+            + cache_budget
+            + tasks * crate::serve::registry::SYNTHETIC_TASK_BYTES)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +232,36 @@ mod tests {
             let w4b = backbone_resident_bytes(preset, BackboneKind::W4);
             assert!(w4b * 5 <= f32b, "{}: {w4b} vs {f32b}", preset.name());
         }
+    }
+
+    #[test]
+    fn gateway_residency_pins_to_real_engine_and_registry() {
+        // the analytical gateway figure must equal what a shard actually
+        // holds: a real engine's resident backbone + a real registry after
+        // registering the same synthetic tasks + the cache budget
+        let (preset, kind, tasks, cache_budget) = (EnginePreset::Small, BackboneKind::W4, 3, 1 << 20);
+        let engine = preset.build_backbone(7, 8, kind);
+        let mut reg = crate::serve::Registry::new(1 << 30);
+        for i in 0..tasks {
+            reg.register_synthetic(
+                &crate::gateway::task_name(i),
+                crate::gateway::task_seed(7, i),
+                crate::serve::registry::SYNTHETIC_TASK_BYTES,
+            )
+            .unwrap();
+        }
+        let per_shard = engine.backbone_resident_bytes() + reg.bytes() + cache_budget;
+        for shards in [1usize, 2, 4] {
+            assert_eq!(
+                gateway_resident_bytes(preset, kind, shards, tasks, cache_budget),
+                shards * per_shard,
+                "{shards} shards"
+            );
+        }
+        // replication is linear, and W4 replicas stay far cheaper than f32
+        let w4 = gateway_resident_bytes(preset, BackboneKind::W4, 4, tasks, 0);
+        let f32b = gateway_resident_bytes(preset, BackboneKind::F32, 4, tasks, 0);
+        assert!(w4 < f32b, "W4 fleet {w4} must undercut f32 fleet {f32b}");
     }
 
     #[test]

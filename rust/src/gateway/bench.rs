@@ -1,0 +1,448 @@
+//! `qst bench-gateway`: shard-count scaling under open-loop load.
+//!
+//! One deterministic shared-prefix request stream (see
+//! [`shared_prefix_pool`]) is driven through the gateway at every
+//! configured shard count.  The driver is open-loop: it submits as fast
+//! as the bounded inboxes accept, backing off only on
+//! [`SubmitError::Backpressure`], and collects responses as they
+//! complete — so the wall-clock measures aggregate fleet throughput, not
+//! lock-step round trips.  Each pass reports req/s, merged p50/p95,
+//! cache + prefix-hit rates, and the modeled fleet residency
+//! ([`gateway_resident_bytes`]); the report also proves two parity
+//! properties before it will serialize:
+//!
+//! * **sharded parity** — every shard count produced bit-identical
+//!   logits for every request id (sharding is wall-clock only);
+//! * **prefix parity** — sampled responses equal a from-scratch,
+//!   cache-disabled server's (prefix resumes change nothing but time).
+//!
+//! `BENCH_gateway.json` accumulates the scaling trajectory across PRs
+//! the same way `BENCH_serve.json` does for the single-process server.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::costmodel::memory::gateway_resident_bytes;
+use crate::serve::stats::Json;
+use crate::serve::workload::shared_prefix_pool;
+use crate::serve::{BackboneKind, EnginePreset, ServeConfig, Server};
+use crate::util::rng::Rng;
+
+use super::{task_name, Gateway, GatewayConfig, SubmitError};
+
+/// Workload + fleet shape for one `bench-gateway` run.
+#[derive(Clone, Debug)]
+pub struct BenchGatewayOpts {
+    /// shard counts to sweep (same request stream each time)
+    pub shard_counts: Vec<usize>,
+    pub tasks: usize,
+    pub requests: usize,
+    /// prefix families in the prompt pool; members of a family share
+    /// their first `prefix_len` tokens (the prefix-cache workload)
+    pub families: usize,
+    pub per_family: usize,
+    pub prefix_len: usize,
+    pub prompt_len: usize,
+    pub seq: usize,
+    pub max_batch: usize,
+    pub cache_bytes: usize,
+    pub registry_bytes: usize,
+    pub prefix_block: usize,
+    pub queue_cap: usize,
+    pub seed: u64,
+    pub threads_per_shard: usize,
+    pub preset: EnginePreset,
+    pub backbone: BackboneKind,
+}
+
+impl Default for BenchGatewayOpts {
+    fn default() -> Self {
+        BenchGatewayOpts {
+            shard_counts: vec![1, 2, 4],
+            tasks: 3,
+            requests: 256,
+            families: 8,
+            per_family: 4,
+            prefix_len: 32,
+            prompt_len: 48,
+            seq: 64,
+            max_batch: 8,
+            cache_bytes: 64 << 20,
+            registry_bytes: 64 << 20,
+            prefix_block: 16,
+            queue_cap: 64,
+            seed: 0,
+            threads_per_shard: 1,
+            // the scaling acceptance target: the large preset on the
+            // packed-W4 backbone (replicas are cheap, compute is heavy)
+            preset: EnginePreset::Large,
+            backbone: BackboneKind::W4,
+        }
+    }
+}
+
+/// One measured shard-count pass.
+#[derive(Clone, Debug)]
+pub struct GatewayPass {
+    pub shards: usize,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub hit_rate: f64,
+    pub prefix_hit_rate: f64,
+    pub prefix_resumes: u64,
+    pub backbone_rows: u64,
+    pub resumed_rows: u64,
+    /// submits refused with backpressure (each was retried until accepted)
+    pub backpressure_rejects: u64,
+    /// modeled fleet residency at this shard count
+    pub resident_bytes: usize,
+    /// request id -> logits, for the cross-pass parity proofs
+    responses: HashMap<u64, Vec<f32>>,
+}
+
+/// The full sweep + parity verdicts.
+#[derive(Clone, Debug)]
+pub struct BenchGatewayReport {
+    pub opts: BenchGatewayOpts,
+    pub passes: Vec<GatewayPass>,
+    pub sharded_parity: bool,
+    pub prefix_parity: bool,
+}
+
+/// The deterministic (task, prompt) request stream: the r-th accepted
+/// submission always gets gateway id r, so this doubles as the id→request
+/// map for the parity probes.
+fn stream_choices(opts: &BenchGatewayOpts, pool_len: usize) -> Vec<(usize, usize)> {
+    let mut rng = Rng::new(opts.seed.wrapping_add(0x47415445)); // "GATE"
+    (0..opts.requests).map(|_| (rng.below(opts.tasks), rng.below(pool_len))).collect()
+}
+
+fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result<GatewayPass> {
+    let cfg = GatewayConfig {
+        shards,
+        queue_cap: opts.queue_cap,
+        serve: ServeConfig {
+            cache_bytes: opts.cache_bytes,
+            registry_bytes: opts.registry_bytes,
+            max_batch: opts.max_batch,
+            prefix_block: opts.prefix_block,
+        },
+        preset: opts.preset,
+        backbone: opts.backbone,
+        seed: opts.seed,
+        seq: opts.seq,
+        tasks: opts.tasks,
+        threads_per_shard: opts.threads_per_shard,
+    };
+    let mut gw = Gateway::launch(&cfg)?;
+    let choices = stream_choices(opts, pool.len());
+    let mut responses: HashMap<u64, Vec<f32>> = HashMap::with_capacity(opts.requests);
+    let t0 = Instant::now();
+    for &(task_i, prompt_i) in &choices {
+        let task = task_name(task_i);
+        loop {
+            match gw.submit(&task, &pool[prompt_i]) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure { .. }) => {
+                    // open-loop back-off: absorb finished work, then sleep
+                    // rather than spin — a busy-waiting driver would steal
+                    // the very cores the shards are being measured on
+                    for gr in gw.try_collect() {
+                        responses.insert(gr.resp.id, gr.resp.logits);
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+                Err(e) => bail!("gateway refused a bench request: {e}"),
+            }
+        }
+        for gr in gw.try_collect() {
+            responses.insert(gr.resp.id, gr.resp.logits);
+        }
+    }
+    for gr in gw.flush()? {
+        responses.insert(gr.resp.id, gr.resp.logits);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let backpressure_rejects = gw.rejected;
+    let (report, leftover) = gw.shutdown()?;
+    for gr in leftover {
+        responses.insert(gr.resp.id, gr.resp.logits);
+    }
+    ensure!(
+        responses.len() == opts.requests,
+        "completed {} of {} requests at {shards} shard(s)",
+        responses.len(),
+        opts.requests
+    );
+    Ok(GatewayPass {
+        shards,
+        wall_secs: wall,
+        requests_per_sec: opts.requests as f64 / wall.max(1e-12),
+        p50_ms: report.merged.p50_secs() * 1e3,
+        p95_ms: report.merged.p95_secs() * 1e3,
+        hit_rate: report.hit_rate(),
+        prefix_hit_rate: report.prefix_hit_rate(),
+        prefix_resumes: report.merged.prefix_resumes,
+        backbone_rows: report.backbone_rows,
+        resumed_rows: report.resumed_rows,
+        backpressure_rejects,
+        resident_bytes: gateway_resident_bytes(
+            opts.preset,
+            opts.backbone,
+            shards,
+            opts.tasks,
+            opts.cache_bytes,
+        ),
+        responses,
+    })
+}
+
+/// Recompute a sample of the stream on a fresh, cache-disabled,
+/// prefix-disabled single server and compare bit-for-bit.
+fn check_prefix_parity(
+    opts: &BenchGatewayOpts,
+    pool: &[Vec<i32>],
+    pass: &GatewayPass,
+) -> Result<bool> {
+    let mut engine = opts.preset.build_backbone(opts.seed, opts.seq, opts.backbone);
+    engine.set_threads(1);
+    let mut server = Server::new(
+        engine,
+        ServeConfig {
+            cache_bytes: 0,
+            registry_bytes: opts.registry_bytes,
+            max_batch: 1,
+            prefix_block: 0,
+        },
+    );
+    for i in 0..opts.tasks {
+        server.registry.register_synthetic(
+            &task_name(i),
+            super::task_seed(opts.seed, i),
+            super::SYNTHETIC_TASK_BYTES,
+        )?;
+    }
+    let choices = stream_choices(opts, pool.len());
+    let step = (opts.requests / 8).max(1);
+    for r in (0..opts.requests).step_by(step) {
+        let (task_i, prompt_i) = choices[r];
+        server.submit(&task_name(task_i), &pool[prompt_i])?;
+        let mut got = server.drain()?;
+        let want = got.remove(0).logits;
+        match pass.responses.get(&(r as u64)) {
+            Some(l) if *l == want => {}
+            _ => return Ok(false),
+        }
+    }
+    Ok(true)
+}
+
+impl BenchGatewayReport {
+    /// Aggregate-throughput ratio of the widest fleet over the narrowest.
+    pub fn scaling_speedup(&self) -> f64 {
+        let lo = self.passes.iter().min_by_key(|p| p.shards);
+        let hi = self.passes.iter().max_by_key(|p| p.shards);
+        match (lo, hi) {
+            (Some(lo), Some(hi)) => hi.requests_per_sec / lo.requests_per_sec.max(1e-12),
+            _ => 1.0,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let (d, layers, vocab, r) = self.opts.preset.shape();
+        let mut j = Json::new()
+            .str("bench", "gateway")
+            .str("preset", self.opts.preset.name())
+            .int("d", d as u64)
+            .int("layers", layers as u64)
+            .int("vocab", vocab as u64)
+            .int("reduction", r as u64)
+            .str("backbone", self.opts.backbone.name())
+            .int("tasks", self.opts.tasks as u64)
+            .int("requests", self.opts.requests as u64)
+            .int("unique_prompts", (self.opts.families * self.opts.per_family) as u64)
+            .int("families", self.opts.families as u64)
+            .int("per_family", self.opts.per_family as u64)
+            .int("prefix_len", self.opts.prefix_len as u64)
+            .int("prompt_len", self.opts.prompt_len as u64)
+            .int("seq", self.opts.seq as u64)
+            .int("max_batch", self.opts.max_batch as u64)
+            .int("cache_bytes", self.opts.cache_bytes as u64)
+            .int("prefix_block", self.opts.prefix_block as u64)
+            .int("queue_cap", self.opts.queue_cap as u64)
+            .int("threads_per_shard", self.opts.threads_per_shard as u64)
+            .int("seed", self.opts.seed);
+        for p in &self.passes {
+            let k = |name: &str| format!("shards{}_{name}", p.shards);
+            j = j
+                .num(&k("rps"), p.requests_per_sec)
+                .num(&k("wall_secs"), p.wall_secs)
+                .num(&k("p50_ms"), p.p50_ms)
+                .num(&k("p95_ms"), p.p95_ms)
+                .num(&k("hit_rate"), p.hit_rate)
+                .num(&k("prefix_hit_rate"), p.prefix_hit_rate)
+                .int(&k("prefix_resumes"), p.prefix_resumes)
+                .int(&k("backbone_rows"), p.backbone_rows)
+                .int(&k("resumed_rows"), p.resumed_rows)
+                .int(&k("backpressure_rejects"), p.backpressure_rejects)
+                .int(&k("resident_bytes"), p.resident_bytes as u64);
+        }
+        j.num("shard_scaling_speedup", self.scaling_speedup())
+            .int("sharded_parity", self.sharded_parity as u64)
+            .int("prefix_parity", self.prefix_parity as u64)
+            .finish()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "gateway bench [{} preset, {} backbone, {} req over {} prompts ({} families x {}), block {}]:",
+            self.opts.preset.name(),
+            self.opts.backbone.name(),
+            self.opts.requests,
+            self.opts.families * self.opts.per_family,
+            self.opts.families,
+            self.opts.per_family,
+            self.opts.prefix_block,
+        );
+        for p in &self.passes {
+            s.push_str(&format!(
+                " | {} shard(s): {:.1} req/s, p95 {:.2} ms, hit {:.0}%, prefix rescue {:.0}%, {} resident",
+                p.shards,
+                p.requests_per_sec,
+                p.p95_ms,
+                p.hit_rate * 100.0,
+                p.prefix_hit_rate * 100.0,
+                crate::util::human_bytes(p.resident_bytes as f64),
+            ));
+        }
+        s.push_str(&format!(
+            " | scaling {:.2}x | parity sharded={} prefix={}",
+            self.scaling_speedup(),
+            self.sharded_parity,
+            self.prefix_parity
+        ));
+        s
+    }
+}
+
+/// Run the sweep; refuses to report if either parity proof fails.
+pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
+    ensure!(!opts.shard_counts.is_empty(), "need at least one shard count");
+    ensure!(opts.shard_counts.iter().all(|&n| n >= 1), "shard counts must be >= 1");
+    ensure!(opts.tasks >= 1 && opts.requests >= 1);
+    ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
+    ensure!(opts.prefix_len >= 1 && opts.prefix_len < opts.prompt_len);
+    ensure!(opts.prefix_block >= 1, "bench-gateway exercises the prefix cache");
+    ensure!(
+        opts.prefix_len % opts.prefix_block == 0,
+        "--prefix-len {} must be a multiple of --prefix-block {} so family prefixes are index-visible",
+        opts.prefix_len,
+        opts.prefix_block
+    );
+    let vocab = opts.preset.vocab();
+    let mut rng = Rng::new(opts.seed.wrapping_add(0xBEAC));
+    let pool = shared_prefix_pool(
+        &mut rng,
+        opts.families,
+        opts.per_family,
+        opts.prefix_len,
+        opts.prompt_len,
+        vocab,
+    );
+    let mut passes = Vec::with_capacity(opts.shard_counts.len());
+    for &n in &opts.shard_counts {
+        passes.push(run_pass(opts, n, &pool)?);
+    }
+    let sharded_parity =
+        passes.iter().all(|p| p.responses == passes[0].responses);
+    ensure!(
+        sharded_parity,
+        "sharded logits diverged across shard counts — sharding must be wall-clock only"
+    );
+    let prefix_parity = check_prefix_parity(opts, &pool, &passes[0])?;
+    ensure!(
+        prefix_parity,
+        "prefix-resumed logits diverged from the from-scratch reference"
+    );
+    Ok(BenchGatewayReport { opts: opts.clone(), passes, sharded_parity, prefix_parity })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchGatewayOpts {
+        BenchGatewayOpts {
+            shard_counts: vec![1, 2],
+            tasks: 2,
+            requests: 32,
+            families: 2,
+            per_family: 3,
+            prefix_len: 8,
+            prompt_len: 12,
+            seq: 16,
+            // batch of 1 ⇒ every family's first member is cached before the
+            // next member arrives, so prefix resumes are deterministic
+            max_batch: 1,
+            cache_bytes: 16 << 20,
+            registry_bytes: 1 << 20,
+            prefix_block: 4,
+            queue_cap: 8,
+            seed: 5,
+            threads_per_shard: 1,
+            preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
+        }
+    }
+
+    #[test]
+    fn bench_completes_with_parity_and_prefix_rescues() {
+        let rep = run_bench(&tiny()).unwrap();
+        assert_eq!(rep.passes.len(), 2);
+        assert!(rep.sharded_parity && rep.prefix_parity);
+        for p in &rep.passes {
+            assert!(p.requests_per_sec > 0.0);
+            assert!(p.resident_bytes > 0);
+            // warm cache: far fewer full forwards than requests
+            assert!(p.backbone_rows + p.resumed_rows <= 32);
+        }
+        // the shared-prefix workload must actually exercise the resume path
+        assert!(
+            rep.passes.iter().all(|p| p.prefix_resumes > 0),
+            "shared-prefix workload produced no prefix resumes"
+        );
+    }
+
+    #[test]
+    fn json_report_is_wellformed() {
+        let rep = run_bench(&tiny()).unwrap();
+        let j = rep.to_json();
+        assert!(j.contains("\"bench\": \"gateway\""));
+        assert!(j.contains("\"shards1_rps\""));
+        assert!(j.contains("\"shards2_rps\""));
+        assert!(j.contains("\"shards2_prefix_hit_rate\""));
+        assert!(j.contains("\"shard_scaling_speedup\""));
+        assert!(j.contains("\"sharded_parity\": 1"));
+        assert!(j.contains("\"prefix_parity\": 1"));
+        assert!(j.contains("\"shards2_resident_bytes\""));
+        assert!(j.trim_end().ends_with('}'));
+        assert!(rep.summary().contains("scaling"));
+    }
+
+    #[test]
+    fn rejects_misaligned_prefix_and_empty_sweep() {
+        let mut o = tiny();
+        o.prefix_len = 6; // not a multiple of block 4
+        assert!(run_bench(&o).is_err());
+        let mut o = tiny();
+        o.shard_counts = vec![];
+        assert!(run_bench(&o).is_err());
+        let mut o = tiny();
+        o.prompt_len = 32; // > seq
+        assert!(run_bench(&o).is_err());
+    }
+}

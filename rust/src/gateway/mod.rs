@@ -1,0 +1,402 @@
+//! Asynchronous sharded serving gateway over the QST multi-task server.
+//!
+//! # Design
+//!
+//! QST's economics make replication the natural way to scale serving: the
+//! frozen backbone is shared by every task and, packed as W4 (PR 3), a
+//! replica costs ~7.6× less than f32 — so N shards each hold a private
+//! backbone replica + hidden-state cache + side-network registry, and
+//! the gateway's job is transport, routing, and aggregation:
+//!
+//! ```text
+//!   submit(task, tokens) ──▶ [router]  hash(first prefix-block tokens)
+//!         │ SubmitError::Backpressure when the inbox is full
+//!         ▼
+//!   [shard 0] [shard 1] … [shard N-1]    bounded inboxes (try_send)
+//!      each: thread-owned Server<SyntheticEngine>
+//!            queue → prefix-aware cache → backbone/resume → side nets
+//!         │ ShardEvent::Done / Dropped / Rejected
+//!         ▼
+//!   [events channel] ──▶ try_collect() / flush() ──▶ responses
+//!   [aggregator]     ──▶ report(): merged stats + summed cache counters
+//! ```
+//!
+//! * [`transport`] — request/response/event types, [`SubmitError`]
+//!   backpressure semantics, and the `qst gateway` line-protocol loop.
+//! * [`router`] — prefix-locality routing (prompts sharing a
+//!   `prefix_block`-aligned head land on one shard, where the prefix
+//!   cache can resume them) + per-shard report aggregation.
+//! * [`shard`] — the worker threads; each owns a bit-identical engine
+//!   replica, so sharding changes wall-clock only, never logits.
+//! * [`bench`] — `qst bench-gateway`: shard-count scaling curves,
+//!   prefix-hit rates, and p50/p95 under open-loop load
+//!   (`BENCH_gateway.json`).
+
+pub mod bench;
+pub mod router;
+pub mod shard;
+pub mod transport;
+
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use anyhow::{bail, Result};
+
+use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
+
+pub use router::{aggregate, GatewayReport, Router};
+pub use shard::{ShardHandle, ShardReport};
+pub use transport::{line_loop, GatewayRequest, GatewayResponse, ShardEvent, ShardMsg, SubmitError};
+
+pub use crate::serve::registry::SYNTHETIC_TASK_BYTES;
+
+/// Canonical name of synthetic gateway task `i` (`task0`, `task1`, …).
+pub fn task_name(i: usize) -> String {
+    format!("task{i}")
+}
+
+/// Canonical side-network seed of synthetic gateway task `i`.  Every shard
+/// registers with this, and every parity reference (tests, `bench-gateway`
+/// probes, cost-model pins) must derive the *same* seed — one formula, one
+/// place.
+pub fn task_seed(gateway_seed: u64, i: usize) -> u64 {
+    gateway_seed ^ ((i as u64 + 1) << 32)
+}
+
+/// Gateway shape + per-shard server tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct GatewayConfig {
+    /// worker shards, each with a private backbone replica
+    pub shards: usize,
+    /// bounded per-shard inbox capacity (requests buffered before
+    /// [`SubmitError::Backpressure`])
+    pub queue_cap: usize,
+    /// per-shard server tuning (cache budget, prefix block, batch cap)
+    pub serve: ServeConfig,
+    pub preset: EnginePreset,
+    pub backbone: BackboneKind,
+    /// engine seed — identical across shards, so replicas are bit-identical
+    pub seed: u64,
+    pub seq: usize,
+    /// synthetic tasks registered on every shard (`task0`…)
+    pub tasks: usize,
+    /// kernel worker threads per shard engine
+    pub threads_per_shard: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            shards: 2,
+            queue_cap: 64,
+            serve: ServeConfig::default(),
+            preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
+            seed: 0,
+            seq: 64,
+            tasks: 2,
+            threads_per_shard: 1,
+        }
+    }
+}
+
+/// The running gateway: shard fleet + router + event collector.
+pub struct Gateway {
+    cfg: GatewayConfig,
+    router: Router,
+    shards: Vec<ShardHandle>,
+    events: Receiver<ShardEvent>,
+    tasks: Vec<String>,
+    next_id: u64,
+    in_flight: usize,
+    /// requests accepted into shard inboxes
+    pub submitted: u64,
+    /// submits refused with [`SubmitError::Backpressure`]
+    pub rejected: u64,
+    /// requests dropped by failing shard micro-batches
+    pub dropped: u64,
+}
+
+impl Gateway {
+    /// Spawn the shard fleet and return the ready gateway.
+    pub fn launch(cfg: &GatewayConfig) -> Result<Gateway> {
+        if cfg.shards == 0 || cfg.tasks == 0 {
+            bail!("gateway needs at least one shard and one task");
+        }
+        let (ev_tx, ev_rx): (Sender<ShardEvent>, Receiver<ShardEvent>) =
+            std::sync::mpsc::channel();
+        let shards: Vec<ShardHandle> =
+            (0..cfg.shards).map(|i| ShardHandle::spawn(i, cfg, ev_tx.clone())).collect();
+        Ok(Gateway {
+            cfg: *cfg,
+            router: Router::new(cfg.shards, cfg.serve.prefix_block),
+            shards,
+            events: ev_rx,
+            tasks: (0..cfg.tasks).map(task_name).collect(),
+            next_id: 0,
+            in_flight: 0,
+            submitted: 0,
+            rejected: 0,
+            dropped: 0,
+        })
+    }
+
+    pub fn config(&self) -> &GatewayConfig {
+        &self.cfg
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests accepted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Non-blocking submit: validate, route by prompt head, `try_send`
+    /// into the shard's bounded inbox.  Returns the gateway request id,
+    /// or [`SubmitError::Backpressure`] when the routed inbox is full —
+    /// the caller should collect responses and retry (bounded queues
+    /// reject; they never deadlock).
+    pub fn submit(&mut self, task: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
+        if !self.tasks.iter().any(|t| t == task) {
+            return Err(SubmitError::Invalid(format!(
+                "unknown task '{task}' (registered: {:?})",
+                self.tasks
+            )));
+        }
+        if tokens.len() > self.cfg.seq {
+            return Err(SubmitError::Invalid(format!(
+                "prompt of {} tokens exceeds the serving sequence length {}",
+                tokens.len(),
+                self.cfg.seq
+            )));
+        }
+        let shard = self.router.route(tokens);
+        let id = self.next_id;
+        let req = GatewayRequest { id, task: task.to_string(), tokens: tokens.to_vec() };
+        match self.shards[shard].try_submit(req) {
+            Ok(()) => {
+                self.next_id += 1;
+                self.in_flight += 1;
+                self.submitted += 1;
+                Ok(id)
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::Backpressure { .. }) {
+                    self.rejected += 1;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn absorb(&mut self, ev: ShardEvent, out: &mut Vec<GatewayResponse>) {
+        match ev {
+            ShardEvent::Done(gr) => {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                out.push(gr);
+            }
+            ShardEvent::Dropped { n, .. } => {
+                self.in_flight = self.in_flight.saturating_sub(n);
+                self.dropped += n as u64;
+            }
+            ShardEvent::Rejected { shard, id, err } => {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                self.dropped += 1;
+                eprintln!("gateway: shard {shard} rejected request {id}: {err}");
+            }
+        }
+    }
+
+    /// Drain whatever responses have already completed (non-blocking).
+    pub fn try_collect(&mut self) -> Vec<GatewayResponse> {
+        let mut out = Vec::new();
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => self.absorb(ev, &mut out),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Barrier: make every shard drain its inbox + server, then collect
+    /// until nothing submitted before this call is outstanding.  Returns
+    /// the responses gathered along the way.
+    pub fn flush(&mut self) -> Result<Vec<GatewayResponse>> {
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        let mut expected = 0usize;
+        for s in &self.shards {
+            if s.send(ShardMsg::Flush(ack_tx.clone())) {
+                expected += 1;
+            }
+        }
+        drop(ack_tx);
+        for _ in 0..expected {
+            if ack_rx.recv().is_err() {
+                bail!("a gateway shard died mid-flush");
+            }
+        }
+        // inbox order guarantees every pre-flush outcome is now in the
+        // event channel; drain until the in-flight ledger clears
+        let mut out = Vec::new();
+        while self.in_flight > 0 {
+            match self.events.recv() {
+                Ok(ev) => self.absorb(ev, &mut out),
+                Err(_) => bail!("all shards disconnected with {} request(s) in flight", self.in_flight),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Snapshot every shard and merge into the fleet-wide report.
+    pub fn report(&self) -> Result<GatewayReport> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut expected = 0usize;
+        for s in &self.shards {
+            if s.send(ShardMsg::Report(tx.clone())) {
+                expected += 1;
+            }
+        }
+        drop(tx);
+        let mut reports = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            match rx.recv() {
+                Ok(r) => reports.push(r),
+                Err(_) => bail!("a gateway shard died mid-report"),
+            }
+        }
+        if reports.is_empty() {
+            bail!("no live shards to report");
+        }
+        Ok(aggregate(reports))
+    }
+
+    /// Flush outstanding work, take the final merged report, then stop and
+    /// join every shard thread.  Responses the caller had not collected
+    /// yet are returned rather than dropped.  (The process-wide kernel
+    /// pool is left alone — other servers may share it; CLI teardown calls
+    /// [`crate::kernels::shutdown_pool`] explicitly.)
+    pub fn shutdown(mut self) -> Result<(GatewayReport, Vec<GatewayResponse>)> {
+        let leftover = self.flush()?;
+        let report = self.report()?;
+        for s in &mut self.shards {
+            s.stop();
+        }
+        Ok((report, leftover))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Server;
+    use std::collections::HashMap;
+
+    fn cfg(shards: usize, prefix_block: usize) -> GatewayConfig {
+        GatewayConfig {
+            shards,
+            queue_cap: 32,
+            seq: 16,
+            seed: 11,
+            tasks: 2,
+            threads_per_shard: 1,
+            preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
+            serve: ServeConfig {
+                cache_bytes: 8 << 20,
+                registry_bytes: 1 << 20,
+                max_batch: 4,
+                prefix_block,
+            },
+        }
+    }
+
+    /// Reference logits: a plain single-threaded uncached server.
+    fn reference(cfgv: &GatewayConfig, reqs: &[(String, Vec<i32>)]) -> Vec<Vec<f32>> {
+        let mut engine = cfgv.preset.build_backbone(cfgv.seed, cfgv.seq, cfgv.backbone);
+        engine.set_threads(1);
+        let mut server = Server::new(
+            engine,
+            ServeConfig { cache_bytes: 0, registry_bytes: 1 << 20, max_batch: 1, prefix_block: 0 },
+        );
+        for i in 0..cfgv.tasks {
+            server
+                .registry
+                .register_synthetic(&task_name(i), task_seed(cfgv.seed, i), 1 << 10)
+                .unwrap();
+        }
+        let mut out = Vec::new();
+        for (task, tokens) in reqs {
+            server.submit(task, tokens).unwrap();
+            let mut r = server.drain().unwrap();
+            out.push(r.remove(0).logits);
+        }
+        out
+    }
+
+    #[test]
+    fn gateway_matches_unsharded_reference_and_merges_stats() {
+        let c = cfg(2, 4);
+        let reqs: Vec<(String, Vec<i32>)> = vec![
+            ("task0".into(), vec![1, 2, 3, 4, 9, 9]),
+            ("task1".into(), vec![1, 2, 3, 4, 9, 9]),
+            ("task0".into(), vec![5, 6]),
+            ("task0".into(), vec![1, 2, 3, 4, 7, 7, 7]), // prefix family
+            ("task1".into(), vec![8]),
+        ];
+        let want = reference(&c, &reqs);
+        let mut gw = Gateway::launch(&c).unwrap();
+        let mut ids = Vec::new();
+        for (task, tokens) in &reqs {
+            ids.push(gw.submit(task, tokens).unwrap());
+        }
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        for gr in gw.flush().unwrap() {
+            got.insert(gr.resp.id, gr.resp.logits);
+        }
+        assert_eq!(got.len(), reqs.len());
+        assert_eq!(gw.in_flight(), 0);
+        for (id, want_logits) in ids.iter().zip(&want) {
+            assert_eq!(&got[id], want_logits, "sharded logits must match the reference");
+        }
+        let (report, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(report.merged.requests as usize, reqs.len());
+        assert_eq!(report.shards.len(), 2);
+        assert_eq!(report.backbone_resident_bytes, 2 * report.shards[0].backbone_resident_bytes);
+    }
+
+    #[test]
+    fn gateway_validates_before_routing() {
+        let mut gw = Gateway::launch(&cfg(2, 4)).unwrap();
+        assert!(matches!(gw.submit("nope", &[1]), Err(SubmitError::Invalid(_))));
+        assert!(matches!(gw.submit("task0", &vec![1; 17]), Err(SubmitError::Invalid(_))));
+        assert_eq!(gw.submitted, 0);
+        let (report, _) = gw.shutdown().unwrap();
+        assert_eq!(report.merged.requests, 0);
+    }
+
+    #[test]
+    fn launch_rejects_empty_fleet() {
+        assert!(Gateway::launch(&cfg(0, 4)).is_err());
+        let mut c = cfg(1, 4);
+        c.tasks = 0;
+        assert!(Gateway::launch(&c).is_err());
+    }
+
+    #[test]
+    fn repeated_flush_and_interleaved_submits() {
+        let mut gw = Gateway::launch(&cfg(2, 4)).unwrap();
+        for wave in 0..3 {
+            for i in 0..6 {
+                gw.submit(&task_name(i % 2), &[wave as i32 + 1, i as i32 + 1]).unwrap();
+            }
+            let got = gw.flush().unwrap();
+            assert_eq!(got.len(), 6, "wave {wave}");
+        }
+        let report = gw.report().unwrap();
+        assert_eq!(report.merged.requests, 18);
+    }
+}

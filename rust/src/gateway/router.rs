@@ -1,0 +1,209 @@
+//! Prompt→shard routing and per-shard report aggregation.
+//!
+//! Each shard owns a private replica of the frozen backbone and a private
+//! hidden-state cache, so the router's one job is **cache locality**: a
+//! prompt must land on the shard most likely to already hold its hidden
+//! states.  Routing therefore hashes only the prompt's *head* — its first
+//! `block` tokens, the same block size the prefix index keys on — so
+//! exact repeats AND prefix-sharing families of prompts all map to one
+//! shard, where the whole-prompt cache and the per-block prefix index can
+//! serve them.  Because every replica computes bit-identical results, the
+//! routing choice affects only wall-clock, never logits (pinned by the
+//! sharded-vs-single-shard parity tests).
+
+use crate::serve::cache::prompt_key;
+use crate::serve::StatsSnapshot;
+
+use super::shard::ShardReport;
+
+/// Salt for the routing hash: routing must not correlate with cache keys
+/// (same tokens, different purpose), so it gets its own backbone-id slot.
+const ROUTE_SALT: u64 = 0x5248_4153_4852_4400; // "RHASHRD"
+
+/// Deterministic prompt→shard router (see module doc).
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    shards: usize,
+    /// head length the route key hashes; 0 = hash the whole prompt
+    /// (still groups exact repeats, but not prefix families)
+    block: usize,
+}
+
+impl Router {
+    pub fn new(shards: usize, block: usize) -> Self {
+        Router { shards: shards.max(1), block }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard index for a prompt (unpadded tokens).
+    pub fn route(&self, tokens: &[i32]) -> usize {
+        let head = if self.block == 0 { tokens } else { &tokens[..tokens.len().min(self.block)] };
+        (prompt_key(ROUTE_SALT, head) % self.shards as u64) as usize
+    }
+}
+
+/// Fleet-wide view: per-shard reports plus their merged serving stats and
+/// summed cache/engine counters.
+#[derive(Clone, Debug, Default)]
+pub struct GatewayReport {
+    /// per-shard reports, sorted by shard index
+    pub shards: Vec<ShardReport>,
+    /// merged serving stats (requests, latency percentiles, …)
+    pub merged: StatsSnapshot,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub prefix_hits: u64,
+    pub cache_evictions: u64,
+    pub backbone_rows: u64,
+    pub resumed_rows: u64,
+    pub resumed_positions: u64,
+    /// summed resident backbone bytes — one replica per shard
+    pub backbone_resident_bytes: usize,
+    pub cache_bytes: usize,
+    pub registry_bytes: usize,
+}
+
+impl GatewayReport {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Share of whole-prompt misses rescued by a prefix resume.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.cache_misses == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.cache_misses as f64
+        }
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "gateway [{} shards]: {} req in {} batches | p50 {:.2} ms, p95 {:.2} ms | cache hit {:.1}%, prefix rescue {:.1}% ({} resumes) | {} full + {} resumed backbone rows | backbone {} resident total{}",
+            self.shards.len(),
+            self.merged.requests,
+            self.merged.batches,
+            self.merged.p50_secs() * 1e3,
+            self.merged.p95_secs() * 1e3,
+            self.hit_rate() * 100.0,
+            self.prefix_hit_rate() * 100.0,
+            self.resumed_rows,
+            self.backbone_rows,
+            self.resumed_rows,
+            crate::util::human_bytes(self.backbone_resident_bytes as f64),
+            if self.merged.dropped > 0 {
+                format!(" | {} dropped", self.merged.dropped)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
+/// Merge per-shard reports into the fleet view (`reports` in any order;
+/// the result keeps them sorted by shard index).
+pub fn aggregate(mut reports: Vec<ShardReport>) -> GatewayReport {
+    reports.sort_by_key(|r| r.shard);
+    let mut g = GatewayReport::default();
+    for r in &reports {
+        g.merged.merge(&r.stats);
+        g.cache_hits += r.cache_hits;
+        g.cache_misses += r.cache_misses;
+        g.prefix_hits += r.prefix_hits;
+        g.cache_evictions += r.cache_evictions;
+        g.backbone_rows += r.backbone_rows;
+        g.resumed_rows += r.resumed_rows;
+        g.resumed_positions += r.resumed_positions;
+        g.backbone_resident_bytes += r.backbone_resident_bytes;
+        g.cache_bytes += r.cache_bytes;
+        g.registry_bytes += r.registry_bytes;
+    }
+    g.shards = reports;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routes_are_deterministic_and_in_range() {
+        let r = Router::new(4, 8);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let len = rng.range(1, 24);
+            let p: Vec<i32> = (0..len).map(|_| rng.range(1, 256) as i32).collect();
+            let s = r.route(&p);
+            assert!(s < 4);
+            assert_eq!(s, r.route(&p), "routing must be deterministic");
+        }
+    }
+
+    #[test]
+    fn prefix_families_and_repeats_share_a_shard() {
+        let r = Router::new(4, 8);
+        let prefix: Vec<i32> = (1..=8).collect();
+        let mut family_shards = std::collections::HashSet::new();
+        for tail in 0..16 {
+            let mut p = prefix.clone();
+            p.extend([100 + tail, 200 + tail]);
+            family_shards.insert(r.route(&p));
+        }
+        assert_eq!(family_shards.len(), 1, "one family must map to one shard");
+        // whole-prompt hashing (block 0) still groups exact repeats
+        let r0 = Router::new(4, 0);
+        let p: Vec<i32> = (5..25).collect();
+        assert_eq!(r0.route(&p), r0.route(&p));
+    }
+
+    #[test]
+    fn load_spreads_across_shards() {
+        let r = Router::new(4, 8);
+        let mut rng = Rng::new(9);
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..256 {
+            let p: Vec<i32> = (0..12).map(|_| rng.range(1, 512) as i32).collect();
+            used.insert(r.route(&p));
+        }
+        assert_eq!(used.len(), 4, "256 random prompts must reach every shard");
+    }
+
+    #[test]
+    fn single_shard_router_is_total() {
+        let r = Router::new(1, 8);
+        assert_eq!(r.route(&[1, 2, 3]), 0);
+        assert_eq!(r.route(&[]), 0);
+        // shards clamp to >= 1
+        assert_eq!(Router::new(0, 8).shards(), 1);
+    }
+
+    #[test]
+    fn aggregate_sums_and_sorts() {
+        let mk = |shard: usize, hits: u64| {
+            let mut r = ShardReport::default();
+            r.shard = shard;
+            r.cache_hits = hits;
+            r.cache_misses = 10 - hits;
+            r.backbone_resident_bytes = 100;
+            r
+        };
+        let g = aggregate(vec![mk(1, 4), mk(0, 6)]);
+        assert_eq!(g.shards[0].shard, 0);
+        assert_eq!(g.cache_hits, 10);
+        assert_eq!(g.cache_misses, 10);
+        assert!((g.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(g.backbone_resident_bytes, 200);
+        assert_eq!(GatewayReport::default().hit_rate(), 0.0);
+        assert_eq!(GatewayReport::default().prefix_hit_rate(), 0.0);
+    }
+}

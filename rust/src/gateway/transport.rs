@@ -1,0 +1,194 @@
+//! Gateway transport: non-blocking request intake over bounded channels.
+//!
+//! The pre-gateway `qst serve` loop was synchronous — read a line, maybe
+//! drain, print.  The gateway decouples submission from execution: a
+//! request is routed to a shard's **bounded** inbox (`try_send`, never
+//! blocking), the shard thread batches and serves it, and the completed
+//! response comes back on a shared event channel whenever it is ready.
+//! A full inbox is surfaced as [`SubmitError::Backpressure`] — the
+//! caller's signal to collect responses and retry — so the gateway
+//! *rejects* under overload instead of deadlocking or buffering without
+//! bound.
+//!
+//! [`line_loop`] adapts the same stdin protocol `qst serve` speaks
+//! (`<task> <tok> <tok> ...`, plus `stats`) to this asynchronous path for
+//! `qst gateway`: lines are submitted as fast as the inboxes accept them
+//! and responses are printed as they complete, in completion order.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{Context, Result};
+
+use super::Gateway;
+use crate::serve::Response;
+
+/// One request as it travels to a shard: the gateway-assigned id survives
+/// the trip (shards rewrite their server-local ids back to this one).
+#[derive(Clone, Debug)]
+pub struct GatewayRequest {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<i32>,
+}
+
+/// A completed request, tagged with the shard that served it.
+#[derive(Clone, Debug)]
+pub struct GatewayResponse {
+    pub shard: usize,
+    pub resp: Response,
+}
+
+/// Control + data messages into one shard thread (bounded inbox).
+pub enum ShardMsg {
+    Submit(GatewayRequest),
+    /// drain everything pending, emit the results, then ack
+    Flush(std::sync::mpsc::Sender<()>),
+    /// snapshot serving stats + cache/engine counters
+    Report(std::sync::mpsc::Sender<super::shard::ShardReport>),
+    /// drain, emit, and exit the shard thread
+    Shutdown,
+}
+
+/// Events out of shard threads (shared unbounded channel, so a shard can
+/// never deadlock against a slow collector).
+pub enum ShardEvent {
+    Done(GatewayResponse),
+    /// requests dropped inside a failing micro-batch (count only; the
+    /// server logs the cause)
+    Dropped { shard: usize, n: usize },
+    /// a submit the shard's server refused — belt-and-braces: the gateway
+    /// validates task and length before routing, so this signals a bug or
+    /// a mid-flight deregistration rather than routine traffic
+    Rejected { shard: usize, id: u64, err: String },
+}
+
+/// Why [`Gateway::submit`] refused a request.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// the routed shard's inbox is at capacity — collect responses and
+    /// retry; the queue is bounded by design (reject, don't deadlock)
+    Backpressure { shard: usize },
+    /// malformed request (unknown task or over-length prompt)
+    Invalid(String),
+    /// the routed shard's thread is gone
+    ShardDown { shard: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure { shard } => {
+                write!(f, "shard {shard} inbox full (backpressure — retry after collecting)")
+            }
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+            SubmitError::ShardDown { shard } => write!(f, "shard {shard} is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+fn print_responses(out: &mut impl Write, responses: &[GatewayResponse]) -> Result<()> {
+    for gr in responses {
+        let (tok, logit) = gr.resp.top1();
+        writeln!(
+            out,
+            "{}#{}: next-token {} (logit {:.4}) [shard {}{}]",
+            gr.resp.task,
+            gr.resp.id,
+            tok,
+            logit,
+            gr.shard,
+            if gr.resp.cache_hit { ", cache hit" } else { "" }
+        )?;
+    }
+    Ok(())
+}
+
+/// Drive a gateway over the line protocol: one request per line
+/// (`<task> <tok> <tok> ...`), `stats` for a merged fleet summary.
+/// Submission is asynchronous — a line is accepted the moment its shard
+/// inbox has room, and completed responses are printed as they arrive
+/// (completion order, tagged with ids).  On backpressure the loop flushes
+/// the fleet (collecting every outstanding response) and retries the
+/// line, so input is never dropped.  Returns after EOF once every
+/// outstanding request has been answered.
+pub fn line_loop(gw: &mut Gateway, input: impl BufRead, out: &mut impl Write) -> Result<()> {
+    for line in input.lines() {
+        let line = line.context("reading request line")?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "stats" {
+            let report = gw.report()?;
+            writeln!(out, "{}", report.summary())?;
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let task = parts.next().unwrap().to_string();
+        let tokens: Vec<i32> = match parts.map(|t| t.parse()).collect::<Result<_, _>>() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bad request (tokens must be integers): {e}");
+                continue;
+            }
+        };
+        loop {
+            match gw.submit(&task, &tokens) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure { .. }) => {
+                    // the routed shard's inbox is full: surface whatever has
+                    // completed and retry shortly — no fleet-wide barrier, so
+                    // the other shards keep eating while this one catches up
+                    let done = gw.try_collect();
+                    print_responses(out, &done)?;
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => {
+                    eprintln!("rejected: {e}");
+                    break;
+                }
+            }
+        }
+        let done = gw.try_collect();
+        print_responses(out, &done)?;
+    }
+    // EOF: answer everything still in flight
+    let done = gw.flush()?;
+    print_responses(out, &done)?;
+    let report = gw.report()?;
+    writeln!(out, "{}", report.summary())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::GatewayConfig;
+
+    #[test]
+    fn submit_error_displays() {
+        assert!(format!("{}", SubmitError::Backpressure { shard: 3 }).contains("shard 3"));
+        assert!(format!("{}", SubmitError::Invalid("nope".into())).contains("nope"));
+        assert!(format!("{}", SubmitError::ShardDown { shard: 1 }).contains("down"));
+    }
+
+    #[test]
+    fn line_loop_serves_parses_and_reports() {
+        let cfg = GatewayConfig { shards: 2, seq: 16, ..GatewayConfig::default() };
+        let mut gw = Gateway::launch(&cfg).unwrap();
+        let input = b"task0 5 6 7\n\nbogus-line x y\ntask1 5 6 7\nnosuchtask 1\nstats\n" as &[u8];
+        let mut out = Vec::new();
+        line_loop(&mut gw, input, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        // both well-formed requests answered (ids 0 and 1), each tagged
+        assert!(text.contains("task0#0"), "{text}");
+        assert!(text.contains("task1#1"), "{text}");
+        // stats line + final summary
+        assert!(text.matches("req").count() >= 2, "{text}");
+        let (report, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(report.merged.requests, 2);
+    }
+}

@@ -31,4 +31,4 @@ pub mod threads;
 
 pub use gemm::{matmul, matmul_blocked_into, matmul_naive};
 pub use qgemm::{w4_matmul, w4_matmul_dq};
-pub use threads::{default_threads, pool_workers, set_default_threads, Threads};
+pub use threads::{default_threads, pool_workers, set_default_threads, shutdown_pool, Threads};

@@ -47,6 +47,19 @@ pub fn pool_workers() -> usize {
     pool::worker_count()
 }
 
+/// Join every parked pool worker and reset the pool to its never-spawned
+/// state; returns how many workers were joined.  The pool is process-wide
+/// and its workers otherwise live forever, so teardown points that spawned
+/// wide fleets (gateway shard shutdown, CLI command exit, tests that fan
+/// out many pools) call this to avoid leaking parked threads.  In-flight
+/// kernel calls are drained first (workers only exit on an empty queue),
+/// and calls racing the shutdown degrade to inline execution on their own
+/// caller — bit-identical, just serial — after which the next pooled call
+/// lazily respawns workers.  Not a hot-path operation.
+pub fn shutdown_pool() -> usize {
+    pool::shutdown()
+}
+
 /// A worker-count handle for row-partitioned kernels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Threads {
@@ -153,13 +166,18 @@ mod pool {
         jobs: VecDeque<Job>,
         /// workers blocked in `cv.wait` right now
         idle: usize,
-        /// workers ever spawned (they never exit)
+        /// workers currently alive (spawned and not yet shut down)
         workers: usize,
+        /// set by [`shutdown`]: workers exit once the queue is empty, and
+        /// [`run`] degrades to inline execution instead of enqueueing
+        shutting_down: bool,
     }
 
     struct Shared {
         q: Mutex<Queue>,
         cv: Condvar,
+        /// join handles of live workers, harvested by [`shutdown`]
+        handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     }
 
     /// Backstop on pool size.  Growth is demand-driven (one worker per
@@ -176,8 +194,14 @@ mod pool {
     fn shared() -> &'static Arc<Shared> {
         SHARED.get_or_init(|| {
             Arc::new(Shared {
-                q: Mutex::new(Queue { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+                q: Mutex::new(Queue {
+                    jobs: VecDeque::new(),
+                    idle: 0,
+                    workers: 0,
+                    shutting_down: false,
+                }),
                 cv: Condvar::new(),
+                handles: Mutex::new(Vec::new()),
             })
         })
     }
@@ -194,6 +218,11 @@ mod pool {
                     if let Some(j) = q.jobs.pop_front() {
                         break j;
                     }
+                    if q.shutting_down {
+                        // queue drained and a shutdown is in flight: exit
+                        q.workers -= 1;
+                        return;
+                    }
                     q.idle += 1;
                     q = sh.cv.wait(q).unwrap_or_else(|e| e.into_inner());
                     q.idle -= 1;
@@ -201,6 +230,34 @@ mod pool {
             };
             job(); // panics are caught inside the wrapper run() queued
         }
+    }
+
+    /// Serializes concurrent [`shutdown`] calls: overlapping shutdowns
+    /// could otherwise clear `shutting_down` while the first is still
+    /// joining, stranding a worker back in its wait loop.
+    static SHUTDOWN_LOCK: Mutex<()> = Mutex::new(());
+
+    /// See [`super::shutdown_pool`].  Flag → wake → join → reset: the flag
+    /// flips under the queue lock, so no new worker can spawn (and no new
+    /// job can enqueue — `run` goes inline) after it is observed set; the
+    /// joins therefore cover every live worker.
+    pub(super) fn shutdown() -> usize {
+        let _one_at_a_time = SHUTDOWN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let sh = shared();
+        {
+            let mut q = sh.q.lock().unwrap_or_else(|e| e.into_inner());
+            q.shutting_down = true;
+        }
+        sh.cv.notify_all();
+        let handles: Vec<std::thread::JoinHandle<()>> =
+            std::mem::take(&mut *sh.handles.lock().unwrap_or_else(|e| e.into_inner()));
+        let n = handles.len();
+        for h in handles {
+            let _ = h.join();
+        }
+        let mut q = sh.q.lock().unwrap_or_else(|e| e.into_inner());
+        q.shutting_down = false;
+        n
     }
 
     /// Completion latch: `run` returns (or unwinds) only after every
@@ -257,17 +314,29 @@ mod pool {
             let sh = shared();
             {
                 let mut q = sh.q.lock().unwrap_or_else(|e| e.into_inner());
+                if q.shutting_down {
+                    // a shutdown is in flight: nothing may enqueue or spawn
+                    // until it completes, so execute every run on the caller
+                    // — same per-row results (see module doc), just serial
+                    drop(q);
+                    for job in jobs {
+                        job();
+                    }
+                    inline();
+                    return;
+                }
                 let spawn = jobs
                     .len()
                     .saturating_sub(q.idle)
                     .min(MAX_WORKERS.saturating_sub(q.workers));
                 for _ in 0..spawn {
                     q.workers += 1;
-                    let sh = Arc::clone(sh);
-                    std::thread::Builder::new()
+                    let sh2 = Arc::clone(sh);
+                    let handle = std::thread::Builder::new()
                         .name("qst-kernel-pool".into())
-                        .spawn(move || worker_loop(sh))
+                        .spawn(move || worker_loop(sh2))
                         .expect("spawning kernel pool worker");
+                    sh.handles.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
                 }
                 for job in jobs {
                     // SAFETY: `job` borrows the caller's stack (output run +
@@ -366,6 +435,9 @@ mod tests {
 
     #[test]
     fn pool_reuses_workers_across_calls() {
+        // serialized against shutdown_joins_workers_and_pool_respawns: a
+        // concurrent shutdown would zero pool_workers() mid-assertion
+        let _guard = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let t = Threads::new(4);
         let run_once = || {
             let mut out = vec![0u64; 16];
@@ -395,6 +467,25 @@ mod tests {
             });
         });
         assert!(boom.is_err(), "a pooled worker panic must surface on the caller");
+    }
+
+    #[test]
+    fn shutdown_joins_workers_and_pool_respawns() {
+        let _guard = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let t = Threads::new(4);
+        let compute = || {
+            let mut out = vec![0u32; 32];
+            t.par_rows(&mut out, 1, |row0, run| run[0] = row0 as u32 * 3);
+            out
+        };
+        let want: Vec<u32> = (0..32).map(|r| r * 3).collect();
+        assert_eq!(compute(), want);
+        // this run either spawned workers or found earlier-spawned idle
+        // ones — either way the pool has live threads to take down
+        assert!(shutdown_pool() >= 1, "warm pool must have joined workers");
+        // the pool comes back lazily and computes the same thing
+        assert_eq!(compute(), want);
+        assert_eq!(compute(), want);
     }
 
     #[test]

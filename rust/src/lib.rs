@@ -20,7 +20,12 @@
 //! * [`costmodel`]  — analytical memory/FLOPs models at the paper's true dims
 //! * [`experiments`] — one regenerator per paper table/figure
 //! * [`serve`]      — multi-task inference: shared-backbone hidden-state
-//!   cache, side-network registry, micro-batching, serving telemetry
+//!   cache (whole-prompt + per-block prefix index), side-network registry,
+//!   micro-batching, serving telemetry
+//! * [`gateway`]    — asynchronous sharded serving front-end over [`serve`]:
+//!   bounded-queue transport with backpressure, prefix-locality routing
+//!   across per-shard backbone replicas, fleet-wide stats aggregation,
+//!   `bench-gateway` scaling curves
 //! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
 
 pub mod benchkit;
@@ -29,6 +34,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod experiments;
+pub mod gateway;
 pub mod kernels;
 pub mod nn;
 pub mod quant;

@@ -154,7 +154,9 @@ fn run(argv: &[String]) -> Result<()> {
             qst::experiments::run(&id, args.has("fast"))
         }
         "serve" => cmd_serve(&args),
+        "gateway" => cmd_gateway(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "bench-gateway" => cmd_bench_gateway(&args),
         "bench-kernels" => cmd_bench_kernels(&args),
         other => {
             eprintln!("error: unknown command '{other}'\n");
@@ -170,6 +172,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         cache_bytes: args.u64_or("cache-bytes", 64 << 20)? as usize,
         registry_bytes: args.u64_or("registry-bytes", 256 << 20)? as usize,
         max_batch: args.usize_or("batch", 8)?,
+        prefix_block: args.usize_or("prefix-block", 16)?,
     })
 }
 
@@ -306,6 +309,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
     serve_loop(&mut server)
 }
 
+/// `qst gateway`: the asynchronous sharded front-end over the line
+/// protocol (submission decoupled from execution; responses print in
+/// completion order).  Synthetic backend only — artifact serving stays on
+/// `qst serve` until split backbone artifacts land.
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let cfg = qst::gateway::GatewayConfig {
+        shards: args.usize_or("shards", 2)?.max(1),
+        queue_cap: args.usize_or("queue-cap", 64)?.max(1),
+        serve: serve_config(args)?,
+        preset: serve::EnginePreset::parse(&args.str_or("preset", "small"))?,
+        backbone: serve::BackboneKind::parse(&args.str_or("backbone", "f32"))?,
+        seed: args.u64_or("seed", 0)?,
+        seq: args.usize_or("seq", 64)?,
+        tasks: args.usize_or("num-tasks", 2)?.max(1),
+        threads_per_shard: args.usize_or("threads", 1)?,
+    };
+    let resident = qst::costmodel::memory::gateway_resident_bytes(
+        cfg.preset,
+        cfg.backbone,
+        cfg.shards,
+        cfg.tasks,
+        cfg.serve.cache_bytes,
+    );
+    eprintln!(
+        "gateway: {} shard(s), {} preset backbone as {} ({} modeled fleet residency), {} tasks, queue cap {}; one request per line: '<task> <tok> ...'",
+        cfg.shards,
+        cfg.preset.name(),
+        cfg.backbone.name(),
+        qst::util::human_bytes(resident as f64),
+        cfg.tasks,
+        cfg.queue_cap
+    );
+    let mut gw = qst::gateway::Gateway::launch(&cfg)?;
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout();
+    qst::gateway::line_loop(&mut gw, stdin.lock(), &mut out)?;
+    let (report, leftover) = gw.shutdown()?;
+    debug_assert!(leftover.is_empty(), "line_loop flushes before returning");
+    println!("{}", report.summary());
+    // shard engines fanned kernel workers out of the process-wide pool;
+    // join them on the way out instead of leaking parked threads
+    qst::kernels::shutdown_pool();
+    Ok(())
+}
+
+fn cmd_bench_gateway(args: &Args) -> Result<()> {
+    let shard_counts: Vec<usize> = args
+        .str_or("shards", "1,2,4")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .with_context(|| format!("--shards expects comma-separated integers, got '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    let opts = qst::gateway::bench::BenchGatewayOpts {
+        shard_counts,
+        tasks: args.usize_or("tasks", 3)?.max(1),
+        requests: args.usize_or("requests", 256)?,
+        families: args.usize_or("families", 8)?,
+        per_family: args.usize_or("per-family", 4)?,
+        prefix_len: args.usize_or("prefix-len", 32)?,
+        prompt_len: args.usize_or("prompt-len", 48)?,
+        seq: args.usize_or("seq", 64)?,
+        max_batch: args.usize_or("batch", 8)?,
+        cache_bytes: args.u64_or("cache-bytes", 64 << 20)? as usize,
+        registry_bytes: args.u64_or("registry-bytes", 64 << 20)? as usize,
+        prefix_block: args.usize_or("prefix-block", 16)?,
+        queue_cap: args.usize_or("queue-cap", 64)?,
+        seed: args.u64_or("seed", 0)?,
+        threads_per_shard: args.usize_or("threads-per-shard", 1)?,
+        preset: serve::EnginePreset::parse(&args.str_or("preset", "large"))?,
+        backbone: serve::BackboneKind::parse(&args.str_or("backbone", "w4"))?,
+    };
+    let report = qst::gateway::bench::run_bench(&opts)?;
+    println!("{}", report.summary());
+    let json_path = args.str_or("json", "BENCH_gateway.json");
+    std::fs::write(&json_path, report.to_json())
+        .with_context(|| format!("writing {json_path}"))?;
+    println!("wrote {json_path}");
+    qst::kernels::shutdown_pool();
+    Ok(())
+}
+
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     let opts = serve::workload::BenchServeOpts {
         tasks: args.usize_or("tasks", 3)?.max(2), // the point is multi-task sharing
@@ -321,6 +408,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         threads: args.usize_or("threads", 1)?,
         preset: serve::EnginePreset::parse(&args.str_or("preset", "small"))?,
         backbone: serve::BackboneKind::parse(&args.str_or("backbone", "f32"))?,
+        // off by default so the BENCH_serve.json trajectory stays
+        // comparable across PRs; bench-gateway owns the prefix story
+        prefix_block: args.usize_or("prefix-block", 0)?,
     };
     let report = serve::workload::run_bench(&opts)?;
     println!("{}", report.summary());

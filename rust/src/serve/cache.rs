@@ -3,45 +3,139 @@
 //!
 //! Every task's side network reads the *same* frozen hidden states for a
 //! given prompt, so the expensive backbone forward is cacheable across
-//! requests AND across tasks.  Keys are a 64-bit FNV-1a hash of the padded
-//! token ids mixed with the backbone identity; entries are byte-budgeted
-//! with strict LRU eviction; hit/miss/eviction counters feed
+//! requests AND across tasks.  Keys are a 64-bit FNV-1a hash of the token
+//! ids mixed with the backbone identity; entries are byte-budgeted with
+//! strict LRU eviction; hit/miss/eviction counters feed
 //! [`super::stats::ServeStats`] and `BENCH_serve.json`.
+//!
+//! # Prefix keys
+//!
+//! The synthetic backbone computes every sequence position independently,
+//! so a prompt that *extends* a cached prompt can reuse the cached
+//! positions and run the frozen forward only over its tail (see
+//! `Engine::backbone_resume`).  To find such donors the cache maintains a
+//! **per-block prefix index**: when a bundle is inserted, its unpadded
+//! prompt is walked in one rolling-FNV pass and a key is published at
+//! every `block`-aligned boundary `p` — exactly the key `prompt_key`
+//! would give the standalone prefix `tokens[..p]`.  A later lookup walks
+//! its own boundaries deepest-first and resumes from the deepest entry
+//! whose stored tokens actually match (keys are verified, never trusted).
+//!
+//! Publishing a key is more than exposing the rolling state: the state is
+//! folded with the prefix *length*, the backbone id (again), and a
+//! terminator, then avalanched.  Without that fold a prefix and its
+//! extensions form one hash chain, so a single chain-state collision
+//! (between prompts or between backbones — the old scheme mixed the id
+//! only into the FNV seed) silently aliases *every* subsequent boundary;
+//! the fold confines any collision to one (length, id) slot, and the
+//! token-verify on lookup turns it into a counted miss.
 
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
+use super::batcher::query_pos;
 use super::Hidden;
 
-/// Cache key for a prompt: FNV-1a over the padded token ids, mixed with the
-/// backbone identity so two different backbones never share entries.
-pub fn prompt_key(backbone_id: u64, tokens: &[i32]) -> u64 {
-    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
-    const FNV_PRIME: u64 = 0x100000001b3;
-    let mut h = FNV_OFFSET ^ backbone_id.wrapping_mul(FNV_PRIME);
-    for &t in tokens {
-        for b in t.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(FNV_PRIME);
-        }
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Rolling FNV-1a state seeded with the backbone id's bytes (byte-folded,
+/// not just multiplied into the offset, so all 64 id bits diffuse).
+fn rolling_seed(backbone_id: u64) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in backbone_id.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
     }
     h
 }
 
-/// LRU, byte-budgeted cache of backbone hidden states.
+fn roll_token(mut h: u64, t: i32) -> u64 {
+    for b in t.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Publish a key from rolling state: fold length + id + terminator, then
+/// avalanche (splitmix64 finalizer) so published keys of related prefixes
+/// are unrelated even though their chain states are.
+fn publish(h: u64, backbone_id: u64, len: usize) -> u64 {
+    let mut k = h;
+    k ^= (len as u64).wrapping_mul(FNV_PRIME);
+    k = k.wrapping_mul(FNV_PRIME);
+    k ^= backbone_id.rotate_left(32);
+    k ^= 0xA5; // terminator: no token byte stream can reproduce this fold
+    k ^= k >> 30;
+    k = k.wrapping_mul(0xbf58476d1ce4e5b9);
+    k ^= k >> 27;
+    k = k.wrapping_mul(0x94d049bb133111eb);
+    k ^= k >> 31;
+    k
+}
+
+/// Cache key for a prompt: rolling FNV-1a over the token ids, seeded and
+/// finalized with the backbone identity and the prompt length (see the
+/// module doc for why the length/terminator fold matters).
+pub fn prompt_key(backbone_id: u64, tokens: &[i32]) -> u64 {
+    let mut h = rolling_seed(backbone_id);
+    for &t in tokens {
+        h = roll_token(h, t);
+    }
+    publish(h, backbone_id, tokens.len())
+}
+
+/// Block-boundary prefix keys of `tokens`: `(p, key)` for `p = block,
+/// 2·block, … ≤ tokens.len()`, each key identical to
+/// `prompt_key(backbone_id, &tokens[..p])` but computed in one rolling
+/// pass.  `block == 0` disables prefix keying (empty result).
+pub fn prefix_keys(backbone_id: u64, tokens: &[i32], block: usize) -> Vec<(usize, u64)> {
+    if block == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(tokens.len() / block);
+    let mut h = rolling_seed(backbone_id);
+    for (i, &t) in tokens.iter().enumerate() {
+        h = roll_token(h, t);
+        let p = i + 1;
+        if p % block == 0 {
+            out.push((p, publish(h, backbone_id, p)));
+        }
+    }
+    out
+}
+
+struct Entry {
+    hidden: Rc<Hidden>,
+    tick: u64,
+    /// prefix keys this entry registered in the index (for eviction cleanup)
+    prefix_keys: Vec<u64>,
+}
+
+/// LRU, byte-budgeted cache of backbone hidden states with an optional
+/// per-block prefix index (see module doc).
 ///
 /// A budget of 0 disables the cache entirely (`get` always misses, `insert`
 /// is a no-op) — that is the `--cache-bytes 0` baseline of `bench-serve`.
+/// A `block` of 0 disables only the prefix index (whole-prompt hits still
+/// work) — the pre-gateway behaviour.
 pub struct HiddenCache {
     budget: usize,
-    entries: HashMap<u64, (Rc<Hidden>, u64)>,
+    /// prefix-index block size in tokens (0 = whole-prompt keys only)
+    block: usize,
+    entries: HashMap<u64, Entry>,
     /// tick -> key, oldest first (ticks are unique, monotonically increasing)
     lru: BTreeMap<u64, u64>,
+    /// prefix key -> full key of the donor entry holding that prefix
+    prefix_index: HashMap<u64, u64>,
     bytes: usize,
     tick: u64,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// whole-prompt misses rescued by a prefix donor (deepest-block hits)
+    pub prefix_hits: u64,
     /// key collisions detected (entry present but for a different prompt)
     pub collisions: u64,
     /// inserts dropped because a single entry exceeded the whole budget
@@ -50,15 +144,23 @@ pub struct HiddenCache {
 
 impl HiddenCache {
     pub fn new(budget_bytes: usize) -> Self {
+        Self::with_block(budget_bytes, 0)
+    }
+
+    /// Cache with the prefix index enabled at `block` tokens per boundary.
+    pub fn with_block(budget_bytes: usize, block: usize) -> Self {
         HiddenCache {
             budget: budget_bytes,
+            block,
             entries: HashMap::new(),
             lru: BTreeMap::new(),
+            prefix_index: HashMap::new(),
             bytes: 0,
             tick: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            prefix_hits: 0,
             collisions: 0,
             oversize_skips: 0,
         }
@@ -66,6 +168,11 @@ impl HiddenCache {
 
     pub fn enabled(&self) -> bool {
         self.budget > 0
+    }
+
+    /// Prefix-index block size (0 = disabled).
+    pub fn block(&self) -> usize {
+        self.block
     }
 
     pub fn len(&self) -> usize {
@@ -93,19 +200,28 @@ impl HiddenCache {
         }
     }
 
+    /// Share of whole-prompt misses rescued by a prefix donor.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.misses == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.misses as f64
+        }
+    }
+
     /// Look up a prompt's hidden states, counting the hit/miss and marking
     /// the entry most-recently-used on a hit.  The stored prompt is compared
     /// against `tokens`, so a 64-bit key collision is a (counted) miss —
     /// never silently another prompt's hidden states.
     pub fn get(&mut self, key: u64, tokens: &[i32]) -> Option<Rc<Hidden>> {
         match self.entries.get_mut(&key) {
-            Some((h, tick)) if h.tokens == tokens => {
+            Some(e) if e.hidden.tokens == tokens => {
                 self.hits += 1;
-                self.lru.remove(tick);
+                self.lru.remove(&e.tick);
                 self.tick += 1;
-                *tick = self.tick;
+                e.tick = self.tick;
                 self.lru.insert(self.tick, key);
-                Some(h.clone())
+                Some(e.hidden.clone())
             }
             Some(_) => {
                 self.collisions += 1;
@@ -119,10 +235,53 @@ impl HiddenCache {
         }
     }
 
+    /// After a whole-prompt miss: find the deepest cached donor whose
+    /// prompt shares a block-aligned prefix with `row` (a padded row), and
+    /// return it with the verified prefix length.  The donor's stored
+    /// tokens are compared position-by-position, so an index collision can
+    /// only cost a shallower resume, never wrong hidden states.  The donor
+    /// is touched most-recently-used; a rescue counts in `prefix_hits`.
+    pub fn get_prefix(&mut self, backbone_id: u64, row: &[i32]) -> Option<(Rc<Hidden>, usize)> {
+        if self.block == 0 || self.budget == 0 || row.is_empty() {
+            return None;
+        }
+        let plen = query_pos(row) + 1;
+        let bounds = prefix_keys(backbone_id, &row[..plen], self.block);
+        for &(p, pkey) in bounds.iter().rev() {
+            let Some(&full_key) = self.prefix_index.get(&pkey) else { continue };
+            let Some(e) = self.entries.get_mut(&full_key) else { continue };
+            if e.hidden.tokens.len() >= p && e.hidden.tokens[..p] == row[..p] {
+                self.prefix_hits += 1;
+                self.lru.remove(&e.tick);
+                self.tick += 1;
+                e.tick = self.tick;
+                self.lru.insert(self.tick, full_key);
+                return Some((e.hidden.clone(), p));
+            }
+        }
+        None
+    }
+
+    fn remove_entry(&mut self, key: u64) -> Option<Entry> {
+        let e = self.entries.remove(&key)?;
+        self.bytes -= e.hidden.bytes();
+        self.lru.remove(&e.tick);
+        for pk in &e.prefix_keys {
+            // another entry may have claimed this prefix key since; only
+            // drop index slots still pointing at the evicted entry
+            if self.prefix_index.get(pk) == Some(&key) {
+                self.prefix_index.remove(pk);
+            }
+        }
+        Some(e)
+    }
+
     /// Insert hidden states for a prompt, evicting least-recently-used
-    /// entries until the budget holds.  Entries bigger than the whole budget
-    /// are skipped (never worth evicting everything for one prompt).
-    pub fn insert(&mut self, key: u64, hidden: Rc<Hidden>) {
+    /// entries until the budget holds, and registering the prompt's
+    /// block-aligned prefixes in the index under `backbone_id` (the same
+    /// identity `key` was derived from).  Entries bigger than the whole
+    /// budget are skipped (never worth evicting everything for one prompt).
+    pub fn insert(&mut self, key: u64, hidden: Rc<Hidden>, backbone_id: u64) {
         if self.budget == 0 {
             return;
         }
@@ -131,21 +290,28 @@ impl HiddenCache {
             self.oversize_skips += 1;
             return;
         }
-        if let Some((old, tick)) = self.entries.remove(&key) {
-            self.bytes -= old.bytes();
-            self.lru.remove(&tick);
-        }
+        self.remove_entry(key);
         while self.bytes + sz > self.budget {
             let Some((&oldest_tick, &oldest_key)) = self.lru.iter().next() else { break };
+            // drop the slot itself before the entry lookup: a (hypothetical)
+            // lru/entries desync then costs one wasted slot per turn, never
+            // an infinite loop
             self.lru.remove(&oldest_tick);
-            if let Some((old, _)) = self.entries.remove(&oldest_key) {
-                self.bytes -= old.bytes();
+            if self.remove_entry(oldest_key).is_some() {
                 self.evictions += 1;
+            }
+        }
+        let mut pkeys = Vec::new();
+        if self.block > 0 {
+            let plen = (query_pos(&hidden.tokens) + 1).min(hidden.tokens.len());
+            for (_, pk) in prefix_keys(backbone_id, &hidden.tokens[..plen], self.block) {
+                self.prefix_index.insert(pk, key);
+                pkeys.push(pk);
             }
         }
         self.tick += 1;
         self.lru.insert(self.tick, key);
-        self.entries.insert(key, (hidden, self.tick));
+        self.entries.insert(key, Entry { hidden, tick: self.tick, prefix_keys: pkeys });
         self.bytes += sz;
     }
 }
@@ -153,6 +319,7 @@ impl HiddenCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
 
     fn hidden(key: u64, floats: usize) -> Rc<Hidden> {
         Rc::new(Hidden { key, tokens: vec![key as i32], data: vec![0.5; floats] })
@@ -171,11 +338,49 @@ mod tests {
     }
 
     #[test]
+    fn prefix_and_extension_keys_never_collide_by_construction() {
+        // regression for the pre-gateway scheme: with the id only seeding
+        // the FNV chain and no length fold, a prefix and its extensions
+        // formed one hash chain — one chain-state collision aliased every
+        // deeper boundary.  The published keys must all be distinct across
+        // every boundary of one prompt, and across backbones.
+        let toks: Vec<i32> = (1..=96).collect();
+        let mut seen = HashSet::new();
+        for id in [0u64, 7, u64::MAX] {
+            for p in 0..=96usize {
+                assert!(
+                    seen.insert(prompt_key(id, &toks[..p])),
+                    "prefix of len {p} (backbone {id}) collided"
+                );
+            }
+        }
+        // padding extension must not alias the unpadded prefix (PAD = 0
+        // token bytes are all zero — the FNV worst case)
+        let mut padded = toks[..32].to_vec();
+        padded.resize(96, 0);
+        assert_ne!(prompt_key(7, &padded), prompt_key(7, &toks[..32]));
+    }
+
+    #[test]
+    fn prefix_keys_match_standalone_prompt_keys() {
+        let toks: Vec<i32> = (10..40).collect();
+        for block in [1usize, 4, 16] {
+            let keys = prefix_keys(9, &toks, block);
+            assert_eq!(keys.len(), toks.len() / block);
+            for (p, k) in keys {
+                assert_eq!(p % block, 0);
+                assert_eq!(k, prompt_key(9, &toks[..p]), "boundary {p}");
+            }
+        }
+        assert!(prefix_keys(9, &toks, 0).is_empty());
+    }
+
+    #[test]
     fn hit_miss_accounting() {
         let mut c = HiddenCache::new(1 << 20);
         let k = prompt_key(0, &[5, 6]);
         assert!(get(&mut c, k).is_none());
-        c.insert(k, hidden(k, 16));
+        c.insert(k, hidden(k, 16), 0);
         assert!(get(&mut c, k).is_some());
         assert_eq!(c.hits, 1);
         assert_eq!(c.misses, 1);
@@ -186,12 +391,12 @@ mod tests {
     fn evicts_lru_under_byte_budget() {
         // each entry is 100 floats = 400 bytes; budget fits two
         let mut c = HiddenCache::new(900);
-        c.insert(1, hidden(1, 100));
-        c.insert(2, hidden(2, 100));
+        c.insert(1, hidden(1, 100), 0);
+        c.insert(2, hidden(2, 100), 0);
         assert_eq!(c.len(), 2);
         // touch 1 so 2 becomes LRU
         assert!(get(&mut c, 1).is_some());
-        c.insert(3, hidden(3, 100));
+        c.insert(3, hidden(3, 100), 0);
         assert_eq!(c.len(), 2);
         assert_eq!(c.evictions, 1);
         assert!(get(&mut c, 1).is_some(), "recently-used entry must survive");
@@ -203,7 +408,7 @@ mod tests {
     #[test]
     fn zero_budget_disables() {
         let mut c = HiddenCache::new(0);
-        c.insert(1, hidden(1, 4));
+        c.insert(1, hidden(1, 4), 0);
         assert!(!c.enabled());
         assert_eq!(c.len(), 0);
         assert!(get(&mut c, 1).is_none());
@@ -212,7 +417,7 @@ mod tests {
     #[test]
     fn oversize_entry_skipped() {
         let mut c = HiddenCache::new(100);
-        c.insert(1, hidden(1, 100)); // 400 bytes > 100 budget
+        c.insert(1, hidden(1, 100), 0); // 400 bytes > 100 budget
         assert_eq!(c.len(), 0);
         assert_eq!(c.oversize_skips, 1);
     }
@@ -220,7 +425,7 @@ mod tests {
     #[test]
     fn key_collision_is_a_counted_miss_not_a_wrong_hit() {
         let mut c = HiddenCache::new(1 << 20);
-        c.insert(42, hidden(42, 8)); // stored with tokens [42]
+        c.insert(42, hidden(42, 8), 0); // stored with tokens [42]
         // same key, different prompt: must NOT return the stored entry
         assert!(c.get(42, &[9, 9, 9]).is_none());
         assert_eq!(c.collisions, 1);
@@ -233,9 +438,95 @@ mod tests {
     #[test]
     fn reinsert_replaces_without_leak() {
         let mut c = HiddenCache::new(10_000);
-        c.insert(1, hidden(1, 100));
-        c.insert(1, hidden(1, 200));
+        c.insert(1, hidden(1, 100), 0);
+        c.insert(1, hidden(1, 200), 0);
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes(), 804);
+    }
+
+    /// A padded-row Hidden with real backbone-keyed identity, as the
+    /// server inserts them.
+    fn padded_hidden(bid: u64, prompt: &[i32], seq: usize) -> (u64, Rc<Hidden>) {
+        let mut row = prompt.to_vec();
+        row.resize(seq, 0);
+        let key = prompt_key(bid, &row);
+        (key, Rc::new(Hidden { key, tokens: row, data: vec![1.0; 32] }))
+    }
+
+    #[test]
+    fn prefix_lookup_finds_deepest_verified_donor() {
+        let bid = 5;
+        let mut c = HiddenCache::with_block(1 << 20, 4);
+        assert_eq!(c.block(), 4);
+        // donor prompt: 12 real tokens -> boundaries at 4, 8, 12
+        let donor: Vec<i32> = (1..=12).collect();
+        let (k, h) = padded_hidden(bid, &donor, 16);
+        c.insert(k, h, bid);
+        // query extends the donor's first 8 tokens, then diverges
+        let mut q: Vec<i32> = (1..=8).collect();
+        q.extend([99, 98, 97, 96, 95, 94]);
+        q.resize(16, 0);
+        let (d, p) = c.get_prefix(bid, &q).expect("prefix donor");
+        assert_eq!(p, 8, "deepest matching boundary");
+        assert_eq!(&d.tokens[..8], &q[..8]);
+        assert_eq!(c.prefix_hits, 1);
+        // a query sharing nothing gets no donor
+        let mut alien = vec![77i32; 12];
+        alien.resize(16, 0);
+        assert!(c.get_prefix(bid, &alien).is_none());
+        // wrong backbone: same tokens, no donor
+        assert!(c.get_prefix(bid ^ 1, &q).is_none());
+    }
+
+    #[test]
+    fn prefix_lookup_respects_block_disable_and_budget_disable() {
+        let donor: Vec<i32> = (1..=8).collect();
+        let mut off = HiddenCache::with_block(1 << 20, 0);
+        let (k, h) = padded_hidden(3, &donor, 8);
+        off.insert(k, h.clone(), 3);
+        assert!(off.get_prefix(3, &h.tokens).is_none(), "block 0 disables the index");
+        let mut dead = HiddenCache::with_block(0, 4);
+        dead.insert(k, h.clone(), 3);
+        assert!(dead.get_prefix(3, &h.tokens).is_none());
+    }
+
+    #[test]
+    fn eviction_cleans_the_prefix_index() {
+        let bid = 2;
+        // budget fits one padded entry (32 floats + 16 tokens = 192 bytes)
+        let mut c = HiddenCache::with_block(200, 4);
+        let (k1, h1) = padded_hidden(bid, &(1..=8).collect::<Vec<i32>>(), 16);
+        c.insert(k1, h1, bid);
+        let mut q: Vec<i32> = (1..=4).collect();
+        q.extend([50, 51, 52, 53]);
+        q.resize(16, 0);
+        assert!(c.get_prefix(bid, &q).is_some());
+        // inserting a second entry evicts the first; its prefix slots must go
+        let (k2, h2) = padded_hidden(bid, &(101..=108).collect::<Vec<i32>>(), 16);
+        c.insert(k2, h2, bid);
+        assert_eq!(c.evictions, 1);
+        assert!(c.get_prefix(bid, &q).is_none(), "stale index slot must not survive eviction");
+    }
+
+    #[test]
+    fn shared_prefix_latest_donor_wins_and_eviction_keeps_the_other() {
+        let bid = 4;
+        let mut c = HiddenCache::with_block(1 << 20, 4);
+        // two donors share their first 4 tokens
+        let mut a: Vec<i32> = vec![1, 2, 3, 4];
+        a.extend([10, 11, 12, 13]);
+        let mut b: Vec<i32> = vec![1, 2, 3, 4];
+        b.extend([20, 21, 22, 23]);
+        let (ka, ha) = padded_hidden(bid, &a, 8);
+        let (kb, hb) = padded_hidden(bid, &b, 8);
+        c.insert(ka, ha, bid);
+        c.insert(kb, hb, bid); // claims the shared 4-token prefix slot
+        // evicting donor A must not tear down B's claim
+        c.remove_entry(ka);
+        let mut q = vec![1i32, 2, 3, 4];
+        q.extend([90, 91, 92, 93]);
+        let (d, p) = c.get_prefix(bid, &q).expect("surviving donor");
+        assert_eq!(p, 4);
+        assert_eq!(&d.tokens[..8], &b[..8]);
     }
 }

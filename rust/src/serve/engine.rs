@@ -44,6 +44,18 @@ pub trait Engine {
     }
     /// Frozen forward for padded rows; one hidden-state bundle per row.
     fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>>;
+    /// Resume the frozen forward for `row` from a `donor` bundle whose
+    /// prompt shares the first `prefix_len` (padded-row) positions: reuse
+    /// the donor's hidden states for those positions and compute only the
+    /// tail.  Must be bit-identical to `backbone(&[row])`.  The default
+    /// recomputes from scratch — correct for backends whose forward is not
+    /// position-separable (e.g. monolithic artifacts).
+    fn backbone_resume(&mut self, donor: &Hidden, prefix_len: usize, row: &[i32]) -> Result<Hidden> {
+        let _ = (donor, prefix_len);
+        let rows = vec![row.to_vec()];
+        let mut out = self.backbone(&rows)?;
+        out.pop().ok_or_else(|| anyhow::anyhow!("backbone returned no bundle for the resumed row"))
+    }
     /// Side-network forward for one task: per-row logits (vocab-sized).
     fn side(
         &mut self,
@@ -147,6 +159,11 @@ pub struct SyntheticEngine {
     threads: Threads,
     /// rows that actually ran the frozen forward (cache-skipped rows don't)
     pub backbone_rows: u64,
+    /// rows served by resuming from a cached prefix (not counted in
+    /// `backbone_rows` — they ran only a tail of the frozen forward)
+    pub resumed_rows: u64,
+    /// positions *skipped* by prefix resumes (donated by cached bundles)
+    pub resumed_positions: u64,
 }
 
 impl SyntheticEngine {
@@ -194,6 +211,8 @@ impl SyntheticEngine {
                 },
             threads: Threads::default(),
             backbone_rows: 0,
+            resumed_rows: 0,
+            resumed_positions: 0,
         }
     }
 
@@ -262,6 +281,8 @@ impl SyntheticEngine {
             id: self.id,
             threads: self.threads,
             backbone_rows: 0,
+            resumed_rows: 0,
+            resumed_positions: 0,
         }
     }
 
@@ -349,6 +370,68 @@ impl Engine for SyntheticEngine {
             });
         }
         Ok(out)
+    }
+
+    /// Position-separable resume: every backbone position depends only on
+    /// its own token (embedding gather + per-position residual tanh
+    /// layers), so the donor's first `prefix_len` positions are copied per
+    /// level and only the `seq - prefix_len` tail runs the layer stack.
+    /// The tail goes through the same kernels with the same per-row
+    /// reduction order, so the spliced bundle is bit-identical to a
+    /// from-scratch forward of `row` (pinned by tests and the gateway
+    /// bench's parity probe).
+    fn backbone_resume(&mut self, donor: &Hidden, prefix_len: usize, row: &[i32]) -> Result<Hidden> {
+        let (d, seq, layers) = (self.d, self.seq, self.layers);
+        if row.len() != seq {
+            bail!("resume row must be padded to {seq} (got {})", row.len());
+        }
+        if prefix_len == 0 || prefix_len > seq {
+            bail!("resume prefix of {prefix_len} positions out of range (seq {seq})");
+        }
+        let per_layer = seq * d;
+        if donor.data.len() != (layers + 1) * per_layer {
+            bail!(
+                "donor bundle has {} floats, expected {} — wrong backbone?",
+                donor.data.len(),
+                (layers + 1) * per_layer
+            );
+        }
+        if donor.tokens.len() != seq || donor.tokens[..prefix_len] != row[..prefix_len] {
+            bail!("donor does not share the first {prefix_len} positions of the resumed row");
+        }
+        self.resumed_rows += 1;
+        self.resumed_positions += prefix_len as u64;
+        let key = super::cache::prompt_key(self.id, row);
+        if prefix_len == seq {
+            // full overlap: the donor bundle is this row's bundle
+            return Ok(Hidden { key, tokens: row.to_vec(), data: donor.data.clone() });
+        }
+        let tail = seq - prefix_len;
+        let mut h = vec![0f32; tail * d];
+        for (t, &tok) in row[prefix_len..].iter().enumerate() {
+            let tok = (tok.max(0) as usize) % self.vocab;
+            self.embed.row_into(tok, &mut h[t * d..(t + 1) * d]);
+        }
+        let mut data = Vec::with_capacity((layers + 1) * per_layer);
+        data.extend_from_slice(&donor.data[..prefix_len * d]);
+        data.extend_from_slice(&h);
+        for (l, wl) in self.w.iter().enumerate() {
+            let mut next = wl.forward(&self.threads, &h, tail);
+            let h_ref = &h;
+            self.threads.par_rows(&mut next, d, |row0, run| {
+                for (rr, nrow) in run.chunks_mut(d).enumerate() {
+                    let hrow = &h_ref[(row0 + rr) * d..(row0 + rr + 1) * d];
+                    for (n, &hv) in nrow.iter_mut().zip(hrow) {
+                        *n = (*n + hv).tanh();
+                    }
+                }
+            });
+            let lvl = (l + 1) * per_layer;
+            data.extend_from_slice(&donor.data[lvl..lvl + prefix_len * d]);
+            data.extend_from_slice(&next);
+            h = next;
+        }
+        Ok(Hidden { key, tokens: row.to_vec(), data })
     }
 
     fn side(
@@ -706,6 +789,92 @@ mod tests {
             rt.side(&net, &h, &rows).unwrap(),
             "side forwards share f32 weights and identical hiddens"
         );
+    }
+
+    #[test]
+    fn resume_matches_from_scratch_bitwise() {
+        // the prefix-cache acceptance property: a resumed forward must be
+        // indistinguishable from a from-scratch forward — for every prefix
+        // depth, thread count, and backbone storage kind
+        for kind in [BackboneKind::F32, BackboneKind::W4] {
+            for threads in [1usize, 4] {
+                let mut e = EnginePreset::Small.build_backbone(11, 16, kind);
+                e.set_threads(threads);
+                let mut donor_row: Vec<i32> = (1..=10).collect();
+                donor_row.resize(16, 0);
+                let donor = e.backbone(std::slice::from_ref(&donor_row)).unwrap().remove(0);
+                for prefix_len in [1usize, 4, 8, 16] {
+                    let mut row = donor_row[..prefix_len].to_vec();
+                    row.extend((0..16 - prefix_len).map(|i| 40 + i as i32));
+                    assert_eq!(row.len(), 16);
+                    let resumed = e.backbone_resume(&donor, prefix_len, &row).unwrap();
+                    let scratch = e.backbone(std::slice::from_ref(&row)).unwrap().remove(0);
+                    assert_eq!(
+                        resumed.data, scratch.data,
+                        "resume at prefix {prefix_len} must be bit-identical ({threads} threads)"
+                    );
+                    assert_eq!(resumed.key, scratch.key);
+                    assert_eq!(resumed.tokens, scratch.tokens);
+                }
+                assert_eq!(e.resumed_rows, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn resume_validates_donor_and_row() {
+        let mut e = SyntheticEngine::small(2, 8);
+        let row: Vec<i32> = vec![1, 2, 3, 4, 0, 0, 0, 0];
+        let donor = e.backbone(std::slice::from_ref(&row)).unwrap().remove(0);
+        // diverging prefix rejected
+        let mut other = row.clone();
+        other[0] = 9;
+        assert!(e.backbone_resume(&donor, 2, &other).is_err());
+        // unpadded row rejected
+        assert!(e.backbone_resume(&donor, 2, &[1, 2, 3]).is_err());
+        // out-of-range prefix rejected
+        assert!(e.backbone_resume(&donor, 0, &row).is_err());
+        assert!(e.backbone_resume(&donor, 9, &row).is_err());
+        // malformed donor rejected
+        let bogus = Hidden { key: 0, tokens: row.clone(), data: vec![0.0; 7] };
+        assert!(e.backbone_resume(&bogus, 2, &row).is_err());
+    }
+
+    /// Engine that keeps the trait's default `backbone_resume` (recompute
+    /// from scratch) — the path non-separable backends take.
+    struct NoResume(SyntheticEngine);
+
+    impl Engine for NoResume {
+        fn seq_len(&self) -> usize {
+            self.0.seq_len()
+        }
+        fn backbone_id(&self) -> u64 {
+            self.0.backbone_id()
+        }
+        fn backbone(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Hidden>> {
+            self.0.backbone(rows)
+        }
+        fn side(
+            &mut self,
+            net: &SideNetwork,
+            hiddens: &[Rc<Hidden>],
+            rows: &[Vec<i32>],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.0.side(net, hiddens, rows)
+        }
+    }
+
+    #[test]
+    fn default_resume_recomputes_and_matches() {
+        let row: Vec<i32> = vec![1, 2, 3, 4, 0, 0, 0, 0];
+        let mut e = NoResume(SyntheticEngine::small(2, 8));
+        let donor = e.backbone(std::slice::from_ref(&row)).unwrap().remove(0);
+        let mut ext = row.clone();
+        ext[4] = 7;
+        let resumed = e.backbone_resume(&donor, 4, &ext).unwrap();
+        let scratch = e.backbone(std::slice::from_ref(&ext)).unwrap().remove(0);
+        assert_eq!(resumed.data, scratch.data);
+        assert_eq!(e.0.resumed_rows, 0, "default path is a full recompute");
     }
 
     #[test]

@@ -30,7 +30,10 @@
 //! * [`cache`] — LRU, byte-budgeted hidden-state cache with hit/miss
 //!   accounting.  Repeated or shared prompts (classification fan-out,
 //!   retries, A/B-ing two side networks over one prompt) skip the frozen
-//!   forward entirely.
+//!   forward entirely; a per-block **prefix index** additionally lets a
+//!   prompt that merely *extends* a cached one resume the frozen forward
+//!   from the deepest cached block (`Engine::backbone_resume`) instead of
+//!   recomputing from token 0.
 //! * [`registry`] — hot-swappable side-network residency (load via
 //!   `coordinator::checkpoint`, LRU-evict under a byte budget, reload on
 //!   demand), so one server can advertise more tasks than fit in memory.
@@ -60,7 +63,7 @@ pub use cache::HiddenCache;
 pub use engine::{Engine, EnginePreset, ExecutorEngine, SyntheticEngine};
 pub use crate::nn::BackboneKind;
 pub use registry::{Registry, SideNetwork};
-pub use stats::ServeStats;
+pub use stats::{ServeStats, StatsSnapshot};
 
 /// One prompt's frozen-backbone hidden states (engine-defined layout).
 #[derive(Clone, Debug)]
@@ -89,11 +92,19 @@ pub struct ServeConfig {
     pub registry_bytes: usize,
     /// micro-batch size cap
     pub max_batch: usize,
+    /// prefix-index block size in tokens (see [`cache`]); 0 disables
+    /// prefix caching — whole-prompt hits only, the pre-gateway behaviour
+    pub prefix_block: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { cache_bytes: 64 << 20, registry_bytes: 256 << 20, max_batch: 8 }
+        ServeConfig {
+            cache_bytes: 64 << 20,
+            registry_bytes: 256 << 20,
+            max_batch: 8,
+            prefix_block: 16,
+        }
     }
 }
 
@@ -139,7 +150,7 @@ impl<E: Engine> Server<E> {
         Server {
             engine,
             registry: Registry::new(cfg.registry_bytes),
-            cache: HiddenCache::new(cfg.cache_bytes),
+            cache: HiddenCache::with_block(cfg.cache_bytes, cfg.prefix_block),
             stats: ServeStats::new(),
             queue: RequestQueue::new(),
             max_batch: cfg.max_batch.max(1),
@@ -236,14 +247,37 @@ impl<E: Engine> Server<E> {
             }
         }
         if !miss_rows.is_empty() {
-            let fresh = self.engine.backbone(&miss_rows)?;
-            if fresh.len() != miss_rows.len() {
-                bail!("backbone returned {} bundles for {} rows", fresh.len(), miss_rows.len());
+            // prefix-resume pass: a miss whose prompt extends a cached
+            // prefix runs only the tail of the frozen forward (bit-identical
+            // to a from-scratch forward — see Engine::backbone_resume)
+            let mut resolved: Vec<Option<Rc<Hidden>>> = vec![None; miss_rows.len()];
+            if use_cache {
+                for (m, row) in miss_rows.iter().enumerate() {
+                    if let Some((donor, p)) = self.cache.get_prefix(bid, row) {
+                        let h = Rc::new(self.engine.backbone_resume(&donor, p, row)?);
+                        self.stats.prefix_resumes += 1;
+                        resolved[m] = Some(h);
+                    }
+                }
             }
-            for ((h, key), row_idxs) in fresh.into_iter().zip(&miss_keys).zip(&owners) {
-                let h = Rc::new(h);
+            // one backbone dispatch for the misses no donor could rescue
+            let fresh_idx: Vec<usize> =
+                (0..miss_rows.len()).filter(|&m| resolved[m].is_none()).collect();
+            if !fresh_idx.is_empty() {
+                let fresh_rows: Vec<Vec<i32>> =
+                    fresh_idx.iter().map(|&m| miss_rows[m].clone()).collect();
+                let fresh = self.engine.backbone(&fresh_rows)?;
+                if fresh.len() != fresh_rows.len() {
+                    bail!("backbone returned {} bundles for {} rows", fresh.len(), fresh_rows.len());
+                }
+                for (h, &m) in fresh.into_iter().zip(&fresh_idx) {
+                    resolved[m] = Some(Rc::new(h));
+                }
+            }
+            for ((h, key), row_idxs) in resolved.into_iter().zip(&miss_keys).zip(&owners) {
+                let h = h.expect("all misses resolved");
                 if use_cache {
-                    self.cache.insert(*key, h.clone());
+                    self.cache.insert(*key, h.clone(), bid);
                 }
                 for &i in row_idxs {
                     hiddens[i] = Some(h.clone());
@@ -276,7 +310,7 @@ mod tests {
         let engine = SyntheticEngine::small(42, 16);
         let mut s = Server::new(
             engine,
-            ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4 },
+            ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4, prefix_block: 8 },
         );
         s.registry.register_synthetic("sst2", 100, 1000).unwrap();
         s.registry.register_synthetic("mnli", 200, 1000).unwrap();
@@ -334,6 +368,46 @@ mod tests {
             assert_eq!(a.logits, b.logits, "cache must not change results");
         }
         assert!(without.iter().all(|r| !r.cache_hit));
+    }
+
+    #[test]
+    fn prefix_extension_resumes_instead_of_recomputing() {
+        let mk = |cache_bytes: usize, prefix_block: usize| {
+            let mut s = Server::new(
+                SyntheticEngine::small(42, 16),
+                ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4, prefix_block },
+            );
+            s.registry.register_synthetic("sst2", 100, 1000).unwrap();
+            s
+        };
+        let base: Vec<i32> = (1..=8).collect();
+        let mut ext = base.clone();
+        ext.extend([21, 22, 23]);
+
+        let mut s = mk(16 << 20, 4);
+        s.submit("sst2", &base).unwrap();
+        s.drain().unwrap();
+        assert_eq!(s.engine.backbone_rows, 1);
+        // the extension shares the base's first 8 tokens (block-aligned):
+        // the backbone must resume from the cached prefix, not recompute
+        s.submit("sst2", &ext).unwrap();
+        let r = s.drain().unwrap();
+        assert_eq!(s.engine.backbone_rows, 1, "extension must not run a full forward");
+        assert_eq!(s.engine.resumed_rows, 1);
+        assert_eq!(s.engine.resumed_positions, 8);
+        assert_eq!(s.stats.prefix_resumes, 1);
+        assert_eq!(s.cache.prefix_hits, 1);
+        assert!(s.cache.prefix_hit_rate() > 0.0);
+        // parity: the resumed response equals an uncached from-scratch one
+        let mut fresh = mk(0, 0);
+        fresh.submit("sst2", &ext).unwrap();
+        let want = fresh.drain().unwrap();
+        assert_eq!(r[0].logits, want[0].logits, "resumed forward must be bit-identical");
+        // and the resumed bundle itself is now a first-class cache entry
+        s.submit("sst2", &ext).unwrap();
+        let again = s.drain().unwrap();
+        assert!(again[0].cache_hit);
+        assert_eq!(s.engine.resumed_rows, 1, "whole-prompt hit, no second resume");
     }
 
     #[test]
@@ -418,7 +492,7 @@ mod tests {
     fn failing_batch_drops_only_its_requests() {
         let mut s = Server::new(
             FlakyEngine(SyntheticEngine::small(42, 16)),
-            ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 20, max_batch: 4 },
+            ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 20, max_batch: 4, prefix_block: 8 },
         );
         s.registry.register_synthetic("good", 1, 100).unwrap();
         s.registry.register_synthetic("bad", 2, 100).unwrap();

@@ -42,6 +42,13 @@ enum Source {
     Synthetic { seed: u64, bytes: usize },
 }
 
+/// Nominal registry bytes charged per *synthetic* task (seed-derived side
+/// nets carry no tensors, so residency is a bookkeeping figure).  Shared by
+/// `qst serve --synthetic`, the gateway shards, and the cost model
+/// (`costmodel::memory::gateway_resident_bytes`), so the analytical and
+/// live registries agree exactly.
+pub const SYNTHETIC_TASK_BYTES: usize = 1 << 16;
+
 /// LRU, byte-budgeted residency manager for side networks.
 pub struct Registry {
     budget: usize,

@@ -20,6 +20,9 @@ pub struct ServeStats {
     pub tokens: u64,
     /// requests dropped by failing micro-batches (see `Server::drain`)
     pub dropped: u64,
+    /// cache misses served by resuming from a cached prefix instead of a
+    /// full frozen forward (see `Server::process_batch`)
+    pub prefix_resumes: u64,
     /// seconds spent actually processing batches — the throughput
     /// denominator, so idle time (waiting on stdin/transport) between
     /// requests doesn't dilute req/s
@@ -48,6 +51,7 @@ impl ServeStats {
             batches: 0,
             tokens: 0,
             dropped: 0,
+            prefix_resumes: 0,
             busy_secs: 0.0,
             lat: Vec::new(),
             lat_dirty: false,
@@ -137,6 +141,21 @@ impl ServeStats {
         self.latency_pct(95.0)
     }
 
+    /// Counters + the latency reservoir, detached from the live server —
+    /// what a gateway shard ships to the aggregator.  Snapshots from many
+    /// shards [`StatsSnapshot::merge`] into fleet-wide percentiles.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            tokens: self.tokens,
+            dropped: self.dropped,
+            prefix_resumes: self.prefix_resumes,
+            busy_secs: self.busy_secs,
+            lat: self.lat.clone(),
+        }
+    }
+
     /// One-line human summary for the CLI.
     pub fn summary(&mut self, cache_hit_rate: f64) -> String {
         let dropped = if self.dropped > 0 { format!(" | {} dropped", self.dropped) } else { String::new() };
@@ -151,6 +170,58 @@ impl ServeStats {
             self.tokens_per_sec(),
             cache_hit_rate * 100.0
         )
+    }
+}
+
+/// A detached, mergeable view of [`ServeStats`]: plain counters plus the
+/// (decimated) latency reservoir.  Gateway shards run their own servers on
+/// their own threads; each ships a snapshot and the aggregator merges them
+/// into fleet-wide throughput and percentiles.  Merging reservoirs with
+/// different decimation strides weighs shards slightly unevenly — fine for
+/// telemetry, and exact when strides match (they do under balanced load).
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    pub dropped: u64,
+    pub prefix_resumes: u64,
+    /// summed busy seconds across shards — divide by shard count for the
+    /// mean per-shard busy time; wall-clock throughput needs the caller's
+    /// own clock (shards overlap in time)
+    pub busy_secs: f64,
+    /// merged latency samples in seconds (unsorted)
+    pub lat: Vec<f64>,
+}
+
+impl StatsSnapshot {
+    pub fn merge(&mut self, other: &StatsSnapshot) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.tokens += other.tokens;
+        self.dropped += other.dropped;
+        self.prefix_resumes += other.prefix_resumes;
+        self.busy_secs += other.busy_secs;
+        self.lat.extend_from_slice(&other.lat);
+    }
+
+    /// Nearest-rank percentile of the merged latencies, in seconds.
+    pub fn latency_pct(&self, p: f64) -> f64 {
+        if self.lat.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.lat.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
+    }
+
+    pub fn p50_secs(&self) -> f64 {
+        self.latency_pct(50.0)
+    }
+
+    pub fn p95_secs(&self) -> f64 {
+        self.latency_pct(95.0)
     }
 }
 
@@ -205,4 +276,22 @@ mod tests {
         assert!((s.p95_secs() - 0.001).abs() < 1e-9);
     }
 
+    #[test]
+    fn snapshots_merge_counters_and_percentiles() {
+        let mut a = ServeStats::new();
+        a.record_batch(2, 10, 0.1, &[0.010, 0.020]);
+        a.prefix_resumes = 3;
+        let mut b = ServeStats::new();
+        b.record_batch(2, 6, 0.2, &[0.030, 0.040]);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.tokens, 16);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.prefix_resumes, 3);
+        assert!((m.busy_secs - 0.3).abs() < 1e-12);
+        assert!((m.p50_secs() - 0.020).abs() < 1e-12);
+        assert!((m.p95_secs() - 0.040).abs() < 1e-12);
+        assert_eq!(StatsSnapshot::default().p95_secs(), 0.0);
+    }
 }

@@ -40,6 +40,9 @@ pub struct BenchServeOpts {
     pub preset: EnginePreset,
     /// frozen-backbone storage (`--backbone f32|w4`) for the primary passes
     pub backbone: BackboneKind,
+    /// prefix-index block size in tokens (0 = whole-prompt caching only,
+    /// the pre-gateway default — keeps the trajectory numbers comparable)
+    pub prefix_block: usize,
 }
 
 impl Default for BenchServeOpts {
@@ -58,6 +61,7 @@ impl Default for BenchServeOpts {
             threads: 1,
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
+            prefix_block: 0,
         }
     }
 }
@@ -75,6 +79,9 @@ pub struct PassReport {
     pub cache_evictions: u64,
     /// bytes the frozen backbone kept resident during this pass
     pub backbone_bytes: usize,
+    /// misses served by resuming from a cached prefix (0 unless
+    /// `prefix_block > 0` and the workload shares prefixes)
+    pub prefix_resumes: u64,
 }
 
 /// The full comparison: cached-vs-uncached on the primary backbone kind,
@@ -136,6 +143,8 @@ impl BenchServeReport {
             .num("cached_p95_ms", self.cached.p95_ms)
             .int("cached_backbone_rows", self.cached.backbone_rows)
             .int("cache_evictions", self.cached.cache_evictions)
+            .int("prefix_block", self.opts.prefix_block as u64)
+            .int("cached_prefix_resumes", self.cached.prefix_resumes)
             .num("uncached_rps", self.uncached.requests_per_sec)
             .num("uncached_p50_ms", self.uncached.p50_ms)
             .num("uncached_p95_ms", self.uncached.p95_ms)
@@ -219,6 +228,35 @@ pub fn prompt_pool(rng: &mut Rng, n: usize, len: usize, vocab: usize) -> Vec<Vec
         .collect()
 }
 
+/// Deterministic shared-prefix pool for prefix-cache workloads: `families`
+/// pairwise-distinct prefixes of `prefix_len` tokens, each extended by
+/// `per_family` pairwise-distinct tails to `len` tokens.  Prompts within a
+/// family share exactly their first `prefix_len` tokens, so with
+/// `prefix_len` a multiple of the cache's block size every non-first
+/// member of a family can resume from the family's deepest cached block.
+pub fn shared_prefix_pool(
+    rng: &mut Rng,
+    families: usize,
+    per_family: usize,
+    prefix_len: usize,
+    len: usize,
+    vocab: usize,
+) -> Vec<Vec<i32>> {
+    assert!(prefix_len >= 1 && prefix_len < len, "prefix must be a proper prefix");
+    assert!(families >= 1 && per_family >= 1);
+    let prefixes = prompt_pool(rng, families, prefix_len, vocab);
+    let tails = prompt_pool(rng, per_family, len - prefix_len, vocab);
+    let mut out = Vec::with_capacity(families * per_family);
+    for pref in &prefixes {
+        for tail in &tails {
+            let mut p = pref.clone();
+            p.extend_from_slice(tail);
+            out.push(p);
+        }
+    }
+    out
+}
+
 fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -> Result<PassReport> {
     let mut engine = opts.preset.build_backbone(opts.seed, opts.seq, backbone);
     engine.set_threads(opts.threads);
@@ -230,6 +268,7 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
             cache_bytes,
             registry_bytes: opts.registry_bytes,
             max_batch: opts.max_batch,
+            prefix_block: opts.prefix_block,
         },
     );
     let names: Vec<String> = (0..opts.tasks).map(|i| format!("task{i}")).collect();
@@ -264,6 +303,7 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
         backbone_rows: server.engine.backbone_rows,
         cache_evictions: server.cache.evictions,
         backbone_bytes,
+        prefix_resumes: server.stats.prefix_resumes,
     })
 }
 
@@ -308,6 +348,7 @@ mod tests {
             threads: 1,
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
+            prefix_block: 0,
         }
     }
 
@@ -324,6 +365,27 @@ mod tests {
                 assert_ne!(pool[i], pool[j], "prompts {i} and {j} collide");
             }
         }
+    }
+
+    #[test]
+    fn shared_prefix_pool_shares_exactly_the_prefix() {
+        let mut rng = Rng::new(4);
+        let pool = shared_prefix_pool(&mut rng, 3, 4, 8, 20, 256);
+        assert_eq!(pool.len(), 12);
+        for p in &pool {
+            assert_eq!(p.len(), 20);
+            assert!(p.iter().all(|&t| t > 0));
+        }
+        for f in 0..3 {
+            let fam = &pool[f * 4..(f + 1) * 4];
+            for w in fam.windows(2) {
+                assert_eq!(w[0][..8], w[1][..8], "family members share the prefix");
+                assert_ne!(w[0][8..], w[1][8..], "tails differ");
+            }
+        }
+        assert_ne!(pool[0][..8], pool[4][..8], "families have distinct prefixes");
+        let set: std::collections::HashSet<_> = pool.iter().cloned().collect();
+        assert_eq!(set.len(), 12, "all prompts pairwise distinct");
     }
 
     #[test]

@@ -22,7 +22,7 @@ const SEQ: usize = 24;
 fn synthetic_server(cache_bytes: usize) -> Server<SyntheticEngine> {
     let mut s = Server::new(
         SyntheticEngine::small(7, SEQ),
-        ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4 },
+        ServeConfig { cache_bytes, registry_bytes: 1 << 20, max_batch: 4, prefix_block: 8 },
     );
     s.registry.register_synthetic("sentiment", 101, 4096).unwrap();
     s.registry.register_synthetic("paraphrase", 202, 4096).unwrap();
@@ -257,7 +257,7 @@ fn executor_engine_matches_run_host_eval() {
     engine.bind_task("taskB", &eval_name, &task_states[1], &frozen).unwrap();
     let mut server = Server::new(
         engine,
-        ServeConfig { cache_bytes: 0, registry_bytes: 1 << 30, max_batch: b },
+        ServeConfig { cache_bytes: 0, registry_bytes: 1 << 30, max_batch: b, prefix_block: 0 },
     );
     server.registry.register_synthetic("taskA", 1, 1 << 20).unwrap();
     server.registry.register_synthetic("taskB", 2, 1 << 20).unwrap();

@@ -31,6 +31,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# sharded gateway smoke: 2 shards on the packed-W4 backbone; bench-gateway
+# refuses to report unless sharded + prefix-resume parity hold bit-for-bit,
+# so this catches replica/resume divergence, not just crashes
+echo "== gateway smoke (2 shards, W4 backbone) =="
+cargo run --release -p qst --bin qst -- bench-gateway --shards 2 --backbone w4 \
+    --preset small --requests 64 --families 4 --per-family 2 --prefix-len 8 \
+    --prompt-len 12 --seq 16 --prefix-block 4 --json BENCH_gateway_smoke.json
+rm -f BENCH_gateway_smoke.json
+
 if [ "${QST_SKIP_FMT:-0}" = "1" ]; then
     # the seed predates rustfmt availability and has no rustfmt.toml; CI
     # sets this until a dedicated formatting pass lands
