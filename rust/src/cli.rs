@@ -123,10 +123,10 @@ COMMANDS:
                resume the frozen forward from the deepest cached N-token
                block (0 = whole-prompt caching only).
                Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
-  gateway      [--shards N] [--queue-cap N] [--num-tasks N] [--preset small|large]
-               [--backbone f32|w4] [--threads N] [--cache-bytes N]
-               [--registry-bytes N] [--batch N] [--seq N] [--prefix-block N]
-               [--seed N]
+  gateway      [--shards N | --connect ADDR,ADDR,...] [--queue-cap N]
+               [--num-tasks N] [--preset small|large] [--backbone f32|w4]
+               [--threads N] [--cache-bytes N] [--registry-bytes N]
+               [--batch N] [--seq N] [--prefix-block N] [--seed N]
                Asynchronous sharded serving front-end: N worker shards each
                hold a private backbone replica + prefix-aware hidden-state
                cache behind a bounded inbox (full inbox => backpressure, not
@@ -134,6 +134,16 @@ COMMANDS:
                repeats and prefix families stay cache-local.  Same stdin line
                protocol as serve, but submission is decoupled from execution
                and responses print in completion order.
+               --connect drives shard-worker processes over the versioned
+               wire protocol instead of in-process threads: one address per
+               shard (unix:<path> or <host>:<port>, so --shards is ignored);
+               each worker is configured over the wire from this gateway's
+               flags, and responses are bit-identical to the in-proc fleet.
+  shard-worker --listen ADDR
+               One gateway shard as its own process: binds unix:<path> or
+               <host>:<port>, accepts one `gateway --connect` session,
+               builds its backbone replica from the gateway's Configure
+               frame (no model flags here), serves, exits on shutdown.
   bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
                [--registry-bytes N] [--prefix-block N] [--seed N]
@@ -143,17 +153,20 @@ COMMANDS:
                reports cached vs uncached throughput, cache hit rate,
                p50/p95 latency, and f32-vs-W4 backbone residency + latency
                side-by-side; writes BENCH_serve.json
-  bench-gateway [--shards N,N,...] [--tasks N] [--requests N] [--families N]
-               [--per-family N] [--prefix-len N] [--prompt-len N] [--seq N]
-               [--batch N] [--cache-bytes N] [--registry-bytes N]
-               [--prefix-block N] [--queue-cap N] [--threads-per-shard N]
-               [--seed N] [--preset small|large] [--backbone f32|w4]
-               [--json PATH]
-               Shard-count scaling sweep under open-loop shared-prefix load:
-               one deterministic request stream per shard count; reports
-               aggregate req/s, merged p50/p95, cache + prefix-hit rates,
-               modeled fleet residency, and proves sharded + prefix-resume
-               parity (bit-identical logits); writes BENCH_gateway.json
+  bench-gateway [--shards N,N,...] [--transports inproc,socket] [--tasks N]
+               [--requests N] [--families N] [--per-family N]
+               [--prefix-len N] [--prompt-len N] [--seq N] [--batch N]
+               [--cache-bytes N] [--registry-bytes N] [--prefix-block N]
+               [--queue-cap N] [--threads-per-shard N] [--seed N]
+               [--preset small|large] [--backbone f32|w4] [--json PATH]
+               Shard-count x transport scaling sweep under open-loop
+               shared-prefix load: one deterministic request stream per
+               (transport, shard count); socket passes run real shard
+               workers over framed socket pairs.  Reports aggregate req/s,
+               merged p50/p95, cache + prefix-hit rates, modeled fleet
+               residency (in-process and per-process), and refuses to
+               write BENCH_gateway.json unless sharded, transport, and
+               prefix-resume parity all hold bit-for-bit
   bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
                blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs

@@ -131,6 +131,43 @@ pub fn gateway_resident_bytes(
             + tasks * crate::serve::registry::SYNTHETIC_TASK_BYTES)
 }
 
+/// Per-endpoint buffering one framed socket connection keeps resident —
+/// the kernel send/receive buffers plus the frame scratch a peer holds
+/// while encoding/decoding (one in-flight frame per direction; the
+/// largest honest frame is a shard report with a full latency reservoir,
+/// ~0.5 MiB, but steady-state frames are Submit/Done at a few KiB).
+pub const SOCKET_ENDPOINT_BUF_BYTES: usize = 64 << 10;
+
+/// Fixed per-worker-process overhead beyond the shard's own state: the
+/// process's private copy of the kernel worker-pool stacks, allocator
+/// slack, and runtime bookkeeping that in-proc shards amortize across
+/// one address space.
+pub const WORKER_PROCESS_OVERHEAD_BYTES: usize = 1 << 20;
+
+/// Resident bytes of a gateway whose shards run as separate
+/// `qst shard-worker` processes behind framed sockets (`--connect`).
+///
+/// The cache and registry were *already* per-shard in the in-process
+/// model — each shard thread owns private copies — so those carry over
+/// 1:1 when a shard becomes a process.  The deployment delta is, per
+/// shard: [`WORKER_PROCESS_OVERHEAD_BYTES`] for the worker process
+/// itself, plus four socket endpoint buffers
+/// ([`SOCKET_ENDPOINT_BUF_BYTES`] each) — send + receive on the worker
+/// end and send + receive on the gateway end of its connection.
+/// Reported in `BENCH_gateway.json` alongside the in-process figure so
+/// the cost of crossing the process boundary is auditable per shard
+/// count.
+pub fn gateway_resident_bytes_multiproc(
+    preset: EnginePreset,
+    backbone: BackboneKind,
+    shards: usize,
+    tasks: usize,
+    cache_budget: usize,
+) -> usize {
+    gateway_resident_bytes(preset, backbone, shards, tasks, cache_budget)
+        + shards * (WORKER_PROCESS_OVERHEAD_BYTES + 4 * SOCKET_ENDPOINT_BUF_BYTES)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +299,25 @@ mod tests {
         let w4 = gateway_resident_bytes(preset, BackboneKind::W4, 4, tasks, 0);
         let f32b = gateway_resident_bytes(preset, BackboneKind::F32, 4, tasks, 0);
         assert!(w4 < f32b, "W4 fleet {w4} must undercut f32 fleet {f32b}");
+    }
+
+    #[test]
+    fn multiproc_residency_adds_linear_socket_and_process_overhead() {
+        // the per-process figure = in-process figure + shards * (worker
+        // process overhead + 4 endpoint buffers), exactly
+        let per_shard_delta = WORKER_PROCESS_OVERHEAD_BYTES + 4 * SOCKET_ENDPOINT_BUF_BYTES;
+        for shards in [1usize, 2, 4] {
+            let base = gateway_resident_bytes(EnginePreset::Small, BackboneKind::W4, shards, 3, 1 << 20);
+            let multi =
+                gateway_resident_bytes_multiproc(EnginePreset::Small, BackboneKind::W4, shards, 3, 1 << 20);
+            assert_eq!(multi - base, shards * per_shard_delta, "{shards} shards");
+        }
+        // the overhead must stay small next to what replication buys:
+        // one W4 large-preset shard still fits in the multiproc delta
+        // budget many times over is NOT required — but the delta must not
+        // dwarf the f32 backbone it replaces
+        let f32_backbone = backbone_resident_bytes(EnginePreset::Large, BackboneKind::F32);
+        assert!(per_shard_delta < f32_backbone);
     }
 
     #[test]

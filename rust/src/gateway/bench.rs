@@ -1,42 +1,54 @@
-//! `qst bench-gateway`: shard-count scaling under open-loop load.
+//! `qst bench-gateway`: shard-count × transport scaling under open-loop
+//! load.
 //!
 //! One deterministic shared-prefix request stream (see
 //! [`shared_prefix_pool`]) is driven through the gateway at every
-//! configured shard count.  The driver is open-loop: it submits as fast
-//! as the bounded inboxes accept, backing off only on
+//! configured shard count, once per configured transport (`inproc` shard
+//! threads, `socket` shard workers behind real framed socket pairs).
+//! The driver is open-loop: it submits as fast as the bounded
+//! inboxes/credit windows accept, backing off only on
 //! [`SubmitError::Backpressure`], and collects responses as they
 //! complete — so the wall-clock measures aggregate fleet throughput, not
 //! lock-step round trips.  Each pass reports req/s, merged p50/p95,
-//! cache + prefix-hit rates, and the modeled fleet residency
-//! ([`gateway_resident_bytes`]); the report also proves two parity
-//! properties before it will serialize:
+//! cache + prefix-hit rates, and the modeled fleet residency — both the
+//! in-process figure ([`gateway_resident_bytes`]) and the per-process
+//! deployment figure ([`gateway_resident_bytes_multiproc`]).  The report
+//! refuses to serialize unless three parity proofs hold:
 //!
-//! * **sharded parity** — every shard count produced bit-identical
-//!   logits for every request id (sharding is wall-clock only);
+//! * **sharded parity** — within each transport, every shard count
+//!   produced bit-identical logits for every request id (sharding is
+//!   wall-clock only);
+//! * **transport parity** — socket-transport responses are bit-identical
+//!   to the in-proc gateway's (framing is representation only);
 //! * **prefix parity** — sampled responses equal a from-scratch,
 //!   cache-disabled server's (prefix resumes change nothing but time).
 //!
 //! `BENCH_gateway.json` accumulates the scaling trajectory across PRs
-//! the same way `BENCH_serve.json` does for the single-process server.
+//! the same way `BENCH_serve.json` does for the single-process server
+//! (in-proc passes keep their original key names; socket passes are
+//! `socket_`-prefixed).
 
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::costmodel::memory::gateway_resident_bytes;
+use crate::costmodel::memory::{gateway_resident_bytes, gateway_resident_bytes_multiproc};
+use crate::proto::TransportKind;
 use crate::serve::stats::Json;
 use crate::serve::workload::shared_prefix_pool;
 use crate::serve::{BackboneKind, EnginePreset, ServeConfig, Server};
 use crate::util::rng::Rng;
 
-use super::{task_name, Gateway, GatewayConfig, SubmitError};
+use super::{task_name, worker, GatewayConfig, SubmitError};
 
 /// Workload + fleet shape for one `bench-gateway` run.
 #[derive(Clone, Debug)]
 pub struct BenchGatewayOpts {
     /// shard counts to sweep (same request stream each time)
     pub shard_counts: Vec<usize>,
+    /// transports to sweep the shard counts under
+    pub transports: Vec<TransportKind>,
     pub tasks: usize,
     pub requests: usize,
     /// prefix families in the prompt pool; members of a family share
@@ -61,6 +73,7 @@ impl Default for BenchGatewayOpts {
     fn default() -> Self {
         BenchGatewayOpts {
             shard_counts: vec![1, 2, 4],
+            transports: vec![TransportKind::InProc, TransportKind::Socket],
             tasks: 3,
             requests: 256,
             families: 8,
@@ -83,9 +96,10 @@ impl Default for BenchGatewayOpts {
     }
 }
 
-/// One measured shard-count pass.
+/// One measured (transport, shard-count) pass.
 #[derive(Clone, Debug)]
 pub struct GatewayPass {
+    pub transport: TransportKind,
     pub shards: usize,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
@@ -98,8 +112,10 @@ pub struct GatewayPass {
     pub resumed_rows: u64,
     /// submits refused with backpressure (each was retried until accepted)
     pub backpressure_rejects: u64,
-    /// modeled fleet residency at this shard count
+    /// modeled fleet residency at this shard count, shards in one process
     pub resident_bytes: usize,
+    /// modeled fleet residency with each shard its own worker process
+    pub resident_bytes_multiproc: usize,
     /// request id -> logits, for the cross-pass parity proofs
     responses: HashMap<u64, Vec<f32>>,
 }
@@ -110,6 +126,7 @@ pub struct BenchGatewayReport {
     pub opts: BenchGatewayOpts,
     pub passes: Vec<GatewayPass>,
     pub sharded_parity: bool,
+    pub transport_parity: bool,
     pub prefix_parity: bool,
 }
 
@@ -121,7 +138,12 @@ fn stream_choices(opts: &BenchGatewayOpts, pool_len: usize) -> Vec<(usize, usize
     (0..opts.requests).map(|_| (rng.below(opts.tasks), rng.below(pool_len))).collect()
 }
 
-fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result<GatewayPass> {
+fn run_pass(
+    opts: &BenchGatewayOpts,
+    transport: TransportKind,
+    shards: usize,
+    pool: &[Vec<i32>],
+) -> Result<GatewayPass> {
     let cfg = GatewayConfig {
         shards,
         queue_cap: opts.queue_cap,
@@ -138,7 +160,7 @@ fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result
         tasks: opts.tasks,
         threads_per_shard: opts.threads_per_shard,
     };
-    let mut gw = Gateway::launch(&cfg)?;
+    let (mut gw, worker_joins) = worker::launch_gateway(&cfg, transport)?;
     let choices = stream_choices(opts, pool.len());
     let mut responses: HashMap<u64, Vec<f32>> = HashMap::with_capacity(opts.requests);
     let t0 = Instant::now();
@@ -156,7 +178,9 @@ fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result
                     }
                     std::thread::sleep(std::time::Duration::from_micros(100));
                 }
-                Err(e) => bail!("gateway refused a bench request: {e}"),
+                // SubmitError: std::error::Error, so it chains through
+                // anyhow::Context instead of being formatted by hand
+                Err(e) => return Err(e).context("gateway refused a bench request"),
             }
         }
         for gr in gw.try_collect() {
@@ -169,16 +193,21 @@ fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result
     let wall = t0.elapsed().as_secs_f64();
     let backpressure_rejects = gw.rejected;
     let (report, leftover) = gw.shutdown()?;
+    for j in worker_joins {
+        let _ = j.join();
+    }
     for gr in leftover {
         responses.insert(gr.resp.id, gr.resp.logits);
     }
     ensure!(
         responses.len() == opts.requests,
-        "completed {} of {} requests at {shards} shard(s)",
+        "completed {} of {} requests at {shards} shard(s) over {}",
         responses.len(),
-        opts.requests
+        opts.requests,
+        transport.name()
     );
     Ok(GatewayPass {
+        transport,
         shards,
         wall_secs: wall,
         requests_per_sec: opts.requests as f64 / wall.max(1e-12),
@@ -191,6 +220,13 @@ fn run_pass(opts: &BenchGatewayOpts, shards: usize, pool: &[Vec<i32>]) -> Result
         resumed_rows: report.resumed_rows,
         backpressure_rejects,
         resident_bytes: gateway_resident_bytes(
+            opts.preset,
+            opts.backbone,
+            shards,
+            opts.tasks,
+            opts.cache_bytes,
+        ),
+        resident_bytes_multiproc: gateway_resident_bytes_multiproc(
             opts.preset,
             opts.backbone,
             shards,
@@ -242,18 +278,52 @@ fn check_prefix_parity(
 }
 
 impl BenchGatewayReport {
-    /// Aggregate-throughput ratio of the widest fleet over the narrowest.
+    /// The passes the headline scaling figure is computed over: the
+    /// in-proc sweep when one ran (so `shard_scaling_speedup` stays
+    /// comparable with pre-socket PRs regardless of `--transports`
+    /// order), otherwise whichever single transport did run.
+    fn headline_passes(&self) -> Vec<&GatewayPass> {
+        let preferred = if self.passes.iter().any(|p| p.transport == TransportKind::InProc) {
+            TransportKind::InProc
+        } else {
+            match self.passes.first() {
+                Some(p) => p.transport,
+                None => return Vec::new(),
+            }
+        };
+        self.passes.iter().filter(|p| p.transport == preferred).collect()
+    }
+
+    /// Aggregate-throughput ratio of the widest fleet over the narrowest
+    /// (see [`Self::headline_passes`] for which transport it reflects).
     pub fn scaling_speedup(&self) -> f64 {
-        let lo = self.passes.iter().min_by_key(|p| p.shards);
-        let hi = self.passes.iter().max_by_key(|p| p.shards);
+        let passes = self.headline_passes();
+        let lo = passes.iter().min_by_key(|p| p.shards);
+        let hi = passes.iter().max_by_key(|p| p.shards);
         match (lo, hi) {
             (Some(lo), Some(hi)) => hi.requests_per_sec / lo.requests_per_sec.max(1e-12),
             _ => 1.0,
         }
     }
 
+    /// Socket / in-proc aggregate-throughput ratio at the widest common
+    /// shard count — the measured cost of the wire (1.0 when only one
+    /// transport ran).
+    pub fn transport_rps_ratio(&self) -> f64 {
+        let at = |t: TransportKind| {
+            self.passes.iter().filter(|p| p.transport == t).max_by_key(|p| p.shards)
+        };
+        match (at(TransportKind::InProc), at(TransportKind::Socket)) {
+            (Some(i), Some(s)) if i.shards == s.shards => {
+                s.requests_per_sec / i.requests_per_sec.max(1e-12)
+            }
+            _ => 1.0,
+        }
+    }
+
     pub fn to_json(&self) -> String {
         let (d, layers, vocab, r) = self.opts.preset.shape();
+        let transports: Vec<&str> = self.opts.transports.iter().map(|t| t.name()).collect();
         let mut j = Json::new()
             .str("bench", "gateway")
             .str("preset", self.opts.preset.name())
@@ -262,6 +332,8 @@ impl BenchGatewayReport {
             .int("vocab", vocab as u64)
             .int("reduction", r as u64)
             .str("backbone", self.opts.backbone.name())
+            .str("transports", &transports.join(","))
+            .int("proto_version", crate::proto::frame::VERSION as u64)
             .int("tasks", self.opts.tasks as u64)
             .int("requests", self.opts.requests as u64)
             .int("unique_prompts", (self.opts.families * self.opts.per_family) as u64)
@@ -277,7 +349,13 @@ impl BenchGatewayReport {
             .int("threads_per_shard", self.opts.threads_per_shard as u64)
             .int("seed", self.opts.seed);
         for p in &self.passes {
-            let k = |name: &str| format!("shards{}_{name}", p.shards);
+            // in-proc passes keep the PR 4 key names so the JSON
+            // trajectory stays comparable; socket passes are prefixed
+            let prefix = match p.transport {
+                TransportKind::InProc => "",
+                TransportKind::Socket => "socket_",
+            };
+            let k = |name: &str| format!("{prefix}shards{}_{name}", p.shards);
             j = j
                 .num(&k("rps"), p.requests_per_sec)
                 .num(&k("wall_secs"), p.wall_secs)
@@ -289,10 +367,13 @@ impl BenchGatewayReport {
                 .int(&k("backbone_rows"), p.backbone_rows)
                 .int(&k("resumed_rows"), p.resumed_rows)
                 .int(&k("backpressure_rejects"), p.backpressure_rejects)
-                .int(&k("resident_bytes"), p.resident_bytes as u64);
+                .int(&k("resident_bytes"), p.resident_bytes as u64)
+                .int(&k("resident_bytes_multiproc"), p.resident_bytes_multiproc as u64);
         }
         j.num("shard_scaling_speedup", self.scaling_speedup())
+            .num("transport_rps_ratio", self.transport_rps_ratio())
             .int("sharded_parity", self.sharded_parity as u64)
+            .int("transport_parity", self.transport_parity as u64)
             .int("prefix_parity", self.prefix_parity as u64)
             .finish()
     }
@@ -310,29 +391,34 @@ impl BenchGatewayReport {
         );
         for p in &self.passes {
             s.push_str(&format!(
-                " | {} shard(s): {:.1} req/s, p95 {:.2} ms, hit {:.0}%, prefix rescue {:.0}%, {} resident",
+                " | {} {} shard(s): {:.1} req/s, p95 {:.2} ms, hit {:.0}%, prefix rescue {:.0}%, {} resident ({} as processes)",
+                p.transport.name(),
                 p.shards,
                 p.requests_per_sec,
                 p.p95_ms,
                 p.hit_rate * 100.0,
                 p.prefix_hit_rate * 100.0,
                 crate::util::human_bytes(p.resident_bytes as f64),
+                crate::util::human_bytes(p.resident_bytes_multiproc as f64),
             ));
         }
         s.push_str(&format!(
-            " | scaling {:.2}x | parity sharded={} prefix={}",
+            " | scaling {:.2}x | socket/inproc rps {:.2}x | parity sharded={} transport={} prefix={}",
             self.scaling_speedup(),
+            self.transport_rps_ratio(),
             self.sharded_parity,
+            self.transport_parity,
             self.prefix_parity
         ));
         s
     }
 }
 
-/// Run the sweep; refuses to report if either parity proof fails.
+/// Run the sweep; refuses to report if any parity proof fails.
 pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
     ensure!(!opts.shard_counts.is_empty(), "need at least one shard count");
     ensure!(opts.shard_counts.iter().all(|&n| n >= 1), "shard counts must be >= 1");
+    ensure!(!opts.transports.is_empty(), "need at least one transport");
     ensure!(opts.tasks >= 1 && opts.requests >= 1);
     ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
     ensure!(opts.prefix_len >= 1 && opts.prefix_len < opts.prompt_len);
@@ -353,22 +439,36 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
         opts.prompt_len,
         vocab,
     );
-    let mut passes = Vec::with_capacity(opts.shard_counts.len());
-    for &n in &opts.shard_counts {
-        passes.push(run_pass(opts, n, &pool)?);
+    let mut passes = Vec::with_capacity(opts.shard_counts.len() * opts.transports.len());
+    for &t in &opts.transports {
+        for &n in &opts.shard_counts {
+            passes.push(run_pass(opts, t, n, &pool)?);
+        }
     }
-    let sharded_parity =
-        passes.iter().all(|p| p.responses == passes[0].responses);
+    // within each transport, every shard count must agree bit-for-bit
+    let sharded_parity = opts.transports.iter().all(|&t| {
+        let mut group = passes.iter().filter(|p| p.transport == t);
+        match group.next() {
+            None => true,
+            Some(first) => group.all(|p| p.responses == first.responses),
+        }
+    });
     ensure!(
         sharded_parity,
         "sharded logits diverged across shard counts — sharding must be wall-clock only"
+    );
+    // and the transports must agree with each other
+    let transport_parity = passes.iter().all(|p| p.responses == passes[0].responses);
+    ensure!(
+        transport_parity,
+        "socket-transport logits diverged from the in-proc gateway — framing must be representation only"
     );
     let prefix_parity = check_prefix_parity(opts, &pool, &passes[0])?;
     ensure!(
         prefix_parity,
         "prefix-resumed logits diverged from the from-scratch reference"
     );
-    Ok(BenchGatewayReport { opts: opts.clone(), passes, sharded_parity, prefix_parity })
+    Ok(BenchGatewayReport { opts: opts.clone(), passes, sharded_parity, transport_parity, prefix_parity })
 }
 
 #[cfg(test)]
@@ -378,6 +478,7 @@ mod tests {
     fn tiny() -> BenchGatewayOpts {
         BenchGatewayOpts {
             shard_counts: vec![1, 2],
+            transports: vec![TransportKind::InProc, TransportKind::Socket],
             tasks: 2,
             requests: 32,
             families: 2,
@@ -400,13 +501,17 @@ mod tests {
     }
 
     #[test]
-    fn bench_completes_with_parity_and_prefix_rescues() {
+    fn bench_completes_with_parity_across_transports_and_prefix_rescues() {
         let rep = run_bench(&tiny()).unwrap();
-        assert_eq!(rep.passes.len(), 2);
-        assert!(rep.sharded_parity && rep.prefix_parity);
+        assert_eq!(rep.passes.len(), 4, "2 shard counts x 2 transports");
+        assert!(rep.sharded_parity && rep.transport_parity && rep.prefix_parity);
         for p in &rep.passes {
             assert!(p.requests_per_sec > 0.0);
             assert!(p.resident_bytes > 0);
+            assert!(
+                p.resident_bytes_multiproc > p.resident_bytes,
+                "process deployment must model extra overhead"
+            );
             // warm cache: far fewer full forwards than requests
             assert!(p.backbone_rows + p.resumed_rows <= 32);
         }
@@ -415,6 +520,7 @@ mod tests {
             rep.passes.iter().all(|p| p.prefix_resumes > 0),
             "shared-prefix workload produced no prefix resumes"
         );
+        assert!(rep.transport_rps_ratio() > 0.0);
     }
 
     #[test]
@@ -422,19 +528,27 @@ mod tests {
         let rep = run_bench(&tiny()).unwrap();
         let j = rep.to_json();
         assert!(j.contains("\"bench\": \"gateway\""));
+        assert!(j.contains("\"transports\": \"inproc,socket\""));
+        assert!(j.contains("\"proto_version\": 1"));
         assert!(j.contains("\"shards1_rps\""));
         assert!(j.contains("\"shards2_rps\""));
         assert!(j.contains("\"shards2_prefix_hit_rate\""));
+        assert!(j.contains("\"socket_shards1_rps\""));
+        assert!(j.contains("\"socket_shards2_rps\""));
+        assert!(j.contains("\"shards2_resident_bytes_multiproc\""));
         assert!(j.contains("\"shard_scaling_speedup\""));
+        assert!(j.contains("\"transport_rps_ratio\""));
         assert!(j.contains("\"sharded_parity\": 1"));
+        assert!(j.contains("\"transport_parity\": 1"));
         assert!(j.contains("\"prefix_parity\": 1"));
         assert!(j.contains("\"shards2_resident_bytes\""));
         assert!(j.trim_end().ends_with('}'));
         assert!(rep.summary().contains("scaling"));
+        assert!(rep.summary().contains("socket"));
     }
 
     #[test]
-    fn rejects_misaligned_prefix_and_empty_sweep() {
+    fn rejects_misaligned_prefix_and_empty_sweeps() {
         let mut o = tiny();
         o.prefix_len = 6; // not a multiple of block 4
         assert!(run_bench(&o).is_err());
@@ -442,7 +556,21 @@ mod tests {
         o.shard_counts = vec![];
         assert!(run_bench(&o).is_err());
         let mut o = tiny();
+        o.transports = vec![];
+        assert!(run_bench(&o).is_err());
+        let mut o = tiny();
         o.prompt_len = 32; // > seq
         assert!(run_bench(&o).is_err());
+    }
+
+    #[test]
+    fn inproc_only_sweep_still_reports() {
+        let mut o = tiny();
+        o.transports = vec![TransportKind::InProc];
+        o.shard_counts = vec![1];
+        o.requests = 12;
+        let rep = run_bench(&o).unwrap();
+        assert!(rep.transport_parity, "single-transport sweep is trivially transport-consistent");
+        assert_eq!(rep.transport_rps_ratio(), 1.0);
     }
 }

@@ -10,42 +10,56 @@
 //!
 //! ```text
 //!   submit(task, tokens) ──▶ [router]  hash(first prefix-block tokens)
-//!         │ SubmitError::Backpressure when the inbox is full
+//!         │ SubmitError::Backpressure when the shard is saturated
 //!         ▼
-//!   [shard 0] [shard 1] … [shard N-1]    bounded inboxes (try_send)
-//!      each: thread-owned Server<SyntheticEngine>
+//!   [Transport]  ─ InProc: bounded mpsc inboxes to shard threads
+//!              └─ Socket: framed unix/tcp streams to shard processes
+//!   [shard 0] [shard 1] … [shard N-1]
+//!      each: thread/process-owned Server<SyntheticEngine>
 //!            queue → prefix-aware cache → backbone/resume → side nets
-//!         │ ShardEvent::Done / Dropped / Rejected
+//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report
 //!         ▼
-//!   [events channel] ──▶ try_collect() / flush() ──▶ responses
-//!   [aggregator]     ──▶ report(): merged stats + summed cache counters
+//!   [event stream] ──▶ try_collect() / flush() ──▶ responses
+//!   [aggregator]   ──▶ report(): merged stats + summed cache counters
 //! ```
 //!
-//! * [`transport`] — request/response/event types, [`SubmitError`]
-//!   backpressure semantics, and the `qst gateway` line-protocol loop.
+//! Since PR 5 the message surface is the versioned wire protocol in
+//! [`crate::proto`], and the gateway is generic over its
+//! [`Transport`]: `Gateway::launch` runs shard threads in-process
+//! (PR 4's design, behavior-preserving), `Gateway::connect` drives a
+//! fleet of `qst shard-worker` processes over sockets.  Both transports
+//! are pinned bit-identical to each other and to an unsharded `Server`
+//! by `tests/gateway.rs` and the `bench-gateway` parity gates.
+//!
+//! * [`transport`] — the in-process [`Transport`] (bounded mpsc,
+//!   [`SubmitError`] backpressure semantics) and the `qst gateway`
+//!   line-protocol loop.
+//! * [`worker`] — the socket shard worker (`qst shard-worker`).
 //! * [`router`] — prefix-locality routing (prompts sharing a
 //!   `prefix_block`-aligned head land on one shard, where the prefix
 //!   cache can resume them) + per-shard report aggregation.
-//! * [`shard`] — the worker threads; each owns a bit-identical engine
-//!   replica, so sharding changes wall-clock only, never logits.
-//! * [`bench`] — `qst bench-gateway`: shard-count scaling curves,
-//!   prefix-hit rates, and p50/p95 under open-loop load
+//! * [`shard`] — the shard serving core, shared verbatim by shard
+//!   threads and shard processes.
+//! * [`bench`] — `qst bench-gateway`: shard-count × transport scaling
+//!   curves, prefix-hit rates, p50/p95 under open-loop load
 //!   (`BENCH_gateway.json`).
 
 pub mod bench;
 pub mod router;
 pub mod shard;
 pub mod transport;
-
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+pub mod worker;
 
 use anyhow::{bail, Result};
 
 use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
 
 pub use router::{aggregate, GatewayReport, Router};
-pub use shard::{ShardHandle, ShardReport};
-pub use transport::{line_loop, GatewayRequest, GatewayResponse, ShardEvent, ShardMsg, SubmitError};
+pub use shard::ShardHandle;
+pub use transport::{line_loop, InProc};
+pub use crate::proto::{
+    GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError, Transport,
+};
 
 pub use crate::serve::registry::SYNTHETIC_TASK_BYTES;
 
@@ -67,8 +81,9 @@ pub fn task_seed(gateway_seed: u64, i: usize) -> u64 {
 pub struct GatewayConfig {
     /// worker shards, each with a private backbone replica
     pub shards: usize,
-    /// bounded per-shard inbox capacity (requests buffered before
-    /// [`SubmitError::Backpressure`])
+    /// per-shard backpressure bound: inbox capacity (in-proc) or
+    /// outstanding-request credit window (socket) before
+    /// [`SubmitError::Backpressure`]
     pub queue_cap: usize,
     /// per-shard server tuning (cache budget, prefix block, batch cap)
     pub serve: ServeConfig,
@@ -99,15 +114,34 @@ impl Default for GatewayConfig {
     }
 }
 
-/// The running gateway: shard fleet + router + event collector.
+impl GatewayConfig {
+    /// The per-shard spec this fleet serves — what in-proc shards build
+    /// from directly and the socket transport ships in its `Configure`
+    /// frame, so both transports construct identical replicas.
+    pub fn shard_spec(&self) -> ShardSpec {
+        ShardSpec {
+            preset: self.preset,
+            backbone: self.backbone,
+            seed: self.seed,
+            seq: self.seq,
+            tasks: self.tasks,
+            threads: self.threads_per_shard,
+            serve: self.serve,
+        }
+    }
+}
+
+/// The running gateway: router + aggregation over a pluggable transport.
 pub struct Gateway {
     cfg: GatewayConfig,
     router: Router,
-    shards: Vec<ShardHandle>,
-    events: Receiver<ShardEvent>,
+    transport: Box<dyn Transport>,
     tasks: Vec<String>,
     next_id: u64,
     in_flight: usize,
+    /// data responses absorbed while awaiting control events (reports),
+    /// handed out on the next try_collect/flush
+    stash: Vec<GatewayResponse>,
     /// requests accepted into shard inboxes
     pub submitted: u64,
     /// submits refused with [`SubmitError::Backpressure`]
@@ -117,23 +151,43 @@ pub struct Gateway {
 }
 
 impl Gateway {
-    /// Spawn the shard fleet and return the ready gateway.
+    /// Spawn an in-process shard fleet and return the ready gateway.
     pub fn launch(cfg: &GatewayConfig) -> Result<Gateway> {
         if cfg.shards == 0 || cfg.tasks == 0 {
             bail!("gateway needs at least one shard and one task");
         }
-        let (ev_tx, ev_rx): (Sender<ShardEvent>, Receiver<ShardEvent>) =
-            std::sync::mpsc::channel();
-        let shards: Vec<ShardHandle> =
-            (0..cfg.shards).map(|i| ShardHandle::spawn(i, cfg, ev_tx.clone())).collect();
+        Self::with_transport(cfg, Box::new(InProc::spawn(cfg)))
+    }
+
+    /// Drive a fleet of `qst shard-worker` processes: shard `i` is the
+    /// worker at `addrs[i]` (`unix:<path>` or `<host>:<port>`).  The
+    /// shard count comes from the address list; each worker receives this
+    /// gateway's [`ShardSpec`] on connect, so one config drives the whole
+    /// fleet.
+    pub fn connect(cfg: &GatewayConfig, addrs: &[String]) -> Result<Gateway> {
+        if addrs.is_empty() {
+            bail!("gateway --connect needs at least one worker address");
+        }
+        let mut cfg = *cfg;
+        cfg.shards = addrs.len();
+        let transport =
+            crate::proto::SocketTransport::connect(addrs, &cfg.shard_spec(), cfg.queue_cap)?;
+        Self::with_transport(&cfg, Box::new(transport))
+    }
+
+    /// Assemble a gateway over an already-running transport.
+    pub fn with_transport(cfg: &GatewayConfig, transport: Box<dyn Transport>) -> Result<Gateway> {
+        if transport.shards() == 0 || cfg.tasks == 0 {
+            bail!("gateway needs at least one shard and one task");
+        }
         Ok(Gateway {
             cfg: *cfg,
-            router: Router::new(cfg.shards, cfg.serve.prefix_block),
-            shards,
-            events: ev_rx,
+            router: Router::new(transport.shards(), cfg.serve.prefix_block),
+            transport,
             tasks: (0..cfg.tasks).map(task_name).collect(),
             next_id: 0,
             in_flight: 0,
+            stash: Vec::new(),
             submitted: 0,
             rejected: 0,
             dropped: 0,
@@ -145,7 +199,7 @@ impl Gateway {
     }
 
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.transport.shards()
     }
 
     /// Requests accepted but not yet answered.
@@ -153,9 +207,9 @@ impl Gateway {
         self.in_flight
     }
 
-    /// Non-blocking submit: validate, route by prompt head, `try_send`
-    /// into the shard's bounded inbox.  Returns the gateway request id,
-    /// or [`SubmitError::Backpressure`] when the routed inbox is full —
+    /// Non-blocking submit: validate, route by prompt head, hand to the
+    /// transport.  Returns the gateway request id, or
+    /// [`SubmitError::Backpressure`] when the routed shard is saturated —
     /// the caller should collect responses and retry (bounded queues
     /// reject; they never deadlock).
     pub fn submit(&mut self, task: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
@@ -174,8 +228,8 @@ impl Gateway {
         }
         let shard = self.router.route(tokens);
         let id = self.next_id;
-        let req = GatewayRequest { id, task: task.to_string(), tokens: tokens.to_vec() };
-        match self.shards[shard].try_submit(req) {
+        let req = Request { id, task: task.to_string(), tokens: tokens.to_vec() };
+        match self.transport.submit(shard, req) {
             Ok(()) => {
                 self.next_id += 1;
                 self.in_flight += 1;
@@ -206,84 +260,112 @@ impl Gateway {
                 self.dropped += 1;
                 eprintln!("gateway: shard {shard} rejected request {id}: {err}");
             }
+            // control events reaching the data path mean an earlier
+            // flush/report over-counted its live shards; harmless
+            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) => {}
         }
     }
 
     /// Drain whatever responses have already completed (non-blocking).
     pub fn try_collect(&mut self) -> Vec<GatewayResponse> {
-        let mut out = Vec::new();
-        loop {
-            match self.events.try_recv() {
-                Ok(ev) => self.absorb(ev, &mut out),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
+        let mut out = std::mem::take(&mut self.stash);
+        while let Some(ev) = self.transport.try_recv() {
+            self.absorb(ev, &mut out);
         }
         out
     }
 
-    /// Barrier: make every shard drain its inbox + server, then collect
-    /// until nothing submitted before this call is outstanding.  Returns
-    /// the responses gathered along the way.
+    /// Barrier: make every shard drain everything submitted before this
+    /// call, and collect until nothing is outstanding.  Works over any
+    /// transport because events are per-shard FIFO — a shard's `FlushAck`
+    /// always follows the outcomes of its pre-flush work.  Returns the
+    /// responses gathered along the way; if the barrier fails (a shard
+    /// died), responses already completed stay stashed for the next
+    /// `try_collect`/`flush` rather than being dropped with the error.
     pub fn flush(&mut self) -> Result<Vec<GatewayResponse>> {
-        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
-        let mut expected = 0usize;
-        for s in &self.shards {
-            if s.send(ShardMsg::Flush(ack_tx.clone())) {
-                expected += 1;
+        let expected = self.transport.start_flush();
+        let mut out = std::mem::take(&mut self.stash);
+        match self.flush_inner(expected, &mut out) {
+            Ok(()) => Ok(out),
+            Err(e) => {
+                self.stash.append(&mut out);
+                Err(e)
             }
         }
-        drop(ack_tx);
-        for _ in 0..expected {
-            if ack_rx.recv().is_err() {
-                bail!("a gateway shard died mid-flush");
-            }
-        }
-        // inbox order guarantees every pre-flush outcome is now in the
-        // event channel; drain until the in-flight ledger clears
-        let mut out = Vec::new();
-        while self.in_flight > 0 {
-            match self.events.recv() {
-                Ok(ev) => self.absorb(ev, &mut out),
-                Err(_) => bail!("all shards disconnected with {} request(s) in flight", self.in_flight),
-            }
-        }
-        Ok(out)
     }
 
-    /// Snapshot every shard and merge into the fleet-wide report.
-    pub fn report(&self) -> Result<GatewayReport> {
-        let (tx, rx) = std::sync::mpsc::channel();
-        let mut expected = 0usize;
-        for s in &self.shards {
-            if s.send(ShardMsg::Report(tx.clone())) {
-                expected += 1;
+    fn flush_inner(&mut self, expected: usize, out: &mut Vec<GatewayResponse>) -> Result<()> {
+        if expected == 0 {
+            if self.in_flight > 0 {
+                bail!("no live shards with {} request(s) in flight", self.in_flight);
+            }
+            return Ok(());
+        }
+        let mut acks = 0usize;
+        while acks < expected {
+            match self.transport.recv() {
+                Ok(ShardEvent::FlushAck { .. }) => acks += 1,
+                Ok(ev) => self.absorb(ev, out),
+                Err(e) => bail!("a gateway shard died mid-flush: {e:#}"),
             }
         }
-        drop(tx);
-        let mut reports = Vec::with_capacity(expected);
-        for _ in 0..expected {
-            match rx.recv() {
-                Ok(r) => reports.push(r),
-                Err(_) => bail!("a gateway shard died mid-report"),
+        // FIFO guarantees every pre-flush outcome has been absorbed by
+        // now; anything left in flight belongs to a dead shard
+        while self.in_flight > 0 {
+            match self.transport.recv() {
+                Ok(ev) => self.absorb(ev, out),
+                Err(_) => {
+                    bail!("all shards disconnected with {} request(s) in flight", self.in_flight)
+                }
             }
         }
-        if reports.is_empty() {
+        Ok(())
+    }
+
+    /// Snapshot every shard and merge into the fleet-wide report.  Data
+    /// responses that complete while reports are in transit are stashed
+    /// for the next `try_collect`/`flush` — never dropped, even when the
+    /// report itself fails.
+    pub fn report(&mut self) -> Result<GatewayReport> {
+        let expected = self.transport.start_report();
+        if expected == 0 {
             bail!("no live shards to report");
         }
+        let mut reports = Vec::with_capacity(expected);
+        let mut stashed = Vec::new();
+        let res = self.report_inner(expected, &mut reports, &mut stashed);
+        self.stash.append(&mut stashed);
+        res?;
         Ok(aggregate(reports))
     }
 
-    /// Flush outstanding work, take the final merged report, then stop and
-    /// join every shard thread.  Responses the caller had not collected
-    /// yet are returned rather than dropped.  (The process-wide kernel
-    /// pool is left alone — other servers may share it; CLI teardown calls
+    fn report_inner(
+        &mut self,
+        expected: usize,
+        reports: &mut Vec<ShardReport>,
+        stashed: &mut Vec<GatewayResponse>,
+    ) -> Result<()> {
+        while reports.len() < expected {
+            match self.transport.recv() {
+                Ok(ShardEvent::Report(r)) => reports.push(r),
+                Ok(ev) => self.absorb(ev, stashed),
+                Err(e) => bail!("a gateway shard died mid-report: {e:#}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush outstanding work, take the final merged report, then stop
+    /// the transport (joining shard threads / closing worker
+    /// connections).  Responses the caller had not collected yet are
+    /// returned rather than dropped.  (The process-wide kernel pool is
+    /// left alone — other servers may share it; CLI teardown calls
     /// [`crate::kernels::shutdown_pool`] explicitly.)
     pub fn shutdown(mut self) -> Result<(GatewayReport, Vec<GatewayResponse>)> {
-        let leftover = self.flush()?;
+        let mut leftover = self.flush()?;
         let report = self.report()?;
-        for s in &mut self.shards {
-            s.stop();
-        }
+        leftover.append(&mut self.stash);
+        self.transport.shutdown()?;
         Ok((report, leftover))
     }
 }
@@ -384,6 +466,7 @@ mod tests {
         let mut c = cfg(1, 4);
         c.tasks = 0;
         assert!(Gateway::launch(&c).is_err());
+        assert!(Gateway::connect(&cfg(1, 4), &[]).is_err());
     }
 
     #[test]
@@ -398,5 +481,22 @@ mod tests {
         }
         let report = gw.report().unwrap();
         assert_eq!(report.merged.requests, 18);
+    }
+
+    #[test]
+    fn stats_mid_stream_stashes_data_responses() {
+        // a report racing in-flight work must not lose responses
+        let mut gw = Gateway::launch(&cfg(2, 4)).unwrap();
+        for i in 0..8 {
+            gw.submit(&task_name(i % 2), &[i as i32 + 1, 3]).unwrap();
+        }
+        let report = gw.report().unwrap();
+        assert_eq!(report.shards.len(), 2);
+        // everything submitted is eventually collected, stash included
+        let got = gw.flush().unwrap();
+        let stashed_plus_flushed = got.len();
+        assert_eq!(stashed_plus_flushed, 8);
+        let (_, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
     }
 }

@@ -11,10 +11,9 @@
 //! routing choice affects only wall-clock, never logits (pinned by the
 //! sharded-vs-single-shard parity tests).
 
+use crate::proto::ShardReport;
 use crate::serve::cache::prompt_key;
 use crate::serve::StatsSnapshot;
-
-use super::shard::ShardReport;
 
 /// Salt for the routing hash: routing must not correlate with cache keys
 /// (same tokens, different purpose), so it gets its own backbone-id slot.

@@ -1,49 +1,186 @@
-//! One gateway shard: a worker thread owning a private `Server` replica.
+//! One gateway shard: a `Server` replica driven by [`ShardMsg`]s.
 //!
 //! `serve::Engine` state is deliberately single-threaded (`Rc` side
-//! networks, mutable counters), so a shard never shares its server —
-//! the thread *constructs* engine + server locally from the gateway
-//! config (same seed ⇒ bit-identical backbone replica; the W4 packing
-//! from PR 3 makes a replica ~7.6× cheaper to hold than f32) and owns
-//! them until shutdown.  Communication is message-passing only: a
-//! bounded inbox of [`ShardMsg`]s in, an unbounded stream of
+//! networks, mutable counters), so a shard never shares its server — it
+//! *constructs* engine + server locally from a [`ShardSpec`] (same seed
+//! ⇒ bit-identical backbone replica; the W4 packing from PR 3 makes a
+//! replica ~7.6× cheaper to hold than f32) and owns them until shutdown.
+//! Communication is message-passing only: [`ShardMsg`]s in,
 //! [`ShardEvent`]s out.
 //!
-//! The serving loop favours batching under load and latency when idle:
-//! after a blocking receive it soaks up whatever else is already queued
-//! (up to the micro-batch cap) before draining, so open-loop load forms
-//! real micro-batches while a lone interactive request is answered
+//! The split here is what makes the transport pluggable:
+//!
+//! * [`ShardCore`] — the transport-free state machine (server, id map,
+//!   event emission).
+//! * [`run_core_loop`] — the serving loop over an `mpsc::Receiver`.
+//!   In-proc shards feed it straight from a bounded inbox
+//!   ([`ShardHandle`]); socket workers feed it from a reader thread
+//!   decoding frames ([`super::worker`]).  **One loop, both transports**
+//!   — so batching behavior (and therefore perf shape) cannot diverge.
+//!
+//! The loop favours batching under load and latency when idle: after a
+//! blocking receive it soaks up whatever else is already queued (up to
+//! the micro-batch cap) before draining, so open-loop load forms real
+//! micro-batches while a lone interactive request is answered
 //! immediately.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 
+use crate::proto::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError};
 use crate::serve::{Server, SyntheticEngine};
 
-use super::transport::{GatewayRequest, GatewayResponse, ShardEvent, ShardMsg, SubmitError};
-use super::GatewayConfig;
-
-/// Counters snapshot one shard ships to the aggregator.
-#[derive(Clone, Debug, Default)]
-pub struct ShardReport {
-    pub shard: usize,
-    pub stats: crate::serve::StatsSnapshot,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    pub prefix_hits: u64,
-    pub cache_evictions: u64,
-    pub cache_entries: usize,
-    pub cache_bytes: usize,
-    pub backbone_rows: u64,
-    pub resumed_rows: u64,
-    pub resumed_positions: u64,
-    pub backbone_resident_bytes: usize,
-    pub registry_bytes: usize,
+/// The transport-free shard state machine: owns the server replica and
+/// the gateway-id bookkeeping, emits [`ShardEvent`]s through a callback.
+pub struct ShardCore {
+    index: usize,
+    server: Server<SyntheticEngine>,
+    /// server-local request id -> gateway id, rewritten on the way out
+    id_map: HashMap<u64, u64>,
 }
 
-/// The gateway-side handle: bounded sender + join handle.  Dropping the
-/// handle stops the shard (idempotent with [`ShardHandle::stop`]).
+impl ShardCore {
+    /// Build shard `index`'s bit-identical replica from the fleet spec.
+    pub fn from_spec(index: usize, spec: &ShardSpec) -> anyhow::Result<ShardCore> {
+        let mut engine = spec.preset.build_backbone(spec.seed, spec.seq, spec.backbone);
+        engine.set_threads(spec.threads);
+        let mut server = Server::new(engine, spec.serve);
+        for i in 0..spec.tasks.max(1) {
+            server.registry.register_synthetic(
+                &super::task_name(i),
+                super::task_seed(spec.seed, i),
+                super::SYNTHETIC_TASK_BYTES,
+            )?;
+        }
+        Ok(ShardCore { index, server, id_map: HashMap::new() })
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn pending(&self) -> usize {
+        self.server.pending()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.server.max_batch()
+    }
+
+    fn submit(&mut self, req: Request, emit: &mut dyn FnMut(ShardEvent)) {
+        match self.server.submit(&req.task, &req.tokens) {
+            Ok(sid) => {
+                self.id_map.insert(sid, req.id);
+            }
+            Err(e) => emit(ShardEvent::Rejected {
+                shard: self.index,
+                id: req.id,
+                err: format!("{e:#}"),
+            }),
+        }
+    }
+
+    fn drain_and_emit(&mut self, emit: &mut dyn FnMut(ShardEvent)) {
+        if self.server.pending() == 0 {
+            return;
+        }
+        let before_dropped = self.server.stats.dropped;
+        match self.server.drain() {
+            Ok(responses) => {
+                for mut r in responses {
+                    r.id = self.id_map.get(&r.id).copied().unwrap_or(r.id);
+                    emit(ShardEvent::Done(GatewayResponse { shard: self.index, resp: r }));
+                }
+            }
+            Err(e) => eprintln!("gateway shard {}: drain failed: {e:#}", self.index),
+        }
+        let dropped = self.server.stats.dropped - before_dropped;
+        if dropped > 0 {
+            emit(ShardEvent::Dropped { shard: self.index, n: dropped as usize });
+        }
+        // drain() leaves nothing pending: every id was answered or dropped
+        self.id_map.clear();
+    }
+
+    fn report(&self) -> ShardReport {
+        let server = &self.server;
+        ShardReport {
+            shard: self.index,
+            stats: server.stats.snapshot(),
+            cache_hits: server.cache.hits,
+            cache_misses: server.cache.misses,
+            prefix_hits: server.cache.prefix_hits,
+            cache_evictions: server.cache.evictions,
+            cache_entries: server.cache.len(),
+            cache_bytes: server.cache.bytes(),
+            backbone_rows: server.engine.backbone_rows,
+            resumed_rows: server.engine.resumed_rows,
+            resumed_positions: server.engine.resumed_positions,
+            backbone_resident_bytes: server.engine.backbone_resident_bytes(),
+            registry_bytes: server.registry.bytes(),
+        }
+    }
+}
+
+/// Serve [`ShardMsg`]s from `rx` until `Shutdown` (or the sender side
+/// hangs up), emitting every outcome through `emit`.  Used verbatim by
+/// in-proc shard threads and socket workers — the batching soak and the
+/// flush/report semantics are identical across transports by
+/// construction.
+pub fn run_core_loop(mut core: ShardCore, rx: &Receiver<ShardMsg>, emit: &mut dyn FnMut(ShardEvent)) {
+    // a control message pulled out of the inbox mid-batch, parked until
+    // the drain it interrupted completes
+    let mut parked: Option<ShardMsg> = None;
+    loop {
+        let msg = match parked.take() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // gateway gone: drain and exit
+            },
+        };
+        match msg {
+            ShardMsg::Submit(req) => {
+                core.submit(req, emit);
+                // soak up already-queued submits so micro-batches form
+                // under load; park any control message for after the drain
+                while core.pending() < core.max_batch() {
+                    match rx.try_recv() {
+                        Ok(ShardMsg::Submit(r)) => core.submit(r, emit),
+                        Ok(ctrl) => {
+                            parked = Some(ctrl);
+                            break;
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                core.drain_and_emit(emit);
+            }
+            ShardMsg::Flush => {
+                core.drain_and_emit(emit);
+                emit(ShardEvent::FlushAck { shard: core.index });
+            }
+            ShardMsg::Report => emit(ShardEvent::Report(core.report())),
+            ShardMsg::Shutdown => {
+                core.drain_and_emit(emit);
+                break;
+            }
+            ShardMsg::Configure { .. } => {
+                // in-proc shards are built from their spec directly; a
+                // socket worker consumes Configure before entering this
+                // loop — seeing one here is a protocol bug, not fatal
+                eprintln!("gateway shard {}: unexpected Configure (already configured)", core.index());
+            }
+        }
+    }
+    core.drain_and_emit(emit);
+}
+
+/// An in-proc shard: [`run_core_loop`] on its own thread behind a
+/// **bounded** inbox.  The gateway-side handle pairs the sender with the
+/// join handle; dropping it stops the shard (idempotent with
+/// [`ShardHandle::stop`]).
 pub struct ShardHandle {
     pub index: usize,
     tx: SyncSender<ShardMsg>,
@@ -53,18 +190,29 @@ pub struct ShardHandle {
 impl ShardHandle {
     /// Spawn shard `index`: builds its engine/server replica *inside* the
     /// thread and serves until `Shutdown` (or the gateway drops).
-    pub fn spawn(index: usize, cfg: &GatewayConfig, events: Sender<ShardEvent>) -> ShardHandle {
-        let (tx, rx) = std::sync::mpsc::sync_channel(cfg.queue_cap.max(1));
-        let cfg = *cfg;
+    pub fn spawn(
+        index: usize,
+        spec: ShardSpec,
+        queue_cap: usize,
+        events: Sender<ShardEvent>,
+    ) -> ShardHandle {
+        let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap.max(1));
         let join = std::thread::Builder::new()
             .name(format!("qst-gateway-shard-{index}"))
-            .spawn(move || run_shard(index, cfg, rx, events))
+            .spawn(move || {
+                let core = ShardCore::from_spec(index, &spec)
+                    .expect("building gateway shard replica");
+                let mut emit = |ev: ShardEvent| {
+                    let _ = events.send(ev);
+                };
+                run_core_loop(core, &rx, &mut emit);
+            })
             .expect("spawning gateway shard");
         ShardHandle { index, tx, join: Some(join) }
     }
 
     /// Non-blocking submit into the bounded inbox.
-    pub fn try_submit(&self, req: GatewayRequest) -> Result<(), SubmitError> {
+    pub fn try_submit(&self, req: Request) -> Result<(), SubmitError> {
         match self.tx.try_send(ShardMsg::Submit(req)) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => Err(SubmitError::Backpressure { shard: self.index }),
@@ -76,6 +224,15 @@ impl ShardHandle {
     /// the shard thread is gone.
     pub fn send(&self, msg: ShardMsg) -> bool {
         self.tx.send(msg).is_ok()
+    }
+
+    /// Whether the serving thread has exited.  Before [`ShardHandle::stop`]
+    /// a shard thread only ever exits by dying (panic mid-drain, poisoned
+    /// engine), so a `true` here while events are awaited means its
+    /// outcomes will never arrive — the transports poll this to fail fast
+    /// instead of sitting out the full event timeout.
+    pub fn is_dead(&self) -> bool {
+        self.join.as_ref().map(|j| j.is_finished()).unwrap_or(true)
     }
 
     /// Stop and join the shard thread (idempotent).
@@ -93,140 +250,19 @@ impl Drop for ShardHandle {
     }
 }
 
-fn report(index: usize, server: &Server<SyntheticEngine>) -> ShardReport {
-    ShardReport {
-        shard: index,
-        stats: server.stats.snapshot(),
-        cache_hits: server.cache.hits,
-        cache_misses: server.cache.misses,
-        prefix_hits: server.cache.prefix_hits,
-        cache_evictions: server.cache.evictions,
-        cache_entries: server.cache.len(),
-        cache_bytes: server.cache.bytes(),
-        backbone_rows: server.engine.backbone_rows,
-        resumed_rows: server.engine.resumed_rows,
-        resumed_positions: server.engine.resumed_positions,
-        backbone_resident_bytes: server.engine.backbone_resident_bytes(),
-        registry_bytes: server.registry.bytes(),
-    }
-}
-
-fn run_shard(index: usize, cfg: GatewayConfig, rx: Receiver<ShardMsg>, events: Sender<ShardEvent>) {
-    let mut engine = cfg.preset.build_backbone(cfg.seed, cfg.seq, cfg.backbone);
-    engine.set_threads(cfg.threads_per_shard);
-    let mut server = Server::new(engine, cfg.serve);
-    for i in 0..cfg.tasks.max(1) {
-        server
-            .registry
-            .register_synthetic(
-                &super::task_name(i),
-                super::task_seed(cfg.seed, i),
-                super::SYNTHETIC_TASK_BYTES,
-            )
-            .expect("registering synthetic gateway task");
-    }
-    // server-local request id -> gateway id, rewritten on the way out
-    let mut id_map: HashMap<u64, u64> = HashMap::new();
-    let submit = |server: &mut Server<SyntheticEngine>,
-                      id_map: &mut HashMap<u64, u64>,
-                      req: GatewayRequest| {
-        match server.submit(&req.task, &req.tokens) {
-            Ok(sid) => {
-                id_map.insert(sid, req.id);
-            }
-            Err(e) => {
-                let _ = events.send(ShardEvent::Rejected {
-                    shard: index,
-                    id: req.id,
-                    err: format!("{e:#}"),
-                });
-            }
-        }
-    };
-    let drain_and_emit =
-        |server: &mut Server<SyntheticEngine>, id_map: &mut HashMap<u64, u64>| {
-            if server.pending() == 0 {
-                return;
-            }
-            let before_dropped = server.stats.dropped;
-            match server.drain() {
-                Ok(responses) => {
-                    for mut r in responses {
-                        r.id = id_map.get(&r.id).copied().unwrap_or(r.id);
-                        let _ = events.send(ShardEvent::Done(GatewayResponse {
-                            shard: index,
-                            resp: r,
-                        }));
-                    }
-                }
-                Err(e) => eprintln!("gateway shard {index}: drain failed: {e:#}"),
-            }
-            let dropped = server.stats.dropped - before_dropped;
-            if dropped > 0 {
-                let _ = events.send(ShardEvent::Dropped { shard: index, n: dropped as usize });
-            }
-            // drain() leaves nothing pending: every id was answered or dropped
-            id_map.clear();
-        };
-    // a control message pulled out of the inbox mid-batch, parked until
-    // the drain it interrupted completes
-    let mut parked: Option<ShardMsg> = None;
-    loop {
-        let msg = match parked.take() {
-            Some(m) => m,
-            None => match rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // gateway gone: drain and exit
-            },
-        };
-        match msg {
-            ShardMsg::Submit(req) => {
-                submit(&mut server, &mut id_map, req);
-                // soak up already-queued submits so micro-batches form
-                // under load; park any control message for after the drain
-                while server.pending() < server.max_batch() {
-                    match rx.try_recv() {
-                        Ok(ShardMsg::Submit(r)) => submit(&mut server, &mut id_map, r),
-                        Ok(ctrl) => {
-                            parked = Some(ctrl);
-                            break;
-                        }
-                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-                    }
-                }
-                drain_and_emit(&mut server, &mut id_map);
-            }
-            ShardMsg::Flush(ack) => {
-                drain_and_emit(&mut server, &mut id_map);
-                let _ = ack.send(());
-            }
-            ShardMsg::Report(reply) => {
-                let _ = reply.send(report(index, &server));
-            }
-            ShardMsg::Shutdown => {
-                drain_and_emit(&mut server, &mut id_map);
-                break;
-            }
-        }
-    }
-    drain_and_emit(&mut server, &mut id_map);
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
 
-    fn tiny_cfg(queue_cap: usize) -> GatewayConfig {
-        GatewayConfig {
-            shards: 1,
-            queue_cap,
-            seq: 16,
-            seed: 7,
-            tasks: 2,
-            threads_per_shard: 1,
+    fn tiny_spec() -> ShardSpec {
+        ShardSpec {
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
+            seed: 7,
+            seq: 16,
+            tasks: 2,
+            threads: 1,
             serve: ServeConfig {
                 cache_bytes: 4 << 20,
                 registry_bytes: 1 << 20,
@@ -237,40 +273,39 @@ mod tests {
     }
 
     #[test]
-    fn shard_round_trip_matches_direct_server() {
-        let cfg = tiny_cfg(16);
+    fn shard_round_trip_matches_direct_server_and_acks_after_outcomes() {
+        let spec = tiny_spec();
         let (ev_tx, ev_rx) = std::sync::mpsc::channel();
-        let mut shard = ShardHandle::spawn(0, &cfg, ev_tx);
+        let mut shard = ShardHandle::spawn(0, spec, 16, ev_tx);
         let prompt = vec![3i32, 1, 4, 1, 5];
         shard
-            .try_submit(GatewayRequest { id: 42, task: "task0".into(), tokens: prompt.clone() })
+            .try_submit(Request { id: 42, task: "task0".into(), tokens: prompt.clone() })
             .unwrap();
-        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
-        assert!(shard.send(ShardMsg::Flush(ack_tx)));
-        ack_rx.recv().unwrap();
+        assert!(shard.send(ShardMsg::Flush));
+        // per-shard FIFO: the Done for id 42 must precede the FlushAck
         let ev = ev_rx.recv().unwrap();
-        let ShardEvent::Done(gr) = ev else { panic!("expected Done") };
+        let ShardEvent::Done(gr) = ev else { panic!("expected Done before the ack") };
         assert_eq!(gr.resp.id, 42, "gateway id must survive the trip");
         assert_eq!(gr.shard, 0);
-        // reference: same engine seed, same task registration, no threads
-        let mut engine = cfg.preset.build_backbone(cfg.seed, cfg.seq, cfg.backbone);
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::FlushAck { shard: 0 }));
+        // reference: same spec, same task registration, no threads
+        let mut engine = spec.preset.build_backbone(spec.seed, spec.seq, spec.backbone);
         engine.set_threads(1);
-        let mut server = Server::new(engine, cfg.serve);
+        let mut server = Server::new(engine, spec.serve);
         server
             .registry
             .register_synthetic(
                 "task0",
-                crate::gateway::task_seed(cfg.seed, 0),
+                crate::gateway::task_seed(spec.seed, 0),
                 crate::gateway::SYNTHETIC_TASK_BYTES,
             )
             .unwrap();
         server.submit("task0", &prompt).unwrap();
         let want = server.drain().unwrap();
         assert_eq!(gr.resp.logits, want[0].logits, "shard replica must be bit-identical");
-        // report carries the serve counters
-        let (rep_tx, rep_rx) = std::sync::mpsc::channel();
-        assert!(shard.send(ShardMsg::Report(rep_tx)));
-        let rep = rep_rx.recv().unwrap();
+        // report comes back as an event carrying the serve counters
+        assert!(shard.send(ShardMsg::Report));
+        let ShardEvent::Report(rep) = ev_rx.recv().unwrap() else { panic!("expected Report") };
         assert_eq!(rep.stats.requests, 1);
         assert_eq!(rep.backbone_rows, 1);
         assert!(rep.backbone_resident_bytes > 0);
@@ -280,33 +315,26 @@ mod tests {
 
     #[test]
     fn shard_rejects_bad_tasks_via_events() {
-        let cfg = tiny_cfg(16);
         let (ev_tx, ev_rx) = std::sync::mpsc::channel();
-        let mut shard = ShardHandle::spawn(0, &cfg, ev_tx);
-        shard
-            .try_submit(GatewayRequest { id: 9, task: "nope".into(), tokens: vec![1] })
-            .unwrap();
-        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
-        assert!(shard.send(ShardMsg::Flush(ack_tx)));
-        ack_rx.recv().unwrap();
-        match ev_rx.try_recv().unwrap() {
+        let mut shard = ShardHandle::spawn(0, tiny_spec(), 16, ev_tx);
+        shard.try_submit(Request { id: 9, task: "nope".into(), tokens: vec![1] }).unwrap();
+        assert!(shard.send(ShardMsg::Flush));
+        match ev_rx.recv().unwrap() {
             ShardEvent::Rejected { id, .. } => assert_eq!(id, 9),
-            _ => panic!("expected Rejected"),
+            other => panic!("expected Rejected, got {other:?}"),
         }
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::FlushAck { .. }));
         shard.stop();
     }
 
     #[test]
     fn bounded_inbox_backpressures_when_thread_is_busy() {
-        // a 1-slot inbox with the shard wedged behind a slow flush can
-        // only ever hold one message; the second try_submit must reject
-        // rather than block — this is the no-deadlock guarantee
-        let cfg = tiny_cfg(1);
+        // a 1-slot inbox with the shard busy serving can only ever hold
+        // one message; a sustained burst must reject rather than block —
+        // this is the no-deadlock guarantee
         let (ev_tx, _ev_rx) = std::sync::mpsc::channel();
-        let mut shard = ShardHandle::spawn(0, &cfg, ev_tx);
-        let req = |id| GatewayRequest { id, task: "task0".into(), tokens: vec![1, 2] };
-        // fill the inbox: accepted messages beyond the first are consumed
-        // as the thread wakes, so loop until a rejection surfaces
+        let mut shard = ShardHandle::spawn(0, tiny_spec(), 1, ev_tx);
+        let req = |id| Request { id, task: "task0".into(), tokens: vec![1, 2] };
         let mut saw_backpressure = false;
         for id in 0..2000 {
             match shard.try_submit(req(id)) {

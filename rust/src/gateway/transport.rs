@@ -1,106 +1,111 @@
-//! Gateway transport: non-blocking request intake over bounded channels.
+//! The in-process gateway transport + the stdin line-protocol loop.
 //!
-//! The pre-gateway `qst serve` loop was synchronous — read a line, maybe
-//! drain, print.  The gateway decouples submission from execution: a
-//! request is routed to a shard's **bounded** inbox (`try_send`, never
-//! blocking), the shard thread batches and serves it, and the completed
-//! response comes back on a shared event channel whenever it is ready.
-//! A full inbox is surfaced as [`SubmitError::Backpressure`] — the
-//! caller's signal to collect responses and retry — so the gateway
-//! *rejects* under overload instead of deadlocking or buffering without
-//! bound.
+//! [`InProc`] is the PR 4 design behind the [`Transport`] trait: N shard
+//! threads, each owning a bit-identical `Server` replica behind a
+//! **bounded** mpsc inbox (`try_send` — a full inbox surfaces
+//! [`SubmitError::Backpressure`], so the gateway *rejects* under
+//! overload instead of deadlocking or buffering without bound), all
+//! emitting into one shared event channel.  Flush acks and stats
+//! reports travel on that same channel as typed [`ShardEvent`]s — the
+//! exact message surface the socket transport frames over the wire
+//! ([`crate::proto`]), so the two transports cannot diverge semantically.
 //!
-//! [`line_loop`] adapts the same stdin protocol `qst serve` speaks
-//! (`<task> <tok> <tok> ...`, plus `stats`) to this asynchronous path for
-//! `qst gateway`: lines are submitted as fast as the inboxes accept them
-//! and responses are printed as they complete, in completion order.
+//! [`line_loop`] adapts the shared stdin protocol (`<task> <tok> ...`,
+//! plus `stats` — parsed by the canonical [`crate::proto::text`] codec)
+//! to the asynchronous gateway: lines are submitted as fast as the
+//! inboxes accept them and responses are printed as they complete, in
+//! completion order.
 
 use std::io::{BufRead, Write};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 use anyhow::{Context, Result};
 
-use super::Gateway;
-use crate::serve::Response;
+use crate::proto::text::{self, TextLine};
+use crate::proto::transport::recv_event;
+use crate::proto::{GatewayResponse, Request, ShardEvent, ShardMsg, SubmitError, Transport};
 
-/// One request as it travels to a shard: the gateway-assigned id survives
-/// the trip (shards rewrite their server-local ids back to this one).
-#[derive(Clone, Debug)]
-pub struct GatewayRequest {
-    pub id: u64,
-    pub task: String,
-    pub tokens: Vec<i32>,
+use super::shard::ShardHandle;
+use super::{Gateway, GatewayConfig};
+
+/// [`Transport`] over shard threads in this process (see module docs).
+pub struct InProc {
+    shards: Vec<ShardHandle>,
+    /// shard deaths already surfaced through `recv` — each is reported
+    /// exactly once, so one lost shard doesn't poison every later
+    /// barrier the healthy shards could still answer
+    dead_reported: Vec<bool>,
+    events: Receiver<ShardEvent>,
 }
 
-/// A completed request, tagged with the shard that served it.
-#[derive(Clone, Debug)]
-pub struct GatewayResponse {
-    pub shard: usize,
-    pub resp: Response,
-}
-
-/// Control + data messages into one shard thread (bounded inbox).
-pub enum ShardMsg {
-    Submit(GatewayRequest),
-    /// drain everything pending, emit the results, then ack
-    Flush(std::sync::mpsc::Sender<()>),
-    /// snapshot serving stats + cache/engine counters
-    Report(std::sync::mpsc::Sender<super::shard::ShardReport>),
-    /// drain, emit, and exit the shard thread
-    Shutdown,
-}
-
-/// Events out of shard threads (shared unbounded channel, so a shard can
-/// never deadlock against a slow collector).
-pub enum ShardEvent {
-    Done(GatewayResponse),
-    /// requests dropped inside a failing micro-batch (count only; the
-    /// server logs the cause)
-    Dropped { shard: usize, n: usize },
-    /// a submit the shard's server refused — belt-and-braces: the gateway
-    /// validates task and length before routing, so this signals a bug or
-    /// a mid-flight deregistration rather than routine traffic
-    Rejected { shard: usize, id: u64, err: String },
-}
-
-/// Why [`Gateway::submit`] refused a request.
-#[derive(Debug)]
-pub enum SubmitError {
-    /// the routed shard's inbox is at capacity — collect responses and
-    /// retry; the queue is bounded by design (reject, don't deadlock)
-    Backpressure { shard: usize },
-    /// malformed request (unknown task or over-length prompt)
-    Invalid(String),
-    /// the routed shard's thread is gone
-    ShardDown { shard: usize },
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::Backpressure { shard } => {
-                write!(f, "shard {shard} inbox full (backpressure — retry after collecting)")
-            }
-            SubmitError::Invalid(msg) => write!(f, "{msg}"),
-            SubmitError::ShardDown { shard } => write!(f, "shard {shard} is down"),
-        }
+impl InProc {
+    /// Spawn the shard fleet; shard `i` serves `cfg.shard_spec()` behind
+    /// a `cfg.queue_cap`-slot inbox.
+    pub fn spawn(cfg: &GatewayConfig) -> InProc {
+        let (ev_tx, ev_rx): (Sender<ShardEvent>, Receiver<ShardEvent>) =
+            std::sync::mpsc::channel();
+        let spec = cfg.shard_spec();
+        let shards: Vec<ShardHandle> = (0..cfg.shards)
+            .map(|i| ShardHandle::spawn(i, spec, cfg.queue_cap, ev_tx.clone()))
+            .collect();
+        let dead_reported = vec![false; shards.len()];
+        InProc { shards, dead_reported, events: ev_rx }
     }
 }
 
-impl std::error::Error for SubmitError {}
+impl Transport for InProc {
+    fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn submit(&mut self, shard: usize, req: Request) -> Result<(), SubmitError> {
+        self.shards[shard].try_submit(req)
+    }
+
+    fn try_recv(&mut self) -> Option<ShardEvent> {
+        match self.events.try_recv() {
+            Ok(ev) => Some(ev),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    fn recv(&mut self) -> Result<ShardEvent> {
+        // a shard thread only exits early by dying (panic mid-drain);
+        // with the event queue drained its outcomes can never arrive.
+        // Each death is reported once (see `dead_reported`).
+        let shards = &self.shards;
+        let dead_reported = &mut self.dead_reported;
+        recv_event(&self.events, "a shard thread likely died mid-request", move || {
+            shards
+                .iter()
+                .enumerate()
+                .find(|(i, s)| s.is_dead() && !dead_reported[*i])
+                .map(|(i, s)| {
+                    dead_reported[i] = true;
+                    format!("gateway shard {} thread died while events were awaited", s.index)
+                })
+        })
+    }
+
+    fn start_flush(&mut self) -> usize {
+        self.shards.iter().filter(|s| s.send(ShardMsg::Flush)).count()
+    }
+
+    fn start_report(&mut self) -> usize {
+        self.shards.iter().filter(|s| s.send(ShardMsg::Report)).count()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for s in &mut self.shards {
+            s.stop();
+        }
+        Ok(())
+    }
+}
 
 fn print_responses(out: &mut impl Write, responses: &[GatewayResponse]) -> Result<()> {
     for gr in responses {
-        let (tok, logit) = gr.resp.top1();
-        writeln!(
-            out,
-            "{}#{}: next-token {} (logit {:.4}) [shard {}{}]",
-            gr.resp.task,
-            gr.resp.id,
-            tok,
-            logit,
-            gr.shard,
-            if gr.resp.cache_hit { ", cache hit" } else { "" }
-        )?;
+        writeln!(out, "{}", text::format_response(&gr.resp, Some(gr.shard)))?;
     }
     Ok(())
 }
@@ -109,28 +114,23 @@ fn print_responses(out: &mut impl Write, responses: &[GatewayResponse]) -> Resul
 /// (`<task> <tok> <tok> ...`), `stats` for a merged fleet summary.
 /// Submission is asynchronous — a line is accepted the moment its shard
 /// inbox has room, and completed responses are printed as they arrive
-/// (completion order, tagged with ids).  On backpressure the loop flushes
-/// the fleet (collecting every outstanding response) and retries the
-/// line, so input is never dropped.  Returns after EOF once every
-/// outstanding request has been answered.
+/// (completion order, tagged with ids).  On backpressure the loop drains
+/// whatever has completed and retries the line, so input is never
+/// dropped.  Returns after EOF once every outstanding request has been
+/// answered.  Works identically over in-proc and socket transports.
 pub fn line_loop(gw: &mut Gateway, input: impl BufRead, out: &mut impl Write) -> Result<()> {
     for line in input.lines() {
         let line = line.context("reading request line")?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        if line == "stats" {
-            let report = gw.report()?;
-            writeln!(out, "{}", report.summary())?;
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let task = parts.next().unwrap().to_string();
-        let tokens: Vec<i32> = match parts.map(|t| t.parse()).collect::<Result<_, _>>() {
-            Ok(t) => t,
+        let (task, tokens) = match text::parse_line(&line) {
+            Ok(TextLine::Empty) => continue,
+            Ok(TextLine::Stats) => {
+                let report = gw.report()?;
+                writeln!(out, "{}", report.summary())?;
+                continue;
+            }
+            Ok(TextLine::Request { task, tokens }) => (task, tokens),
             Err(e) => {
-                eprintln!("bad request (tokens must be integers): {e}");
+                eprintln!("{e}");
                 continue;
             }
         };
@@ -168,13 +168,6 @@ mod tests {
     use crate::gateway::GatewayConfig;
 
     #[test]
-    fn submit_error_displays() {
-        assert!(format!("{}", SubmitError::Backpressure { shard: 3 }).contains("shard 3"));
-        assert!(format!("{}", SubmitError::Invalid("nope".into())).contains("nope"));
-        assert!(format!("{}", SubmitError::ShardDown { shard: 1 }).contains("down"));
-    }
-
-    #[test]
     fn line_loop_serves_parses_and_reports() {
         let cfg = GatewayConfig { shards: 2, seq: 16, ..GatewayConfig::default() };
         let mut gw = Gateway::launch(&cfg).unwrap();
@@ -190,5 +183,18 @@ mod tests {
         let (report, leftover) = gw.shutdown().unwrap();
         assert!(leftover.is_empty());
         assert_eq!(report.merged.requests, 2);
+    }
+
+    #[test]
+    fn inproc_flush_ack_follows_outcomes() {
+        let cfg = GatewayConfig { shards: 1, seq: 16, ..GatewayConfig::default() };
+        let mut t = InProc::spawn(&cfg);
+        t.submit(0, Request { id: 5, task: "task0".into(), tokens: vec![1, 2] }).unwrap();
+        assert_eq!(t.start_flush(), 1);
+        assert!(matches!(t.recv().unwrap(), ShardEvent::Done(_)));
+        assert!(matches!(t.recv().unwrap(), ShardEvent::FlushAck { shard: 0 }));
+        assert_eq!(t.start_report(), 1);
+        assert!(matches!(t.recv().unwrap(), ShardEvent::Report(_)));
+        t.shutdown().unwrap();
     }
 }

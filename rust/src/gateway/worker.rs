@@ -1,0 +1,305 @@
+//! The socket shard worker: `qst shard-worker --listen <addr>`.
+//!
+//! A worker is one gateway shard running as its own process.  It binds a
+//! Unix-domain (`unix:/path`) or TCP (`host:port`) listener, accepts the
+//! gateway's connection, and waits for the first frame — a
+//! [`ShardMsg::Configure`] carrying the fleet's [`ShardSpec`] — before
+//! building its engine/server replica.  One config (the gateway's)
+//! drives every worker, so replicas are bit-identical by construction
+//! and workers take **no** model flags.
+//!
+//! After configuration the worker runs the exact same serving loop as an
+//! in-proc shard thread ([`run_core_loop`]): a reader thread decodes
+//! frames into an mpsc channel (mirroring the in-proc inbox, so the
+//! micro-batch soak behaves identically), the main thread serves and
+//! writes [`ShardEvent`] frames back.  Backpressure is enforced
+//! gateway-side (credit window, see [`crate::proto::transport`]), which
+//! keeps the worker's channel effectively bounded.
+//!
+//! [`spawn_local_fleet`] runs the same worker loop on in-process threads
+//! over real socket pairs — how `tests/gateway.rs` and `bench-gateway`
+//! exercise the full framing + socket path without spawning processes;
+//! `scripts/check.sh` covers the true multi-process flow.
+
+use std::io::Write;
+use std::sync::mpsc::Receiver;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::proto::transport::{parse_addr, SocketTransport, Stream, TransportKind, WireAddr};
+use crate::proto::{frame, ShardEvent, ShardMsg};
+
+use super::shard::{run_core_loop, ShardCore};
+use super::{Gateway, GatewayConfig};
+
+/// Serve one gateway connection to completion (Shutdown frame, clean
+/// peer close, or a fatal protocol error).
+pub fn serve_stream(stream: Box<dyn Stream>) -> Result<()> {
+    let mut read_half = stream.try_clone_stream().context("cloning worker stream")?;
+    let mut write_half = stream;
+    // the first frame must configure this shard
+    let first = frame::read_msg(&mut read_half)
+        .context("reading Configure frame")?
+        .context("gateway closed the connection before Configure")?;
+    let (index, spec) = match first {
+        ShardMsg::Configure { shard, spec } => (shard, spec),
+        other => bail!("expected Configure as the first frame, got {other:?}"),
+    };
+    let core = ShardCore::from_spec(index, &spec)
+        .with_context(|| format!("building shard {index} replica from the gateway's spec"))?;
+    eprintln!(
+        "shard-worker: configured as shard {index} ({} preset, {} backbone, {} task(s), seq {})",
+        spec.preset.name(),
+        spec.backbone.name(),
+        spec.tasks,
+        spec.seq
+    );
+    // reader thread: frames -> channel (the worker's "inbox", mirroring
+    // the in-proc bounded queue; boundedness comes from the gateway's
+    // credit window)
+    let (tx, rx): (std::sync::mpsc::Sender<ShardMsg>, Receiver<ShardMsg>) =
+        std::sync::mpsc::channel();
+    let reader = std::thread::Builder::new()
+        .name(format!("qst-worker-reader-{index}"))
+        .spawn(move || loop {
+            match frame::read_msg(&mut read_half) {
+                Ok(Some(m)) => {
+                    if tx.send(m).is_err() {
+                        break; // serving loop exited first
+                    }
+                }
+                Ok(None) => break, // gateway closed cleanly
+                Err(e) => {
+                    eprintln!("shard-worker: dropping connection on bad frame: {e:#}");
+                    break;
+                }
+            }
+        })
+        .context("spawning worker reader thread")?;
+    let mut emit = |ev: ShardEvent| {
+        // a write failure means the gateway is gone; the reader will see
+        // EOF and the loop will wind down via the closed channel
+        let _ = write_half.write_all(&frame::encode_event(&ev));
+    };
+    run_core_loop(core, &rx, &mut emit);
+    // unblock + join the reader: closing our write half sends FIN only
+    // on some platforms, so shut the socket down both ways explicitly
+    let _ = write_half.shutdown_both();
+    drop(rx);
+    let _ = reader.join();
+    eprintln!("shard-worker: shard {index} done");
+    Ok(())
+}
+
+/// Bind `addr`, accept exactly one gateway connection, and serve it to
+/// completion.  This is the whole life of a `qst shard-worker` process.
+pub fn listen_and_serve(addr: &str) -> Result<()> {
+    match parse_addr(addr) {
+        WireAddr::Unix(path) => listen_unix(&path),
+        WireAddr::Tcp(a) => {
+            let listener = std::net::TcpListener::bind(&a)
+                .with_context(|| format!("binding shard-worker listener on {a}"))?;
+            eprintln!(
+                "shard-worker: listening on {}",
+                listener.local_addr().map(|x| x.to_string()).unwrap_or(a)
+            );
+            let (stream, peer) = listener.accept().context("accepting gateway connection")?;
+            let _ = stream.set_nodelay(true);
+            eprintln!("shard-worker: gateway connected from {peer}");
+            serve_stream(Box::new(stream))
+        }
+    }
+}
+
+#[cfg(unix)]
+fn listen_unix(path: &str) -> Result<()> {
+    let _ = std::fs::remove_file(path); // stale socket from a previous run
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .with_context(|| format!("binding shard-worker listener on unix:{path}"))?;
+    eprintln!("shard-worker: listening on unix:{path}");
+    let accepted = listener.accept().context("accepting gateway connection");
+    let result = accepted.and_then(|(stream, _)| {
+        eprintln!("shard-worker: gateway connected");
+        serve_stream(Box::new(stream))
+    });
+    let _ = std::fs::remove_file(path);
+    result
+}
+
+#[cfg(not(unix))]
+fn listen_unix(_path: &str) -> Result<()> {
+    bail!("unix:<path> addresses need a unix platform; use a <host>:<port> TCP address")
+}
+
+/// One end-pair of connected streams for an in-process socket fleet.
+#[cfg(unix)]
+fn local_pair() -> Result<(Box<dyn Stream>, Box<dyn Stream>)> {
+    let (a, b) = std::os::unix::net::UnixStream::pair().context("creating socketpair")?;
+    Ok((Box::new(a), Box::new(b)))
+}
+
+#[cfg(not(unix))]
+fn local_pair() -> Result<(Box<dyn Stream>, Box<dyn Stream>)> {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+    let addr = listener.local_addr().context("loopback listener address")?;
+    let client = std::net::TcpStream::connect(addr).context("connecting loopback pair")?;
+    let (server, _) = listener.accept().context("accepting loopback pair")?;
+    let _ = client.set_nodelay(true);
+    let _ = server.set_nodelay(true);
+    Ok((Box::new(client), Box::new(server)))
+}
+
+/// Launch a [`Gateway`] on either transport: in-proc shard threads, or
+/// an in-process socket fleet ([`spawn_local_fleet`]).  The one
+/// construction path `bench-gateway` and the parity tests share, so
+/// they cannot drift into exercising different wirings.  Returns the
+/// worker join handles to join after the gateway shuts down (empty for
+/// in-proc).
+pub fn launch_gateway(
+    cfg: &GatewayConfig,
+    kind: TransportKind,
+) -> Result<(Gateway, Vec<JoinHandle<()>>)> {
+    match kind {
+        TransportKind::InProc => Ok((Gateway::launch(cfg)?, Vec::new())),
+        TransportKind::Socket => {
+            let (transport, joins) = spawn_local_fleet(cfg)?;
+            Ok((Gateway::with_transport(cfg, Box::new(transport))?, joins))
+        }
+    }
+}
+
+/// Spawn `cfg.shards` worker *threads*, each running the real socket
+/// worker loop over its own connected stream pair, and return the
+/// configured [`SocketTransport`] plus the worker join handles (join
+/// them after the gateway shuts down).  Everything crosses genuine
+/// socket framing — only the process boundary is elided.
+pub fn spawn_local_fleet(cfg: &GatewayConfig) -> Result<(SocketTransport, Vec<JoinHandle<()>>)> {
+    let mut gw_ends: Vec<Box<dyn Stream>> = Vec::with_capacity(cfg.shards);
+    let mut joins = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let (gw_end, worker_end) = local_pair()?;
+        let join = std::thread::Builder::new()
+            .name(format!("qst-socket-shard-{i}"))
+            .spawn(move || {
+                if let Err(e) = serve_stream(worker_end) {
+                    eprintln!("socket shard {i}: {e:#}");
+                }
+            })
+            .with_context(|| format!("spawning socket shard {i}"))?;
+        gw_ends.push(gw_end);
+        joins.push(join);
+    }
+    let transport = SocketTransport::from_streams(gw_ends, &cfg.shard_spec(), cfg.queue_cap)?;
+    Ok((transport, joins))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::{task_name, task_seed, Gateway};
+    use crate::proto::transport::dial_retry;
+    use crate::serve::{BackboneKind, EnginePreset, ServeConfig, Server};
+
+    fn cfg(shards: usize) -> GatewayConfig {
+        GatewayConfig {
+            shards,
+            queue_cap: 8,
+            seq: 16,
+            seed: 13,
+            tasks: 2,
+            threads_per_shard: 1,
+            preset: EnginePreset::Small,
+            backbone: BackboneKind::F32,
+            serve: ServeConfig {
+                cache_bytes: 4 << 20,
+                registry_bytes: 1 << 20,
+                max_batch: 4,
+                prefix_block: 4,
+            },
+        }
+    }
+
+    #[test]
+    fn local_socket_fleet_round_trips_and_matches_direct_server() {
+        let c = cfg(2);
+        let (transport, joins) = spawn_local_fleet(&c).unwrap();
+        let mut gw = Gateway::with_transport(&c, Box::new(transport)).unwrap();
+        let prompt = vec![2i32, 7, 1];
+        let id = gw.submit("task1", &prompt).unwrap();
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].resp.id, id);
+        // reference server with the same spec
+        let spec = c.shard_spec();
+        let mut engine = spec.preset.build_backbone(spec.seed, spec.seq, spec.backbone);
+        engine.set_threads(1);
+        let mut server = Server::new(engine, spec.serve);
+        for i in 0..spec.tasks {
+            server
+                .registry
+                .register_synthetic(&task_name(i), task_seed(spec.seed, i), 1 << 12)
+                .unwrap();
+        }
+        server.submit("task1", &prompt).unwrap();
+        let want = server.drain().unwrap();
+        assert_eq!(got[0].resp.logits, want[0].logits, "socket shard must be bit-identical");
+        let (report, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(report.merged.requests, 1);
+        assert_eq!(report.shards.len(), 2);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn socket_credit_window_backpressures_deterministically() {
+        // window of 1: with no events collected, the second submit MUST
+        // reject — credit-based backpressure is exact, not racy
+        let mut c = cfg(1);
+        c.queue_cap = 1;
+        let (transport, joins) = spawn_local_fleet(&c).unwrap();
+        let mut gw = Gateway::with_transport(&c, Box::new(transport)).unwrap();
+        gw.submit("task0", &[1]).unwrap();
+        match gw.submit("task0", &[2]) {
+            Err(crate::proto::SubmitError::Backpressure { shard: 0 }) => {}
+            other => panic!("expected deterministic backpressure, got {other:?}"),
+        }
+        assert_eq!(gw.rejected, 1);
+        // collecting outcomes frees credit and the fleet drains fine
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 1);
+        gw.submit("task0", &[2]).unwrap();
+        assert_eq!(gw.flush().unwrap().len(), 1);
+        let _ = gw.shutdown().unwrap();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tcp_listener_and_dial_serve_a_request() {
+        // the real listen/accept/dial path over TCP loopback, worker on a
+        // thread — what `qst shard-worker` does, minus the process fork
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = stream.set_nodelay(true);
+            serve_stream(Box::new(stream)).unwrap();
+        });
+        let c = cfg(1);
+        let stream = dial_retry(&addr, 20, std::time::Duration::from_millis(10)).unwrap();
+        let transport =
+            SocketTransport::from_streams(vec![stream], &c.shard_spec(), c.queue_cap).unwrap();
+        let mut gw = Gateway::with_transport(&c, Box::new(transport)).unwrap();
+        gw.submit("task0", &[5, 6, 7]).unwrap();
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 1);
+        let (report, _) = gw.shutdown().unwrap();
+        assert_eq!(report.merged.requests, 1);
+        worker.join().unwrap();
+    }
+}

@@ -22,10 +22,13 @@
 //! * [`serve`]      — multi-task inference: shared-backbone hidden-state
 //!   cache (whole-prompt + per-block prefix index), side-network registry,
 //!   micro-batching, serving telemetry
+//! * [`proto`]      — the versioned typed wire protocol (binary framing +
+//!   canonical text codec) and the pluggable `Transport` seam: in-process
+//!   shard threads or cross-process shard workers over unix/tcp sockets
 //! * [`gateway`]    — asynchronous sharded serving front-end over [`serve`]:
-//!   bounded-queue transport with backpressure, prefix-locality routing
-//!   across per-shard backbone replicas, fleet-wide stats aggregation,
-//!   `bench-gateway` scaling curves
+//!   bounded-queue transports with backpressure (in-proc + socket via
+//!   [`proto`]), prefix-locality routing across per-shard backbone
+//!   replicas, fleet-wide stats aggregation, `bench-gateway` scaling curves
 //! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
 
 pub mod benchkit;
@@ -37,6 +40,7 @@ pub mod experiments;
 pub mod gateway;
 pub mod kernels;
 pub mod nn;
+pub mod proto;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

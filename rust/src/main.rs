@@ -155,6 +155,7 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "serve" => cmd_serve(&args),
         "gateway" => cmd_gateway(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "bench-gateway" => cmd_bench_gateway(&args),
         "bench-kernels" => cmd_bench_kernels(&args),
@@ -182,6 +183,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
 /// accumulate until `--batch` pending (or EOF), so the micro-batcher and
 /// the hidden-state cache's within-batch dedupe actually engage.
 fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
+    use qst::proto::text::{self, TextLine};
     use std::io::{BufRead, IsTerminal};
     let interactive = std::io::stdin().is_terminal();
     eprintln!(
@@ -199,20 +201,17 @@ fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
         let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        if line == "stats" {
-            println!("{}", server.stats.summary(server.cache.hit_rate()));
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let task = parts.next().unwrap().to_string();
-        let tokens: Vec<i32> = match parts.map(|t| t.parse()).collect::<Result<_, _>>() {
-            Ok(t) => t,
+        // the canonical text codec (shared with `qst gateway`) — one
+        // parser, one set of error messages
+        let (task, tokens) = match text::parse_line(&line) {
+            Ok(TextLine::Empty) => continue,
+            Ok(TextLine::Stats) => {
+                println!("{}", server.stats.summary(server.cache.hit_rate()));
+                continue;
+            }
+            Ok(TextLine::Request { task, tokens }) => (task, tokens),
             Err(e) => {
-                eprintln!("bad request (tokens must be integers): {e}");
+                eprintln!("{e}");
                 continue;
             }
         };
@@ -242,15 +241,7 @@ fn drain_and_print<E: Engine>(server: &mut Server<E>) {
         Err(e) => eprintln!("request failed: {e:#}"),
         Ok(responses) => {
             for r in responses {
-                let (tok, logit) = r.top1();
-                println!(
-                    "{}#{}: next-token {} (logit {:.4}) [{}]",
-                    r.task,
-                    r.id,
-                    tok,
-                    logit,
-                    if r.cache_hit { "cache hit" } else { "backbone" }
-                );
+                println!("{}", qst::proto::text::format_response(&r, None));
             }
         }
     }
@@ -311,9 +302,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `qst gateway`: the asynchronous sharded front-end over the line
 /// protocol (submission decoupled from execution; responses print in
-/// completion order).  Synthetic backend only — artifact serving stays on
+/// completion order).  Shards run as in-process threads by default, or
+/// as `qst shard-worker` processes with `--connect addr,addr,...`
+/// (`unix:<path>` or `<host>:<port>`; the shard count is the address
+/// count, and each worker is configured over the wire from this
+/// gateway's flags).  Synthetic backend only — artifact serving stays on
 /// `qst serve` until split backbone artifacts land.
 fn cmd_gateway(args: &Args) -> Result<()> {
+    let connect: Option<Vec<String>> = args
+        .get("connect")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect());
     let cfg = qst::gateway::GatewayConfig {
         shards: args.usize_or("shards", 2)?.max(1),
         queue_cap: args.usize_or("queue-cap", 64)?.max(1),
@@ -325,23 +323,40 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         tasks: args.usize_or("num-tasks", 2)?.max(1),
         threads_per_shard: args.usize_or("threads", 1)?,
     };
-    let resident = qst::costmodel::memory::gateway_resident_bytes(
-        cfg.preset,
-        cfg.backbone,
-        cfg.shards,
-        cfg.tasks,
-        cfg.serve.cache_bytes,
-    );
+    // Gateway::connect owns the shards-from-addresses derivation, so the
+    // banner reads the fleet shape back from the constructed gateway
+    // rather than re-deriving it
+    let mut gw = match &connect {
+        None => qst::gateway::Gateway::launch(&cfg)?,
+        Some(addrs) => qst::gateway::Gateway::connect(&cfg, addrs)?,
+    };
+    let shards = gw.shard_count();
+    let resident = match &connect {
+        None => qst::costmodel::memory::gateway_resident_bytes(
+            cfg.preset,
+            cfg.backbone,
+            shards,
+            cfg.tasks,
+            cfg.serve.cache_bytes,
+        ),
+        Some(_) => qst::costmodel::memory::gateway_resident_bytes_multiproc(
+            cfg.preset,
+            cfg.backbone,
+            shards,
+            cfg.tasks,
+            cfg.serve.cache_bytes,
+        ),
+    };
     eprintln!(
-        "gateway: {} shard(s), {} preset backbone as {} ({} modeled fleet residency), {} tasks, queue cap {}; one request per line: '<task> <tok> ...'",
-        cfg.shards,
+        "gateway: {} {} shard(s), {} preset backbone as {} ({} modeled fleet residency), {} tasks, queue cap {}; one request per line: '<task> <tok> ...'",
+        shards,
+        if connect.is_some() { "socket" } else { "in-proc" },
         cfg.preset.name(),
         cfg.backbone.name(),
         qst::util::human_bytes(resident as f64),
         cfg.tasks,
         cfg.queue_cap
     );
-    let mut gw = qst::gateway::Gateway::launch(&cfg)?;
     let stdin = std::io::stdin();
     let mut out = std::io::stdout();
     qst::gateway::line_loop(&mut gw, stdin.lock(), &mut out)?;
@@ -350,6 +365,18 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     // shard engines fanned kernel workers out of the process-wide pool;
     // join them on the way out instead of leaking parked threads
+    qst::kernels::shutdown_pool();
+    Ok(())
+}
+
+/// `qst shard-worker --listen <addr>`: one gateway shard as its own
+/// process.  Binds `unix:<path>` or `<host>:<port>`, accepts one gateway
+/// connection, receives its `Configure` frame (so it takes no model
+/// flags and cannot drift from the fleet spec), serves until the gateway
+/// shuts the fleet down, then exits.
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let listen = args.require("listen")?;
+    qst::gateway::worker::listen_and_serve(listen)?;
     qst::kernels::shutdown_pool();
     Ok(())
 }
@@ -364,8 +391,14 @@ fn cmd_bench_gateway(args: &Args) -> Result<()> {
                 .with_context(|| format!("--shards expects comma-separated integers, got '{s}'"))
         })
         .collect::<Result<_>>()?;
+    let transports: Vec<qst::proto::TransportKind> = args
+        .str_or("transports", "inproc,socket")
+        .split(',')
+        .map(|s| qst::proto::TransportKind::parse(s.trim()))
+        .collect::<Result<_>>()?;
     let opts = qst::gateway::bench::BenchGatewayOpts {
         shard_counts,
+        transports,
         tasks: args.usize_or("tasks", 3)?.max(1),
         requests: args.usize_or("requests", 256)?,
         families: args.usize_or("families", 8)?,

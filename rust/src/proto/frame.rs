@@ -1,0 +1,519 @@
+//! Length-prefixed binary framing for the QST wire protocol.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic  "QSTW"
+//!   4       2     protocol version (u16 LE) — this build speaks VERSION
+//!   6       1     message tag (request tags 1–5, event tags 16–20)
+//!   7       4     payload length (u32 LE), capped at MAX_PAYLOAD
+//!   11      n     payload (message-specific, see [`super::wire`])
+//! ```
+//!
+//! Decoding **never panics**: bad magic, an unknown version, an unknown
+//! tag, a truncated buffer/stream, an over-cap length, or a structurally
+//! invalid payload all come back as typed [`DecodeError`]s (pinned by the
+//! `tests/proto.rs` property suite).  The version field is checked before
+//! the tag, so a frame from a future protocol revision is rejected as
+//! [`DecodeError::BadVersion`] rather than misparsed.
+//!
+//! The streaming readers ([`read_msg`] / [`read_event`]) distinguish a
+//! *clean* EOF (the peer closed between frames → `Ok(None)`) from a
+//! connection dropped mid-frame (→ [`DecodeError::Truncated`]).
+
+use std::io::Read;
+
+use anyhow::{Context, Result};
+
+use crate::serve::{Response, StatsSnapshot};
+
+use super::wire::{Dec, DecodeError, Enc};
+use super::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec};
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"QSTW";
+/// Protocol version this build encodes and accepts.
+pub const VERSION: u16 = 1;
+/// Bytes of frame header before the payload.
+pub const HEADER_LEN: usize = 11;
+/// Hard cap on a single frame's payload (the largest honest frame — a
+/// shard report with a full 64Ki latency reservoir — is ~0.5 MiB).
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+// Gateway → shard message tags.
+const TAG_CONFIGURE: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_FLUSH: u8 = 3;
+const TAG_REPORT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+// Shard → gateway event tags.
+const TAG_DONE: u8 = 16;
+const TAG_DROPPED: u8 = 17;
+const TAG_REJECTED: u8 = 18;
+const TAG_FLUSH_ACK: u8 = 19;
+const TAG_REPORT_REPLY: u8 = 20;
+
+/// Start a frame: header with the length field zeroed, payload appended
+/// by the caller, length patched by [`seal_frame`].  One buffer, no
+/// payload copy — encode runs per Submit/Done on the socket hot path.
+fn new_frame(tag: u8) -> Enc {
+    let mut e = Enc::new();
+    e.raw(&MAGIC);
+    e.u16(VERSION);
+    e.u8(tag);
+    e.u32(0); // payload length, patched in seal_frame
+    e
+}
+
+fn seal_frame(e: Enc) -> Vec<u8> {
+    let mut buf = e.into_bytes();
+    let len = buf.len() - HEADER_LEN;
+    debug_assert!(len <= MAX_PAYLOAD, "frame payload over cap");
+    buf[7..11].copy_from_slice(&(len as u32).to_le_bytes());
+    buf
+}
+
+/// Validate a frame header; returns `(tag, payload_len)`.
+pub fn parse_header(h: &[u8]) -> Result<(u8, usize), DecodeError> {
+    if h.len() < HEADER_LEN {
+        return Err(DecodeError::Truncated { what: "frame header" });
+    }
+    if h[0..4] != MAGIC {
+        return Err(DecodeError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(DecodeError::BadVersion { got: version, want: VERSION });
+    }
+    let len = u32::from_le_bytes([h[7], h[8], h[9], h[10]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(DecodeError::Oversize { len, max: MAX_PAYLOAD });
+    }
+    Ok((h[6], len))
+}
+
+/// Split one complete frame buffer into `(tag, payload)`.
+pub fn split_frame(bytes: &[u8]) -> Result<(u8, &[u8]), DecodeError> {
+    let (tag, len) = parse_header(bytes)?;
+    let body = &bytes[HEADER_LEN..];
+    if body.len() < len {
+        return Err(DecodeError::Truncated { what: "frame payload" });
+    }
+    if body.len() > len {
+        return Err(DecodeError::Malformed(format!(
+            "{} trailing byte(s) after the frame payload",
+            body.len() - len
+        )));
+    }
+    Ok((tag, body))
+}
+
+fn enc_request(e: &mut Enc, r: &Request) {
+    e.u64(r.id);
+    e.str_(&r.task);
+    e.vec_i32(&r.tokens);
+}
+
+fn dec_request(d: &mut Dec) -> Result<Request, DecodeError> {
+    Ok(Request {
+        id: d.u64("request id")?,
+        task: d.str_("request task")?,
+        tokens: d.vec_i32("request tokens")?,
+    })
+}
+
+fn enc_response(e: &mut Enc, r: &Response) {
+    e.u64(r.id);
+    e.str_(&r.task);
+    e.vec_f32(&r.logits);
+    e.bool(r.cache_hit);
+}
+
+fn dec_response(d: &mut Dec) -> Result<Response, DecodeError> {
+    Ok(Response {
+        id: d.u64("response id")?,
+        task: d.str_("response task")?,
+        logits: d.vec_f32("response logits")?,
+        cache_hit: d.bool("response cache_hit")?,
+    })
+}
+
+fn enc_spec(e: &mut Enc, s: &ShardSpec) {
+    e.str_(s.preset.name());
+    e.str_(s.backbone.name());
+    e.u64(s.seed);
+    e.u64(s.seq as u64);
+    e.u64(s.tasks as u64);
+    e.u64(s.threads as u64);
+    e.u64(s.serve.cache_bytes as u64);
+    e.u64(s.serve.registry_bytes as u64);
+    e.u64(s.serve.max_batch as u64);
+    e.u64(s.serve.prefix_block as u64);
+}
+
+fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
+    let preset_name = d.str_("spec preset")?;
+    let preset = crate::serve::EnginePreset::parse(&preset_name)
+        .map_err(|_| DecodeError::Malformed(format!("unknown preset '{preset_name}'")))?;
+    let backbone_name = d.str_("spec backbone")?;
+    let backbone = crate::serve::BackboneKind::parse(&backbone_name)
+        .map_err(|_| DecodeError::Malformed(format!("unknown backbone '{backbone_name}'")))?;
+    let spec = ShardSpec {
+        preset,
+        backbone,
+        seed: d.u64("spec seed")?,
+        seq: d.usize_("spec seq")?,
+        tasks: d.usize_("spec tasks")?,
+        threads: d.usize_("spec threads")?,
+        serve: crate::serve::ServeConfig {
+            cache_bytes: d.usize_("spec cache_bytes")?,
+            registry_bytes: d.usize_("spec registry_bytes")?,
+            max_batch: d.usize_("spec max_batch")?,
+            prefix_block: d.usize_("spec prefix_block")?,
+        },
+    };
+    // a worker builds an engine straight from this, so an untrusted but
+    // well-formed frame must not panic it or drive unbounded allocation
+    spec.validate().map_err(DecodeError::Malformed)?;
+    Ok(spec)
+}
+
+fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
+    e.u64(s.requests);
+    e.u64(s.batches);
+    e.u64(s.tokens);
+    e.u64(s.dropped);
+    e.u64(s.prefix_resumes);
+    e.f64(s.busy_secs);
+    e.vec_f64(&s.lat);
+}
+
+fn dec_snapshot(d: &mut Dec) -> Result<StatsSnapshot, DecodeError> {
+    Ok(StatsSnapshot {
+        requests: d.u64("stats requests")?,
+        batches: d.u64("stats batches")?,
+        tokens: d.u64("stats tokens")?,
+        dropped: d.u64("stats dropped")?,
+        prefix_resumes: d.u64("stats prefix_resumes")?,
+        busy_secs: d.f64("stats busy_secs")?,
+        lat: d.vec_f64("stats latency reservoir")?,
+    })
+}
+
+fn enc_report(e: &mut Enc, r: &ShardReport) {
+    e.u64(r.shard as u64);
+    enc_snapshot(e, &r.stats);
+    e.u64(r.cache_hits);
+    e.u64(r.cache_misses);
+    e.u64(r.prefix_hits);
+    e.u64(r.cache_evictions);
+    e.u64(r.cache_entries as u64);
+    e.u64(r.cache_bytes as u64);
+    e.u64(r.backbone_rows);
+    e.u64(r.resumed_rows);
+    e.u64(r.resumed_positions);
+    e.u64(r.backbone_resident_bytes as u64);
+    e.u64(r.registry_bytes as u64);
+}
+
+fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
+    Ok(ShardReport {
+        shard: d.usize_("report shard")?,
+        stats: dec_snapshot(d)?,
+        cache_hits: d.u64("report cache_hits")?,
+        cache_misses: d.u64("report cache_misses")?,
+        prefix_hits: d.u64("report prefix_hits")?,
+        cache_evictions: d.u64("report cache_evictions")?,
+        cache_entries: d.usize_("report cache_entries")?,
+        cache_bytes: d.usize_("report cache_bytes")?,
+        backbone_rows: d.u64("report backbone_rows")?,
+        resumed_rows: d.u64("report resumed_rows")?,
+        resumed_positions: d.u64("report resumed_positions")?,
+        backbone_resident_bytes: d.usize_("report backbone_resident_bytes")?,
+        registry_bytes: d.usize_("report registry_bytes")?,
+    })
+}
+
+fn msg_tag(m: &ShardMsg) -> u8 {
+    match m {
+        ShardMsg::Configure { .. } => TAG_CONFIGURE,
+        ShardMsg::Submit(_) => TAG_SUBMIT,
+        ShardMsg::Flush => TAG_FLUSH,
+        ShardMsg::Report => TAG_REPORT,
+        ShardMsg::Shutdown => TAG_SHUTDOWN,
+    }
+}
+
+/// Encode one gateway→shard message as a complete frame.
+pub fn encode_msg(m: &ShardMsg) -> Vec<u8> {
+    let mut e = new_frame(msg_tag(m));
+    match m {
+        ShardMsg::Configure { shard, spec } => {
+            e.u64(*shard as u64);
+            enc_spec(&mut e, spec);
+        }
+        ShardMsg::Submit(r) => enc_request(&mut e, r),
+        ShardMsg::Flush | ShardMsg::Report | ShardMsg::Shutdown => {}
+    }
+    seal_frame(e)
+}
+
+/// Decode a gateway→shard message payload for a known-good header tag.
+pub fn decode_msg_payload(tag: u8, payload: &[u8]) -> Result<ShardMsg, DecodeError> {
+    let mut d = Dec::new(payload);
+    let m = match tag {
+        TAG_CONFIGURE => ShardMsg::Configure { shard: d.usize_("configure shard")?, spec: dec_spec(&mut d)? },
+        TAG_SUBMIT => ShardMsg::Submit(dec_request(&mut d)?),
+        TAG_FLUSH => ShardMsg::Flush,
+        TAG_REPORT => ShardMsg::Report,
+        TAG_SHUTDOWN => ShardMsg::Shutdown,
+        other => return Err(DecodeError::BadTag(other)),
+    };
+    d.finish("message payload")?;
+    Ok(m)
+}
+
+/// Decode one complete gateway→shard frame buffer.
+pub fn decode_msg(bytes: &[u8]) -> Result<ShardMsg, DecodeError> {
+    let (tag, payload) = split_frame(bytes)?;
+    decode_msg_payload(tag, payload)
+}
+
+fn event_tag(ev: &ShardEvent) -> u8 {
+    match ev {
+        ShardEvent::Done(_) => TAG_DONE,
+        ShardEvent::Dropped { .. } => TAG_DROPPED,
+        ShardEvent::Rejected { .. } => TAG_REJECTED,
+        ShardEvent::FlushAck { .. } => TAG_FLUSH_ACK,
+        ShardEvent::Report(_) => TAG_REPORT_REPLY,
+    }
+}
+
+/// Encode one shard→gateway event as a complete frame.
+pub fn encode_event(ev: &ShardEvent) -> Vec<u8> {
+    let mut e = new_frame(event_tag(ev));
+    match ev {
+        ShardEvent::Done(gr) => {
+            e.u64(gr.shard as u64);
+            enc_response(&mut e, &gr.resp);
+        }
+        ShardEvent::Dropped { shard, n } => {
+            e.u64(*shard as u64);
+            e.u64(*n as u64);
+        }
+        ShardEvent::Rejected { shard, id, err } => {
+            e.u64(*shard as u64);
+            e.u64(*id);
+            e.str_(err);
+        }
+        ShardEvent::FlushAck { shard } => e.u64(*shard as u64),
+        ShardEvent::Report(r) => enc_report(&mut e, r),
+    }
+    seal_frame(e)
+}
+
+/// Decode a shard→gateway event payload for a known-good header tag.
+pub fn decode_event_payload(tag: u8, payload: &[u8]) -> Result<ShardEvent, DecodeError> {
+    let mut d = Dec::new(payload);
+    let ev = match tag {
+        TAG_DONE => ShardEvent::Done(GatewayResponse {
+            shard: d.usize_("done shard")?,
+            resp: dec_response(&mut d)?,
+        }),
+        TAG_DROPPED => ShardEvent::Dropped { shard: d.usize_("dropped shard")?, n: d.usize_("dropped n")? },
+        TAG_REJECTED => ShardEvent::Rejected {
+            shard: d.usize_("rejected shard")?,
+            id: d.u64("rejected id")?,
+            err: d.str_("rejected err")?,
+        },
+        TAG_FLUSH_ACK => ShardEvent::FlushAck { shard: d.usize_("flush-ack shard")? },
+        TAG_REPORT_REPLY => ShardEvent::Report(dec_report(&mut d)?),
+        other => return Err(DecodeError::BadTag(other)),
+    };
+    d.finish("event payload")?;
+    Ok(ev)
+}
+
+/// Decode one complete shard→gateway frame buffer.
+pub fn decode_event(bytes: &[u8]) -> Result<ShardEvent, DecodeError> {
+    let (tag, payload) = split_frame(bytes)?;
+    decode_event_payload(tag, payload)
+}
+
+/// Read until `buf` is full or EOF; returns the bytes actually read.
+fn read_chunk(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Read one raw frame from a stream.  `Ok(None)` on clean EOF (the peer
+/// closed *between* frames); mid-frame EOF is a typed truncation error.
+fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; HEADER_LEN];
+    let got = read_chunk(r, &mut header).context("reading frame header")?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < HEADER_LEN {
+        return Err(DecodeError::Truncated { what: "frame header" }.into());
+    }
+    let (tag, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    let got = read_chunk(r, &mut payload).context("reading frame payload")?;
+    if got < len {
+        return Err(DecodeError::Truncated { what: "frame payload" }.into());
+    }
+    Ok(Some((tag, payload)))
+}
+
+/// Read one gateway→shard message from a stream (`Ok(None)` = clean EOF).
+pub fn read_msg(r: &mut impl Read) -> Result<Option<ShardMsg>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some((tag, payload)) => Ok(Some(decode_msg_payload(tag, &payload)?)),
+    }
+}
+
+/// Read one shard→gateway event from a stream (`Ok(None)` = clean EOF).
+pub fn read_event(r: &mut impl Read) -> Result<Option<ShardEvent>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some((tag, payload)) => Ok(Some(decode_event_payload(tag, &payload)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
+
+    fn spec() -> ShardSpec {
+        ShardSpec {
+            preset: EnginePreset::Small,
+            backbone: BackboneKind::W4,
+            seed: 11,
+            seq: 24,
+            tasks: 3,
+            threads: 2,
+            serve: ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 18, max_batch: 4, prefix_block: 8 },
+        }
+    }
+
+    #[test]
+    fn all_msg_variants_round_trip() {
+        let msgs = vec![
+            ShardMsg::Configure { shard: 3, spec: spec() },
+            ShardMsg::Submit(Request { id: 9, task: "task0".into(), tokens: vec![-1, 0, 7] }),
+            ShardMsg::Flush,
+            ShardMsg::Report,
+            ShardMsg::Shutdown,
+        ];
+        for m in msgs {
+            let bytes = encode_msg(&m);
+            assert_eq!(decode_msg(&bytes).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn all_event_variants_round_trip() {
+        let events = vec![
+            ShardEvent::Done(GatewayResponse {
+                shard: 1,
+                resp: Response {
+                    id: 4,
+                    task: "t".into(),
+                    logits: vec![0.5, -2.0, f32::from_bits(0x7FC0_0001)],
+                    cache_hit: true,
+                },
+            }),
+            ShardEvent::Dropped { shard: 0, n: 0 },
+            ShardEvent::Rejected { shard: 2, id: 17, err: "unknown task 'x'".into() },
+            ShardEvent::FlushAck { shard: 5 },
+            ShardEvent::Report(ShardReport::default()),
+        ];
+        for ev in events {
+            let bytes = encode_event(&ev);
+            let back = decode_event(&bytes).unwrap();
+            // NaN logits defeat PartialEq, so compare bit patterns for Done
+            match (&ev, &back) {
+                (ShardEvent::Done(a), ShardEvent::Done(b)) => {
+                    assert_eq!(a.shard, b.shard);
+                    assert_eq!(a.resp.id, b.resp.id);
+                    assert_eq!(a.resp.task, b.resp.task);
+                    assert_eq!(a.resp.cache_hit, b.resp.cache_hit);
+                    let ab: Vec<u32> = a.resp.logits.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.resp.logits.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb, "logits must round-trip bit-exactly");
+                }
+                _ => assert_eq!(ev, back),
+            }
+        }
+    }
+
+    #[test]
+    fn header_rejections_are_typed() {
+        let good = encode_msg(&ShardMsg::Flush);
+        // magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_msg(&bad).unwrap_err(), DecodeError::BadMagic(_)));
+        // version
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert_eq!(
+            decode_msg(&bad).unwrap_err(),
+            DecodeError::BadVersion { got: 99, want: VERSION }
+        );
+        // tag (an event tag is wrong-direction for decode_msg)
+        let done = encode_event(&ShardEvent::FlushAck { shard: 0 });
+        assert!(matches!(decode_msg(&done).unwrap_err(), DecodeError::BadTag(_)));
+        // oversize length field, validated before any allocation
+        let mut bad = good.clone();
+        bad[7..11].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert!(matches!(decode_msg(&bad).unwrap_err(), DecodeError::Oversize { .. }));
+        // trailing junk
+        let mut bad = good;
+        bad.push(0);
+        assert!(matches!(decode_msg(&bad).unwrap_err(), DecodeError::Malformed(_)));
+    }
+
+    #[test]
+    fn streaming_reader_distinguishes_clean_eof_from_truncation() {
+        let mut bytes = encode_msg(&ShardMsg::Submit(Request {
+            id: 1,
+            task: "task0".into(),
+            tokens: vec![1, 2, 3],
+        }));
+        // two frames back to back, then EOF
+        let second = encode_msg(&ShardMsg::Shutdown);
+        bytes.extend_from_slice(&second);
+        let mut cur = std::io::Cursor::new(bytes.clone());
+        assert!(matches!(read_msg(&mut cur).unwrap(), Some(ShardMsg::Submit(_))));
+        assert!(matches!(read_msg(&mut cur).unwrap(), Some(ShardMsg::Shutdown)));
+        assert!(read_msg(&mut cur).unwrap().is_none(), "clean EOF is Ok(None)");
+        // mid-frame EOF is an error, not a silent None
+        let mut cur = std::io::Cursor::new(bytes[..bytes.len() - 3].to_vec());
+        assert!(matches!(read_msg(&mut cur).unwrap(), Some(ShardMsg::Submit(_))));
+        assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn bad_spec_names_are_malformed_not_panics() {
+        let mut m = encode_msg(&ShardMsg::Configure { shard: 0, spec: spec() });
+        // corrupt the preset string ("small" starts right after the
+        // header + shard u64 + str length u32)
+        let off = HEADER_LEN + 8 + 4;
+        assert_eq!(&m[off..off + 5], b"small");
+        m[off] = b'x';
+        assert!(matches!(decode_msg(&m).unwrap_err(), DecodeError::Malformed(_)));
+    }
+}

@@ -1,0 +1,217 @@
+//! `proto` — the versioned, typed wire protocol of the QST serving
+//! gateway, and the pluggable [`Transport`] seam that carries it.
+//!
+//! # Why a wire protocol
+//!
+//! QST's frozen 4-bit backbone makes shard *replicas* nearly free
+//! (~42 KB packed W4 for the small preset), so the serving road map runs
+//! through fan-out: first shard threads (PR 4), now shard **processes**.
+//! The only thing PR 4's gateway lacked was a real message surface — its
+//! `ShardMsg`/`ShardEvent` were in-memory enums welded to `std::sync::mpsc`
+//! (flush acks and stats replies traveled on ad-hoc reply channels), and
+//! the user-facing request surface was a whitespace line protocol
+//! duplicated across two binaries.  This module makes the API first-class:
+//!
+//! * **Typed messages** — [`Request`], [`GatewayResponse`], [`ShardMsg`],
+//!   [`ShardEvent`], [`ShardSpec`], [`ShardReport`] (which carries
+//!   [`crate::serve::StatsSnapshot`]) are *the* gateway message surface,
+//!   used identically by shard threads and shard processes.
+//! * **Versioned binary framing** ([`frame`]) — `magic | version | tag |
+//!   length | payload`, little-endian, floats as IEEE bit patterns so
+//!   logits survive the wire bit-exactly.  Decoding returns typed
+//!   [`DecodeError`]s — bad magic, unknown version/tag, truncation,
+//!   over-cap lengths, malformed payloads — and never panics.
+//! * **Canonical text codec** ([`text`]) — the single parser/printer for
+//!   the stdin line protocol `qst serve` and `qst gateway` share.
+//! * **Transport trait** ([`transport`]) — submit / recv / flush /
+//!   report / shutdown over either bounded in-process inboxes
+//!   (`gateway::transport::InProc`) or framed unix/TCP sockets
+//!   ([`SocketTransport`]), with the same backpressure contract:
+//!   bounded queues **reject** ([`SubmitError::Backpressure`]), they
+//!   never deadlock.
+//!
+//! The parity gates extend across the seam: `tests/gateway.rs` and
+//! `qst bench-gateway` pin socket-transport responses bit-identical to
+//! the in-proc gateway and to an unsharded `Server` reference.
+
+pub mod frame;
+pub mod text;
+pub mod transport;
+pub mod wire;
+
+use std::fmt;
+
+use crate::serve::{BackboneKind, EnginePreset, Response, ServeConfig, StatsSnapshot};
+
+pub use transport::{SocketTransport, Stream, Transport, TransportKind, WireAddr};
+pub use wire::DecodeError;
+
+/// One request as it travels to a shard: the gateway-assigned id survives
+/// the trip (shards rewrite their server-local ids back to this one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<i32>,
+}
+
+/// A completed request, tagged with the shard that served it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GatewayResponse {
+    pub shard: usize,
+    pub resp: Response,
+}
+
+/// Everything a worker needs to build its bit-identical `Server` replica.
+/// The gateway sends this as the first frame on every connection, so one
+/// config (the gateway's) drives the whole fleet — workers take no model
+/// flags and cannot drift out of parity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardSpec {
+    pub preset: EnginePreset,
+    pub backbone: BackboneKind,
+    /// engine seed — identical across shards, so replicas are bit-identical
+    pub seed: u64,
+    pub seq: usize,
+    /// synthetic tasks registered on every shard (`task0`…)
+    pub tasks: usize,
+    /// kernel worker threads for the shard's engine
+    pub threads: usize,
+    /// per-shard server tuning (cache budget, prefix block, batch cap)
+    pub serve: ServeConfig,
+}
+
+/// Wire-decode sanity bounds for [`ShardSpec`] fields.  A shard-worker
+/// builds an engine straight from a decoded spec, so a structurally
+/// valid frame from an untrusted peer must not be able to panic it
+/// (`seq == 0` trips an engine assert) or drive unbounded allocation
+/// (`seq`/`cache_bytes` scale the resident working set directly).
+pub const MAX_SPEC_SEQ: usize = 1 << 16;
+/// Upper bound on `tasks` a Configure frame may request.
+pub const MAX_SPEC_TASKS: usize = 1 << 12;
+/// Upper bound on `threads` a Configure frame may request.
+pub const MAX_SPEC_THREADS: usize = 1 << 10;
+/// Upper bound on `serve.max_batch` / `serve.prefix_block`.
+pub const MAX_SPEC_BATCH: usize = 1 << 16;
+/// Upper bound on the byte budgets (cache, registry): 1 TiB.
+pub const MAX_SPEC_BYTES: usize = 1 << 40;
+
+impl ShardSpec {
+    /// Range-check a spec (enforced on wire decode; see the
+    /// `MAX_SPEC_*` bounds).  Returns the offending field on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        let check = |name: &str, v: usize, lo: usize, hi: usize| {
+            if v < lo || v > hi {
+                Err(format!("spec {name} {v} out of range {lo}..={hi}"))
+            } else {
+                Ok(())
+            }
+        };
+        check("seq", self.seq, 1, MAX_SPEC_SEQ)?;
+        check("tasks", self.tasks, 0, MAX_SPEC_TASKS)?;
+        check("threads", self.threads, 0, MAX_SPEC_THREADS)?;
+        check("max_batch", self.serve.max_batch, 0, MAX_SPEC_BATCH)?;
+        check("prefix_block", self.serve.prefix_block, 0, MAX_SPEC_BATCH)?;
+        check("cache_bytes", self.serve.cache_bytes, 0, MAX_SPEC_BYTES)?;
+        check("registry_bytes", self.serve.registry_bytes, 0, MAX_SPEC_BYTES)?;
+        Ok(())
+    }
+}
+
+/// Control + data messages into one shard (thread inbox or socket frame).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardMsg {
+    /// first frame on a socket connection: build the server replica
+    /// (in-proc shards are constructed directly and never see this)
+    Configure { shard: usize, spec: ShardSpec },
+    Submit(Request),
+    /// drain everything pending, emit the results, then emit `FlushAck`
+    Flush,
+    /// snapshot serving stats + cache/engine counters into a `Report` event
+    Report,
+    /// drain, emit, and exit the shard
+    Shutdown,
+}
+
+/// Events out of a shard.  One stream carries everything, in per-shard
+/// FIFO order — which is what makes flush a transport-independent
+/// barrier: a shard's `FlushAck` provably follows every outcome of work
+/// submitted before the flush.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardEvent {
+    Done(GatewayResponse),
+    /// requests dropped inside a failing micro-batch (count only; the
+    /// server logs the cause)
+    Dropped { shard: usize, n: usize },
+    /// a submit the shard's server refused — belt-and-braces: the gateway
+    /// validates task and length before routing, so this signals a bug or
+    /// a mid-flight deregistration rather than routine traffic
+    Rejected { shard: usize, id: u64, err: String },
+    /// everything submitted before the matching `Flush` has been resolved
+    FlushAck { shard: usize },
+    Report(ShardReport),
+}
+
+/// Counters snapshot one shard ships to the aggregator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub stats: StatsSnapshot,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub prefix_hits: u64,
+    pub cache_evictions: u64,
+    pub cache_entries: usize,
+    pub cache_bytes: usize,
+    pub backbone_rows: u64,
+    pub resumed_rows: u64,
+    pub resumed_positions: u64,
+    pub backbone_resident_bytes: usize,
+    pub registry_bytes: usize,
+}
+
+/// Why a gateway submit was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the routed shard's inbox/credit window is at capacity — collect
+    /// responses and retry; bounded queues reject, they never deadlock
+    Backpressure { shard: usize },
+    /// malformed request (unknown task or over-length prompt)
+    Invalid(String),
+    /// the routed shard's thread or connection is gone
+    ShardDown { shard: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Backpressure { shard } => {
+                write!(f, "shard {shard} inbox full (backpressure — retry after collecting)")
+            }
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+            SubmitError::ShardDown { shard } => write!(f, "shard {shard} is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_error_displays() {
+        assert!(format!("{}", SubmitError::Backpressure { shard: 3 }).contains("shard 3"));
+        assert!(format!("{}", SubmitError::Invalid("nope".into())).contains("nope"));
+        assert!(format!("{}", SubmitError::ShardDown { shard: 1 }).contains("down"));
+    }
+
+    #[test]
+    fn submit_error_composes_with_anyhow_context() {
+        use anyhow::Context;
+        let r: Result<(), SubmitError> = Err(SubmitError::ShardDown { shard: 2 });
+        let e = r.context("gateway refused a bench request").unwrap_err();
+        assert_eq!(format!("{e:#}"), "gateway refused a bench request: shard 2 is down");
+    }
+}

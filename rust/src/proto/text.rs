@@ -1,0 +1,132 @@
+//! The canonical text codec for the stdin line protocol.
+//!
+//! `qst serve` and `qst gateway` speak the same human-typable protocol —
+//! one request per line (`<task> <tok> <tok> ...`), `stats` for a
+//! telemetry summary.  Before this module each binary carried its own
+//! hand-rolled parser, so `stats` handling and error wording could
+//! drift; both loops now parse through [`parse_line`] and print through
+//! [`format_response`], and the output stays byte-identical to the
+//! pre-`proto` sessions (pinned by the tests below).
+
+use std::fmt;
+
+use crate::serve::Response;
+
+/// One parsed input line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TextLine {
+    /// blank (or whitespace-only) line — skipped
+    Empty,
+    /// the `stats` command
+    Stats,
+    /// a request: task name + prompt tokens
+    Request { task: String, tokens: Vec<i32> },
+}
+
+/// A line that names a task but whose tokens do not parse as integers.
+/// Displays the exact message the pre-`proto` loops printed, so piped
+/// sessions see byte-identical stderr.
+#[derive(Debug)]
+pub struct TextError(std::num::ParseIntError);
+
+impl fmt::Display for TextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad request (tokens must be integers): {}", self.0)
+    }
+}
+
+impl std::error::Error for TextError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.0)
+    }
+}
+
+/// Parse one line of the serve/gateway stdin protocol.
+pub fn parse_line(line: &str) -> Result<TextLine, TextError> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(TextLine::Empty);
+    }
+    if line == "stats" {
+        return Ok(TextLine::Stats);
+    }
+    let mut parts = line.split_whitespace();
+    let task = parts.next().expect("a trimmed non-empty line has a first token").to_string();
+    let tokens: Vec<i32> =
+        parts.map(|t| t.parse()).collect::<Result<_, _>>().map_err(TextError)?;
+    Ok(TextLine::Request { task, tokens })
+}
+
+/// Format one completed response for the line protocol.  `shard: None`
+/// prints the `qst serve` form (`[cache hit]` / `[backbone]`); `Some(s)`
+/// prints the gateway form (`[shard s]` / `[shard s, cache hit]`).
+pub fn format_response(r: &Response, shard: Option<usize>) -> String {
+    let (tok, logit) = r.top1();
+    match shard {
+        None => format!(
+            "{}#{}: next-token {} (logit {:.4}) [{}]",
+            r.task,
+            r.id,
+            tok,
+            logit,
+            if r.cache_hit { "cache hit" } else { "backbone" }
+        ),
+        Some(s) => format!(
+            "{}#{}: next-token {} (logit {:.4}) [shard {}{}]",
+            r.task,
+            r.id,
+            tok,
+            logit,
+            s,
+            if r.cache_hit { ", cache hit" } else { "" }
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_three_line_shapes() {
+        assert_eq!(parse_line("").unwrap(), TextLine::Empty);
+        assert_eq!(parse_line("   \t ").unwrap(), TextLine::Empty);
+        assert_eq!(parse_line(" stats ").unwrap(), TextLine::Stats);
+        assert_eq!(
+            parse_line("task0 5 -2 7").unwrap(),
+            TextLine::Request { task: "task0".into(), tokens: vec![5, -2, 7] }
+        );
+        // a bare task name is a zero-token request, as before
+        assert_eq!(
+            parse_line("task1").unwrap(),
+            TextLine::Request { task: "task1".into(), tokens: vec![] }
+        );
+    }
+
+    #[test]
+    fn bad_tokens_keep_the_exact_legacy_message() {
+        let err = parse_line("task0 1 two 3").unwrap_err();
+        let legacy = {
+            // what both pre-proto parsers printed
+            let e = "two".parse::<i32>().unwrap_err();
+            format!("bad request (tokens must be integers): {e}")
+        };
+        assert_eq!(format!("{err}"), legacy);
+        // composes as a std error (source chain intact)
+        let dyn_err: &dyn std::error::Error = &err;
+        assert!(dyn_err.source().is_some());
+    }
+
+    #[test]
+    fn response_lines_match_both_legacy_forms() {
+        let r = Response { id: 3, task: "task0".into(), logits: vec![0.1, 1.5, -2.0], cache_hit: false };
+        assert_eq!(format_response(&r, None), "task0#3: next-token 1 (logit 1.5000) [backbone]");
+        assert_eq!(format_response(&r, Some(2)), "task0#3: next-token 1 (logit 1.5000) [shard 2]");
+        let hit = Response { cache_hit: true, ..r };
+        assert_eq!(format_response(&hit, None), "task0#3: next-token 1 (logit 1.5000) [cache hit]");
+        assert_eq!(
+            format_response(&hit, Some(0)),
+            "task0#3: next-token 1 (logit 1.5000) [shard 0, cache hit]"
+        );
+    }
+}

@@ -1,0 +1,467 @@
+//! The pluggable gateway transport: one trait, two wire-ups.
+//!
+//! [`Transport`] is the seam between the gateway's routing/aggregation
+//! logic and however its shards actually run.  The contract:
+//!
+//! * **submit** is non-blocking.  A shard that cannot accept more work
+//!   surfaces [`SubmitError::Backpressure`] — the caller's signal to
+//!   collect responses and retry.  Bounded queues reject; they never
+//!   deadlock.
+//! * **one event stream.** Everything a shard says — `Done` / `Dropped` /
+//!   `Rejected` outcomes, `FlushAck`s, `Report`s — comes back through
+//!   `recv`/`try_recv` in per-shard FIFO order.  Because a shard answers
+//!   a `Flush` only after draining everything submitted before it, all
+//!   pre-flush outcomes are guaranteed to precede that shard's ack in
+//!   the stream; the gateway's barrier logic is transport-independent.
+//! * **start_flush / start_report** broadcast the control message and
+//!   return how many live shards were reached (the number of
+//!   `FlushAck`/`Report` events to await).
+//!
+//! Implementations:
+//!
+//! * [`crate::gateway::transport::InProc`] — shard threads behind
+//!   bounded `mpsc` inboxes (the PR 4 design, behavior-preserving).
+//! * [`SocketTransport`] — shards as separate processes behind
+//!   Unix-domain or TCP streams carrying [`super::frame`]d messages.
+//!   Backpressure is credit-based: at most `window` requests may be
+//!   outstanding (submitted, not yet resolved) per shard, so a slow
+//!   worker back-pressures the gateway instead of ballooning kernel
+//!   socket buffers.
+
+use std::io::Write;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame;
+use super::{Request, ShardEvent, ShardMsg, ShardSpec, SubmitError};
+
+/// How long `recv` waits for the next shard event before concluding the
+/// fleet is wedged (a live shard answers control messages in
+/// milliseconds; a minute of silence means a worker died mid-request).
+pub const EVENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// While blocked in `recv`, how often the transports re-check shard
+/// liveness (thread/connection death) so a dead shard fails the caller
+/// in tens of milliseconds instead of the full [`EVENT_TIMEOUT`].
+pub const LIVENESS_POLL: Duration = Duration::from_millis(50);
+
+/// Which transport a gateway (or bench pass) runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// shard threads in this process (bounded mpsc inboxes)
+    InProc,
+    /// shard processes behind framed unix/tcp sockets
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "inproc" => Ok(TransportKind::InProc),
+            "socket" => Ok(TransportKind::Socket),
+            other => bail!("unknown transport '{other}' (expected 'inproc' or 'socket')"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+/// The transport seam (see module docs for the contract).
+pub trait Transport: Send {
+    /// Number of shards this transport fans out to.
+    fn shards(&self) -> usize;
+
+    /// Non-blocking submit into shard `shard`'s inbox/window.
+    fn submit(&mut self, shard: usize, req: Request) -> Result<(), SubmitError>;
+
+    /// Next shard event if one is already available (`None` when the
+    /// stream is momentarily empty *or* every shard is gone — liveness
+    /// errors surface on the blocking [`Transport::recv`]).
+    fn try_recv(&mut self) -> Option<ShardEvent>;
+
+    /// Next shard event, blocking up to [`EVENT_TIMEOUT`]; errors when
+    /// every shard is disconnected or the fleet goes silent.
+    fn recv(&mut self) -> Result<ShardEvent>;
+
+    /// Ask every live shard to drain and ack; returns how many were
+    /// reached (== the number of `FlushAck` events to await).
+    fn start_flush(&mut self) -> usize;
+
+    /// Ask every live shard for a stats report; returns how many were
+    /// reached (== the number of `Report` events to await).
+    fn start_report(&mut self) -> usize;
+
+    /// Stop every shard and release transport resources (idempotent).
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// The blocking-receive loop both transports share: wait on `events` up
+/// to [`EVENT_TIMEOUT`], re-checking `dead_shard` every
+/// [`LIVENESS_POLL`] — a dead shard (panicked thread, closed worker
+/// connection) whose queue has drained can never produce the awaited
+/// event, so the caller is failed in tens of milliseconds with the
+/// reason `dead_shard` returns instead of sitting out the full timeout.
+/// Keeping this in one place is what keeps the two transports' failure
+/// behavior identical.
+pub fn recv_event(
+    events: &Receiver<ShardEvent>,
+    timeout_hint: &str,
+    mut dead_shard: impl FnMut() -> Option<String>,
+) -> Result<ShardEvent> {
+    let deadline = std::time::Instant::now() + EVENT_TIMEOUT;
+    loop {
+        match events.recv_timeout(LIVENESS_POLL) {
+            Ok(ev) => return Ok(ev),
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(why) = dead_shard() {
+                    bail!("{why}");
+                }
+                if std::time::Instant::now() >= deadline {
+                    bail!("no shard events for {}s — {timeout_hint}", EVENT_TIMEOUT.as_secs());
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("all shards disconnected"),
+        }
+    }
+}
+
+/// A connected byte stream the socket transport can frame messages over:
+/// cloneable (one half per direction) and shutdown-able (so blocked
+/// readers on both sides unblock at teardown).
+pub trait Stream: std::io::Read + Write + Send {
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn Stream>>;
+    fn shutdown_both(&self) -> std::io::Result<()>;
+}
+
+impl Stream for std::net::TcpStream {
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn Stream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn shutdown_both(&self) -> std::io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+#[cfg(unix)]
+impl Stream for std::os::unix::net::UnixStream {
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn Stream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn shutdown_both(&self) -> std::io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+/// A parsed wire address: `unix:<path>` or a TCP `<host>:<port>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireAddr {
+    Unix(String),
+    Tcp(String),
+}
+
+pub fn parse_addr(addr: &str) -> WireAddr {
+    match addr.strip_prefix("unix:") {
+        Some(path) => WireAddr::Unix(path.to_string()),
+        None => WireAddr::Tcp(addr.to_string()),
+    }
+}
+
+#[cfg(unix)]
+fn dial_unix(path: &str) -> std::io::Result<Box<dyn Stream>> {
+    Ok(Box::new(std::os::unix::net::UnixStream::connect(path)?))
+}
+
+#[cfg(not(unix))]
+fn dial_unix(_path: &str) -> std::io::Result<Box<dyn Stream>> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "unix:<path> addresses need a unix platform",
+    ))
+}
+
+/// Connect one stream to a worker address.
+pub fn dial(addr: &str) -> std::io::Result<Box<dyn Stream>> {
+    match parse_addr(addr) {
+        WireAddr::Unix(path) => dial_unix(&path),
+        WireAddr::Tcp(a) => {
+            let s = std::net::TcpStream::connect(a)?;
+            let _ = s.set_nodelay(true);
+            Ok(Box::new(s))
+        }
+    }
+}
+
+/// [`dial`] with retries — `qst gateway --connect` is routinely started
+/// moments before (or after) its `qst shard-worker`s finish binding.
+pub fn dial_retry(addr: &str, attempts: usize, delay: Duration) -> std::io::Result<Box<dyn Stream>> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for attempt in 0..attempts {
+        match dial(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                if attempt + 1 < attempts {
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+    Err(last.expect("at least one attempt"))
+}
+
+/// [`Transport`] over framed byte streams — one connected worker per
+/// shard, credit-window backpressure, a reader thread per connection
+/// draining events into one shared channel (so the sockets are always
+/// being read and a busy gateway can never wedge against a busy worker).
+pub struct SocketTransport {
+    /// write halves, `None` once a connection is known dead
+    writers: Vec<Option<Box<dyn Stream>>>,
+    /// requests submitted to each shard and not yet resolved
+    outstanding: Vec<usize>,
+    /// per-shard cap on `outstanding` before `Backpressure`
+    window: usize,
+    events: Receiver<ShardEvent>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl SocketTransport {
+    /// Take ownership of pre-connected streams (shard i = `streams[i]`),
+    /// send each worker its `Configure` frame, and start the reader
+    /// threads.  `window` is the per-shard backpressure credit.
+    pub fn from_streams(
+        streams: Vec<Box<dyn Stream>>,
+        spec: &ShardSpec,
+        window: usize,
+    ) -> Result<SocketTransport> {
+        // fail here, with the typed range error, rather than shipping a
+        // Configure frame every worker will reject — otherwise a config
+        // accepted in-proc surfaces over sockets only as opaque
+        // "shard N is down" noise while the real error lands on the
+        // workers' stderr
+        if let Err(why) = spec.validate() {
+            bail!("shard spec is not expressible on the wire: {why}");
+        }
+        let (tx, rx): (Sender<ShardEvent>, Receiver<ShardEvent>) = std::sync::mpsc::channel();
+        let n = streams.len();
+        let mut writers = Vec::with_capacity(n);
+        let mut readers = Vec::with_capacity(n);
+        for (i, stream) in streams.into_iter().enumerate() {
+            let mut read_half =
+                stream.try_clone_stream().with_context(|| format!("cloning shard {i} stream"))?;
+            let mut write_half = stream;
+            write_half
+                .write_all(&frame::encode_msg(&ShardMsg::Configure { shard: i, spec: *spec }))
+                .with_context(|| format!("sending Configure to shard worker {i}"))?;
+            let tx = tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("qst-gateway-conn-{i}"))
+                .spawn(move || loop {
+                    match frame::read_event(&mut read_half) {
+                        Ok(Some(ev)) => {
+                            if tx.send(ev).is_err() {
+                                break; // transport dropped
+                            }
+                        }
+                        Ok(None) => break, // worker closed cleanly
+                        Err(e) => {
+                            eprintln!("gateway: shard {i} connection error: {e:#}");
+                            break;
+                        }
+                    }
+                })
+                .with_context(|| format!("spawning reader for shard {i}"))?;
+            writers.push(Some(write_half));
+            readers.push(join);
+        }
+        Ok(SocketTransport {
+            writers,
+            outstanding: vec![0; n],
+            window: window.max(1),
+            events: rx,
+            readers,
+        })
+    }
+
+    /// Dial a worker fleet (shard i = `addrs[i]`) and configure it.
+    /// Each dial retries for a few seconds so gateway and workers can be
+    /// started in any order.
+    pub fn connect(addrs: &[String], spec: &ShardSpec, window: usize) -> Result<SocketTransport> {
+        let mut streams = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            streams.push(
+                dial_retry(a, 100, Duration::from_millis(50))
+                    .with_context(|| format!("connecting to shard worker at {a}"))?,
+            );
+        }
+        Self::from_streams(streams, spec, window)
+    }
+
+    /// Credit accounting: every resolved request frees one slot.
+    fn note(&mut self, ev: &ShardEvent) {
+        match ev {
+            ShardEvent::Done(gr) => {
+                if let Some(o) = self.outstanding.get_mut(gr.shard) {
+                    *o = o.saturating_sub(1);
+                }
+            }
+            ShardEvent::Dropped { shard, n } => {
+                if let Some(o) = self.outstanding.get_mut(*shard) {
+                    *o = o.saturating_sub(*n);
+                }
+            }
+            ShardEvent::Rejected { shard, .. } => {
+                if let Some(o) = self.outstanding.get_mut(*shard) {
+                    *o = o.saturating_sub(1);
+                }
+            }
+            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) => {}
+        }
+    }
+
+    /// Broadcast a control message; returns how many live shards took it.
+    fn broadcast(&mut self, msg: &ShardMsg) -> usize {
+        let bytes = frame::encode_msg(msg);
+        let mut reached = 0;
+        for w in self.writers.iter_mut() {
+            if let Some(s) = w.as_mut() {
+                if s.write_all(&bytes).is_ok() {
+                    reached += 1;
+                } else {
+                    *w = None;
+                }
+            }
+        }
+        reached
+    }
+}
+
+impl Transport for SocketTransport {
+    fn shards(&self) -> usize {
+        self.writers.len()
+    }
+
+    fn submit(&mut self, shard: usize, req: Request) -> Result<(), SubmitError> {
+        if self.writers.get(shard).map(|w| w.is_none()).unwrap_or(true) {
+            return Err(SubmitError::ShardDown { shard });
+        }
+        if self.outstanding[shard] >= self.window {
+            return Err(SubmitError::Backpressure { shard });
+        }
+        let bytes = frame::encode_msg(&ShardMsg::Submit(req));
+        match self.writers[shard].as_mut().expect("checked live above").write_all(&bytes) {
+            Ok(()) => {
+                self.outstanding[shard] += 1;
+                Ok(())
+            }
+            Err(_) => {
+                self.writers[shard] = None;
+                Err(SubmitError::ShardDown { shard })
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<ShardEvent> {
+        match self.events.try_recv() {
+            Ok(ev) => {
+                self.note(&ev);
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    fn recv(&mut self) -> Result<ShardEvent> {
+        // a dead worker's reader thread exits on EOF/bad frame; with the
+        // event queue drained nothing more can arrive from it.  Only
+        // *newly* discovered deaths fail the call (marking the writer
+        // dead records the discovery), so one lost worker doesn't poison
+        // every later barrier the healthy shards could still answer.
+        let readers = &self.readers;
+        let writers = &mut self.writers;
+        let ev = recv_event(&self.events, "a worker likely died mid-request", move || {
+            readers
+                .iter()
+                .enumerate()
+                .find(|(i, r)| r.is_finished() && writers[*i].is_some())
+                .map(|(i, _)| {
+                    writers[i] = None;
+                    format!("shard {i}'s worker connection closed while events were awaited")
+                })
+        })?;
+        self.note(&ev);
+        Ok(ev)
+    }
+
+    fn start_flush(&mut self) -> usize {
+        self.broadcast(&ShardMsg::Flush)
+    }
+
+    fn start_report(&mut self) -> usize {
+        self.broadcast(&ShardMsg::Report)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.broadcast(&ShardMsg::Shutdown);
+        for w in self.writers.iter_mut() {
+            if let Some(s) = w.as_ref() {
+                // unblocks the worker's reader (FIN) and our own
+                let _ = s.shutdown_both();
+            }
+            *w = None;
+        }
+        for j in self.readers.drain(..) {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // best-effort: close connections so detached readers and workers
+        // unblock even when shutdown() was never called (error paths)
+        for w in self.writers.iter_mut() {
+            if let Some(s) = w.as_ref() {
+                let _ = s.shutdown_both();
+            }
+            *w = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_names() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        assert_eq!(TransportKind::parse("socket").unwrap(), TransportKind::Socket);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::Socket.name(), "socket");
+    }
+
+    #[test]
+    fn addr_parsing_prefixes() {
+        assert_eq!(parse_addr("unix:/tmp/s.sock"), WireAddr::Unix("/tmp/s.sock".into()));
+        assert_eq!(parse_addr("127.0.0.1:7000"), WireAddr::Tcp("127.0.0.1:7000".into()));
+    }
+
+    #[test]
+    fn dial_retry_reports_the_last_error() {
+        // nothing listens here; retries must exhaust and surface an error
+        let err = dial_retry("127.0.0.1:1", 2, Duration::from_millis(1));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! Byte-level codec primitives for the wire protocol: a little-endian
+//! writer/reader pair and the typed [`DecodeError`] every decode path
+//! returns instead of panicking.
+//!
+//! Layout conventions (all little-endian):
+//! * integers — fixed width (`u8`/`u16`/`u32`/`u64`); `usize` fields
+//!   travel as `u64`
+//! * floats — IEEE-754 bit patterns (`to_bits`/`from_bits`), so a value
+//!   round-trips **bit-exactly**, NaN payloads included — the serving
+//!   parity gates compare logits bit-for-bit across transports
+//! * `bool` — one byte, `0` or `1`; anything else is [`DecodeError::Malformed`]
+//! * strings — `u32` byte length + UTF-8 bytes
+//! * vectors — `u32` element count + packed elements
+//!
+//! [`Dec`] is a bounds-checked cursor over a borrowed payload: every read
+//! that would run past the end returns [`DecodeError::Truncated`], and
+//! vector lengths are validated against the bytes actually remaining
+//! *before* any allocation, so a corrupt length field cannot balloon
+//! memory.
+
+use std::fmt;
+
+/// Why a frame or payload failed to decode.  Every variant is a typed,
+/// non-panicking rejection; implements [`std::error::Error`] so call
+/// sites compose with `anyhow::Context` instead of formatting by hand.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// the first four bytes were not the protocol magic
+    BadMagic([u8; 4]),
+    /// the frame's protocol version is not the one this build speaks
+    BadVersion { got: u16, want: u16 },
+    /// unknown (or wrong-direction) message tag
+    BadTag(u8),
+    /// the buffer/stream ended before `what` was fully read
+    Truncated { what: &'static str },
+    /// the frame header declares a payload larger than the protocol cap
+    Oversize { len: usize, max: usize },
+    /// structurally invalid payload (bad UTF-8, bad bool, trailing bytes, …)
+    Malformed(String),
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::BadMagic(got) => {
+                write!(f, "bad frame magic {got:?} (expected {:?})", super::frame::MAGIC)
+            }
+            DecodeError::BadVersion { got, want } => {
+                write!(f, "unsupported protocol version {got} (this build speaks {want})")
+            }
+            DecodeError::BadTag(tag) => write!(f, "unknown message tag {tag}"),
+            DecodeError::Truncated { what } => write!(f, "truncated frame while reading {what}"),
+            DecodeError::Oversize { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max}-byte cap")
+            }
+            DecodeError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Little-endian byte writer backing [`super::frame`]'s encoders.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn str_(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn vec_f64(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian cursor over a borrowed payload.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Truncated { what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, DecodeError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u16(&mut self, what: &'static str) -> Result<u16, DecodeError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, DecodeError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, DecodeError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// A `usize` field (encoded as `u64`); rejects values this platform
+    /// cannot represent rather than wrapping.
+    pub fn usize_(&mut self, what: &'static str) -> Result<usize, DecodeError> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| DecodeError::Malformed(format!("{what} {v} overflows usize")))
+    }
+
+    pub fn i32(&mut self, what: &'static str) -> Result<i32, DecodeError> {
+        let b = self.take(4, what)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f32(&mut self, what: &'static str) -> Result<f32, DecodeError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    pub fn bool(&mut self, what: &'static str) -> Result<bool, DecodeError> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(DecodeError::Malformed(format!("{what}: bool byte must be 0 or 1, got {other}"))),
+        }
+    }
+
+    pub fn str_(&mut self, what: &'static str) -> Result<String, DecodeError> {
+        let len = self.u32(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| DecodeError::Malformed(format!("{what}: invalid UTF-8")))
+    }
+
+    /// Element-count guard shared by the vector readers: the declared
+    /// count must fit in the bytes actually remaining *before* any
+    /// allocation happens.
+    fn vec_len(&mut self, elem_bytes: usize, what: &'static str) -> Result<usize, DecodeError> {
+        let len = self.u32(what)? as usize;
+        if len > self.remaining() / elem_bytes {
+            return Err(DecodeError::Truncated { what });
+        }
+        Ok(len)
+    }
+
+    pub fn vec_i32(&mut self, what: &'static str) -> Result<Vec<i32>, DecodeError> {
+        let len = self.vec_len(4, what)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.i32(what)?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_f32(&mut self, what: &'static str) -> Result<Vec<f32>, DecodeError> {
+        let len = self.vec_len(4, what)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.f32(what)?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_f64(&mut self, what: &'static str) -> Result<Vec<f64>, DecodeError> {
+        let len = self.vec_len(8, what)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.f64(what)?);
+        }
+        Ok(v)
+    }
+
+    /// Decoding is done; any unconsumed bytes mean the payload does not
+    /// match the schema this build expects.
+    pub fn finish(self, what: &'static str) -> Result<(), DecodeError> {
+        if self.remaining() != 0 {
+            return Err(DecodeError::Malformed(format!(
+                "{what}: {} trailing byte(s) after the last field",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip_bit_exact() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u16(65535);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX);
+        e.i32(-42);
+        e.f32(f32::from_bits(0x7FC0_1234)); // NaN with payload
+        e.f64(-0.0);
+        e.bool(true);
+        e.str_("héllo");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8("a").unwrap(), 7);
+        assert_eq!(d.u16("b").unwrap(), 65535);
+        assert_eq!(d.u32("c").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64("d").unwrap(), u64::MAX);
+        assert_eq!(d.i32("e").unwrap(), -42);
+        assert_eq!(d.f32("f").unwrap().to_bits(), 0x7FC0_1234);
+        assert_eq!(d.f64("g").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(d.bool("h").unwrap());
+        assert_eq!(d.str_("i").unwrap(), "héllo");
+        d.finish("tail").unwrap();
+    }
+
+    #[test]
+    fn truncation_is_typed_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(99);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..5]);
+        assert_eq!(d.u64("value").unwrap_err(), DecodeError::Truncated { what: "value" });
+    }
+
+    #[test]
+    fn vec_length_is_validated_before_allocation() {
+        // a corrupt 4-billion-element count must not allocate
+        let mut e = Enc::new();
+        e.u32(u32::MAX);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(matches!(d.vec_f64("lat").unwrap_err(), DecodeError::Truncated { .. }));
+    }
+
+    #[test]
+    fn bad_bool_and_utf8_are_malformed() {
+        let mut d = Dec::new(&[2]);
+        assert!(matches!(d.bool("flag").unwrap_err(), DecodeError::Malformed(_)));
+        let mut e = Enc::new();
+        e.u32(1);
+        let mut bytes = e.into_bytes();
+        bytes.push(0xFF); // invalid UTF-8
+        let mut d = Dec::new(&bytes);
+        assert!(matches!(d.str_("task").unwrap_err(), DecodeError::Malformed(_)));
+    }
+
+    #[test]
+    fn trailing_bytes_fail_finish() {
+        let d = Dec::new(&[1, 2, 3]);
+        assert!(matches!(d.finish("payload").unwrap_err(), DecodeError::Malformed(_)));
+    }
+
+    #[test]
+    fn decode_error_is_a_std_error_with_messages() {
+        let errs: Vec<DecodeError> = vec![
+            DecodeError::BadMagic(*b"NOPE"),
+            DecodeError::BadVersion { got: 9, want: 1 },
+            DecodeError::BadTag(200),
+            DecodeError::Truncated { what: "frame header" },
+            DecodeError::Oversize { len: 1 << 30, max: 1 << 26 },
+            DecodeError::Malformed("x".into()),
+        ];
+        for e in errs {
+            let dyn_err: &dyn std::error::Error = &e;
+            assert!(!dyn_err.to_string().is_empty());
+        }
+        // and it composes with the vendored anyhow's context chaining
+        use anyhow::Context;
+        let r: Result<(), DecodeError> = Err(DecodeError::BadTag(3));
+        let e = r.context("decoding shard event").unwrap_err();
+        assert_eq!(format!("{e:#}"), "decoding shard event: unknown message tag 3");
+    }
+}

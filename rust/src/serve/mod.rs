@@ -84,7 +84,7 @@ impl Hidden {
 }
 
 /// Server tuning knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
     /// hidden-state cache budget; 0 disables the cache
     pub cache_bytes: usize,
@@ -108,8 +108,10 @@ impl Default for ServeConfig {
     }
 }
 
-/// A completed request.
-#[derive(Clone, Debug)]
+/// A completed request.  `PartialEq` compares logits exactly — the wire
+/// protocol ([`crate::proto`]) round-trips them bit-for-bit, and the
+/// gateway parity gates rely on exact equality across transports.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub task: String,

@@ -179,7 +179,7 @@ impl ServeStats {
 /// into fleet-wide throughput and percentiles.  Merging reservoirs with
 /// different decimation strides weighs shards slightly unevenly — fine for
 /// telemetry, and exact when strides match (they do under balanced load).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub requests: u64,
     pub batches: u64,

@@ -5,14 +5,20 @@
 //! 1. **Sharding is wall-clock only** — 1, 2, and 4 shards (f32 and W4
 //!    backbones) return bit-identical logits for an identical request
 //!    stream, and match a plain unsharded `Server`.
-//! 2. **Prefix resumes are invisible** — a prefix-cached gateway answers
+//! 2. **The transport is representation only** — the socket transport
+//!    (real shard workers speaking the framed wire protocol over socket
+//!    pairs) returns bit-identical logits to the in-proc gateway for
+//!    every fleet size and backbone.
+//! 3. **Prefix resumes are invisible** — a prefix-cached gateway answers
 //!    exactly like a prefix-disabled one while actually resuming.
-//! 3. **Bounded queues reject rather than deadlock** — a saturated inbox
-//!    surfaces `SubmitError::Backpressure` and the fleet still drains.
+//! 4. **Bounded queues reject rather than deadlock** — a saturated inbox
+//!    (in-proc) or exhausted credit window (socket) surfaces
+//!    `SubmitError::Backpressure` and the fleet still drains.
 
 use std::collections::HashMap;
 
-use qst::gateway::{task_name, task_seed, Gateway, GatewayConfig, SubmitError};
+use qst::gateway::{task_name, task_seed, worker, Gateway, GatewayConfig, SubmitError};
+use qst::proto::TransportKind;
 use qst::serve::{BackboneKind, EnginePreset, ServeConfig, Server};
 
 const SEQ: usize = 24;
@@ -55,9 +61,19 @@ fn request_stream() -> Vec<(String, Vec<i32>)> {
     reqs
 }
 
+fn launch(cfg: &GatewayConfig, transport: TransportKind) -> (Gateway, Vec<std::thread::JoinHandle<()>>) {
+    // the same construction path bench-gateway uses, so the parity suite
+    // exercises exactly the wiring the benchmark measures
+    worker::launch_gateway(cfg, transport).unwrap()
+}
+
 /// Run the stream through a gateway; returns id -> logits.
-fn run_stream(cfg: &GatewayConfig, reqs: &[(String, Vec<i32>)]) -> HashMap<u64, Vec<f32>> {
-    let mut gw = Gateway::launch(cfg).unwrap();
+fn run_stream(
+    cfg: &GatewayConfig,
+    transport: TransportKind,
+    reqs: &[(String, Vec<i32>)],
+) -> HashMap<u64, Vec<f32>> {
+    let (mut gw, joins) = launch(cfg, transport);
     for (task, tokens) in reqs {
         loop {
             match gw.submit(task, tokens) {
@@ -77,6 +93,9 @@ fn run_stream(cfg: &GatewayConfig, reqs: &[(String, Vec<i32>)]) -> HashMap<u64, 
     let (report, leftover) = gw.shutdown().unwrap();
     assert!(leftover.is_empty());
     assert_eq!(report.merged.requests as usize, reqs.len());
+    for j in joins {
+        j.join().unwrap();
+    }
     got
 }
 
@@ -103,20 +122,29 @@ fn reference(cfg: &GatewayConfig, reqs: &[(String, Vec<i32>)]) -> Vec<Vec<f32>> 
 }
 
 #[test]
-fn sharded_logits_are_bit_identical_across_fleet_sizes_and_backbones() {
+fn sharded_logits_are_bit_identical_across_fleet_sizes_backbones_and_transports() {
     let reqs = request_stream();
     for backbone in [BackboneKind::F32, BackboneKind::W4] {
         let want = reference(&gateway_cfg(1, backbone, 4), &reqs);
-        for shards in [1usize, 2, 4] {
-            let got = run_stream(&gateway_cfg(shards, backbone, 4), &reqs);
-            assert_eq!(got.len(), reqs.len(), "{shards} shards ({})", backbone.name());
-            for (r, want_logits) in want.iter().enumerate() {
+        for transport in [TransportKind::InProc, TransportKind::Socket] {
+            for shards in [1usize, 2, 4] {
+                let got = run_stream(&gateway_cfg(shards, backbone, 4), transport, &reqs);
                 assert_eq!(
-                    &got[&(r as u64)],
-                    want_logits,
-                    "request {r} diverged at {shards} shards ({})",
-                    backbone.name()
+                    got.len(),
+                    reqs.len(),
+                    "{shards} shards ({}, {})",
+                    backbone.name(),
+                    transport.name()
                 );
+                for (r, want_logits) in want.iter().enumerate() {
+                    assert_eq!(
+                        &got[&(r as u64)],
+                        want_logits,
+                        "request {r} diverged at {shards} shards ({}, {})",
+                        backbone.name(),
+                        transport.name()
+                    );
+                }
             }
         }
     }
@@ -127,22 +155,32 @@ fn prefix_cached_gateway_matches_prefix_disabled_and_actually_resumes() {
     let reqs = request_stream();
     let with_prefix = gateway_cfg(2, BackboneKind::F32, 4);
     let without = gateway_cfg(2, BackboneKind::F32, 0);
-    assert_eq!(run_stream(&with_prefix, &reqs), run_stream(&without, &reqs));
-    // prove the resume path ran (serial submits so family heads are cached
-    // before their extensions arrive)
-    let mut gw = Gateway::launch(&with_prefix).unwrap();
-    let family: Vec<i32> = (1..=8).collect();
-    gw.submit("task0", &family).unwrap();
-    gw.flush().unwrap();
-    let mut ext = family.clone();
-    ext.extend([99, 98]);
-    gw.submit("task0", &ext).unwrap();
-    gw.flush().unwrap();
-    let (report, _) = gw.shutdown().unwrap();
-    assert_eq!(report.resumed_rows, 1, "the extension must resume, not recompute");
-    assert!(report.prefix_hits >= 1);
-    assert!(report.prefix_hit_rate() > 0.0);
-    assert_eq!(report.backbone_rows, 1);
+    for transport in [TransportKind::InProc, TransportKind::Socket] {
+        assert_eq!(
+            run_stream(&with_prefix, transport, &reqs),
+            run_stream(&without, transport, &reqs),
+            "{}",
+            transport.name()
+        );
+        // prove the resume path ran (serial submits so family heads are
+        // cached before their extensions arrive)
+        let (mut gw, joins) = launch(&with_prefix, transport);
+        let family: Vec<i32> = (1..=8).collect();
+        gw.submit("task0", &family).unwrap();
+        gw.flush().unwrap();
+        let mut ext = family.clone();
+        ext.extend([99, 98]);
+        gw.submit("task0", &ext).unwrap();
+        gw.flush().unwrap();
+        let (report, _) = gw.shutdown().unwrap();
+        assert_eq!(report.resumed_rows, 1, "the extension must resume, not recompute");
+        assert!(report.prefix_hits >= 1);
+        assert!(report.prefix_hit_rate() > 0.0);
+        assert_eq!(report.backbone_rows, 1);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
 }
 
 #[test]
@@ -175,10 +213,49 @@ fn saturated_inbox_backpressures_and_recovers() {
 }
 
 #[test]
+fn saturated_credit_window_backpressures_and_recovers_over_sockets() {
+    // the socket analogue of the inbox test: a 2-credit window saturates
+    // deterministically when nothing has been collected
+    let mut cfg = gateway_cfg(1, BackboneKind::F32, 4);
+    cfg.queue_cap = 2;
+    cfg.serve.max_batch = 1;
+    let (t, joins) = worker::spawn_local_fleet(&cfg).unwrap();
+    let mut gw = Gateway::with_transport(&cfg, Box::new(t)).unwrap();
+    gw.submit("task0", &[1, 1]).unwrap();
+    gw.submit("task0", &[2, 2]).unwrap();
+    let mut rejected = 0usize;
+    let mut accepted = 2usize;
+    let mut collected = 0usize;
+    for i in 0..200 {
+        match gw.submit("task0", &[i, 3]) {
+            Ok(_) => accepted += 1,
+            Err(SubmitError::Backpressure { shard: 0 }) => {
+                rejected += 1;
+                // collecting completions frees credit again
+                collected += gw.try_collect().len();
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a 2-credit window under a burst must reject");
+    assert_eq!(gw.rejected as usize, rejected);
+    // every accepted request is served exactly once, across the
+    // mid-burst collections and the final flush — no loss, no deadlock
+    let responses = gw.flush().unwrap();
+    assert_eq!(collected + responses.len(), accepted);
+    assert_eq!(gw.in_flight(), 0);
+    let (report, _) = gw.shutdown().unwrap();
+    assert_eq!(report.merged.requests as usize, accepted);
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
 fn w4_fleet_residency_is_a_fraction_of_f32() {
     use qst::costmodel::memory::gateway_resident_bytes;
     let reqs = request_stream();
-    let _ = run_stream(&gateway_cfg(2, BackboneKind::W4, 4), &reqs);
+    let _ = run_stream(&gateway_cfg(2, BackboneKind::W4, 4), TransportKind::InProc, &reqs);
     // the modeled per-fleet residency the gateway reports mirrors the
     // serve-side claim: W4 replicas cost ~7.6x less backbone than f32
     let w4 = gateway_resident_bytes(EnginePreset::Small, BackboneKind::W4, 4, 2, 0);

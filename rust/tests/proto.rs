@@ -1,0 +1,333 @@
+//! Property tests for the wire protocol framing (`qst::proto`).
+//!
+//! The two load-bearing properties:
+//!
+//! 1. **Round trip** — encode→decode is the identity for arbitrary
+//!    messages and events: max-length prompts, empty token/logit
+//!    vectors, zero-count drop events, unicode error strings, every
+//!    `ShardMsg`/`ShardEvent` variant, and floats compared by bit
+//!    pattern (NaN payloads included).
+//! 2. **No panics, typed errors** — truncating a frame at *any* byte
+//!    boundary, corrupting the magic/version/tag, declaring an over-cap
+//!    length, or appending trailing junk yields a typed
+//!    [`DecodeError`], never a panic and never a bogus `Ok`.
+
+use qst::proto::frame::{self, HEADER_LEN, MAX_PAYLOAD, VERSION};
+use qst::proto::wire::DecodeError;
+use qst::proto::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec};
+use qst::serve::{BackboneKind, EnginePreset, Response, ServeConfig, StatsSnapshot};
+use qst::util::prop;
+use qst::util::rng::Rng;
+
+fn arb_string(rng: &mut Rng, max: usize) -> String {
+    let choices = ["task0", "mnli", "sst2-ünïcode", "", "a b\tc", "日本語タスク", "x"];
+    let mut s = choices[rng.below(choices.len())].to_string();
+    while s.len() < max && rng.bool(0.3) {
+        s.push(char::from_u32(0x61 + rng.below(26) as u32).unwrap());
+    }
+    s
+}
+
+fn arb_tokens(rng: &mut Rng, max_len: usize) -> Vec<i32> {
+    // empty, singleton, and max-length prompts all get real probability
+    let len = match rng.below(4) {
+        0 => 0,
+        1 => 1,
+        2 => rng.below(max_len.max(1)),
+        _ => max_len,
+    };
+    (0..len).map(|_| rng.next_u64() as i32).collect()
+}
+
+fn arb_logits(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let len = if rng.bool(0.2) { 0 } else { rng.below(max_len.max(1)) };
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => -0.0,
+            _ => (rng.f32() - 0.5) * 1e6,
+        })
+        .collect()
+}
+
+fn arb_spec(rng: &mut Rng) -> ShardSpec {
+    // stays inside the MAX_SPEC_* wire bounds; out-of-range specs are
+    // rejected by decode (covered by out_of_range_specs_decode_to_malformed)
+    ShardSpec {
+        preset: if rng.bool(0.5) { EnginePreset::Small } else { EnginePreset::Large },
+        backbone: if rng.bool(0.5) { BackboneKind::F32 } else { BackboneKind::W4 },
+        seed: rng.next_u64(),
+        seq: 1 + rng.below(4096),
+        tasks: rng.below(64),
+        threads: rng.below(16),
+        serve: ServeConfig {
+            cache_bytes: rng.below(1 << 30),
+            registry_bytes: rng.below(1 << 30),
+            max_batch: rng.below(64),
+            prefix_block: rng.below(128),
+        },
+    }
+}
+
+fn arb_request(rng: &mut Rng) -> Request {
+    Request { id: rng.next_u64(), task: arb_string(rng, 32), tokens: arb_tokens(rng, 1024) }
+}
+
+fn arb_msg(rng: &mut Rng) -> ShardMsg {
+    match rng.below(5) {
+        0 => ShardMsg::Configure { shard: rng.below(1024), spec: arb_spec(rng) },
+        1 => ShardMsg::Submit(arb_request(rng)),
+        2 => ShardMsg::Flush,
+        3 => ShardMsg::Report,
+        _ => ShardMsg::Shutdown,
+    }
+}
+
+fn arb_snapshot(rng: &mut Rng) -> StatsSnapshot {
+    let lat_len = if rng.bool(0.3) { 0 } else { rng.below(256) };
+    StatsSnapshot {
+        requests: rng.next_u64(),
+        batches: rng.next_u64(),
+        tokens: rng.next_u64(),
+        dropped: rng.next_u64(),
+        prefix_resumes: rng.next_u64(),
+        busy_secs: rng.f64() * 1e4,
+        lat: (0..lat_len).map(|_| rng.f64()).collect(),
+    }
+}
+
+fn arb_report(rng: &mut Rng) -> ShardReport {
+    ShardReport {
+        shard: rng.below(1024),
+        stats: arb_snapshot(rng),
+        cache_hits: rng.next_u64(),
+        cache_misses: rng.next_u64(),
+        prefix_hits: rng.next_u64(),
+        cache_evictions: rng.next_u64(),
+        cache_entries: rng.below(1 << 20),
+        cache_bytes: rng.below(1 << 30),
+        backbone_rows: rng.next_u64(),
+        resumed_rows: rng.next_u64(),
+        resumed_positions: rng.next_u64(),
+        backbone_resident_bytes: rng.below(1 << 30),
+        registry_bytes: rng.below(1 << 30),
+    }
+}
+
+fn arb_event(rng: &mut Rng) -> ShardEvent {
+    match rng.below(5) {
+        0 => ShardEvent::Done(GatewayResponse {
+            shard: rng.below(1024),
+            resp: Response {
+                id: rng.next_u64(),
+                task: arb_string(rng, 32),
+                logits: arb_logits(rng, 2048),
+                cache_hit: rng.bool(0.5),
+            },
+        }),
+        // n = 0 covers the "empty batch dropped" edge
+        1 => ShardEvent::Dropped { shard: rng.below(1024), n: rng.below(3) },
+        2 => ShardEvent::Rejected {
+            shard: rng.below(1024),
+            id: rng.next_u64(),
+            err: arb_string(rng, 64),
+        },
+        3 => ShardEvent::FlushAck { shard: rng.below(1024) },
+        _ => ShardEvent::Report(arb_report(rng)),
+    }
+}
+
+/// Structural equality that compares every float by bit pattern, so NaN
+/// logits/latencies don't defeat the round-trip check.
+fn events_bit_equal(a: &ShardEvent, b: &ShardEvent) -> bool {
+    match (a, b) {
+        (ShardEvent::Done(x), ShardEvent::Done(y)) => {
+            x.shard == y.shard
+                && x.resp.id == y.resp.id
+                && x.resp.task == y.resp.task
+                && x.resp.cache_hit == y.resp.cache_hit
+                && x.resp.logits.len() == y.resp.logits.len()
+                && x.resp
+                    .logits
+                    .iter()
+                    .zip(&y.resp.logits)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (ShardEvent::Report(x), ShardEvent::Report(y)) => {
+            let (sx, sy) = (&x.stats, &y.stats);
+            x.shard == y.shard
+                && sx.requests == sy.requests
+                && sx.batches == sy.batches
+                && sx.tokens == sy.tokens
+                && sx.dropped == sy.dropped
+                && sx.prefix_resumes == sy.prefix_resumes
+                && sx.busy_secs.to_bits() == sy.busy_secs.to_bits()
+                && sx.lat.len() == sy.lat.len()
+                && sx.lat.iter().zip(&sy.lat).all(|(p, q)| p.to_bits() == q.to_bits())
+                && x.cache_hits == y.cache_hits
+                && x.cache_misses == y.cache_misses
+                && x.prefix_hits == y.prefix_hits
+                && x.cache_evictions == y.cache_evictions
+                && x.cache_entries == y.cache_entries
+                && x.cache_bytes == y.cache_bytes
+                && x.backbone_rows == y.backbone_rows
+                && x.resumed_rows == y.resumed_rows
+                && x.resumed_positions == y.resumed_positions
+                && x.backbone_resident_bytes == y.backbone_resident_bytes
+                && x.registry_bytes == y.registry_bytes
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn prop_messages_round_trip() {
+    prop::check(128, 0x51535457, |rng| {
+        let m = arb_msg(rng);
+        let bytes = frame::encode_msg(&m);
+        let back = frame::decode_msg(&bytes).expect("round trip must decode");
+        assert_eq!(back, m);
+    });
+}
+
+#[test]
+fn prop_events_round_trip_bit_exact() {
+    prop::check(128, 0x45564E54, |rng| {
+        let ev = arb_event(rng);
+        let bytes = frame::encode_event(&ev);
+        let back = frame::decode_event(&bytes).expect("round trip must decode");
+        assert!(events_bit_equal(&ev, &back), "event diverged through the wire:\n{ev:?}\nvs\n{back:?}");
+    });
+}
+
+#[test]
+fn prop_every_truncation_is_a_typed_error() {
+    prop::check(32, 0x54525543, |rng| {
+        let bytes =
+            if rng.bool(0.5) { frame::encode_msg(&arb_msg(rng)) } else { frame::encode_event(&arb_event(rng)) };
+        // every strict prefix must fail with a typed error, never panic,
+        // never succeed; scan all cuts for small frames, sample for big
+        let cuts: Vec<usize> = if bytes.len() <= 300 {
+            (0..bytes.len()).collect()
+        } else {
+            let mut c: Vec<usize> = (0..48).map(|_| rng.below(bytes.len())).collect();
+            c.extend([0, 1, HEADER_LEN - 1, HEADER_LEN, bytes.len() - 1]);
+            c
+        };
+        for cut in cuts {
+            let msg_err = frame::decode_msg(&bytes[..cut]);
+            let ev_err = frame::decode_event(&bytes[..cut]);
+            assert!(msg_err.is_err(), "cut at {cut}/{} decoded as msg", bytes.len());
+            assert!(ev_err.is_err(), "cut at {cut}/{} decoded as event", bytes.len());
+        }
+    });
+}
+
+#[test]
+fn prop_corrupt_bytes_never_panic() {
+    prop::check(128, 0xC0DE, |rng| {
+        let mut bytes = if rng.bool(0.5) {
+            frame::encode_msg(&arb_msg(rng))
+        } else {
+            frame::encode_event(&arb_event(rng))
+        };
+        // flip a few random bytes; decode may succeed or fail, but must
+        // return, not panic, and must not over-read
+        for _ in 0..1 + rng.below(4) {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        let _ = frame::decode_msg(&bytes);
+        let _ = frame::decode_event(&bytes);
+    });
+}
+
+#[test]
+fn header_corruptions_map_to_the_right_typed_errors() {
+    let good = frame::encode_event(&ShardEvent::FlushAck { shard: 7 });
+    // magic
+    let mut bad = good.clone();
+    bad[2] = b'?';
+    assert!(matches!(frame::decode_event(&bad).unwrap_err(), DecodeError::BadMagic(_)));
+    // future version must be rejected before tag parsing
+    let mut bad = good.clone();
+    bad[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    assert_eq!(
+        frame::decode_event(&bad).unwrap_err(),
+        DecodeError::BadVersion { got: VERSION + 1, want: VERSION }
+    );
+    // unknown tag
+    let mut bad = good.clone();
+    bad[6] = 213;
+    assert_eq!(frame::decode_event(&bad).unwrap_err(), DecodeError::BadTag(213));
+    // a request tag is wrong-direction for the event decoder (and vice versa)
+    let flush = frame::encode_msg(&ShardMsg::Flush);
+    assert!(matches!(frame::decode_event(&flush).unwrap_err(), DecodeError::BadTag(_)));
+    assert!(matches!(frame::decode_msg(&good).unwrap_err(), DecodeError::BadTag(_)));
+    // oversize length is rejected before any allocation
+    let mut bad = good.clone();
+    bad[7..11].copy_from_slice(&((MAX_PAYLOAD + 1) as u32).to_le_bytes());
+    assert!(matches!(frame::decode_event(&bad).unwrap_err(), DecodeError::Oversize { .. }));
+    // trailing junk after a complete frame
+    let mut bad = good;
+    bad.extend_from_slice(&[0, 0]);
+    assert!(matches!(frame::decode_event(&bad).unwrap_err(), DecodeError::Malformed(_)));
+}
+
+#[test]
+fn out_of_range_specs_decode_to_malformed() {
+    // a shard-worker builds an engine straight from a decoded Configure,
+    // so well-formed frames with hostile field values must be rejected
+    // at decode, not panic the engine or drive unbounded allocation
+    let mut rng = Rng::new(0x5AFE);
+    let base = arb_spec(&mut rng);
+    let hostile = [
+        ShardSpec { seq: 0, ..base },                     // engine asserts seq >= 1
+        ShardSpec { seq: 1 << 50, ..base },               // unbounded hidden-state alloc
+        ShardSpec { tasks: 1 << 32, ..base },             // registration loop runs forever
+        ShardSpec { threads: 1 << 20, ..base },           // thread-pool explosion
+        ShardSpec {
+            serve: qst::serve::ServeConfig { cache_bytes: 1 << 50, ..base.serve },
+            ..base
+        },
+    ];
+    for spec in hostile {
+        let bytes = frame::encode_msg(&ShardMsg::Configure { shard: 0, spec });
+        match frame::decode_msg(&bytes) {
+            Err(DecodeError::Malformed(why)) => {
+                assert!(why.contains("out of range"), "{why}");
+            }
+            other => panic!("hostile spec must be Malformed, got {other:?}"),
+        }
+        assert!(spec.validate().is_err());
+    }
+    assert!(base.validate().is_ok());
+}
+
+#[test]
+fn decode_errors_compose_with_anyhow_context() {
+    use anyhow::Context;
+    let r: Result<ShardMsg, DecodeError> = frame::decode_msg(&[0u8; 3]);
+    let err = r.context("reading shard inbox frame").unwrap_err();
+    let chain = format!("{err:#}");
+    assert!(chain.starts_with("reading shard inbox frame: "), "{chain}");
+    assert!(chain.contains("truncated"), "{chain}");
+}
+
+#[test]
+fn streaming_reader_round_trips_a_message_sequence() {
+    let mut rng = Rng::new(0xFEED);
+    let msgs: Vec<ShardMsg> = (0..20).map(|_| arb_msg(&mut rng)).collect();
+    let mut wire = Vec::new();
+    for m in &msgs {
+        wire.extend_from_slice(&frame::encode_msg(m));
+    }
+    let mut cur = std::io::Cursor::new(wire);
+    for want in &msgs {
+        let got = frame::read_msg(&mut cur).unwrap().expect("frame available");
+        assert_eq!(&got, want);
+    }
+    assert!(frame::read_msg(&mut cur).unwrap().is_none(), "then clean EOF");
+}

@@ -31,14 +31,51 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-# sharded gateway smoke: 2 shards on the packed-W4 backbone; bench-gateway
-# refuses to report unless sharded + prefix-resume parity hold bit-for-bit,
-# so this catches replica/resume divergence, not just crashes
-echo "== gateway smoke (2 shards, W4 backbone) =="
+# sharded gateway smoke: 2 shards on the packed-W4 backbone, swept over
+# BOTH transports (inproc shard threads + socket shard workers over real
+# framed socket pairs); bench-gateway refuses to report unless sharded,
+# transport, and prefix-resume parity hold bit-for-bit, so this catches
+# replica/resume/framing divergence, not just crashes
+echo "== gateway smoke (2 shards, W4 backbone, inproc+socket transports) =="
 cargo run --release -p qst --bin qst -- bench-gateway --shards 2 --backbone w4 \
     --preset small --requests 64 --families 4 --per-family 2 --prefix-len 8 \
     --prompt-len 12 --seq 16 --prefix-block 4 --json BENCH_gateway_smoke.json
+grep -q '"transport_parity": 1' BENCH_gateway_smoke.json
 rm -f BENCH_gateway_smoke.json
+
+# cross-process gateway smoke: two real `qst shard-worker` processes on
+# unix sockets driven by `qst gateway --connect`, compared line-for-line
+# (responses only; the summary carries timings) against the in-proc
+# 2-shard gateway on the same piped session.  Response order is
+# completion order — nondeterministic across shards — so both sides are
+# sorted; the content of every response line must match exactly.
+echo "== cross-process gateway smoke (2 shard-worker processes, unix sockets) =="
+QST_BIN=target/release/qst
+SOCK0=$(mktemp -u /tmp/qst-check-shard0.XXXXXX.sock)
+SOCK1=$(mktemp -u /tmp/qst-check-shard1.XXXXXX.sock)
+GW_REQS='task0 1 2 3\ntask1 4 5 6\ntask0 1 2 3\ntask1 7 8\ntask0 9\n'
+"$QST_BIN" shard-worker --listen "unix:$SOCK0" & W0=$!
+"$QST_BIN" shard-worker --listen "unix:$SOCK1" & W1=$!
+# if anything below fails, don't leave workers parked in accept()
+trap 'kill "$W0" "$W1" 2>/dev/null || true' EXIT
+printf "$GW_REQS" | timeout 120 "$QST_BIN" gateway \
+    --connect "unix:$SOCK0,unix:$SOCK1" --seq 16 > /tmp/qst-gw-socket.out
+printf "$GW_REQS" | timeout 120 "$QST_BIN" gateway \
+    --shards 2 --seq 16 > /tmp/qst-gw-inproc.out
+for pid in $W0 $W1; do
+    for _ in $(seq 1 100); do kill -0 "$pid" 2>/dev/null || break; sleep 0.1; done
+    kill "$pid" 2>/dev/null || true
+done
+wait "$W0" "$W1" 2>/dev/null || true
+trap - EXIT
+# all 5 piped requests must have produced a response line on each side —
+# otherwise the diff below could pass vacuously on two empty streams
+[ "$(grep -c '^task' /tmp/qst-gw-socket.out)" -eq 5 ]
+[ "$(grep -c '^task' /tmp/qst-gw-inproc.out)" -eq 5 ]
+diff <(grep '^task' /tmp/qst-gw-socket.out | sort) \
+     <(grep '^task' /tmp/qst-gw-inproc.out | sort)
+rm -f /tmp/qst-gw-socket.out /tmp/qst-gw-inproc.out "$SOCK0" "$SOCK1"
+echo "cross-process responses match the in-proc gateway"
 
 if [ "${QST_SKIP_FMT:-0}" = "1" ]; then
     # the seed predates rustfmt availability and has no rustfmt.toml; CI
