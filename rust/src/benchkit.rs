@@ -169,6 +169,69 @@ impl Json {
     }
 }
 
+/// Schema version of the `BENCH_*.json` trajectory files.  Bump only when
+/// a key is renamed or its meaning changes; *adding* keys is
+/// backward-compatible and does not bump it.
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
+/// Days since 1970-01-01 → civil `(year, month, day)` (proleptic
+/// Gregorian).  The standard era-based O(1) conversion; no date
+/// dependencies offline.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// ISO-8601 UTC wall-clock timestamp (`2026-08-08T14:03:09Z`), second
+/// precision, from the system clock.
+pub fn iso8601_utc_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    let rem = secs % 86_400;
+    format!("{y:04}-{m:02}-{d:02}T{:02}:{:02}:{:02}Z", rem / 3600, (rem % 3600) / 60, rem % 60)
+}
+
+/// Best-effort `git rev-parse HEAD` of the current directory's repo.
+/// Empty when git or the repo is unavailable — provenance must never
+/// fail a bench run.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default()
+}
+
+impl Json {
+    /// Stamp the provenance keys every `BENCH_*.json` carries — schema
+    /// version, ISO-8601 UTC wall clock, git revision, host core count —
+    /// so each trajectory point is attributable to a commit and a
+    /// machine, and schema evolution is explicit rather than guessed.
+    pub fn provenance(self) -> Self {
+        self.int("schema_version", BENCH_SCHEMA_VERSION)
+            .str("timestamp_utc", &iso8601_utc_now())
+            .str("git_rev", &git_rev())
+            .int(
+                "host_cores",
+                std::thread::available_parallelism().map(|n| n.get() as u64).unwrap_or(1),
+            )
+    }
+}
+
 /// Append results to a CSV log (created with a header if absent).
 pub fn log_csv(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
     use std::io::Write;
@@ -218,5 +281,36 @@ mod tests {
     fn json_nonfinite_is_null() {
         let s = Json::new().num("bad", f64::NAN).finish();
         assert!(s.contains("\"bad\": null"));
+    }
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+        // leap day: 11016 days = 2000-02-29
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29));
+        assert_eq!(civil_from_days(11_017), (2000, 3, 1));
+        // a modern anchor (2026-01-01 = 20454 days since epoch)
+        assert_eq!(civil_from_days(20_454), (2026, 1, 1));
+    }
+
+    #[test]
+    fn iso_timestamp_shape() {
+        let t = iso8601_utc_now();
+        // YYYY-MM-DDTHH:MM:SSZ
+        assert_eq!(t.len(), 20, "{t}");
+        assert_eq!(&t[4..5], "-");
+        assert_eq!(&t[10..11], "T");
+        assert!(t.ends_with('Z'));
+        assert!(t.as_str() >= "2024-01-01T00:00:00Z", "clock went backwards? {t}");
+    }
+
+    #[test]
+    fn provenance_keys_present() {
+        let s = Json::new().provenance().str("bench", "x").finish();
+        assert!(s.contains("\"schema_version\": 2"));
+        assert!(s.contains("\"timestamp_utc\": \""));
+        assert!(s.contains("\"git_rev\": "));
+        assert!(s.contains("\"host_cores\": "));
     }
 }

@@ -112,7 +112,7 @@ COMMANDS:
   serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
                [--preset small|large] [--backbone f32|w4] [--threads N]
                [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N]
-               [--prefix-block N] [--seed N]
+               [--prefix-block N] [--seed N] [--trace-out PATH]
                In-process multi-task inference server: one shared frozen
                backbone, per-task side networks, hidden-state cache.
                --threads N runs the host kernels on N workers (bit-identical
@@ -121,12 +121,18 @@ COMMANDS:
                serves through the fused dequant-GEMM (~7x less resident);
                --prefix-block N lets prompts that extend a cached prompt
                resume the frozen forward from the deepest cached N-token
-               block (0 = whole-prompt caching only).
+               block (0 = whole-prompt caching only);
+               --trace-out PATH records request-lifecycle + kernel spans and
+               writes a Chrome trace-event file on exit (load in Perfetto /
+               chrome://tracing); tracing never changes one output bit.
                Reads requests from stdin, one per line: '<task> <tok> <tok> ...'
+               The exact line 'STATS' returns Prometheus-style text metrics
+               (lowercase 'stats' keeps the human summary).
   gateway      [--shards N | --connect ADDR,ADDR,...] [--queue-cap N]
                [--num-tasks N] [--preset small|large] [--backbone f32|w4]
                [--threads N] [--cache-bytes N] [--registry-bytes N]
                [--batch N] [--seq N] [--prefix-block N] [--seed N]
+               [--trace-out PATH]
                Asynchronous sharded serving front-end: N worker shards each
                hold a private backbone replica + prefix-aware hidden-state
                cache behind a bounded inbox (full inbox => backpressure, not
@@ -139,6 +145,11 @@ COMMANDS:
                shard (unix:<path> or <host>:<port>, so --shards is ignored);
                each worker is configured over the wire from this gateway's
                flags, and responses are bit-identical to the in-proc fleet.
+               --trace-out PATH additionally arms tracing in every shard
+               (workers ship span batches back as Telemetry frames) and
+               writes one fleet-wide Chrome trace file; the line 'STATS'
+               returns Prometheus-style text metrics with exactly-merged
+               fleet latency buckets.
   shard-worker --listen ADDR
                One gateway shard as its own process: binds unix:<path> or
                <host>:<port>, accepts one `gateway --connect` session,
@@ -148,25 +159,31 @@ COMMANDS:
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
                [--registry-bytes N] [--prefix-block N] [--seed N]
                [--preset small|large] [--backbone f32|w4] [--threads N]
-               [--json PATH]
+               [--json PATH] [--trace-out PATH]
                Repeated-prompt serving benchmark over >=2 side networks;
                reports cached vs uncached throughput, cache hit rate,
-               p50/p95 latency, and f32-vs-W4 backbone residency + latency
-               side-by-side; writes BENCH_serve.json
+               p50/p95 latency, f32-vs-W4 backbone residency + latency
+               side-by-side, and the measured disabled-tracing overhead
+               (trace_off_overhead_pct); --trace-out re-runs the cached
+               pass with tracing armed (verifying bit-parity) and writes
+               the Chrome trace; writes BENCH_serve.json
   bench-gateway [--shards N,N,...] [--transports inproc,socket] [--tasks N]
                [--requests N] [--families N] [--per-family N]
                [--prefix-len N] [--prompt-len N] [--seq N] [--batch N]
                [--cache-bytes N] [--registry-bytes N] [--prefix-block N]
                [--queue-cap N] [--threads-per-shard N] [--seed N]
                [--preset small|large] [--backbone f32|w4] [--json PATH]
+               [--trace-out PATH]
                Shard-count x transport scaling sweep under open-loop
                shared-prefix load: one deterministic request stream per
                (transport, shard count); socket passes run real shard
                workers over framed socket pairs.  Reports aggregate req/s,
                merged p50/p95, cache + prefix-hit rates, modeled fleet
                residency (in-process and per-process), and refuses to
-               write BENCH_gateway.json unless sharded, transport, and
-               prefix-resume parity all hold bit-for-bit
+               write BENCH_gateway.json unless sharded, transport,
+               prefix-resume, and traced-run parity all hold bit-for-bit
+               (--trace-out arms tracing on a parity replay and writes
+               the fleet Chrome trace)
   bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
                blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs

@@ -67,6 +67,10 @@ pub struct BenchGatewayOpts {
     pub threads_per_shard: usize,
     pub preset: EnginePreset,
     pub backbone: BackboneKind,
+    /// when set, replay the first (transport, shard-count) pass with the
+    /// span recorder armed, refuse to report unless the replay is
+    /// bit-identical, and write the fleet Chrome trace file here
+    pub trace_out: Option<String>,
 }
 
 impl Default for BenchGatewayOpts {
@@ -92,6 +96,7 @@ impl Default for BenchGatewayOpts {
             // packed-W4 backbone (replicas are cheap, compute is heavy)
             preset: EnginePreset::Large,
             backbone: BackboneKind::W4,
+            trace_out: None,
         }
     }
 }
@@ -118,6 +123,9 @@ pub struct GatewayPass {
     pub resident_bytes_multiproc: usize,
     /// request id -> logits, for the cross-pass parity proofs
     responses: HashMap<u64, Vec<f32>>,
+    /// worker-shipped spans absorbed during a traced pass (standalone
+    /// socket workers only; empty otherwise and on untraced passes)
+    remote_spans: Vec<crate::obs::trace::TraceSpan>,
 }
 
 /// The full sweep + parity verdicts.
@@ -128,6 +136,14 @@ pub struct BenchGatewayReport {
     pub sharded_parity: bool,
     pub transport_parity: bool,
     pub prefix_parity: bool,
+    /// `Some(true)` when a traced replay ran (`--trace-out`) and matched
+    /// the untraced pass bit-for-bit — `run_bench` refuses to return
+    /// otherwise; `None` when no trace was requested
+    pub trace_parity: Option<bool>,
+    /// spans written to the trace file (0 when untraced)
+    pub trace_spans: usize,
+    /// distinct span names in the trace file
+    pub trace_kinds: Vec<String>,
 }
 
 /// The deterministic (task, prompt) request stream: the r-th accepted
@@ -143,6 +159,7 @@ fn run_pass(
     transport: TransportKind,
     shards: usize,
     pool: &[Vec<i32>],
+    trace: bool,
 ) -> Result<GatewayPass> {
     let cfg = GatewayConfig {
         shards,
@@ -159,6 +176,7 @@ fn run_pass(
         seq: opts.seq,
         tasks: opts.tasks,
         threads_per_shard: opts.threads_per_shard,
+        trace,
     };
     let (mut gw, worker_joins) = worker::launch_gateway(&cfg, transport)?;
     let choices = stream_choices(opts, pool.len());
@@ -192,6 +210,14 @@ fn run_pass(
     }
     let wall = t0.elapsed().as_secs_f64();
     let backpressure_rejects = gw.rejected;
+    let remote_spans = if trace {
+        // one extra report pulls any standalone workers' span batches
+        // (Telemetry rides ahead of each Report on the per-shard FIFO)
+        let _ = gw.report();
+        gw.take_remote_spans()
+    } else {
+        Vec::new()
+    };
     let (report, leftover) = gw.shutdown()?;
     for j in worker_joins {
         let _ = j.join();
@@ -234,6 +260,7 @@ fn run_pass(
             opts.cache_bytes,
         ),
         responses,
+        remote_spans,
     })
 }
 
@@ -325,6 +352,7 @@ impl BenchGatewayReport {
         let (d, layers, vocab, r) = self.opts.preset.shape();
         let transports: Vec<&str> = self.opts.transports.iter().map(|t| t.name()).collect();
         let mut j = Json::new()
+            .provenance()
             .str("bench", "gateway")
             .str("preset", self.opts.preset.name())
             .int("d", d as u64)
@@ -370,12 +398,19 @@ impl BenchGatewayReport {
                 .int(&k("resident_bytes"), p.resident_bytes as u64)
                 .int(&k("resident_bytes_multiproc"), p.resident_bytes_multiproc as u64);
         }
-        j.num("shard_scaling_speedup", self.scaling_speedup())
+        j = j
+            .num("shard_scaling_speedup", self.scaling_speedup())
             .num("transport_rps_ratio", self.transport_rps_ratio())
             .int("sharded_parity", self.sharded_parity as u64)
             .int("transport_parity", self.transport_parity as u64)
-            .int("prefix_parity", self.prefix_parity as u64)
-            .finish()
+            .int("prefix_parity", self.prefix_parity as u64);
+        if let Some(tp) = self.trace_parity {
+            j = j
+                .int("trace_parity", tp as u64)
+                .int("trace_spans", self.trace_spans as u64)
+                .str("trace_kinds", &self.trace_kinds.join(","));
+        }
+        j.finish()
     }
 
     pub fn summary(&self) -> String {
@@ -410,6 +445,13 @@ impl BenchGatewayReport {
             self.transport_parity,
             self.prefix_parity
         ));
+        if let Some(tp) = self.trace_parity {
+            s.push_str(&format!(
+                " trace={tp} ({} spans, {} kinds)",
+                self.trace_spans,
+                self.trace_kinds.len()
+            ));
+        }
         s
     }
 }
@@ -442,7 +484,7 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
     let mut passes = Vec::with_capacity(opts.shard_counts.len() * opts.transports.len());
     for &t in &opts.transports {
         for &n in &opts.shard_counts {
-            passes.push(run_pass(opts, t, n, &pool)?);
+            passes.push(run_pass(opts, t, n, &pool, false)?);
         }
     }
     // within each transport, every shard count must agree bit-for-bit
@@ -468,7 +510,44 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
         prefix_parity,
         "prefix-resumed logits diverged from the from-scratch reference"
     );
-    Ok(BenchGatewayReport { opts: opts.clone(), passes, sharded_parity, transport_parity, prefix_parity })
+    // fourth parity proof, when a trace was requested: replay the first
+    // pass with the recorder armed and refuse to report unless the traced
+    // fleet served the exact same bits
+    let (trace_parity, trace_spans, trace_kinds) = match &opts.trace_out {
+        None => (None, 0, Vec::new()),
+        Some(path) => {
+            let _ = crate::obs::drain(); // discard any stale spans
+            crate::obs::set_enabled(true);
+            let traced = run_pass(opts, opts.transports[0], opts.shard_counts[0], &pool, true);
+            crate::obs::set_enabled(false);
+            let traced = traced?;
+            let (spans, dropped) = crate::obs::drain();
+            ensure!(
+                traced.responses == passes[0].responses,
+                "tracing changed the served bits — refusing to write {path}"
+            );
+            if dropped > 0 {
+                eprintln!("trace: {dropped} span(s) lost to ring overwrite");
+            }
+            let mut all = crate::obs::trace::local(spans);
+            all.extend(traced.remote_spans);
+            let kinds: Vec<String> =
+                crate::obs::trace::kinds_present(&all).iter().map(|s| s.to_string()).collect();
+            crate::obs::trace::write_file(path, &all)
+                .with_context(|| format!("writing trace {path}"))?;
+            (Some(true), all.len(), kinds)
+        }
+    };
+    Ok(BenchGatewayReport {
+        opts: opts.clone(),
+        passes,
+        sharded_parity,
+        transport_parity,
+        prefix_parity,
+        trace_parity,
+        trace_spans,
+        trace_kinds,
+    })
 }
 
 #[cfg(test)]
@@ -497,6 +576,7 @@ mod tests {
             threads_per_shard: 1,
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
+            trace_out: None,
         }
     }
 
@@ -561,6 +641,33 @@ mod tests {
         let mut o = tiny();
         o.prompt_len = 32; // > seq
         assert!(run_bench(&o).is_err());
+    }
+
+    #[test]
+    fn traced_replay_holds_parity_and_writes_the_fleet_trace() {
+        // serializes against the obs unit tests — the recorder is
+        // process-global
+        let _g = crate::obs::test_lock();
+        let path = std::env::temp_dir().join("qst_bench_gateway_trace_test.json");
+        let mut o = tiny();
+        o.shard_counts = vec![2];
+        o.transports = vec![TransportKind::Socket];
+        o.trace_out = Some(path.to_string_lossy().into_owned());
+        let rep = run_bench(&o).unwrap();
+        assert_eq!(rep.trace_parity, Some(true));
+        assert!(rep.trace_spans > 0);
+        for k in
+            ["admit", "route", "shard_queue", "batch_assemble", "backbone", "prefix_resume", "sidenet", "respond"]
+        {
+            assert!(rep.trace_kinds.iter().any(|s| s == k), "missing span kind {k}: {:?}", rep.trace_kinds);
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"displayTimeUnit\""));
+        assert!(body.contains("\"name\":\"backbone\""));
+        let j = rep.to_json();
+        assert!(j.contains("\"trace_parity\": 1"));
+        assert!(j.contains("\"schema_version\": 2"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

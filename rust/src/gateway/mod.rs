@@ -17,7 +17,7 @@
 //!   [shard 0] [shard 1] … [shard N-1]
 //!      each: thread/process-owned Server<SyntheticEngine>
 //!            queue → prefix-aware cache → backbone/resume → side nets
-//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report
+//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report / Telemetry
 //!         ▼
 //!   [event stream] ──▶ try_collect() / flush() ──▶ responses
 //!   [aggregator]   ──▶ report(): merged stats + summed cache counters
@@ -50,8 +50,11 @@ pub mod shard;
 pub mod transport;
 pub mod worker;
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Result};
 
+use crate::obs::{self, trace::TraceSpan, SpanKind};
 use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
 
 pub use router::{aggregate, GatewayReport, Router};
@@ -96,6 +99,9 @@ pub struct GatewayConfig {
     pub tasks: usize,
     /// kernel worker threads per shard engine
     pub threads_per_shard: usize,
+    /// enable the span recorder fleet-wide (`--trace-out`): locally and,
+    /// via the spec's trace flag, in every socket worker
+    pub trace: bool,
 }
 
 impl Default for GatewayConfig {
@@ -110,6 +116,7 @@ impl Default for GatewayConfig {
             seq: 64,
             tasks: 2,
             threads_per_shard: 1,
+            trace: false,
         }
     }
 }
@@ -127,6 +134,7 @@ impl GatewayConfig {
             tasks: self.tasks,
             threads: self.threads_per_shard,
             serve: self.serve,
+            trace: self.trace,
         }
     }
 }
@@ -142,6 +150,15 @@ pub struct Gateway {
     /// data responses absorbed while awaiting control events (reports),
     /// handed out on the next try_collect/flush
     stash: Vec<GatewayResponse>,
+    /// shard reports absorbed on the data path (an earlier `report()`
+    /// over-counted its live shards, or a worker volunteered one at
+    /// shutdown); the next `report()` consumes them, latest per shard
+    pending_reports: Vec<ShardReport>,
+    /// spans shipped by traced socket workers, pid-tagged `shard + 1`
+    /// (in-proc shards record into this process's rings directly)
+    remote_spans: Vec<TraceSpan>,
+    /// worker-side spans lost to ring overwrites (from `Telemetry` frames)
+    pub telemetry_dropped: u64,
     /// requests accepted into shard inboxes
     pub submitted: u64,
     /// submits refused with [`SubmitError::Backpressure`]
@@ -188,6 +205,9 @@ impl Gateway {
             next_id: 0,
             in_flight: 0,
             stash: Vec::new(),
+            pending_reports: Vec::new(),
+            remote_spans: Vec::new(),
+            telemetry_dropped: 0,
             submitted: 0,
             rejected: 0,
             dropped: 0,
@@ -207,12 +227,20 @@ impl Gateway {
         self.in_flight
     }
 
+    /// Spans shipped by traced socket workers since the last take,
+    /// pid-tagged `shard + 1`.  The trace writer combines these with the
+    /// local `obs::drain()` (pid 0) when serializing `--trace-out`.
+    pub fn take_remote_spans(&mut self) -> Vec<TraceSpan> {
+        std::mem::take(&mut self.remote_spans)
+    }
+
     /// Non-blocking submit: validate, route by prompt head, hand to the
     /// transport.  Returns the gateway request id, or
     /// [`SubmitError::Backpressure`] when the routed shard is saturated —
     /// the caller should collect responses and retry (bounded queues
     /// reject; they never deadlock).
     pub fn submit(&mut self, task: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
+        let t_admit = obs::start();
         if !self.tasks.iter().any(|t| t == task) {
             return Err(SubmitError::Invalid(format!(
                 "unknown task '{task}' (registered: {:?})",
@@ -226,8 +254,11 @@ impl Gateway {
                 self.cfg.seq
             )));
         }
+        obs::end(SpanKind::Admit, t_admit, self.next_id);
+        let t_route = obs::start();
         let shard = self.router.route(tokens);
         let id = self.next_id;
+        obs::end(SpanKind::Route, t_route, id);
         let req = Request { id, task: task.to_string(), tokens: tokens.to_vec() };
         match self.transport.submit(shard, req) {
             Ok(()) => {
@@ -260,9 +291,18 @@ impl Gateway {
                 self.dropped += 1;
                 eprintln!("gateway: shard {shard} rejected request {id}: {err}");
             }
-            // control events reaching the data path mean an earlier
-            // flush/report over-counted its live shards; harmless
-            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) => {}
+            // a stray ack means an earlier flush over-counted its live
+            // shards; the barrier it belonged to already gave up on it
+            ShardEvent::FlushAck { .. } => {}
+            // a report racing the data path carries real counters — stash
+            // it for the next `report()` instead of dropping the shard's
+            // telemetry on the floor
+            ShardEvent::Report(r) => self.pending_reports.push(r),
+            ShardEvent::Telemetry(t) => {
+                self.telemetry_dropped += t.dropped;
+                let pid = t.shard as u32 + 1;
+                self.remote_spans.extend(t.spans.into_iter().map(|span| TraceSpan { pid, span }));
+            }
         }
     }
 
@@ -325,18 +365,24 @@ impl Gateway {
     /// Snapshot every shard and merge into the fleet-wide report.  Data
     /// responses that complete while reports are in transit are stashed
     /// for the next `try_collect`/`flush` — never dropped, even when the
-    /// report itself fails.
+    /// report itself fails.  Reports that arrived early on the data path
+    /// (stashed by `absorb`) count too, superseded per shard by a fresh
+    /// one when both exist.
     pub fn report(&mut self) -> Result<GatewayReport> {
         let expected = self.transport.start_report();
-        if expected == 0 {
+        if expected == 0 && self.pending_reports.is_empty() {
             bail!("no live shards to report");
         }
-        let mut reports = Vec::with_capacity(expected);
+        let mut fresh = Vec::with_capacity(expected);
         let mut stashed = Vec::new();
-        let res = self.report_inner(expected, &mut reports, &mut stashed);
+        let res = self.report_inner(expected, &mut fresh, &mut stashed);
         self.stash.append(&mut stashed);
         res?;
-        Ok(aggregate(reports))
+        let mut by_shard: HashMap<usize, ShardReport> = HashMap::new();
+        for r in self.pending_reports.drain(..).chain(fresh) {
+            by_shard.insert(r.shard, r); // later (fresher) wins
+        }
+        Ok(aggregate(by_shard.into_values().collect()))
     }
 
     fn report_inner(
@@ -392,6 +438,7 @@ mod tests {
                 max_batch: 4,
                 prefix_block,
             },
+            trace: false,
         }
     }
 
@@ -481,6 +528,99 @@ mod tests {
         }
         let report = gw.report().unwrap();
         assert_eq!(report.merged.requests, 18);
+    }
+
+    /// A transport whose event stream and liveness answers are scripted
+    /// from the test — the only way to pin down *exact* interleavings of
+    /// control and data events (real shards race).
+    struct Scripted {
+        queue: std::sync::Arc<std::sync::Mutex<std::collections::VecDeque<ShardEvent>>>,
+        flush_live: usize,
+        report_live: usize,
+    }
+
+    impl Transport for Scripted {
+        fn shards(&self) -> usize {
+            1
+        }
+        fn submit(&mut self, _shard: usize, _req: Request) -> Result<(), SubmitError> {
+            Ok(())
+        }
+        fn try_recv(&mut self) -> Option<ShardEvent> {
+            self.queue.lock().unwrap().pop_front()
+        }
+        fn recv(&mut self) -> Result<ShardEvent> {
+            self.try_recv().ok_or_else(|| anyhow::anyhow!("script exhausted"))
+        }
+        fn start_flush(&mut self) -> usize {
+            self.flush_live
+        }
+        fn start_report(&mut self) -> usize {
+            self.report_live
+        }
+        fn shutdown(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn report_with_requests(n: u64) -> ShardReport {
+        let mut r = ShardReport::default();
+        r.stats.requests = n;
+        r
+    }
+
+    #[test]
+    fn report_racing_the_data_path_is_stashed_and_survives_shard_death() {
+        // interleaving under test: a shard volunteers its Report *before*
+        // the Done and the FlushAck of the same drain, then dies.  The
+        // old absorb() dropped that report on the floor; now it must feed
+        // the next report() even though start_report() reaches 0 shards.
+        let queue = std::sync::Arc::new(std::sync::Mutex::new(
+            std::collections::VecDeque::new(),
+        ));
+        let transport = Scripted { queue: queue.clone(), flush_live: 1, report_live: 0 };
+        let mut gw = Gateway::with_transport(&cfg(1, 4), Box::new(transport)).unwrap();
+        let id = gw.submit("task0", &[1, 2]).unwrap();
+        queue.lock().unwrap().extend([
+            ShardEvent::Report(report_with_requests(1)),
+            ShardEvent::Done(GatewayResponse {
+                shard: 0,
+                resp: crate::serve::Response {
+                    id,
+                    task: "task0".into(),
+                    logits: vec![0.5],
+                    cache_hit: false,
+                },
+            }),
+            ShardEvent::FlushAck { shard: 0 },
+        ]);
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 1, "the Done interleaved with the Report must come through");
+        // shard is now "dead": start_report reaches nobody, yet the
+        // stashed report still answers
+        let report = gw.report().unwrap();
+        assert_eq!(report.merged.requests, 1);
+        assert_eq!(report.shards.len(), 1);
+    }
+
+    #[test]
+    fn fresh_report_supersedes_a_stashed_one_per_shard() {
+        let queue = std::sync::Arc::new(std::sync::Mutex::new(
+            std::collections::VecDeque::new(),
+        ));
+        let transport = Scripted { queue: queue.clone(), flush_live: 1, report_live: 1 };
+        let mut gw = Gateway::with_transport(&cfg(1, 4), Box::new(transport)).unwrap();
+        // a stale report arrives on the data path during a flush…
+        queue
+            .lock()
+            .unwrap()
+            .extend([ShardEvent::Report(report_with_requests(1)), ShardEvent::FlushAck { shard: 0 }]);
+        assert!(gw.flush().unwrap().is_empty());
+        // …then report() asks and gets a fresher one from the same shard
+        queue.lock().unwrap().push_back(ShardEvent::Report(report_with_requests(5)));
+        let report = gw.report().unwrap();
+        assert_eq!(report.shards.len(), 1, "one report per shard, latest wins");
+        assert_eq!(report.merged.requests, 5);
     }
 
     #[test]

@@ -28,7 +28,10 @@ use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 
-use crate::proto::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError};
+use crate::proto::{
+    GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError,
+    TelemetryBatch,
+};
 use crate::serve::{Server, SyntheticEngine};
 
 /// The transport-free shard state machine: owns the server replica and
@@ -38,6 +41,10 @@ pub struct ShardCore {
     server: Server<SyntheticEngine>,
     /// server-local request id -> gateway id, rewritten on the way out
     id_map: HashMap<u64, u64>,
+    /// largest micro-batch this shard has drained (saturation gauge)
+    inflight_peak: u64,
+    /// drains that started with a full batch (pending == max_batch)
+    full_soaks: u64,
 }
 
 impl ShardCore {
@@ -53,7 +60,7 @@ impl ShardCore {
                 super::SYNTHETIC_TASK_BYTES,
             )?;
         }
-        Ok(ShardCore { index, server, id_map: HashMap::new() })
+        Ok(ShardCore { index, server, id_map: HashMap::new(), inflight_peak: 0, full_soaks: 0 })
     }
 
     pub fn index(&self) -> usize {
@@ -84,6 +91,11 @@ impl ShardCore {
     fn drain_and_emit(&mut self, emit: &mut dyn FnMut(ShardEvent)) {
         if self.server.pending() == 0 {
             return;
+        }
+        let pending = self.server.pending() as u64;
+        self.inflight_peak = self.inflight_peak.max(pending);
+        if pending as usize >= self.server.max_batch() {
+            self.full_soaks += 1;
         }
         let before_dropped = self.server.stats.dropped;
         match self.server.drain() {
@@ -119,8 +131,22 @@ impl ShardCore {
             resumed_positions: server.engine.resumed_positions,
             backbone_resident_bytes: server.engine.backbone_resident_bytes(),
             registry_bytes: server.registry.bytes(),
+            queue_depth: server.pending() as u64,
+            inflight_peak: self.inflight_peak,
+            full_soaks: self.full_soaks,
         }
     }
+}
+
+/// Drain this process's span recorder into a credit-neutral `Telemetry`
+/// event.  Only socket workers do this — an in-proc shard shares the
+/// gateway's rings, so shipping would double-count its spans.
+fn emit_telemetry(shard: usize, emit: &mut dyn FnMut(ShardEvent)) {
+    let (spans, dropped) = crate::obs::drain();
+    if spans.is_empty() && dropped == 0 {
+        return;
+    }
+    emit(ShardEvent::Telemetry(TelemetryBatch { shard, dropped, spans }));
 }
 
 /// Serve [`ShardMsg`]s from `rx` until `Shutdown` (or the sender side
@@ -128,7 +154,17 @@ impl ShardCore {
 /// in-proc shard threads and socket workers — the batching soak and the
 /// flush/report semantics are identical across transports by
 /// construction.
-pub fn run_core_loop(mut core: ShardCore, rx: &Receiver<ShardMsg>, emit: &mut dyn FnMut(ShardEvent)) {
+///
+/// `ship_telemetry` is set only by traced socket workers: alongside each
+/// `Report` (and at shutdown) the worker drains its span recorder into a
+/// `Telemetry` event so the gateway can assemble one fleet trace.
+/// In-proc shards pass `false` — they already share the gateway's rings.
+pub fn run_core_loop(
+    mut core: ShardCore,
+    rx: &Receiver<ShardMsg>,
+    emit: &mut dyn FnMut(ShardEvent),
+    ship_telemetry: bool,
+) {
     // a control message pulled out of the inbox mid-batch, parked until
     // the drain it interrupted completes
     let mut parked: Option<ShardMsg> = None;
@@ -161,7 +197,14 @@ pub fn run_core_loop(mut core: ShardCore, rx: &Receiver<ShardMsg>, emit: &mut dy
                 core.drain_and_emit(emit);
                 emit(ShardEvent::FlushAck { shard: core.index });
             }
-            ShardMsg::Report => emit(ShardEvent::Report(core.report())),
+            ShardMsg::Report => {
+                // telemetry first: per-shard FIFO means the gateway sees
+                // the span batch before the Report that ends its wait
+                if ship_telemetry {
+                    emit_telemetry(core.index, emit);
+                }
+                emit(ShardEvent::Report(core.report()));
+            }
             ShardMsg::Shutdown => {
                 core.drain_and_emit(emit);
                 break;
@@ -175,6 +218,9 @@ pub fn run_core_loop(mut core: ShardCore, rx: &Receiver<ShardMsg>, emit: &mut dy
         }
     }
     core.drain_and_emit(emit);
+    if ship_telemetry {
+        emit_telemetry(core.index, emit);
+    }
 }
 
 /// An in-proc shard: [`run_core_loop`] on its own thread behind a
@@ -205,7 +251,9 @@ impl ShardHandle {
                 let mut emit = |ev: ShardEvent| {
                     let _ = events.send(ev);
                 };
-                run_core_loop(core, &rx, &mut emit);
+                // in-proc: the recorder rings live in the gateway's own
+                // process, so spans are read locally — never shipped
+                run_core_loop(core, &rx, &mut emit, false);
             })
             .expect("spawning gateway shard");
         ShardHandle { index, tx, join: Some(join) }
@@ -269,6 +317,7 @@ mod tests {
                 max_batch: 4,
                 prefix_block: 4,
             },
+            trace: false,
         }
     }
 
@@ -309,6 +358,10 @@ mod tests {
         assert_eq!(rep.stats.requests, 1);
         assert_eq!(rep.backbone_rows, 1);
         assert!(rep.backbone_resident_bytes > 0);
+        // gauges: the lone request drained as a 1-deep micro-batch
+        assert_eq!(rep.queue_depth, 0, "nothing pending after a flush");
+        assert_eq!(rep.inflight_peak, 1);
+        assert_eq!(rep.full_soaks, 0, "a 1-deep soak never hits max_batch 4");
         shard.stop();
         shard.stop(); // idempotent
     }

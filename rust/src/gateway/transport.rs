@@ -128,6 +128,18 @@ pub fn line_loop(gw: &mut Gateway, input: impl BufRead, out: &mut impl Write) ->
                 writeln!(out, "{}", report.summary())?;
                 continue;
             }
+            Ok(TextLine::Prom) => {
+                let report = gw.report()?;
+                let gauges = crate::obs::prom::GatewayGauges {
+                    submitted: gw.submitted,
+                    rejected: gw.rejected,
+                    dropped: gw.dropped,
+                    in_flight: gw.in_flight() as u64,
+                };
+                // render() ends each sample with \n; no extra newline
+                write!(out, "{}", crate::obs::prom::render(&report, &gauges))?;
+                continue;
+            }
             Ok(TextLine::Request { task, tokens }) => (task, tokens),
             Err(e) => {
                 eprintln!("{e}");
@@ -171,7 +183,8 @@ mod tests {
     fn line_loop_serves_parses_and_reports() {
         let cfg = GatewayConfig { shards: 2, seq: 16, ..GatewayConfig::default() };
         let mut gw = Gateway::launch(&cfg).unwrap();
-        let input = b"task0 5 6 7\n\nbogus-line x y\ntask1 5 6 7\nnosuchtask 1\nstats\n" as &[u8];
+        let input =
+            b"task0 5 6 7\n\nbogus-line x y\ntask1 5 6 7\nnosuchtask 1\nstats\nSTATS\n" as &[u8];
         let mut out = Vec::new();
         line_loop(&mut gw, input, &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
@@ -180,6 +193,9 @@ mod tests {
         assert!(text.contains("task1#1"), "{text}");
         // stats line + final summary
         assert!(text.matches("req").count() >= 2, "{text}");
+        // STATS returns the Prometheus exposition with exact fleet counts
+        assert!(text.contains("qst_requests_total 2"), "{text}");
+        assert!(text.contains("qst_request_latency_seconds_count 2"), "{text}");
         let (report, leftover) = gw.shutdown().unwrap();
         assert!(leftover.is_empty());
         assert_eq!(report.merged.requests, 2);

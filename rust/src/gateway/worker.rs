@@ -35,7 +35,14 @@ use super::{Gateway, GatewayConfig};
 
 /// Serve one gateway connection to completion (Shutdown frame, clean
 /// peer close, or a fatal protocol error).
-pub fn serve_stream(stream: Box<dyn Stream>) -> Result<()> {
+///
+/// `standalone` says this worker owns its process (`qst shard-worker`):
+/// only then does the spec's `trace` flag drive the process-global span
+/// recorder and get the rings shipped back as `Telemetry` events.  The
+/// in-process socket fleet ([`spawn_local_fleet`]) passes `false` — its
+/// worker threads share the gateway's rings, so toggling or draining
+/// them here would steal (or double-count) the gateway's own spans.
+pub fn serve_stream(stream: Box<dyn Stream>, standalone: bool) -> Result<()> {
     let mut read_half = stream.try_clone_stream().context("cloning worker stream")?;
     let mut write_half = stream;
     // the first frame must configure this shard
@@ -48,6 +55,13 @@ pub fn serve_stream(stream: Box<dyn Stream>) -> Result<()> {
     };
     let core = ShardCore::from_spec(index, &spec)
         .with_context(|| format!("building shard {index} replica from the gateway's spec"))?;
+    // the gateway's --trace-out flag rides the spec: a traced fleet turns
+    // every standalone worker's span recorder on, and the rings come back
+    // as Telemetry events (credit-neutral, see run_core_loop)
+    let ship_telemetry = standalone && spec.trace;
+    if standalone {
+        crate::obs::set_enabled(spec.trace);
+    }
     eprintln!(
         "shard-worker: configured as shard {index} ({} preset, {} backbone, {} task(s), seq {})",
         spec.preset.name(),
@@ -82,7 +96,7 @@ pub fn serve_stream(stream: Box<dyn Stream>) -> Result<()> {
         // EOF and the loop will wind down via the closed channel
         let _ = write_half.write_all(&frame::encode_event(&ev));
     };
-    run_core_loop(core, &rx, &mut emit);
+    run_core_loop(core, &rx, &mut emit, ship_telemetry);
     // unblock + join the reader: closing our write half sends FIN only
     // on some platforms, so shut the socket down both ways explicitly
     let _ = write_half.shutdown_both();
@@ -107,7 +121,7 @@ pub fn listen_and_serve(addr: &str) -> Result<()> {
             let (stream, peer) = listener.accept().context("accepting gateway connection")?;
             let _ = stream.set_nodelay(true);
             eprintln!("shard-worker: gateway connected from {peer}");
-            serve_stream(Box::new(stream))
+            serve_stream(Box::new(stream), true)
         }
     }
 }
@@ -121,7 +135,7 @@ fn listen_unix(path: &str) -> Result<()> {
     let accepted = listener.accept().context("accepting gateway connection");
     let result = accepted.and_then(|(stream, _)| {
         eprintln!("shard-worker: gateway connected");
-        serve_stream(Box::new(stream))
+        serve_stream(Box::new(stream), true)
     });
     let _ = std::fs::remove_file(path);
     result
@@ -183,7 +197,10 @@ pub fn spawn_local_fleet(cfg: &GatewayConfig) -> Result<(SocketTransport, Vec<Jo
         let join = std::thread::Builder::new()
             .name(format!("qst-socket-shard-{i}"))
             .spawn(move || {
-                if let Err(e) = serve_stream(worker_end) {
+                // not standalone: these threads share the gateway's
+                // process, so spans stay in the local rings (drained by
+                // the gateway directly, exactly like in-proc shards)
+                if let Err(e) = serve_stream(worker_end, false) {
                     eprintln!("socket shard {i}: {e:#}");
                 }
             })
@@ -218,6 +235,7 @@ mod tests {
                 max_batch: 4,
                 prefix_block: 4,
             },
+            trace: false,
         }
     }
 
@@ -249,6 +267,32 @@ mod tests {
         assert!(leftover.is_empty());
         assert_eq!(report.merged.requests, 1);
         assert_eq!(report.shards.len(), 2);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn report_interleaved_with_in_flight_drain_over_sockets() {
+        // start_report races the shards' own drains: every shard already
+        // has submits queued ahead of the Report frame, so the Done
+        // events are in flight on the wire while report() awaits.  No
+        // response may be lost and no shard's counters may be dropped.
+        let c = cfg(2);
+        let (transport, joins) = spawn_local_fleet(&c).unwrap();
+        let mut gw = Gateway::with_transport(&c, Box::new(transport)).unwrap();
+        for i in 0..8 {
+            gw.submit(&task_name(i % 2), &[i as i32 + 1, 2, 3]).unwrap();
+        }
+        let report = gw.report().unwrap();
+        assert_eq!(report.shards.len(), 2);
+        // responses that crossed the report are stashed, not dropped
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 8, "every in-flight response survives the racing report");
+        let (final_report, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(final_report.merged.requests, 8);
+        assert_eq!(final_report.merged.hist.count(), 8, "fleet histogram counts every request");
         for j in joins {
             j.join().unwrap();
         }
@@ -288,7 +332,9 @@ mod tests {
         let worker = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             let _ = stream.set_nodelay(true);
-            serve_stream(Box::new(stream)).unwrap();
+            // standalone=false: keep the test from toggling the
+            // process-global recorder under parallel test threads
+            serve_stream(Box::new(stream), false).unwrap();
         });
         let c = cfg(1);
         let stream = dial_retry(&addr, 20, std::time::Duration::from_millis(10)).unwrap();

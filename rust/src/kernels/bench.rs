@@ -85,6 +85,7 @@ pub struct BenchKernelsReport {
 impl BenchKernelsReport {
     pub fn to_json(&self) -> String {
         let mut j = Json::new()
+            .provenance()
             .str("bench", "kernels")
             .int("m", self.m as u64)
             .int("threads", self.threads as u64);

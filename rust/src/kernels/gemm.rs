@@ -67,11 +67,13 @@ pub fn matmul_blocked_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: u
 pub fn matmul(threads: &Threads, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
+    let t_span = crate::obs::start();
     let mut out = vec![0f32; m * n];
     threads.par_rows(&mut out, n, |row0, run| {
         let rows = run.len() / n;
         matmul_blocked_into(run, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
     });
+    crate::obs::end(crate::obs::SpanKind::Gemm, t_span, 0);
     out
 }
 

@@ -46,6 +46,7 @@ where
     assert_eq!(packed.len(), (k / 2) * n);
     assert_eq!(k % qblock, 0, "K must divide by qblock");
     assert_eq!(qblock % 2, 0, "qblock must be even (nibble pairs share a block)");
+    let t_span = crate::obs::start();
     let code = codebook(qdtype);
     let mut out = vec![0f32; m * n];
     // each run re-decodes the full nibble stream (O(k·n), independent of its
@@ -89,6 +90,7 @@ where
             }
         }
     });
+    crate::obs::end(crate::obs::SpanKind::Qgemm, t_span, 0);
     out
 }
 

@@ -139,6 +139,7 @@ impl Threads {
                 }
             });
         } else {
+            let t_span = crate::obs::start();
             let f = &f;
             pool::run(
                 runs.into_iter()
@@ -147,6 +148,7 @@ impl Threads {
                     })
                     .collect(),
             );
+            crate::obs::end(crate::obs::SpanKind::PoolDispatch, t_span, 0);
         }
     }
 }

@@ -29,6 +29,10 @@
 //!   bounded-queue transports with backpressure (in-proc + socket via
 //!   [`proto`]), prefix-locality routing across per-shard backbone
 //!   replicas, fleet-wide stats aggregation, `bench-gateway` scaling curves
+//! * [`obs`]        — request-lifecycle tracing + mergeable fleet metrics:
+//!   per-thread span recorder (Chrome trace export), exactly-mergeable
+//!   latency histograms, Prometheus-style `STATS` exposition — always
+//!   compiled, runtime-toggled, parity-safe
 //! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
 
 pub mod benchkit;
@@ -40,6 +44,7 @@ pub mod experiments;
 pub mod gateway;
 pub mod kernels;
 pub mod nn;
+pub mod obs;
 pub mod proto;
 pub mod quant;
 pub mod runtime;

@@ -167,6 +167,33 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Arm the span recorder when `--trace-out <path>` is given; returns the
+/// requested output path.  Tracing is parity-safe — it cannot change one
+/// output bit — so arming costs nothing but the recording itself.
+fn trace_arm(args: &Args) -> Option<String> {
+    let path = args.get("trace-out").map(|s| s.to_string());
+    if path.is_some() {
+        qst::obs::set_enabled(true);
+    }
+    path
+}
+
+/// Drain the local recorder, append worker-shipped spans, and write the
+/// Chrome trace-event file (loadable in Perfetto / chrome://tracing).
+fn trace_finish(path: &str, remote: Vec<qst::obs::trace::TraceSpan>) -> Result<()> {
+    qst::obs::set_enabled(false);
+    let (spans, dropped) = qst::obs::drain();
+    let mut all = qst::obs::trace::local(spans);
+    all.extend(remote);
+    qst::obs::trace::write_file(path, &all).with_context(|| format!("writing trace {path}"))?;
+    eprintln!(
+        "wrote {} span(s) to {path}{}",
+        all.len(),
+        if dropped > 0 { format!(" ({dropped} lost to ring overwrite)") } else { String::new() }
+    );
+    Ok(())
+}
+
 /// Shared serve tuning from flags.
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     Ok(ServeConfig {
@@ -209,6 +236,34 @@ fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
                 println!("{}", server.stats.summary(server.cache.hit_rate()));
                 continue;
             }
+            Ok(TextLine::Prom) => {
+                // single-process exposition: present this server as a
+                // one-shard fleet (gauges only a gateway can observe —
+                // backpressure rejections, per-engine row counters behind
+                // the generic `Engine` — stay zero)
+                let pending = server.pending() as u64;
+                let rep = qst::proto::ShardReport {
+                    stats: server.stats.snapshot(),
+                    cache_hits: server.cache.hits,
+                    cache_misses: server.cache.misses,
+                    prefix_hits: server.cache.prefix_hits,
+                    cache_evictions: server.cache.evictions,
+                    cache_entries: server.cache.len(),
+                    cache_bytes: server.cache.bytes(),
+                    registry_bytes: server.registry.bytes(),
+                    queue_depth: pending,
+                    ..Default::default()
+                };
+                let gauges = qst::obs::prom::GatewayGauges {
+                    submitted: rep.stats.requests + pending,
+                    rejected: 0,
+                    dropped: rep.stats.dropped,
+                    in_flight: pending,
+                };
+                let report = qst::gateway::aggregate(vec![rep]);
+                print!("{}", qst::obs::prom::render(&report, &gauges));
+                continue;
+            }
             Ok(TextLine::Request { task, tokens }) => (task, tokens),
             Err(e) => {
                 eprintln!("{e}");
@@ -248,6 +303,7 @@ fn drain_and_print<E: Engine>(server: &mut Server<E>) {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace_out = trace_arm(args);
     let cfg = serve_config(args)?;
     if args.has("synthetic") || args.get("config").is_none() {
         let seq = args.usize_or("seq", 64)?;
@@ -267,7 +323,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for i in 0..n_tasks {
             server.registry.register_synthetic(&format!("task{i}"), seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
         }
-        return serve_loop(&mut server);
+        serve_loop(&mut server)?;
+        if let Some(p) = &trace_out {
+            trace_finish(p, Vec::new())?;
+        }
+        return Ok(());
     }
     // artifact mode: per-task eval graphs over one shared quantized backbone
     let cfg_name = args.require("config")?.to_string();
@@ -297,7 +357,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut server = Server::new(engine, cfg);
     server.registry = server_registry;
-    serve_loop(&mut server)
+    serve_loop(&mut server)?;
+    if let Some(p) = &trace_out {
+        trace_finish(p, Vec::new())?;
+    }
+    Ok(())
 }
 
 /// `qst gateway`: the asynchronous sharded front-end over the line
@@ -309,6 +373,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// gateway's flags).  Synthetic backend only — artifact serving stays on
 /// `qst serve` until split backbone artifacts land.
 fn cmd_gateway(args: &Args) -> Result<()> {
+    let trace_out = trace_arm(args);
     let connect: Option<Vec<String>> = args
         .get("connect")
         .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect());
@@ -322,6 +387,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         seq: args.usize_or("seq", 64)?,
         tasks: args.usize_or("num-tasks", 2)?.max(1),
         threads_per_shard: args.usize_or("threads", 1)?,
+        trace: trace_out.is_some(),
     };
     // Gateway::connect owns the shards-from-addresses derivation, so the
     // banner reads the fleet shape back from the constructed gateway
@@ -360,9 +426,22 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     let stdin = std::io::stdin();
     let mut out = std::io::stdout();
     qst::gateway::line_loop(&mut gw, stdin.lock(), &mut out)?;
+    let remote = if trace_out.is_some() {
+        // one last report pulls the socket workers' final span batches
+        // (each `Telemetry` rides ahead of its `Report` on the per-shard
+        // FIFO); in-proc shard rings live in this process and are drained
+        // by `trace_finish` directly
+        let _ = gw.report();
+        gw.take_remote_spans()
+    } else {
+        Vec::new()
+    };
     let (report, leftover) = gw.shutdown()?;
     debug_assert!(leftover.is_empty(), "line_loop flushes before returning");
     println!("{}", report.summary());
+    if let Some(p) = &trace_out {
+        trace_finish(p, remote)?;
+    }
     // shard engines fanned kernel workers out of the process-wide pool;
     // join them on the way out instead of leaking parked threads
     qst::kernels::shutdown_pool();
@@ -415,6 +494,7 @@ fn cmd_bench_gateway(args: &Args) -> Result<()> {
         threads_per_shard: args.usize_or("threads-per-shard", 1)?,
         preset: serve::EnginePreset::parse(&args.str_or("preset", "large"))?,
         backbone: serve::BackboneKind::parse(&args.str_or("backbone", "w4"))?,
+        trace_out: args.get("trace-out").map(|s| s.to_string()),
     };
     let report = qst::gateway::bench::run_bench(&opts)?;
     println!("{}", report.summary());
@@ -444,6 +524,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         // off by default so the BENCH_serve.json trajectory stays
         // comparable across PRs; bench-gateway owns the prefix story
         prefix_block: args.usize_or("prefix-block", 0)?,
+        trace_out: args.get("trace-out").map(|s| s.to_string()),
     };
     let report = serve::workload::run_bench(&opts)?;
     println!("{}", report.summary());

@@ -1,0 +1,318 @@
+//! A mergeable log-bucketed latency histogram.
+//!
+//! The decimated reservoir in [`crate::serve::stats`] is exact for one
+//! server but lossy to merge: two reservoirs at different decimation
+//! strides weight their shards' samples unequally.  A fixed-bucket
+//! histogram has the complementary trade-off — each sample lands in a
+//! bucket whose width bounds the error, and merging is *exact*: bucket
+//! counts add, so a fleet percentile computed from N merged shard
+//! histograms is identical to the percentile of one histogram fed every
+//! raw sample, across threads and across processes (the bucket counts
+//! travel verbatim in the `Report` frame).
+//!
+//! Buckets are geometric with [`HIST_SUB`] subdivisions per octave
+//! (power of two), covering [`HIST_MIN_SECS`] up to ~4.6 hours; bucket
+//! `b` spans `MIN * 2^(b/SUB) .. MIN * 2^((b+1)/SUB)`, so the relative
+//! width of every bucket is `2^(1/4) - 1 ≈ 19%` — percentiles come back
+//! within one bucket width of the exact sample value.
+
+/// Number of buckets (plus an implicit underflow fold into bucket 0 and
+/// overflow fold into the last bucket).
+pub const HIST_BUCKETS: usize = 128;
+/// Subdivisions per octave (factor-of-2 range).
+pub const HIST_SUB: usize = 4;
+/// Lower edge of bucket 0, in seconds (2^-20 s ≈ 0.95 µs).
+pub const HIST_MIN_SECS: f64 = 1.0 / (1 << 20) as f64;
+
+/// Log-bucketed histogram over positive `f64` seconds.  `Default` is the
+/// empty histogram; [`LogHistogram::merge`] is commutative, associative,
+/// and exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Reassemble a histogram from its wire fields.  `counts` may be
+    /// shorter than [`HIST_BUCKETS`] (encoders trim trailing zero
+    /// buckets); longer is the caller's decode error to reject.  An
+    /// empty histogram (`count == 0`) is normalized to the canonical
+    /// empty state so wire round-trips compare equal.
+    pub fn from_parts(counts: Vec<u64>, count: u64, sum: f64, min: f64, max: f64) -> Self {
+        if count == 0 {
+            return Self::new();
+        }
+        let mut full = counts;
+        full.resize(HIST_BUCKETS, 0);
+        LogHistogram { counts: full, count, sum, min, max }
+    }
+
+    /// Bucket index for a sample (under/overflow fold into the edges).
+    pub fn bucket_of(v: f64) -> usize {
+        if !(v > HIST_MIN_SECS) {
+            // non-positive, NaN, and sub-resolution samples land in 0
+            return 0;
+        }
+        let b = ((v / HIST_MIN_SECS).log2() * HIST_SUB as f64).floor();
+        (b as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// `[lo, hi)` bounds of bucket `b`, in seconds.
+    pub fn bucket_bounds(b: usize) -> (f64, f64) {
+        let scale = |i: usize| HIST_MIN_SECS * 2f64.powf(i as f64 / HIST_SUB as f64);
+        (scale(b), scale(b + 1))
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Exact merge: bucket counts add.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Raw bucket counts (for the wire encoder and the `STATS`
+    /// exposition).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Index past the last non-zero bucket — encoders trim here.
+    pub fn trimmed_len(&self) -> usize {
+        self.counts.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1)
+    }
+
+    /// Nearest-rank percentile: the upper edge of the bucket holding the
+    /// rank-th sample, clamped to the observed min/max.  Since the rank
+    /// falls in the same bucket as the exact sample would, the result is
+    /// within one bucket width of the true percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let (_, hi) = Self::bucket_bounds(b);
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50_secs(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95_secs(&self) -> f64 {
+        self.percentile(95.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift so tests need no external RNG.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    fn sample(state: &mut u64) -> f64 {
+        // latencies spread over ~5 orders of magnitude: 10 µs .. 1 s
+        let u = (xorshift(state) >> 11) as f64 / (1u64 << 53) as f64;
+        1e-5 * (1e5f64).powf(u)
+    }
+
+    fn true_pct(sorted: &[f64], p: f64) -> f64 {
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn bucket_bounds_cover_samples() {
+        for &v in &[1e-7, 1e-6, 3.2e-5, 0.001, 0.25, 1.0, 60.0, 1e6] {
+            let b = LogHistogram::bucket_of(v);
+            let (lo, hi) = LogHistogram::bucket_bounds(b);
+            if b > 0 && b < HIST_BUCKETS - 1 {
+                assert!(lo <= v && v < hi, "sample {v} outside bucket {b} [{lo},{hi})");
+            }
+        }
+        // degenerate inputs fold into bucket 0, never panic
+        for &v in &[0.0, -1.0, f64::NAN, f64::NEG_INFINITY] {
+            assert_eq!(LogHistogram::bucket_of(v), 0);
+        }
+        assert_eq!(LogHistogram::bucket_of(f64::INFINITY), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_width() {
+        let mut state = 0xC0FFEE;
+        let mut h = LogHistogram::new();
+        let mut raw = Vec::new();
+        for _ in 0..20_000 {
+            let v = sample(&mut state);
+            h.record(v);
+            raw.push(v);
+        }
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let want = true_pct(&raw, p);
+            let got = h.percentile(p);
+            let (lo, hi) = LogHistogram::bucket_bounds(LogHistogram::bucket_of(want));
+            let width = hi - lo;
+            assert!(
+                (got - want).abs() <= width,
+                "p{p}: got {got}, want {want}, bucket width {width}"
+            );
+        }
+    }
+
+    #[test]
+    fn four_shard_merge_matches_concatenated_raw_samples() {
+        // the acceptance property: merging 4 shards' histograms gives the
+        // same percentiles as one histogram over all raw samples, and
+        // both land within one bucket width of the exact sorted answer —
+        // even when the shards saw very different load (sample counts)
+        let mut state = 0xBADC0DE;
+        let mut shard_hists: Vec<LogHistogram> = Vec::new();
+        let mut all_raw: Vec<f64> = Vec::new();
+        let mut reference = LogHistogram::new();
+        for n in [10_000usize, 3_000, 400, 25] {
+            let mut h = LogHistogram::new();
+            for _ in 0..n {
+                let v = sample(&mut state);
+                h.record(v);
+                reference.record(v);
+                all_raw.push(v);
+            }
+            shard_hists.push(h);
+        }
+        let mut merged = LogHistogram::new();
+        for h in &shard_hists {
+            merged.merge(h);
+        }
+        // merge is EXACT: identical to feeding every raw sample into one
+        assert_eq!(merged, reference);
+        assert_eq!(merged.count() as usize, all_raw.len());
+        all_raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let want = true_pct(&all_raw, p);
+            let got = merged.percentile(p);
+            let (lo, hi) = LogHistogram::bucket_bounds(LogHistogram::bucket_of(want));
+            assert!(
+                (got - want).abs() <= hi - lo,
+                "p{p}: merged {got} vs raw {want} (bucket width {})",
+                hi - lo
+            );
+        }
+    }
+
+    #[test]
+    fn merge_order_does_not_matter() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 1..100 {
+            a.record(i as f64 / 1000.0);
+            b.record(i as f64 / 10.0);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        let empty = LogHistogram::new();
+        let mut ae = a.clone();
+        ae.merge(&empty);
+        assert_eq!(ae, a, "merging the empty histogram is the identity");
+    }
+
+    #[test]
+    fn from_parts_round_trips_trimmed_counts() {
+        let mut h = LogHistogram::new();
+        for &v in &[0.001, 0.002, 0.004, 1.5] {
+            h.record(v);
+        }
+        let trimmed = h.counts()[..h.trimmed_len()].to_vec();
+        let back = LogHistogram::from_parts(trimmed, h.count(), h.sum(), h.min, h.max);
+        assert_eq!(back, h);
+    }
+}

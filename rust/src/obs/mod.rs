@@ -1,0 +1,47 @@
+//! `obs` — request-lifecycle tracing and mergeable fleet metrics.
+//!
+//! The QST paper's claims are quantitative (memory and wall-clock), yet
+//! until this module the repo could only report end-of-run p50/p95 from
+//! a decimated reservoir — no visibility into *where* a request spends
+//! its time (queue vs. backbone GEMM vs. prefix resume vs. side net) or
+//! *why* a shard stalls.  `obs` is the always-compiled, runtime-toggled
+//! observability layer that closes that gap without taking a
+//! dependency or perturbing results:
+//!
+//! * [`span`] — a per-thread ring-buffer span recorder with a fixed
+//!   vocabulary covering the request lifecycle (`admit → route →
+//!   shard_queue → batch_assemble → backbone → prefix_resume → sidenet
+//!   → respond`) plus kernel spans (`gemm`, `qgemm`, `pool_dispatch`).
+//!   Disabled cost is one relaxed atomic load per site.
+//! * [`hist`] — a log-bucketed histogram whose merge is *exact*, so
+//!   fleet percentiles aggregated across shards and processes are not
+//!   skewed by uneven load (unlike merged decimated reservoirs).
+//! * [`trace`] — Chrome trace-event JSON export (`--trace-out`,
+//!   loadable in Perfetto / `chrome://tracing`).
+//! * [`prom`] — Prometheus-style text exposition of the merged fleet
+//!   snapshot (the gateway line protocol's `STATS` command).
+//!
+//! **Parity invariant**: recording reads clocks and appends to rings —
+//! it never touches request data, so tracing on/off cannot change one
+//! output bit.  `bench-gateway` runs a traced pass and refuses to
+//! serialize its report unless the responses are bit-identical to the
+//! untraced pass.
+
+pub mod hist;
+pub mod prom;
+pub mod span;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use span::{SpanKind, Span};
+pub use span::{drain, enabled, end, end_backdated, set_enabled, start};
+
+/// Serialize tests that toggle the process-global recorder (the
+/// `cargo test` harness runs tests on concurrent threads, and both the
+/// enable flag and the span registry are shared).  Test-only helper —
+/// exported because integration tests live in a separate crate.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}

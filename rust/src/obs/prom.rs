@@ -1,0 +1,183 @@
+//! Prometheus-style text exposition of the merged fleet snapshot — what
+//! the gateway line protocol returns for the `STATS` command.
+//!
+//! Format is the Prometheus text format (`# HELP` / `# TYPE` headers,
+//! `name{labels} value` samples): fleet-wide counters and gauges from
+//! the merged [`GatewayReport`], per-shard gauges labelled
+//! `{shard="i"}`, and the request-latency distribution as a cumulative
+//! `_bucket{le="…"}` histogram straight from the mergeable
+//! [`LogHistogram`] — the buckets merged exactly across shards and
+//! processes, so fleet percentiles scraped here are not skewed by
+//! uneven shard load.
+
+use std::fmt::Write;
+
+use crate::gateway::GatewayReport;
+
+use super::hist::LogHistogram;
+
+/// Gateway-side (transport-ingress) counters that no shard can see:
+/// admission and backpressure happen before a request reaches a shard.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayGauges {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub dropped: u64,
+    pub in_flight: u64,
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn per_shard(out: &mut String, name: &str, help: &str, kind: &str, vals: &[(usize, u64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (shard, v) in vals {
+        let _ = writeln!(out, "{name}{{shard=\"{shard}\"}} {v}");
+    }
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &LogHistogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (b, &c) in h.counts().iter().enumerate().take(h.trimmed_len()) {
+        cum += c;
+        if c == 0 {
+            continue; // keep the exposition compact: only buckets that moved
+        }
+        let (_, le) = LogHistogram::bucket_bounds(b);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le:.9}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {:.9}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render the merged fleet snapshot as Prometheus text exposition.
+pub fn render(report: &GatewayReport, gw: &GatewayGauges) -> String {
+    let mut out = String::with_capacity(4096);
+    let m = &report.merged;
+    counter(&mut out, "qst_requests_total", "requests served by the fleet", m.requests);
+    counter(&mut out, "qst_tokens_total", "prompt tokens served", m.tokens);
+    counter(&mut out, "qst_batches_total", "micro-batches processed", m.batches);
+    counter(&mut out, "qst_dropped_total", "requests dropped in failing micro-batches", m.dropped);
+    counter(
+        &mut out,
+        "qst_prefix_resumes_total",
+        "cache misses served by resuming a cached prefix",
+        m.prefix_resumes,
+    );
+    counter(&mut out, "qst_cache_hits_total", "whole-prompt hidden-state cache hits", report.cache_hits);
+    counter(&mut out, "qst_cache_misses_total", "whole-prompt hidden-state cache misses", report.cache_misses);
+    counter(&mut out, "qst_cache_evictions_total", "hidden-state cache evictions", report.cache_evictions);
+    counter(&mut out, "qst_backbone_rows_total", "rows through the full frozen backbone", report.backbone_rows);
+    counter(&mut out, "qst_resumed_rows_total", "rows resumed from a cached prefix", report.resumed_rows);
+    gauge(&mut out, "qst_cache_bytes", "resident hidden-state cache bytes (fleet sum)", report.cache_bytes as u64);
+    gauge(&mut out, "qst_registry_bytes", "resident side-network registry bytes (fleet sum)", report.registry_bytes as u64);
+    gauge(
+        &mut out,
+        "qst_backbone_resident_bytes",
+        "resident backbone bytes (one replica per shard)",
+        report.backbone_resident_bytes as u64,
+    );
+    counter(&mut out, "qst_gateway_submitted_total", "requests accepted by the gateway", gw.submitted);
+    counter(
+        &mut out,
+        "qst_gateway_backpressure_rejections_total",
+        "submits refused because the routed shard was saturated",
+        gw.rejected,
+    );
+    gauge(&mut out, "qst_gateway_in_flight", "requests accepted but not yet answered", gw.in_flight);
+    per_shard(
+        &mut out,
+        "qst_shard_requests_total",
+        "requests served per shard",
+        "counter",
+        &report.shards.iter().map(|r| (r.shard, r.stats.requests)).collect::<Vec<_>>(),
+    );
+    per_shard(
+        &mut out,
+        "qst_shard_queue_depth",
+        "requests accepted by the shard but not yet drained (at report time)",
+        "gauge",
+        &report.shards.iter().map(|r| (r.shard, r.queue_depth)).collect::<Vec<_>>(),
+    );
+    per_shard(
+        &mut out,
+        "qst_shard_inflight_peak",
+        "largest micro-batch of in-flight requests the shard has assembled",
+        "gauge",
+        &report.shards.iter().map(|r| (r.shard, r.inflight_peak)).collect::<Vec<_>>(),
+    );
+    per_shard(
+        &mut out,
+        "qst_shard_full_soaks_total",
+        "micro-batch soaks that filled to the batch cap (saturation signal)",
+        "counter",
+        &report.shards.iter().map(|r| (r.shard, r.full_soaks)).collect::<Vec<_>>(),
+    );
+    histogram(
+        &mut out,
+        "qst_request_latency_seconds",
+        "request latency (queue + compute), merged exactly across shards",
+        &m.hist,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::aggregate;
+    use crate::proto::ShardReport;
+
+    fn report() -> GatewayReport {
+        let mut a = ShardReport { shard: 0, ..Default::default() };
+        a.stats.requests = 6;
+        a.stats.hist.record(0.010);
+        a.stats.hist.record(0.020);
+        a.cache_hits = 3;
+        a.queue_depth = 2;
+        let mut b = ShardReport { shard: 1, ..Default::default() };
+        b.stats.requests = 4;
+        b.stats.hist.record(0.040);
+        b.full_soaks = 5;
+        aggregate(vec![a, b])
+    }
+
+    #[test]
+    fn exposition_has_counters_gauges_and_histogram() {
+        let text = render(&report(), &GatewayGauges { submitted: 10, rejected: 2, dropped: 0, in_flight: 1 });
+        assert!(text.contains("# TYPE qst_requests_total counter"));
+        assert!(text.contains("qst_requests_total 10"));
+        assert!(text.contains("qst_cache_hits_total 3"));
+        assert!(text.contains("qst_gateway_backpressure_rejections_total 2"));
+        assert!(text.contains("qst_shard_queue_depth{shard=\"0\"} 2"));
+        assert!(text.contains("qst_shard_full_soaks_total{shard=\"1\"} 5"));
+        assert!(text.contains("# TYPE qst_request_latency_seconds histogram"));
+        assert!(text.contains("qst_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("qst_request_latency_seconds_count 3"));
+        // cumulative buckets are monotonically non-decreasing
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("qst_request_latency_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
+        // every sample line parses as `name[{labels}] number`
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, val) = line.rsplit_once(' ').unwrap();
+            assert!(val.parse::<f64>().is_ok(), "unparseable sample: {line}");
+        }
+    }
+}

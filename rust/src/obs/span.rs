@@ -1,0 +1,342 @@
+//! The request-lifecycle span recorder: per-thread bounded rings behind
+//! one global on/off switch.
+//!
+//! Design constraints (see the module docs in [`super`]):
+//!
+//! * **Disabled cost ≈ one branch.**  Every instrumentation site first
+//!   loads one relaxed [`AtomicBool`]; when tracing is off nothing else
+//!   runs — no clock reads, no allocation, no locks.
+//! * **Parity-safe.**  Recording only reads the monotonic clock and
+//!   appends to a ring; it never touches request data, so turning
+//!   tracing on cannot change a single output bit (pinned by the
+//!   `bench-gateway` trace-parity gate).
+//! * **Bounded memory.**  Each thread owns a fixed-capacity ring
+//!   ([`RING_CAP`] spans); at capacity the oldest span is overwritten
+//!   and counted in `dropped`, so a long-running server can trace
+//!   forever without growing.
+//! * **Uncontended fast path.**  A thread records into its own ring
+//!   through a thread-local `Arc`; the per-ring mutex is only ever
+//!   contended by [`drain`] (export time), so the hot-path lock is one
+//!   uncontended compare-and-swap.
+//!
+//! Timestamps are nanoseconds on a process-local monotonic epoch (first
+//! use of the recorder).  Spans shipped across processes in `Telemetry`
+//! frames keep the *worker's* epoch — Chrome trace viewers only need
+//! per-process (`pid`) consistency, which is exactly what they get.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity, in spans (~32 B each → ≤ ~256 KiB/thread).
+pub const RING_CAP: usize = 8192;
+
+/// The fixed span vocabulary.  The first eight are the request
+/// lifecycle, in pipeline order; the last three are kernel-level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// request validation + admission (gateway or server ingress)
+    Admit = 0,
+    /// routing the prompt to a shard / a task's side network
+    Route = 1,
+    /// time spent queued in a shard inbox / server queue before batching
+    ShardQueue = 2,
+    /// micro-batch assembly: padding + cache-key resolution
+    BatchAssemble = 3,
+    /// the frozen backbone forward over fresh rows
+    Backbone = 4,
+    /// resuming a cached prefix instead of a full backbone forward
+    PrefixResume = 5,
+    /// the per-task side-network forward
+    Sidenet = 6,
+    /// response construction + latency accounting
+    Respond = 7,
+    /// dense f32 GEMM kernel
+    Gemm = 8,
+    /// packed-W4 fused dequant GEMM kernel
+    Qgemm = 9,
+    /// handing row runs to the persistent kernel worker pool
+    PoolDispatch = 10,
+}
+
+impl SpanKind {
+    /// Every kind, in tag order.
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Admit,
+        SpanKind::Route,
+        SpanKind::ShardQueue,
+        SpanKind::BatchAssemble,
+        SpanKind::Backbone,
+        SpanKind::PrefixResume,
+        SpanKind::Sidenet,
+        SpanKind::Respond,
+        SpanKind::Gemm,
+        SpanKind::Qgemm,
+        SpanKind::PoolDispatch,
+    ];
+
+    /// The eight request-lifecycle kinds (what the tracing smoke in
+    /// `scripts/check.sh` requires to appear in a trace).
+    pub const LIFECYCLE: [SpanKind; 8] = [
+        SpanKind::Admit,
+        SpanKind::Route,
+        SpanKind::ShardQueue,
+        SpanKind::BatchAssemble,
+        SpanKind::Backbone,
+        SpanKind::PrefixResume,
+        SpanKind::Sidenet,
+        SpanKind::Respond,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Route => "route",
+            SpanKind::ShardQueue => "shard_queue",
+            SpanKind::BatchAssemble => "batch_assemble",
+            SpanKind::Backbone => "backbone",
+            SpanKind::PrefixResume => "prefix_resume",
+            SpanKind::Sidenet => "sidenet",
+            SpanKind::Respond => "respond",
+            SpanKind::Gemm => "gemm",
+            SpanKind::Qgemm => "qgemm",
+            SpanKind::PoolDispatch => "pool_dispatch",
+        }
+    }
+
+    /// Wire decode; `None` for an unknown tag (the telemetry decoder
+    /// turns that into a typed `Malformed`, never a panic).
+    pub fn from_u8(b: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(b as usize).copied()
+    }
+}
+
+/// One completed span: what happened (`kind`), to which request (`id`,
+/// 0 when the work is not request-scoped, e.g. kernel spans), when, for
+/// how long, on which thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub id: u64,
+    /// nanoseconds since the recording process's trace epoch
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// recorder-assigned thread index (stable per thread per process)
+    pub tid: u32,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    /// next write slot (the ring overwrites oldest-first at capacity)
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, s: Span) {
+        if self.spans.len() < RING_CAP {
+            self.spans.push(s);
+        } else {
+            self.spans[self.head] = s;
+            self.dropped += 1;
+        }
+        self.head = (self.head + 1) % RING_CAP;
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<(u32, Arc<Mutex<Ring>>)> = const { std::cell::OnceCell::new() };
+}
+
+/// Is span recording on?  One relaxed atomic load — the entire cost of
+/// an instrumentation site when tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off (process-wide).  Enabling pins the trace
+/// epoch on first use so all timestamps share one origin.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Nanoseconds since the trace epoch.
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Open a span: returns the start timestamp, or 0 when recording is
+/// off.  Pair with [`end`].
+#[inline]
+pub fn start() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    now_ns().max(1)
+}
+
+/// Close a span opened by [`start`].  A 0 start (recording was off at
+/// open) is a no-op, so a mid-span toggle never records garbage.
+#[inline]
+pub fn end(kind: SpanKind, start_ns: u64, id: u64) {
+    if start_ns == 0 || !enabled() {
+        return;
+    }
+    let dur = now_ns().saturating_sub(start_ns);
+    record(Span { kind, id, start_ns, dur_ns: dur, tid: 0 });
+}
+
+/// Record a span whose start lies `dur_ns` in the past (used for queue
+/// wait: the enqueue instant predates the batch that observes it).
+#[inline]
+pub fn end_backdated(kind: SpanKind, dur_ns: u64, id: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = now_ns();
+    record(Span { kind, id, start_ns: now.saturating_sub(dur_ns), dur_ns, tid: 0 });
+}
+
+fn record(mut s: Span) {
+    LOCAL.with(|cell| {
+        let (tid, ring) = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let ring = Arc::new(Mutex::new(Ring {
+                spans: Vec::with_capacity(64),
+                head: 0,
+                dropped: 0,
+            }));
+            registry().lock().expect("span registry poisoned").push(Arc::clone(&ring));
+            (tid, ring)
+        });
+        s.tid = *tid;
+        // uncontended except against drain(); never blocks the hot path
+        // for longer than the drain's memcpy
+        ring.lock().expect("span ring poisoned").push(s);
+    });
+}
+
+/// Collect (and clear) every thread's recorded spans, sorted by start
+/// time.  Returns the spans and the total count of spans lost to ring
+/// overwrites.  Threads keep their rings registered, so a drain mid-run
+/// loses nothing that comes after it.
+pub fn drain() -> (Vec<Span>, u64) {
+    let mut out = Vec::new();
+    let mut dropped = 0u64;
+    for ring in registry().lock().expect("span registry poisoned").iter() {
+        let mut r = ring.lock().expect("span ring poisoned");
+        // restore chronological order across the wrap point (a full ring's
+        // oldest entry sits at `head`, the next overwrite slot)
+        if r.spans.len() == RING_CAP && r.head != 0 {
+            out.extend_from_slice(&r.spans[r.head..]);
+            out.extend_from_slice(&r.spans[..r.head]);
+        } else {
+            out.extend_from_slice(&r.spans);
+        }
+        dropped += r.dropped;
+        r.spans.clear();
+        r.head = 0;
+        r.dropped = 0;
+    }
+    out.sort_by_key(|s| (s.start_ns, s.tid));
+    (out, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global and `cargo test` threads share it,
+    // so: serialize toggling tests behind the crate-wide obs test lock,
+    // and filter drained spans by a test-unique id marker — spans from
+    // instrumented code in concurrently running tests are not ours.
+    fn ours(spans: &[Span], marker: u64) -> Vec<Span> {
+        spans.iter().copied().filter(|s| s.id & 0xFFFF_0000_0000_0000 == marker).collect()
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let _g = super::super::test_lock();
+        set_enabled(false);
+        let _ = drain();
+        let marker = 0x00A1_0000_0000_0000u64;
+        let t = start();
+        assert_eq!(t, 0, "disabled start() must not read the clock");
+        end(SpanKind::Backbone, t, marker | 1);
+        end_backdated(SpanKind::ShardQueue, 500, marker | 1);
+        let (spans, _) = drain();
+        assert!(ours(&spans, marker).is_empty());
+    }
+
+    #[test]
+    fn spans_round_trip_through_drain() {
+        let _g = super::super::test_lock();
+        set_enabled(false);
+        let _ = drain();
+        set_enabled(true);
+        let marker = 0x00A2_0000_0000_0000u64;
+        let t = start();
+        assert!(t > 0);
+        end(SpanKind::Gemm, t, marker | 7);
+        end_backdated(SpanKind::ShardQueue, 1_000, marker | 9);
+        set_enabled(false);
+        let (all, _) = drain();
+        let spans = ours(&all, marker);
+        assert_eq!(spans.len(), 2);
+        let kinds: Vec<&str> = spans.iter().map(|s| s.kind.name()).collect();
+        assert!(kinds.contains(&"gemm") && kinds.contains(&"shard_queue"));
+        let sq = spans.iter().find(|s| s.kind == SpanKind::ShardQueue).unwrap();
+        assert_eq!(sq.dur_ns, 1_000);
+        assert_eq!(sq.id, marker | 9);
+        // chronological output
+        assert!(all.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_counts_drops() {
+        let _g = super::super::test_lock();
+        set_enabled(false);
+        let _ = drain();
+        set_enabled(true);
+        let marker = 0x00A3_0000_0000_0000u64;
+        for i in 0..(RING_CAP + 100) as u64 {
+            let t = start();
+            end(SpanKind::Respond, t, marker | i);
+        }
+        set_enabled(false);
+        let (all, dropped) = drain();
+        let spans = ours(&all, marker);
+        // this thread's ring held the cap and overwrote exactly 100
+        assert_eq!(spans.len(), RING_CAP);
+        assert!(dropped >= 100);
+        // the ring kept the NEWEST spans (oldest overwritten), in order
+        assert_eq!(spans.first().unwrap().id, marker | 100);
+        assert_eq!(spans.last().unwrap().id, marker | (RING_CAP + 100 - 1) as u64);
+    }
+
+    #[test]
+    fn kind_names_and_tags_are_stable() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(*k as u8 as usize, i);
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+        assert_eq!(SpanKind::LIFECYCLE.len(), 8);
+        assert_eq!(SpanKind::LIFECYCLE[0].name(), "admit");
+        assert_eq!(SpanKind::LIFECYCLE[7].name(), "respond");
+    }
+}

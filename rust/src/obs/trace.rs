@@ -1,0 +1,110 @@
+//! Chrome trace-event JSON export (the `--trace-out` file).
+//!
+//! Emits the "JSON Object Format" of the Trace Event spec — a
+//! `{"traceEvents": [...]}` object of complete (`"ph":"X"`) events —
+//! which loads directly in Perfetto (<https://ui.perfetto.dev>) and
+//! `chrome://tracing`.  Timestamps are microseconds; each event carries
+//! the span name from the fixed vocabulary, the recording process's
+//! `pid` lane (0 = this process, shard `i` ships as `i + 1`), the
+//! recorder thread id, and the request id in `args`.
+//!
+//! Hand-rolled like [`crate::benchkit::Json`]: every name in a trace is
+//! a `'static` identifier from [`SpanKind::name`], so no string escaping
+//! is needed — the writer stays ~40 lines and dependency-free.
+
+use std::io::Write;
+
+use super::span::{Span, SpanKind};
+
+/// One span tagged with its origin process lane for the trace file.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpan {
+    /// 0 = the local process; socket shard workers ship as `shard + 1`
+    pub pid: u32,
+    pub span: Span,
+}
+
+/// Tag local spans with pid lane 0.
+pub fn local(spans: Vec<Span>) -> Vec<TraceSpan> {
+    spans.into_iter().map(|span| TraceSpan { pid: 0, span }).collect()
+}
+
+/// Serialize spans as Chrome trace-event JSON.
+pub fn render(spans: &[TraceSpan]) -> String {
+    let mut out = String::with_capacity(128 + spans.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, ts) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let s = &ts.span;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"qst\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"id\":{}}}}}",
+            s.kind.name(),
+            s.start_ns as f64 / 1e3,
+            s.dur_ns as f64 / 1e3,
+            ts.pid,
+            s.tid,
+            s.id
+        ));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Write a trace file; parent directories must exist.
+pub fn write_file(path: &str, spans: &[TraceSpan]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render(spans).as_bytes())?;
+    f.flush()
+}
+
+/// Which span names appear in a span set — the tracing smoke asserts
+/// every lifecycle name is present.
+pub fn kinds_present(spans: &[TraceSpan]) -> Vec<&'static str> {
+    let mut seen = [false; SpanKind::ALL.len()];
+    for ts in spans {
+        seen[ts.span.kind as u8 as usize] = true;
+    }
+    SpanKind::ALL.iter().filter(|k| seen[**k as u8 as usize]).map(|k| k.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start: u64, dur: u64, id: u64) -> TraceSpan {
+        TraceSpan { pid: 0, span: Span { kind, id, start_ns: start, dur_ns: dur, tid: 3 } }
+    }
+
+    #[test]
+    fn render_is_wellformed_trace_json() {
+        let spans =
+            vec![span(SpanKind::Backbone, 1_500, 2_000, 42), span(SpanKind::Respond, 4_000, 10, 42)];
+        let j = render(&spans);
+        assert!(j.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(j.trim_end().ends_with("]}"));
+        assert!(j.contains("\"name\":\"backbone\""));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"ts\":1.500")); // ns -> µs
+        assert!(j.contains("\"dur\":2.000"));
+        assert!(j.contains("\"args\":{\"id\":42}"));
+        // brace/bracket balance is a cheap structural well-formedness check
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = j.matches(open).count();
+            let c = j.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close}");
+        }
+        assert_eq!(render(&[]), "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[]}\n");
+    }
+
+    #[test]
+    fn kinds_present_lists_names_once() {
+        let spans = vec![
+            span(SpanKind::Admit, 0, 1, 1),
+            span(SpanKind::Admit, 2, 1, 2),
+            span(SpanKind::Gemm, 3, 1, 0),
+        ];
+        assert_eq!(kinds_present(&spans), vec!["admit", "gemm"]);
+    }
+}

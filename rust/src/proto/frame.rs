@@ -6,10 +6,21 @@
 //!   offset  size  field
 //!   0       4     magic  "QSTW"
 //!   4       2     protocol version (u16 LE) — this build speaks VERSION
-//!   6       1     message tag (request tags 1–5, event tags 16–20)
+//!   6       1     message tag (request tags 1–5, event tags 16–21)
 //!   7       4     payload length (u32 LE), capped at MAX_PAYLOAD
 //!   11      n     payload (message-specific, see [`super::wire`])
 //! ```
+//!
+//! # Payload evolution without a version bump
+//!
+//! Fields added after v1 shipped (the spec's `trace` flag, the report's
+//! histogram/stride/queue-gauge tail) are appended at the **end** of
+//! their payload, where [`Dec::remaining`] is unambiguous: a decoder
+//! reads them iff bytes remain, and treats absence as defaults.  Old
+//! frames decode on new builds (defaults), and old builds reject new
+//! frames with a typed trailing-bytes `Malformed` — never a panic.  The
+//! `Telemetry` event instead carries its own inner schema version, since
+//! its span array must be able to change layout, not just grow a tail.
 //!
 //! Decoding **never panics**: bad magic, an unknown version, an unknown
 //! tag, a truncated buffer/stream, an over-cap length, or a structurally
@@ -26,10 +37,12 @@ use std::io::Read;
 
 use anyhow::{Context, Result};
 
+use crate::obs::hist::HIST_BUCKETS;
+use crate::obs::{LogHistogram, Span, SpanKind};
 use crate::serve::{Response, StatsSnapshot};
 
 use super::wire::{Dec, DecodeError, Enc};
-use super::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec};
+use super::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, TelemetryBatch};
 
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"QSTW";
@@ -53,6 +66,15 @@ const TAG_DROPPED: u8 = 17;
 const TAG_REJECTED: u8 = 18;
 const TAG_FLUSH_ACK: u8 = 19;
 const TAG_REPORT_REPLY: u8 = 20;
+const TAG_TELEMETRY: u8 = 21;
+
+/// Inner schema version of the `Telemetry` payload — the span layout can
+/// evolve without bumping the whole protocol.  A mismatch is a typed
+/// `Malformed`, never a panic.
+pub const TELEMETRY_VERSION: u16 = 1;
+/// Encoded bytes per span (kind u8, id u64, start_ns u64, dur_ns u64,
+/// tid u32) — the allocation guard for the declared span count.
+const SPAN_BYTES: usize = 1 + 8 + 8 + 8 + 4;
 
 /// Start a frame: header with the length field zeroed, payload appended
 /// by the caller, length patched by [`seal_frame`].  One buffer, no
@@ -150,6 +172,8 @@ fn enc_spec(e: &mut Enc, s: &ShardSpec) {
     e.u64(s.serve.registry_bytes as u64);
     e.u64(s.serve.max_batch as u64);
     e.u64(s.serve.prefix_block as u64);
+    // tail field (see the module docs): absent on old frames ⇒ false
+    e.bool(s.trace);
 }
 
 fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
@@ -172,6 +196,8 @@ fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
             max_batch: d.usize_("spec max_batch")?,
             prefix_block: d.usize_("spec prefix_block")?,
         },
+        // tail field: a frame from before the flag existed ends here
+        trace: if d.remaining() > 0 { d.bool("spec trace")? } else { false },
     };
     // a worker builds an engine straight from this, so an untrusted but
     // well-formed frame must not panic it or drive unbounded allocation
@@ -198,6 +224,10 @@ fn dec_snapshot(d: &mut Dec) -> Result<StatsSnapshot, DecodeError> {
         prefix_resumes: d.u64("stats prefix_resumes")?,
         busy_secs: d.f64("stats busy_secs")?,
         lat: d.vec_f64("stats latency reservoir")?,
+        // the snapshot is nested mid-report, so its stride/histogram ride
+        // the *report's* tail (where `remaining()` is unambiguous) and are
+        // patched into these defaults by `dec_report`
+        ..StatsSnapshot::default()
     })
 }
 
@@ -215,10 +245,21 @@ fn enc_report(e: &mut Enc, r: &ShardReport) {
     e.u64(r.resumed_positions);
     e.u64(r.backbone_resident_bytes as u64);
     e.u64(r.registry_bytes as u64);
+    // tail fields (see the module docs): reservoir stride, the exact
+    // latency histogram (trailing zero buckets trimmed), queue gauges
+    e.u64(r.stats.lat_stride.max(1));
+    e.u64(r.stats.hist.count());
+    e.f64(r.stats.hist.sum());
+    e.f64(r.stats.hist.min());
+    e.f64(r.stats.hist.max());
+    e.vec_u64(&r.stats.hist.counts()[..r.stats.hist.trimmed_len()]);
+    e.u64(r.queue_depth);
+    e.u64(r.inflight_peak);
+    e.u64(r.full_soaks);
 }
 
 fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
-    Ok(ShardReport {
+    let mut r = ShardReport {
         shard: d.usize_("report shard")?,
         stats: dec_snapshot(d)?,
         cache_hits: d.u64("report cache_hits")?,
@@ -232,7 +273,30 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
         resumed_positions: d.u64("report resumed_positions")?,
         backbone_resident_bytes: d.usize_("report backbone_resident_bytes")?,
         registry_bytes: d.usize_("report registry_bytes")?,
-    })
+        queue_depth: 0,
+        inflight_peak: 0,
+        full_soaks: 0,
+    };
+    // a frame from before the tail fields existed ends here
+    if d.remaining() > 0 {
+        r.stats.lat_stride = d.u64("report lat_stride")?.max(1);
+        let count = d.u64("report hist count")?;
+        let sum = d.f64("report hist sum")?;
+        let min = d.f64("report hist min")?;
+        let max = d.f64("report hist max")?;
+        let counts = d.vec_u64("report hist buckets")?;
+        if counts.len() > HIST_BUCKETS {
+            return Err(DecodeError::Malformed(format!(
+                "report histogram has {} buckets (this build has {HIST_BUCKETS})",
+                counts.len()
+            )));
+        }
+        r.stats.hist = LogHistogram::from_parts(counts, count, sum, min, max);
+        r.queue_depth = d.u64("report queue_depth")?;
+        r.inflight_peak = d.u64("report inflight_peak")?;
+        r.full_soaks = d.u64("report full_soaks")?;
+    }
+    Ok(r)
 }
 
 fn msg_tag(m: &ShardMsg) -> u8 {
@@ -287,6 +351,7 @@ fn event_tag(ev: &ShardEvent) -> u8 {
         ShardEvent::Rejected { .. } => TAG_REJECTED,
         ShardEvent::FlushAck { .. } => TAG_FLUSH_ACK,
         ShardEvent::Report(_) => TAG_REPORT_REPLY,
+        ShardEvent::Telemetry(_) => TAG_TELEMETRY,
     }
 }
 
@@ -309,6 +374,19 @@ pub fn encode_event(ev: &ShardEvent) -> Vec<u8> {
         }
         ShardEvent::FlushAck { shard } => e.u64(*shard as u64),
         ShardEvent::Report(r) => enc_report(&mut e, r),
+        ShardEvent::Telemetry(t) => {
+            e.u64(t.shard as u64);
+            e.u16(TELEMETRY_VERSION);
+            e.u64(t.dropped);
+            e.u32(t.spans.len() as u32);
+            for s in &t.spans {
+                e.u8(s.kind as u8);
+                e.u64(s.id);
+                e.u64(s.start_ns);
+                e.u64(s.dur_ns);
+                e.u32(s.tid);
+            }
+        }
     }
     seal_frame(e)
 }
@@ -329,6 +407,37 @@ pub fn decode_event_payload(tag: u8, payload: &[u8]) -> Result<ShardEvent, Decod
         },
         TAG_FLUSH_ACK => ShardEvent::FlushAck { shard: d.usize_("flush-ack shard")? },
         TAG_REPORT_REPLY => ShardEvent::Report(dec_report(&mut d)?),
+        TAG_TELEMETRY => {
+            let shard = d.usize_("telemetry shard")?;
+            let version = d.u16("telemetry version")?;
+            if version != TELEMETRY_VERSION {
+                return Err(DecodeError::Malformed(format!(
+                    "telemetry schema version {version} (this build speaks {TELEMETRY_VERSION})"
+                )));
+            }
+            let dropped = d.u64("telemetry dropped")?;
+            // validate the declared span count against the bytes actually
+            // remaining before allocating (same guard as `Dec::vec_len`)
+            let n = d.u32("telemetry span count")? as usize;
+            if n > d.remaining() / SPAN_BYTES {
+                return Err(DecodeError::Truncated { what: "telemetry spans" });
+            }
+            let mut spans = Vec::with_capacity(n);
+            for _ in 0..n {
+                let kind_byte = d.u8("span kind")?;
+                let kind = SpanKind::from_u8(kind_byte).ok_or_else(|| {
+                    DecodeError::Malformed(format!("unknown span kind {kind_byte}"))
+                })?;
+                spans.push(Span {
+                    kind,
+                    id: d.u64("span id")?,
+                    start_ns: d.u64("span start_ns")?,
+                    dur_ns: d.u64("span dur_ns")?,
+                    tid: d.u32("span tid")?,
+                });
+            }
+            ShardEvent::Telemetry(TelemetryBatch { shard, dropped, spans })
+        }
         other => return Err(DecodeError::BadTag(other)),
     };
     d.finish("event payload")?;
@@ -405,6 +514,7 @@ mod tests {
             tasks: 3,
             threads: 2,
             serve: ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 18, max_batch: 4, prefix_block: 8 },
+            trace: true,
         }
     }
 
@@ -439,6 +549,23 @@ mod tests {
             ShardEvent::Rejected { shard: 2, id: 17, err: "unknown task 'x'".into() },
             ShardEvent::FlushAck { shard: 5 },
             ShardEvent::Report(ShardReport::default()),
+            ShardEvent::Report({
+                let mut r = ShardReport { shard: 2, queue_depth: 7, inflight_peak: 4, full_soaks: 1, ..Default::default() };
+                r.stats.lat = vec![0.01, 0.02];
+                r.stats.lat_stride = 4;
+                r.stats.hist.record(0.01);
+                r.stats.hist.record(0.02);
+                r
+            }),
+            ShardEvent::Telemetry(TelemetryBatch { shard: 3, dropped: 0, spans: vec![] }),
+            ShardEvent::Telemetry(TelemetryBatch {
+                shard: 1,
+                dropped: 12,
+                spans: vec![
+                    Span { kind: SpanKind::Backbone, id: 42, start_ns: 1_000, dur_ns: 2_500, tid: 0 },
+                    Span { kind: SpanKind::ShardQueue, id: 43, start_ns: 900, dur_ns: 3_000, tid: 7 },
+                ],
+            }),
         ];
         for ev in events {
             let bytes = encode_event(&ev);
@@ -504,6 +631,83 @@ mod tests {
         let mut cur = std::io::Cursor::new(bytes[..bytes.len() - 3].to_vec());
         assert!(matches!(read_msg(&mut cur).unwrap(), Some(ShardMsg::Submit(_))));
         assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn legacy_frames_without_tail_fields_still_decode() {
+        // hand-encode the payloads a v1 peer from before the tail fields
+        // emitted: its Report ends at registry_bytes, its spec at
+        // prefix_block — both must decode to defaults, not error
+        let mut e = new_frame(TAG_REPORT_REPLY);
+        e.u64(3); // shard
+        e.u64(10); // requests
+        e.u64(2); // batches
+        e.u64(40); // tokens
+        e.u64(0); // dropped
+        e.u64(1); // prefix_resumes
+        e.f64(0.5); // busy_secs
+        e.vec_f64(&[0.01, 0.02]); // reservoir
+        for c in 1..=11u64 {
+            e.u64(c); // the 11 legacy cache/engine counters
+        }
+        let ShardEvent::Report(r) = decode_event(&seal_frame(e)).unwrap() else {
+            panic!("expected Report");
+        };
+        assert_eq!(r.shard, 3);
+        assert_eq!(r.stats.requests, 10);
+        assert_eq!(r.stats.lat, vec![0.01, 0.02]);
+        assert_eq!(r.cache_hits, 1);
+        assert_eq!(r.registry_bytes, 11);
+        // absent tail ⇒ defaults
+        assert_eq!(r.stats.lat_stride, 1);
+        assert_eq!(r.stats.hist.count(), 0);
+        assert_eq!((r.queue_depth, r.inflight_peak, r.full_soaks), (0, 0, 0));
+
+        let mut e = new_frame(TAG_CONFIGURE);
+        e.u64(0); // shard
+        e.str_("small");
+        e.str_("w4");
+        e.u64(11); // seed
+        e.u64(24); // seq
+        e.u64(3); // tasks
+        e.u64(2); // threads
+        e.u64(1 << 20); // cache_bytes
+        e.u64(1 << 18); // registry_bytes
+        e.u64(4); // max_batch
+        e.u64(8); // prefix_block
+        let ShardMsg::Configure { spec, .. } = decode_msg(&seal_frame(e)).unwrap() else {
+            panic!("expected Configure");
+        };
+        assert!(!spec.trace, "absent trace flag must decode as false");
+        assert_eq!(spec.seq, 24);
+    }
+
+    #[test]
+    fn telemetry_rejections_are_typed() {
+        let batch = TelemetryBatch {
+            shard: 0,
+            dropped: 0,
+            spans: vec![Span { kind: SpanKind::Admit, id: 1, start_ns: 2, dur_ns: 3, tid: 4 }],
+        };
+        let good = encode_event(&ShardEvent::Telemetry(batch));
+        // future inner schema version → Malformed, not a panic
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 8] = 99; // the inner version u16's low byte
+        assert!(matches!(decode_event(&bad).unwrap_err(), DecodeError::Malformed(_)));
+        // unknown span kind → Malformed
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 8 + 2 + 8 + 4] = 200; // first span's kind byte
+        assert!(matches!(decode_event(&bad).unwrap_err(), DecodeError::Malformed(_)));
+        // a corrupt span count cannot balloon allocation
+        let mut e = new_frame(TAG_TELEMETRY);
+        e.u64(0);
+        e.u16(TELEMETRY_VERSION);
+        e.u64(0);
+        e.u32(u32::MAX);
+        assert!(matches!(
+            decode_event(&seal_frame(e)).unwrap_err(),
+            DecodeError::Truncated { .. }
+        ));
     }
 
     #[test]

@@ -79,6 +79,11 @@ pub struct ShardSpec {
     pub threads: usize,
     /// per-shard server tuning (cache budget, prefix block, batch cap)
     pub serve: ServeConfig,
+    /// enable the span recorder in the worker (`--trace-out`); workers
+    /// ship their rings back as `Telemetry` events.  Appended last on the
+    /// wire so v1 peers that predate it still interoperate (absent ⇒
+    /// `false`).
+    pub trace: bool,
 }
 
 /// Wire-decode sanity bounds for [`ShardSpec`] fields.  A shard-worker
@@ -150,6 +155,22 @@ pub enum ShardEvent {
     /// everything submitted before the matching `Flush` has been resolved
     FlushAck { shard: usize },
     Report(ShardReport),
+    /// a batch of lifecycle spans drained from a traced worker's recorder
+    /// (socket workers only — in-proc shards share the gateway's rings).
+    /// Pure telemetry: credit-neutral for backpressure accounting and
+    /// never acts as a barrier.
+    Telemetry(TelemetryBatch),
+}
+
+/// Spans drained from one worker's recorder, shipped alongside a
+/// `Report`/shutdown.  Carries its own inner schema version on the wire
+/// (see [`frame`]) so the span layout can evolve without a protocol bump.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryBatch {
+    pub shard: usize,
+    /// spans lost to ring overwrite since the last drain
+    pub dropped: u64,
+    pub spans: Vec<crate::obs::Span>,
 }
 
 /// Counters snapshot one shard ships to the aggregator.
@@ -168,6 +189,13 @@ pub struct ShardReport {
     pub resumed_positions: u64,
     pub backbone_resident_bytes: usize,
     pub registry_bytes: usize,
+    /// requests accepted by the shard but not yet drained, at report time
+    pub queue_depth: u64,
+    /// largest micro-batch of in-flight requests the shard has assembled
+    pub inflight_peak: u64,
+    /// micro-batch soaks that filled to the batch cap — the shard's
+    /// saturation signal
+    pub full_soaks: u64,
 }
 
 /// Why a gateway submit was refused.

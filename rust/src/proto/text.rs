@@ -19,6 +19,12 @@ pub enum TextLine {
     Empty,
     /// the `stats` command
     Stats,
+    /// the `STATS` command: Prometheus-style text exposition
+    /// ([`crate::obs::prom`]).  Case-sensitive and exact, so the
+    /// lowercase human `stats` summary is untouched — and on old peers
+    /// `STATS` was always an unknown-task request, never a valid one,
+    /// so claiming it breaks nothing.
+    Prom,
     /// a request: task name + prompt tokens
     Request { task: String, tokens: Vec<i32> },
 }
@@ -49,6 +55,9 @@ pub fn parse_line(line: &str) -> Result<TextLine, TextError> {
     }
     if line == "stats" {
         return Ok(TextLine::Stats);
+    }
+    if line == "STATS" {
+        return Ok(TextLine::Prom);
     }
     let mut parts = line.split_whitespace();
     let task = parts.next().expect("a trimmed non-empty line has a first token").to_string();
@@ -92,6 +101,13 @@ mod tests {
         assert_eq!(parse_line("").unwrap(), TextLine::Empty);
         assert_eq!(parse_line("   \t ").unwrap(), TextLine::Empty);
         assert_eq!(parse_line(" stats ").unwrap(), TextLine::Stats);
+        assert_eq!(parse_line("STATS").unwrap(), TextLine::Prom);
+        // only the exact uppercase form is the exposition command; mixed
+        // case stays a (rejectable) request, as on old peers
+        assert_eq!(
+            parse_line("Stats").unwrap(),
+            TextLine::Request { task: "Stats".into(), tokens: vec![] }
+        );
         assert_eq!(
             parse_line("task0 5 -2 7").unwrap(),
             TextLine::Request { task: "task0".into(), tokens: vec![5, -2, 7] }

@@ -325,7 +325,9 @@ impl SocketTransport {
                     *o = o.saturating_sub(1);
                 }
             }
-            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) => {}
+            // control/telemetry events are credit-neutral: they do not
+            // resolve a submitted request
+            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) | ShardEvent::Telemetry(_) => {}
         }
     }
 

@@ -136,6 +136,13 @@ impl Enc {
             self.f64(x);
         }
     }
+
+    pub fn vec_u64(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+    }
 }
 
 /// Bounds-checked little-endian cursor over a borrowed payload.
@@ -254,6 +261,15 @@ impl<'a> Dec<'a> {
         Ok(v)
     }
 
+    pub fn vec_u64(&mut self, what: &'static str) -> Result<Vec<u64>, DecodeError> {
+        let len = self.vec_len(8, what)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.u64(what)?);
+        }
+        Ok(v)
+    }
+
     /// Decoding is done; any unconsumed bytes mean the payload does not
     /// match the schema this build expects.
     pub fn finish(self, what: &'static str) -> Result<(), DecodeError> {
@@ -283,6 +299,7 @@ mod tests {
         e.f64(-0.0);
         e.bool(true);
         e.str_("héllo");
+        e.vec_u64(&[0, u64::MAX, 42]);
         let bytes = e.into_bytes();
         let mut d = Dec::new(&bytes);
         assert_eq!(d.u8("a").unwrap(), 7);
@@ -294,6 +311,7 @@ mod tests {
         assert_eq!(d.f64("g").unwrap().to_bits(), (-0.0f64).to_bits());
         assert!(d.bool("h").unwrap());
         assert_eq!(d.str_("i").unwrap(), "héllo");
+        assert_eq!(d.vec_u64("j").unwrap(), vec![0, u64::MAX, 42]);
         d.finish("tail").unwrap();
     }
 

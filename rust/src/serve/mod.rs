@@ -58,6 +58,8 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
+use crate::obs::{self, SpanKind};
+
 pub use batcher::{MicroBatch, RequestQueue};
 pub use cache::HiddenCache;
 pub use engine::{Engine, EnginePreset, ExecutorEngine, SyntheticEngine};
@@ -162,6 +164,7 @@ impl<E: Engine> Server<E> {
     /// Enqueue a request; rejects unknown tasks and over-length prompts
     /// up front so errors surface at submit time, not mid-batch.
     pub fn submit(&mut self, task: &str, tokens: &[i32]) -> Result<u64> {
+        let t_admit = obs::start();
         if !self.registry.contains(task) {
             bail!("unknown task '{task}' (registered: {:?})", self.registry.known_tasks());
         }
@@ -172,7 +175,13 @@ impl<E: Engine> Server<E> {
                 self.engine.seq_len()
             );
         }
-        Ok(self.queue.push(task, tokens.to_vec()))
+        // "routing" at server level is the batcher's per-task dispatch —
+        // the queue.push picks (or opens) the task's micro-batch lane
+        let t_route = obs::start();
+        let id = self.queue.push(task, tokens.to_vec());
+        obs::end(SpanKind::Route, t_route, id);
+        obs::end(SpanKind::Admit, t_admit, id);
+        Ok(id)
     }
 
     pub fn pending(&self) -> usize {
@@ -214,6 +223,18 @@ impl<E: Engine> Server<E> {
     /// side network → responses.
     fn process_batch(&mut self, mb: MicroBatch, responses: &mut Vec<Response>) -> Result<()> {
         let t0 = std::time::Instant::now();
+        let first_id = mb.requests.first().map(|r| r.id).unwrap_or(0);
+        if obs::enabled() {
+            // queue-wait spans, backdated to each request's enqueue instant
+            for req in &mb.requests {
+                obs::end_backdated(
+                    SpanKind::ShardQueue,
+                    req.enqueued.elapsed().as_nanos() as u64,
+                    req.id,
+                );
+            }
+        }
+        let t_assemble = obs::start();
         let seq = self.engine.seq_len();
         let use_cache = self.engine.cacheable() && self.cache.enabled();
         let net = self.registry.get(&mb.task)?;
@@ -248,6 +269,7 @@ impl<E: Engine> Server<E> {
                 }
             }
         }
+        obs::end(SpanKind::BatchAssemble, t_assemble, first_id);
         if !miss_rows.is_empty() {
             // prefix-resume pass: a miss whose prompt extends a cached
             // prefix runs only the tail of the frozen forward (bit-identical
@@ -256,7 +278,9 @@ impl<E: Engine> Server<E> {
             if use_cache {
                 for (m, row) in miss_rows.iter().enumerate() {
                     if let Some((donor, p)) = self.cache.get_prefix(bid, row) {
+                        let t_resume = obs::start();
                         let h = Rc::new(self.engine.backbone_resume(&donor, p, row)?);
+                        obs::end(SpanKind::PrefixResume, t_resume, mb.requests[owners[m][0]].id);
                         self.stats.prefix_resumes += 1;
                         resolved[m] = Some(h);
                     }
@@ -268,7 +292,9 @@ impl<E: Engine> Server<E> {
             if !fresh_idx.is_empty() {
                 let fresh_rows: Vec<Vec<i32>> =
                     fresh_idx.iter().map(|&m| miss_rows[m].clone()).collect();
+                let t_backbone = obs::start();
                 let fresh = self.engine.backbone(&fresh_rows)?;
+                obs::end(SpanKind::Backbone, t_backbone, first_id);
                 if fresh.len() != fresh_rows.len() {
                     bail!("backbone returned {} bundles for {} rows", fresh.len(), fresh_rows.len());
                 }
@@ -288,10 +314,13 @@ impl<E: Engine> Server<E> {
         }
         let hiddens: Vec<Rc<Hidden>> =
             hiddens.into_iter().map(|h| h.expect("all rows resolved")).collect();
+        let t_side = obs::start();
         let logits = self.engine.side(&net, &hiddens, &rows)?;
+        obs::end(SpanKind::Sidenet, t_side, first_id);
         if logits.len() != rows.len() {
             bail!("side returned {} rows for {}", logits.len(), rows.len());
         }
+        let t_respond = obs::start();
         let mut latencies = Vec::with_capacity(mb.requests.len());
         let mut tok_count = 0usize;
         for ((req, lg), hit) in mb.requests.into_iter().zip(logits).zip(hits) {
@@ -300,6 +329,7 @@ impl<E: Engine> Server<E> {
             responses.push(Response { id: req.id, task: req.task, logits: lg, cache_hit: hit });
         }
         self.stats.record_batch(latencies.len(), tok_count, t0.elapsed().as_secs_f64(), &latencies);
+        obs::end(SpanKind::Respond, t_respond, first_id);
         Ok(())
     }
 }

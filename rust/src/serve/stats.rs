@@ -6,6 +6,8 @@
 
 use std::time::Instant;
 
+use crate::obs::LogHistogram;
+
 pub use crate::benchkit::Json;
 
 /// Cap on retained latency samples; at the cap the reservoir is decimated
@@ -27,6 +29,10 @@ pub struct ServeStats {
     /// denominator, so idle time (waiting on stdin/transport) between
     /// requests doesn't dilute req/s
     pub busy_secs: f64,
+    /// every request latency, log-bucketed — unlike the reservoir this is
+    /// never decimated, and merges exactly across shards (see
+    /// [`crate::obs::hist`])
+    hist: LogHistogram,
     /// request latencies in seconds (queue + compute), decimated reservoir;
     /// kept sorted lazily — see [`ServeStats::sorted_lat`]
     lat: Vec<f64>,
@@ -53,6 +59,7 @@ impl ServeStats {
             dropped: 0,
             prefix_resumes: 0,
             busy_secs: 0.0,
+            hist: LogHistogram::new(),
             lat: Vec::new(),
             lat_dirty: false,
             lat_stride: 1,
@@ -68,6 +75,7 @@ impl ServeStats {
         self.tokens += tokens as u64;
         self.busy_secs += batch_secs.max(0.0);
         for &l in latencies_secs {
+            self.hist.record(l);
             self.lat_skip += 1;
             if self.lat_skip < self.lat_stride {
                 continue;
@@ -153,6 +161,8 @@ impl ServeStats {
             prefix_resumes: self.prefix_resumes,
             busy_secs: self.busy_secs,
             lat: self.lat.clone(),
+            lat_stride: self.lat_stride,
+            hist: self.hist.clone(),
         }
     }
 
@@ -173,13 +183,17 @@ impl ServeStats {
     }
 }
 
-/// A detached, mergeable view of [`ServeStats`]: plain counters plus the
-/// (decimated) latency reservoir.  Gateway shards run their own servers on
-/// their own threads; each ships a snapshot and the aggregator merges them
-/// into fleet-wide throughput and percentiles.  Merging reservoirs with
-/// different decimation strides weighs shards slightly unevenly — fine for
-/// telemetry, and exact when strides match (they do under balanced load).
-#[derive(Clone, Debug, Default, PartialEq)]
+/// A detached, mergeable view of [`ServeStats`]: plain counters, the
+/// (decimated) latency reservoir tagged with its decimation stride, and
+/// the exact [`LogHistogram`].  Gateway shards run their own servers on
+/// their own threads; each ships a snapshot and the aggregator merges
+/// them into fleet-wide throughput and percentiles.  [`merge`] weighs
+/// reservoirs by stride so a lightly-loaded shard cannot outvote a
+/// heavily-loaded one, and the histogram merge is *exact* — fleet
+/// percentiles from it match one histogram fed every raw sample.
+///
+/// [`merge`]: StatsSnapshot::merge
+#[derive(Clone, Debug, PartialEq)]
 pub struct StatsSnapshot {
     pub requests: u64,
     pub batches: u64,
@@ -192,6 +206,42 @@ pub struct StatsSnapshot {
     pub busy_secs: f64,
     /// merged latency samples in seconds (unsorted)
     pub lat: Vec<f64>,
+    /// decimation factor of `lat`: each retained sample stands for this
+    /// many requests (a power of two, ≥ 1)
+    pub lat_stride: u64,
+    /// every request latency, log-bucketed; merges exactly
+    pub hist: LogHistogram,
+}
+
+impl Default for StatsSnapshot {
+    /// The empty snapshot; `lat_stride` is 1 (each sample stands for
+    /// itself), matching what [`ServeStats::snapshot`] ships.
+    fn default() -> Self {
+        StatsSnapshot {
+            requests: 0,
+            batches: 0,
+            tokens: 0,
+            dropped: 0,
+            prefix_resumes: 0,
+            busy_secs: 0.0,
+            lat: Vec::new(),
+            lat_stride: 1,
+            hist: LogHistogram::new(),
+        }
+    }
+}
+
+/// Keep every `k`-th sample of `v` in place (`k == 1` keeps all).
+fn decimate(v: &mut Vec<f64>, k: u64) {
+    if k <= 1 {
+        return;
+    }
+    let mut i = 0u64;
+    v.retain(|_| {
+        let keep = i % k == 0;
+        i += 1;
+        keep
+    });
 }
 
 impl StatsSnapshot {
@@ -202,7 +252,19 @@ impl StatsSnapshot {
         self.dropped += other.dropped;
         self.prefix_resumes += other.prefix_resumes;
         self.busy_secs += other.busy_secs;
-        self.lat.extend_from_slice(&other.lat);
+        self.hist.merge(&other.hist);
+        // Count-weighted reservoir merge: each retained sample stands for
+        // `lat_stride` requests, so the finer-strided side is decimated
+        // down to the coarser stride before concatenating (strides are
+        // powers of two, so the ratio is integral).  Plain concatenation
+        // let a stride-1 shard outvote a stride-8 shard eight-to-one per
+        // request in the fleet percentile.
+        let target = self.lat_stride.max(1).max(other.lat_stride.max(1));
+        decimate(&mut self.lat, target / self.lat_stride.max(1));
+        let mut theirs = other.lat.clone();
+        decimate(&mut theirs, target / other.lat_stride.max(1));
+        self.lat.append(&mut theirs);
+        self.lat_stride = target;
     }
 
     /// Nearest-rank percentile of the merged latencies, in seconds.
@@ -293,5 +355,46 @@ mod tests {
         assert!((m.p50_secs() - 0.020).abs() < 1e-12);
         assert!((m.p95_secs() - 0.040).abs() < 1e-12);
         assert_eq!(StatsSnapshot::default().p95_secs(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_count_weighted_across_decimation_strides() {
+        // Shard A serves 100k fast requests (1 ms): its reservoir hits
+        // LAT_CAP and decimates to stride 2.  Shard B serves 30k slow
+        // requests (1 s) at stride 1.  Ground truth over all 130k
+        // requests: p70 falls at rank 91k, inside A's 100k — 1 ms.
+        // The old concatenating merge weighted each of B's samples 2x
+        // relative to A's and reported p70 = 1 s.
+        let mut a = ServeStats::new();
+        let fast = vec![0.001f64; 1000];
+        for _ in 0..100 {
+            a.record_batch(1000, 1000, 0.01, &fast);
+        }
+        let mut b = ServeStats::new();
+        let slow = vec![1.0f64; 1000];
+        for _ in 0..30 {
+            b.record_batch(1000, 1000, 0.01, &slow);
+        }
+        let sa = a.snapshot();
+        assert!(sa.lat_stride >= 2, "shard A must actually have decimated");
+        assert_eq!(b.snapshot().lat_stride, 1);
+        let mut m = sa.clone();
+        m.merge(&b.snapshot());
+        assert_eq!(m.requests, 130_000);
+        let p70 = m.latency_pct(70.0);
+        assert!((p70 - 0.001).abs() < 1e-9, "fleet p70 must be 1 ms, got {p70}");
+        // and the merge didn't erase the slow tail: ground-truth p80 is
+        // rank 104k — past A's 100k, so 1 s
+        assert!((m.latency_pct(80.0) - 1.0).abs() < 1e-9);
+        // the histogram counted every request exactly once
+        assert_eq!(m.hist.count(), 130_000);
+        let hp70 = m.hist.percentile(70.0);
+        assert!(hp70 >= 0.001 && hp70 <= 0.0013, "hist p70 within one bucket of 1 ms, got {hp70}");
+        // merge direction doesn't change the weighting
+        let mut m2 = b.snapshot();
+        m2.merge(&a.snapshot());
+        assert!((m2.latency_pct(70.0) - 0.001).abs() < 1e-9);
+        assert_eq!(m2.hist, m.hist);
+        assert_eq!(m2.lat_stride, m.lat_stride);
     }
 }

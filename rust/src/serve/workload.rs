@@ -13,14 +13,14 @@
 //! and p50/p95 latencies; `bench-serve` persists this as
 //! `BENCH_serve.json` so the perf trajectory accumulates across PRs.
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use super::stats::Json;
 use super::{BackboneKind, EnginePreset, ServeConfig, Server};
 use crate::util::rng::Rng;
 
 /// Workload + engine shape for a serving benchmark run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BenchServeOpts {
     pub tasks: usize,
     pub requests: usize,
@@ -43,6 +43,10 @@ pub struct BenchServeOpts {
     /// prefix-index block size in tokens (0 = whole-prompt caching only,
     /// the pre-gateway default — keeps the trajectory numbers comparable)
     pub prefix_block: usize,
+    /// when set, replay the cached pass with the span recorder armed,
+    /// refuse unless the replay is bit-identical, and write the Chrome
+    /// trace-event file here (`--trace-out`)
+    pub trace_out: Option<String>,
 }
 
 impl Default for BenchServeOpts {
@@ -62,6 +66,7 @@ impl Default for BenchServeOpts {
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
             prefix_block: 0,
+            trace_out: None,
         }
     }
 }
@@ -82,18 +87,32 @@ pub struct PassReport {
     /// misses served by resuming from a cached prefix (0 unless
     /// `prefix_block > 0` and the workload shares prefixes)
     pub prefix_resumes: u64,
+    /// FNV-1a fold of every response's id + logit bits, in completion
+    /// order — two passes over the same stream must agree exactly
+    /// (cache on/off, tracing on/off: serving is bit-deterministic)
+    pub digest: u64,
 }
 
 /// The full comparison: cached-vs-uncached on the primary backbone kind,
 /// plus one cached pass on the *other* kind so every report carries
 /// f32-vs-W4 latency and resident-bytes side-by-side.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BenchServeReport {
     pub opts: BenchServeOpts,
     pub cached: PassReport,
     pub uncached: PassReport,
     /// cached pass over the other backbone storage (same workload stream)
     pub alt_cached: PassReport,
+    /// measured cost of the *disabled* instrumentation (one relaxed
+    /// atomic load per site), as a percent of the cached p50 latency —
+    /// the always-compiled tracing must stay under 2% when off
+    pub trace_off_overhead_pct: f64,
+    /// cached-pass replay with the recorder armed (`trace_out` only)
+    pub traced: Option<PassReport>,
+    /// distinct span names written to the trace file (empty when untraced)
+    pub trace_kinds: Vec<String>,
+    /// spans written to the trace file
+    pub trace_spans: usize,
 }
 
 impl BenchServeReport {
@@ -118,7 +137,8 @@ impl BenchServeReport {
 
     pub fn to_json(&self) -> String {
         let (d, layers, vocab, r) = self.opts.preset.shape();
-        Json::new()
+        let mut j = Json::new()
+            .provenance()
             .str("bench", "serve")
             .str("preset", self.opts.preset.name())
             // engine shape, so trajectory files are self-describing
@@ -159,12 +179,32 @@ impl BenchServeReport {
             .num("alt_cached_rps", self.alt_cached.requests_per_sec)
             .num("alt_cached_p50_ms", self.alt_cached.p50_ms)
             .num("alt_cached_p95_ms", self.alt_cached.p95_ms)
-            .finish()
+            .num("trace_off_overhead_pct", self.trace_off_overhead_pct);
+        if let Some(t) = &self.traced {
+            j = j
+                .num("traced_rps", t.requests_per_sec)
+                .num("traced_p50_ms", t.p50_ms)
+                .int("trace_spans", self.trace_spans as u64)
+                .str("trace_kinds", &self.trace_kinds.join(","))
+                // the run refuses to report otherwise, so this is always
+                // true when present — recorded so the JSON is self-auditing
+                .int("trace_parity", 1);
+        }
+        j.finish()
     }
 
     pub fn summary(&self) -> String {
+        let traced = match &self.traced {
+            None => String::new(),
+            Some(t) => format!(
+                " | traced {:.1} req/s, {} spans ({} kinds), parity ok",
+                t.requests_per_sec,
+                self.trace_spans,
+                self.trace_kinds.len()
+            ),
+        };
         format!(
-            "serve bench [{} preset, {} backbone, {} threads]: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x | backbone {} resident ({} as {}; f32/w4 = {:.2}x) | {} cached {:.1} req/s",
+            "serve bench [{} preset, {} backbone, {} threads]: {} req, {} tasks, {} unique prompts | cached {:.1} req/s (hit {:.1}%, p50 {:.2} ms, p95 {:.2} ms) | uncached {:.1} req/s | speedup {:.2}x | backbone {} resident ({} as {}; f32/w4 = {:.2}x) | {} cached {:.1} req/s | trace-off overhead {:.3}%{}",
             self.opts.preset.name(),
             self.opts.backbone.name(),
             self.opts.threads,
@@ -183,6 +223,8 @@ impl BenchServeReport {
             self.backbone_bytes_ratio(),
             self.opts.backbone.other().name(),
             self.alt_cached.requests_per_sec,
+            self.trace_off_overhead_pct,
+            traced,
         )
     }
 }
@@ -257,6 +299,11 @@ pub fn shared_prefix_pool(
     out
 }
 
+/// FNV-1a fold step over one 64-bit value.
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
 fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -> Result<PassReport> {
     let mut engine = opts.preset.build_backbone(opts.seed, opts.seq, backbone);
     engine.set_threads(opts.threads);
@@ -277,10 +324,22 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
         server.registry.register_synthetic(name, opts.seed ^ ((i as u64 + 1) << 32), 1 << 16)?;
     }
     let mut rng = Rng::new(opts.seed.wrapping_add(0xBEAC));
-    let pool = prompt_pool(&mut rng, opts.unique_prompts, opts.prompt_len, vocab);
+    let pool = if opts.prefix_block > 0 && opts.prompt_len > opts.prefix_block {
+        // with the prefix index on, share block-aligned prefixes so the
+        // index actually engages (mirrors the gateway bench's stream);
+        // pool size stays <= unique_prompts
+        let per_family = opts.unique_prompts.min(4).max(1);
+        let families = (opts.unique_prompts / per_family).max(1);
+        let prefix_len = ((opts.prompt_len / 2 / opts.prefix_block).max(1) * opts.prefix_block)
+            .min(opts.prompt_len - 1);
+        shared_prefix_pool(&mut rng, families, per_family, prefix_len, opts.prompt_len, vocab)
+    } else {
+        prompt_pool(&mut rng, opts.unique_prompts, opts.prompt_len, vocab)
+    };
     let t0 = std::time::Instant::now();
     let mut submitted = 0usize;
     let mut completed = 0usize;
+    let mut digest = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
     while submitted < opts.requests {
         let burst = opts.burst.min(opts.requests - submitted);
         for _ in 0..burst {
@@ -289,7 +348,13 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
             server.submit(task, prompt)?;
             submitted += 1;
         }
-        completed += server.drain()?.len();
+        for r in server.drain()? {
+            digest = fnv(digest, r.id);
+            for &v in &r.logits {
+                digest = fnv(digest, v.to_bits() as u64);
+            }
+            completed += 1;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     ensure!(completed == opts.requests, "completed {completed} of {} requests", opts.requests);
@@ -304,7 +369,29 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
         cache_evictions: server.cache.evictions,
         backbone_bytes,
         prefix_resumes: server.stats.prefix_resumes,
+        digest,
     })
+}
+
+/// Measure what the *disabled* instrumentation costs: each site on the
+/// off path pays one relaxed atomic load + branch ([`crate::obs::start`]
+/// and [`crate::obs::end`] both lead with it).  Times a large probe loop
+/// of exactly that load, scales by a deliberately generous 32 sites per
+/// request, and reports it as a percent of the pass's p50 latency.  Reads
+/// the flag only — never records — so it is safe whatever state the
+/// global recorder is in.
+fn trace_off_overhead_pct(p50_secs: f64) -> f64 {
+    const PROBES: u64 = 1_000_000;
+    let t0 = std::time::Instant::now();
+    let mut armed = 0u64;
+    for _ in 0..PROBES {
+        if std::hint::black_box(crate::obs::enabled()) {
+            armed += 1;
+        }
+    }
+    std::hint::black_box(armed);
+    let per_site = t0.elapsed().as_secs_f64() / PROBES as f64;
+    100.0 * (per_site * 32.0) / p50_secs.max(1e-9)
 }
 
 /// Run the repeated-prompt workload with the cache as configured and again
@@ -325,8 +412,48 @@ pub fn run_bench(opts: &BenchServeOpts) -> Result<BenchServeReport> {
     );
     let cached = run_pass(opts, opts.cache_bytes, opts.backbone)?;
     let uncached = run_pass(opts, 0, opts.backbone)?;
+    ensure!(
+        cached.digest == uncached.digest,
+        "cache on/off changed the served bits — the hidden-state cache must be invisible"
+    );
     let alt_cached = run_pass(opts, opts.cache_bytes, opts.backbone.other())?;
-    Ok(BenchServeReport { opts: *opts, cached, uncached, alt_cached })
+    let overhead = trace_off_overhead_pct(cached.p50_ms / 1e3);
+    let (traced, trace_kinds, trace_spans) = match &opts.trace_out {
+        None => (None, Vec::new(), 0),
+        Some(path) => {
+            // replay the cached pass with the recorder armed; refuse to
+            // report unless the replay served the exact same bits
+            let _ = crate::obs::drain(); // discard any stale spans
+            crate::obs::set_enabled(true);
+            let t = run_pass(opts, opts.cache_bytes, opts.backbone);
+            crate::obs::set_enabled(false);
+            let t = t?;
+            let (spans, dropped) = crate::obs::drain();
+            ensure!(
+                t.digest == cached.digest,
+                "tracing changed the served bits — refusing to write {path}"
+            );
+            if dropped > 0 {
+                eprintln!("trace: {dropped} span(s) lost to ring overwrite");
+            }
+            let tspans = crate::obs::trace::local(spans);
+            let kinds: Vec<String> =
+                crate::obs::trace::kinds_present(&tspans).iter().map(|s| s.to_string()).collect();
+            crate::obs::trace::write_file(path, &tspans)
+                .with_context(|| format!("writing trace {path}"))?;
+            (Some(t), kinds, tspans.len())
+        }
+    };
+    Ok(BenchServeReport {
+        opts: opts.clone(),
+        cached,
+        uncached,
+        alt_cached,
+        trace_off_overhead_pct: overhead,
+        traced,
+        trace_kinds,
+        trace_spans,
+    })
 }
 
 #[cfg(test)]
@@ -349,6 +476,7 @@ mod tests {
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
             prefix_block: 0,
+            trace_out: None,
         }
     }
 
@@ -487,5 +615,50 @@ mod tests {
         let mut o = tiny();
         o.prompt_len = 32; // > seq 16
         assert!(run_bench(&o).is_err());
+    }
+
+    #[test]
+    fn overhead_probe_is_finite_and_nonnegative() {
+        let rep = run_bench(&tiny()).unwrap();
+        assert!(rep.trace_off_overhead_pct.is_finite());
+        assert!(rep.trace_off_overhead_pct >= 0.0);
+        assert!(rep.traced.is_none() && rep.trace_spans == 0);
+        assert!(rep.to_json().contains("\"trace_off_overhead_pct\""));
+        // cache on/off digest parity held (run_bench refuses otherwise)
+        assert_eq!(rep.cached.digest, rep.uncached.digest);
+        assert_ne!(rep.cached.digest, 0);
+    }
+
+    #[test]
+    fn traced_replay_matches_untraced_bits_and_covers_the_lifecycle() {
+        // serializes against the obs unit tests — the recorder is
+        // process-global
+        let _g = crate::obs::test_lock();
+        let path = std::env::temp_dir().join("qst_bench_serve_trace_test.json");
+        let mut o = tiny();
+        // engage the prefix index so prefix_resume spans appear; small
+        // bursts spread first-appearances across drains, so later family
+        // members find their donor already cached (prefix donors are
+        // looked up in the cache, not within the same micro-batch)
+        o.prefix_block = 4;
+        o.burst = 2;
+        o.trace_out = Some(path.to_string_lossy().into_owned());
+        let rep = run_bench(&o).unwrap();
+        let t = rep.traced.as_ref().expect("traced pass ran");
+        assert_eq!(t.digest, rep.cached.digest, "tracing must not change one bit");
+        assert!(rep.trace_spans > 0);
+        for k in
+            ["admit", "route", "shard_queue", "batch_assemble", "backbone", "prefix_resume", "sidenet", "respond"]
+        {
+            assert!(rep.trace_kinds.iter().any(|s| s == k), "missing span kind {k}: {:?}", rep.trace_kinds);
+        }
+        assert!(t.prefix_resumes > 0, "shared-prefix workload must resume prefixes");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"displayTimeUnit\""));
+        assert!(body.contains("\"traceEvents\""));
+        let j = rep.to_json();
+        assert!(j.contains("\"trace_parity\": 1"));
+        assert!(j.contains("\"trace_kinds\""));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -14,6 +14,9 @@
 //! 4. **Bounded queues reject rather than deadlock** — a saturated inbox
 //!    (in-proc) or exhausted credit window (socket) surfaces
 //!    `SubmitError::Backpressure` and the fleet still drains.
+//! 5. **Fleet metrics merge exactly** — 4 socket shards' log-bucketed
+//!    latency histograms merge into percentiles within one bucket width
+//!    of the raw merged samples.
 
 use std::collections::HashMap;
 
@@ -39,6 +42,7 @@ fn gateway_cfg(shards: usize, backbone: BackboneKind, prefix_block: usize) -> Ga
             max_batch: 4,
             prefix_block,
         },
+        trace: false,
     }
 }
 
@@ -246,6 +250,42 @@ fn saturated_credit_window_backpressures_and_recovers_over_sockets() {
     assert_eq!(gw.in_flight(), 0);
     let (report, _) = gw.shutdown().unwrap();
     assert_eq!(report.merged.requests as usize, accepted);
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn four_shard_socket_histogram_merge_tracks_raw_samples_within_one_bucket() {
+    // Acceptance gate for the mergeable fleet metrics: 4 shard-worker
+    // processes-worth of log-bucketed histograms, merged over the socket
+    // transport, must reproduce every raw latency sample's percentile
+    // within one bucket width (relative width 2^(1/4) - 1 ≈ 19%).
+    let reqs = request_stream();
+    let cfg = gateway_cfg(4, BackboneKind::F32, 4);
+    let (transport, joins) = worker::spawn_local_fleet(&cfg).unwrap();
+    let mut gw = Gateway::with_transport(&cfg, Box::new(transport)).unwrap();
+    for (task, tokens) in &reqs {
+        gw.submit(task, tokens).unwrap();
+    }
+    gw.flush().unwrap();
+    let (report, leftover) = gw.shutdown().unwrap();
+    assert!(leftover.is_empty());
+    // exact merge: bucket counts add, so no request is lost or double-counted
+    assert_eq!(report.merged.hist.count(), reqs.len() as u64);
+    // at this volume no shard decimates, so the merged reservoir holds
+    // every raw sample — the ground truth the histogram is checked against
+    assert_eq!(report.merged.lat_stride, 1);
+    assert_eq!(report.merged.lat.len(), reqs.len());
+    let bucket_width = 2f64.powf(1.0 / qst::obs::hist::HIST_SUB as f64);
+    for p in [25.0, 50.0, 90.0, 95.0, 100.0] {
+        let raw = report.merged.latency_pct(p);
+        let hist = report.merged.hist.percentile(p);
+        assert!(
+            hist >= raw * 0.999 && hist <= raw * bucket_width * 1.001,
+            "p{p}: histogram {hist} vs raw {raw} (allowed within x{bucket_width:.3})"
+        );
+    }
     for j in joins {
         j.join().unwrap();
     }

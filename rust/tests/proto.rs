@@ -12,9 +12,12 @@
 //!    length, or appending trailing junk yields a typed
 //!    [`DecodeError`], never a panic and never a bogus `Ok`.
 
+use qst::obs::{LogHistogram, Span, SpanKind};
 use qst::proto::frame::{self, HEADER_LEN, MAX_PAYLOAD, VERSION};
 use qst::proto::wire::DecodeError;
-use qst::proto::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec};
+use qst::proto::{
+    GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, TelemetryBatch,
+};
 use qst::serve::{BackboneKind, EnginePreset, Response, ServeConfig, StatsSnapshot};
 use qst::util::prop;
 use qst::util::rng::Rng;
@@ -68,6 +71,7 @@ fn arb_spec(rng: &mut Rng) -> ShardSpec {
             max_batch: rng.below(64),
             prefix_block: rng.below(128),
         },
+        trace: rng.bool(0.5),
     }
 }
 
@@ -85,6 +89,18 @@ fn arb_msg(rng: &mut Rng) -> ShardMsg {
     }
 }
 
+fn arb_hist(rng: &mut Rng) -> LogHistogram {
+    let mut h = LogHistogram::new();
+    // empty histograms get real probability (the wire normalizes them to
+    // the canonical empty state); samples span sub-resolution to hours
+    if !rng.bool(0.3) {
+        for _ in 0..rng.below(64) {
+            h.record(rng.f64() * 10f64.powi(rng.below(9) as i32 - 7));
+        }
+    }
+    h
+}
+
 fn arb_snapshot(rng: &mut Rng) -> StatsSnapshot {
     let lat_len = if rng.bool(0.3) { 0 } else { rng.below(256) };
     StatsSnapshot {
@@ -95,6 +111,9 @@ fn arb_snapshot(rng: &mut Rng) -> StatsSnapshot {
         prefix_resumes: rng.next_u64(),
         busy_secs: rng.f64() * 1e4,
         lat: (0..lat_len).map(|_| rng.f64()).collect(),
+        // power of two >= 1, matching what the decimating reservoir ships
+        lat_stride: 1u64 << rng.below(5),
+        hist: arb_hist(rng),
     }
 }
 
@@ -113,11 +132,34 @@ fn arb_report(rng: &mut Rng) -> ShardReport {
         resumed_positions: rng.next_u64(),
         backbone_resident_bytes: rng.below(1 << 30),
         registry_bytes: rng.below(1 << 30),
+        queue_depth: rng.next_u64(),
+        inflight_peak: rng.next_u64(),
+        full_soaks: rng.next_u64(),
+    }
+}
+
+fn arb_span(rng: &mut Rng) -> Span {
+    Span {
+        kind: SpanKind::ALL[rng.below(SpanKind::ALL.len())],
+        id: rng.next_u64(),
+        start_ns: rng.next_u64(),
+        dur_ns: rng.next_u64(),
+        tid: rng.next_u64() as u32,
+    }
+}
+
+fn arb_telemetry(rng: &mut Rng) -> TelemetryBatch {
+    // n = 0 covers a traced worker with an empty ring at drain time
+    let n = if rng.bool(0.2) { 0 } else { rng.below(128) };
+    TelemetryBatch {
+        shard: rng.below(1024),
+        dropped: rng.next_u64(),
+        spans: (0..n).map(|_| arb_span(rng)).collect(),
     }
 }
 
 fn arb_event(rng: &mut Rng) -> ShardEvent {
-    match rng.below(5) {
+    match rng.below(6) {
         0 => ShardEvent::Done(GatewayResponse {
             shard: rng.below(1024),
             resp: Response {
@@ -135,6 +177,7 @@ fn arb_event(rng: &mut Rng) -> ShardEvent {
             err: arb_string(rng, 64),
         },
         3 => ShardEvent::FlushAck { shard: rng.below(1024) },
+        4 => ShardEvent::Telemetry(arb_telemetry(rng)),
         _ => ShardEvent::Report(arb_report(rng)),
     }
 }
@@ -177,7 +220,18 @@ fn events_bit_equal(a: &ShardEvent, b: &ShardEvent) -> bool {
                 && x.resumed_positions == y.resumed_positions
                 && x.backbone_resident_bytes == y.backbone_resident_bytes
                 && x.registry_bytes == y.registry_bytes
+                && sx.lat_stride == sy.lat_stride
+                && sx.hist.count() == sy.hist.count()
+                && sx.hist.counts() == sy.hist.counts()
+                && sx.hist.sum().to_bits() == sy.hist.sum().to_bits()
+                && sx.hist.min().to_bits() == sy.hist.min().to_bits()
+                && sx.hist.max().to_bits() == sy.hist.max().to_bits()
+                && x.queue_depth == y.queue_depth
+                && x.inflight_peak == y.inflight_peak
+                && x.full_soaks == y.full_soaks
         }
+        // Telemetry (and the rest) carry no floats, so derived equality
+        // is already bit-exact
         _ => a == b,
     }
 }
@@ -314,6 +368,87 @@ fn decode_errors_compose_with_anyhow_context() {
     let chain = format!("{err:#}");
     assert!(chain.starts_with("reading shard inbox frame: "), "{chain}");
     assert!(chain.contains("truncated"), "{chain}");
+}
+
+#[test]
+fn pre_tail_report_frames_decode_with_default_observability() {
+    use qst::proto::wire::Enc;
+    // Hand-encode the Report payload a peer from before the
+    // observability tail emitted: snapshot + 11 cache/engine counters,
+    // ending at registry_bytes — no stride, histogram, or queue gauges.
+    let mut e = Enc::new();
+    e.u64(5); // shard
+    e.u64(100); // requests
+    e.u64(10); // batches
+    e.u64(400); // tokens
+    e.u64(1); // dropped
+    e.u64(7); // prefix_resumes
+    e.f64(3.5); // busy_secs
+    e.vec_f64(&[0.001, 0.002, 0.004]); // latency reservoir
+    for c in 1..=11u64 {
+        e.u64(c); // cache_hits ... registry_bytes
+    }
+    let payload = e.into_bytes();
+    // borrow a real Report frame's header (magic/version/tag), patch len
+    let donor = frame::encode_event(&ShardEvent::Report(ShardReport::default()));
+    let mut bytes = donor[..HEADER_LEN].to_vec();
+    bytes[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&payload);
+
+    let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("legacy frame must decode")
+    else {
+        panic!("expected a Report event");
+    };
+    assert_eq!(r.shard, 5);
+    assert_eq!(r.stats.requests, 100);
+    assert_eq!(r.stats.lat, vec![0.001, 0.002, 0.004]);
+    assert_eq!(r.cache_hits, 1);
+    assert_eq!(r.registry_bytes, 11);
+    // the absent tail decodes to defaults, not errors
+    assert_eq!(r.stats.lat_stride, 1);
+    assert_eq!(r.stats.hist.count(), 0);
+    assert_eq!((r.queue_depth, r.inflight_peak, r.full_soaks), (0, 0, 0));
+    // and the modern encoding of the decoded report is strictly longer
+    // (it appends the tail), so new->old interop is the trailing-bytes
+    // rejection pinned by header_corruptions_map_to_the_right_typed_errors
+    assert!(frame::encode_event(&ShardEvent::Report(r)).len() > bytes.len());
+}
+
+#[test]
+fn telemetry_round_trips_through_the_streaming_reader() {
+    // a worker's event stream interleaves Telemetry with Done/Report
+    // frames; the streaming reader must hand each back in FIFO order
+    let mut rng = Rng::new(0x0B5E);
+    let events = vec![
+        ShardEvent::Telemetry(TelemetryBatch { shard: 2, dropped: 3, spans: vec![] }),
+        ShardEvent::Telemetry(arb_telemetry(&mut rng)),
+        ShardEvent::Report(arb_report(&mut rng)),
+        ShardEvent::Telemetry(TelemetryBatch {
+            shard: 0,
+            dropped: 0,
+            spans: SpanKind::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, &kind)| Span {
+                    kind,
+                    id: i as u64,
+                    start_ns: 10 * i as u64,
+                    dur_ns: 5,
+                    tid: 1,
+                })
+                .collect(),
+        }),
+    ];
+    let mut wire = Vec::new();
+    for ev in &events {
+        wire.extend_from_slice(&frame::encode_event(ev));
+    }
+    let mut cur = std::io::Cursor::new(wire);
+    for want in &events {
+        let got = frame::read_event(&mut cur).unwrap().expect("frame available");
+        assert!(events_bit_equal(want, &got), "event diverged:\n{want:?}\nvs\n{got:?}");
+    }
+    assert!(frame::read_event(&mut cur).unwrap().is_none(), "then clean EOF");
 }
 
 #[test]

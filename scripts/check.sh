@@ -77,6 +77,38 @@ diff <(grep '^task' /tmp/qst-gw-socket.out | sort) \
 rm -f /tmp/qst-gw-socket.out /tmp/qst-gw-inproc.out "$SOCK0" "$SOCK1"
 echo "cross-process responses match the in-proc gateway"
 
+# tracing smoke: run the serving bench with the span recorder armed.
+# bench-serve refuses to serialize unless the traced replay is
+# bit-identical to the untraced pass, so a zero-exit already proves
+# tracing is parity-safe; on top of that, validate the Chrome trace is
+# well-formed JSON containing every request-lifecycle span kind
+# (--prefix-block makes bench-serve use a shared-prefix pool so
+# prefix_resume spans actually occur), and gate the measured cost of
+# *disabled* tracing below 2% of a cached-request p50
+echo "== tracing smoke (bench-serve --trace-out, lifecycle coverage, off-overhead gate) =="
+cargo run --release -p qst --bin qst -- bench-serve --tasks 2 --requests 64 \
+    --unique-prompts 8 --prompt-len 12 --seq 16 --prefix-block 4 --burst 2 \
+    --json BENCH_serve_smoke.json --trace-out trace.json
+python3 - <<'EOF'
+import json
+
+trace = json.load(open("trace.json"))
+names = {ev["name"] for ev in trace["traceEvents"]}
+lifecycle = {"admit", "route", "shard_queue", "batch_assemble",
+             "backbone", "prefix_resume", "sidenet", "respond"}
+missing = lifecycle - names
+assert not missing, f"trace.json is missing lifecycle span(s): {sorted(missing)}"
+
+bench = json.load(open("BENCH_serve_smoke.json"))
+assert bench["trace_parity"] == 1, "traced replay diverged from the untraced pass"
+overhead = bench["trace_off_overhead_pct"]
+assert overhead < 2.0, f"disabled tracing costs {overhead:.3f}% of a cached p50 (gate: 2%)"
+assert bench["schema_version"] == 2, "bench provenance schema drifted"
+print(f"trace: {len(trace['traceEvents'])} spans, all lifecycle kinds present; "
+      f"off-overhead {overhead:.4f}% < 2%")
+EOF
+rm -f BENCH_serve_smoke.json   # trace.json is kept: CI uploads it as an artifact
+
 if [ "${QST_SKIP_FMT:-0}" = "1" ]; then
     # the seed predates rustfmt availability and has no rustfmt.toml; CI
     # sets this until a dedicated formatting pass lands
