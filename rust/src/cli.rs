@@ -173,17 +173,22 @@ COMMANDS:
                [--cache-bytes N] [--registry-bytes N] [--prefix-block N]
                [--queue-cap N] [--threads-per-shard N] [--seed N]
                [--preset small|large] [--backbone f32|w4] [--json PATH]
-               [--trace-out PATH]
+               [--trace-out PATH] [--mixed-requests N] [--mixed-wave N]
                Shard-count x transport scaling sweep under open-loop
                shared-prefix load: one deterministic request stream per
                (transport, shard count); socket passes run real shard
                workers over framed socket pairs.  Reports aggregate req/s,
-               merged p50/p95, cache + prefix-hit rates, modeled fleet
-               residency (in-process and per-process), and refuses to
-               write BENCH_gateway.json unless sharded, transport,
-               prefix-resume, and traced-run parity all hold bit-for-bit
+               merged p50/p95 (total + queue-wait), cache + prefix-hit
+               rates, modeled fleet residency (in-process and
+               per-process), and refuses to write BENCH_gateway.json
+               unless sharded, transport, prefix-resume, traced-run, and
+               continuous-vs-waved parity all hold bit-for-bit
                (--trace-out arms tracing on a parity replay and writes
-               the fleet Chrome trace)
+               the fleet Chrome trace).  The mixed sweep replays a
+               mixed-prompt-length pool through slot-based continuous
+               admission and through a driver-emulated wave barrier
+               (--mixed-wave, 0 = shards x batch) and reports
+               continuous_p95_ratio (--mixed-requests 0 disables)
   bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
                blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs

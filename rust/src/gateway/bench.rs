@@ -36,7 +36,7 @@ use anyhow::{ensure, Context, Result};
 use crate::costmodel::memory::{gateway_resident_bytes, gateway_resident_bytes_multiproc};
 use crate::proto::TransportKind;
 use crate::serve::stats::Json;
-use crate::serve::workload::shared_prefix_pool;
+use crate::serve::workload::{mixed_length_pool, shared_prefix_pool};
 use crate::serve::{BackboneKind, EnginePreset, ServeConfig, Server};
 use crate::util::rng::Rng;
 
@@ -71,6 +71,13 @@ pub struct BenchGatewayOpts {
     /// span recorder armed, refuse to report unless the replay is
     /// bit-identical, and write the fleet Chrome trace file here
     pub trace_out: Option<String>,
+    /// requests in the mixed-prompt-length open-loop sweep that compares
+    /// the continuous scheduler against a wave-barriered driver (0
+    /// disables the sweep)
+    pub mixed_requests: usize,
+    /// requests per wave in the waved reference pass; 0 picks
+    /// `max_shards * max_batch` (one full fleet batch per wave)
+    pub mixed_wave: usize,
 }
 
 impl Default for BenchGatewayOpts {
@@ -97,6 +104,8 @@ impl Default for BenchGatewayOpts {
             preset: EnginePreset::Large,
             backbone: BackboneKind::W4,
             trace_out: None,
+            mixed_requests: 96,
+            mixed_wave: 0,
         }
     }
 }
@@ -110,6 +119,9 @@ pub struct GatewayPass {
     pub requests_per_sec: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    /// fleet queue-wait p95 (enqueue → micro-batch execution start),
+    /// split out of the total latency by `serve::stats`
+    pub queue_p95_ms: f64,
     pub hit_rate: f64,
     pub prefix_hit_rate: f64,
     pub prefix_resumes: u64,
@@ -128,6 +140,41 @@ pub struct GatewayPass {
     remote_spans: Vec<crate::obs::trace::TraceSpan>,
 }
 
+/// The mixed-prompt-length continuous-vs-waved comparison: one open-loop
+/// pass under the continuous slot scheduler, one under a driver that
+/// re-imposes the old wave barrier (submit a wave, stall until the fleet
+/// is fully idle, repeat).  Every request nominally arrives at t0, so a
+/// request's latency is its completion time — the p95 is the 95%
+/// completion point, measured identically for both modes.
+#[derive(Clone, Copy, Debug)]
+pub struct MixedSweep {
+    pub shards: usize,
+    /// requests per wave in the waved reference
+    pub wave: usize,
+    pub requests: usize,
+    pub continuous_wall_secs: f64,
+    pub waved_wall_secs: f64,
+    pub continuous_p50_ms: f64,
+    pub continuous_p95_ms: f64,
+    pub waved_p50_ms: f64,
+    pub waved_p95_ms: f64,
+    /// both modes served bit-identical logits (run_bench refuses to
+    /// report otherwise, so this is always true when present)
+    pub parity: bool,
+}
+
+impl MixedSweep {
+    /// Continuous p95 over waved p95 — the headline: < 1.0 means killing
+    /// the wave barrier shortened the latency tail.
+    pub fn p95_ratio(&self) -> f64 {
+        self.continuous_p95_ms / self.waved_p95_ms.max(1e-12)
+    }
+
+    pub fn wall_ratio(&self) -> f64 {
+        self.continuous_wall_secs / self.waved_wall_secs.max(1e-12)
+    }
+}
+
 /// The full sweep + parity verdicts.
 #[derive(Clone, Debug)]
 pub struct BenchGatewayReport {
@@ -136,6 +183,8 @@ pub struct BenchGatewayReport {
     pub sharded_parity: bool,
     pub transport_parity: bool,
     pub prefix_parity: bool,
+    /// the continuous-vs-waved mixed-length sweep (`None` when disabled)
+    pub mixed: Option<MixedSweep>,
     /// `Some(true)` when a traced replay ran (`--trace-out`) and matched
     /// the untraced pass bit-for-bit — `run_bench` refuses to return
     /// otherwise; `None` when no trace was requested
@@ -239,6 +288,7 @@ fn run_pass(
         requests_per_sec: opts.requests as f64 / wall.max(1e-12),
         p50_ms: report.merged.p50_secs() * 1e3,
         p95_ms: report.merged.p95_secs() * 1e3,
+        queue_p95_ms: report.merged.queue_p95_secs() * 1e3,
         hit_rate: report.hit_rate(),
         prefix_hit_rate: report.prefix_hit_rate(),
         prefix_resumes: report.merged.prefix_resumes,
@@ -262,6 +312,131 @@ fn run_pass(
         responses,
         remote_spans,
     })
+}
+
+/// Nearest-rank percentile of a sorted sample, converted to ms.
+fn pct_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted_secs.len() as f64).ceil() as usize;
+    sorted_secs[rank.clamp(1, sorted_secs.len()) - 1] * 1e3
+}
+
+/// One mode of the mixed-length sweep: completion times (seconds from
+/// pass start, one per request) plus the responses for the parity check.
+struct MixedPass {
+    wall_secs: f64,
+    completions: Vec<f64>,
+    responses: HashMap<u64, Vec<f32>>,
+}
+
+/// The prompt lengths the mixed sweep interleaves: quarter-, half-, and
+/// full-length prompts (requires `prompt_len >= 6` so they are distinct).
+fn mixed_lens(prompt_len: usize) -> [usize; 3] {
+    [(prompt_len / 4).max(2), prompt_len / 2, prompt_len]
+}
+
+/// Drive `pool` through a fresh in-proc fleet in submission order (the
+/// pool already interleaves short and long prompts).  `wave == 0` is the
+/// continuous mode: pure open-loop, backing off only on backpressure.
+/// `wave > 0` re-imposes the pre-continuous scheduler at the driver:
+/// after every `wave` submissions it stalls until the entire fleet is
+/// idle — the barrier that made short prompts wait out long ones.
+/// Collection is identical in both modes (poll + timestamp), so the
+/// measured distributions differ only by scheduling.
+fn run_mixed_pass(
+    opts: &BenchGatewayOpts,
+    shards: usize,
+    pool: &[Vec<i32>],
+    wave: usize,
+) -> Result<MixedPass> {
+    let cfg = GatewayConfig {
+        shards,
+        queue_cap: opts.queue_cap,
+        serve: ServeConfig {
+            cache_bytes: opts.cache_bytes,
+            registry_bytes: opts.registry_bytes,
+            max_batch: opts.max_batch,
+            prefix_block: opts.prefix_block,
+        },
+        preset: opts.preset,
+        backbone: opts.backbone,
+        seed: opts.seed,
+        seq: opts.seq,
+        tasks: opts.tasks,
+        threads_per_shard: opts.threads_per_shard,
+        trace: false,
+    };
+    let (mut gw, worker_joins) = worker::launch_gateway(&cfg, TransportKind::InProc)?;
+    let deadline = std::time::Duration::from_secs(60);
+    let mut completions: Vec<f64> = Vec::with_capacity(pool.len());
+    let mut responses: HashMap<u64, Vec<f32>> = HashMap::with_capacity(pool.len());
+    let t0 = Instant::now();
+    for (r, prompt) in pool.iter().enumerate() {
+        let task = task_name(r % opts.tasks);
+        loop {
+            match gw.submit(&task, prompt) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure { .. }) => {
+                    ensure!(t0.elapsed() < deadline, "mixed sweep wedged under backpressure");
+                    for gr in gw.try_collect() {
+                        completions.push(t0.elapsed().as_secs_f64());
+                        responses.insert(gr.resp.id, gr.resp.logits);
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                Err(e) => return Err(e).context("gateway refused a mixed-sweep request"),
+            }
+        }
+        for gr in gw.try_collect() {
+            completions.push(t0.elapsed().as_secs_f64());
+            responses.insert(gr.resp.id, gr.resp.logits);
+        }
+        if wave > 0 && (r + 1) % wave == 0 {
+            // the wave barrier: nothing new is submitted until every
+            // request of this wave has been answered
+            while gw.in_flight() > 0 {
+                ensure!(t0.elapsed() < deadline, "mixed sweep wedged at a wave barrier");
+                for gr in gw.try_collect() {
+                    completions.push(t0.elapsed().as_secs_f64());
+                    responses.insert(gr.resp.id, gr.resp.logits);
+                }
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+    // tail: poll (same timestamp resolution as mid-stream), then flush —
+    // by now a pure consistency barrier over an already-empty fleet
+    while gw.in_flight() > 0 {
+        ensure!(t0.elapsed() < deadline, "mixed sweep wedged draining the tail");
+        for gr in gw.try_collect() {
+            completions.push(t0.elapsed().as_secs_f64());
+            responses.insert(gr.resp.id, gr.resp.logits);
+        }
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+    for gr in gw.flush()? {
+        completions.push(t0.elapsed().as_secs_f64());
+        responses.insert(gr.resp.id, gr.resp.logits);
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let (_report, leftover) = gw.shutdown()?;
+    for j in worker_joins {
+        let _ = j.join();
+    }
+    for gr in leftover {
+        completions.push(wall_secs);
+        responses.insert(gr.resp.id, gr.resp.logits);
+    }
+    ensure!(
+        responses.len() == pool.len(),
+        "mixed sweep completed {} of {} requests",
+        responses.len(),
+        pool.len()
+    );
+    completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(MixedPass { wall_secs, completions, responses })
 }
 
 /// Recompute a sample of the stream on a fresh, cache-disabled,
@@ -389,6 +564,7 @@ impl BenchGatewayReport {
                 .num(&k("wall_secs"), p.wall_secs)
                 .num(&k("p50_ms"), p.p50_ms)
                 .num(&k("p95_ms"), p.p95_ms)
+                .num(&k("queue_p95_ms"), p.queue_p95_ms)
                 .num(&k("hit_rate"), p.hit_rate)
                 .num(&k("prefix_hit_rate"), p.prefix_hit_rate)
                 .int(&k("prefix_resumes"), p.prefix_resumes)
@@ -404,6 +580,23 @@ impl BenchGatewayReport {
             .int("sharded_parity", self.sharded_parity as u64)
             .int("transport_parity", self.transport_parity as u64)
             .int("prefix_parity", self.prefix_parity as u64);
+        if let Some(m) = &self.mixed {
+            j = j
+                .int("mixed_requests", m.requests as u64)
+                .int("mixed_wave", m.wave as u64)
+                .int("mixed_shards", m.shards as u64)
+                .num("mixed_continuous_wall_secs", m.continuous_wall_secs)
+                .num("mixed_waved_wall_secs", m.waved_wall_secs)
+                .num("mixed_continuous_p50_ms", m.continuous_p50_ms)
+                .num("mixed_continuous_p95_ms", m.continuous_p95_ms)
+                .num("mixed_waved_p50_ms", m.waved_p50_ms)
+                .num("mixed_waved_p95_ms", m.waved_p95_ms)
+                .num("continuous_p95_ratio", m.p95_ratio())
+                .num("continuous_wall_ratio", m.wall_ratio())
+                // run_bench refuses to serialize otherwise, so this is
+                // always 1 when present — recorded to be self-auditing
+                .int("mixed_parity", m.parity as u64);
+        }
         if let Some(tp) = self.trace_parity {
             j = j
                 .int("trace_parity", tp as u64)
@@ -435,6 +628,18 @@ impl BenchGatewayReport {
                 p.prefix_hit_rate * 100.0,
                 crate::util::human_bytes(p.resident_bytes as f64),
                 crate::util::human_bytes(p.resident_bytes_multiproc as f64),
+            ));
+        }
+        if let Some(m) = &self.mixed {
+            s.push_str(&format!(
+                " | mixed {} req @ {} shard(s), wave {}: continuous p95 {:.2} ms vs waved {:.2} ms (ratio {:.2}, parity {})",
+                m.requests,
+                m.shards,
+                m.wave,
+                m.continuous_p95_ms,
+                m.waved_p95_ms,
+                m.p95_ratio(),
+                m.parity,
             ));
         }
         s.push_str(&format!(
@@ -510,6 +715,39 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
         prefix_parity,
         "prefix-resumed logits diverged from the from-scratch reference"
     );
+    // continuous-vs-waved mixed-length sweep: same mixed pool through a
+    // slot-admitting fleet and through a driver-emulated wave barrier —
+    // refuse to report unless the bits agree
+    let mixed = if opts.mixed_requests > 0 {
+        ensure!(
+            opts.prompt_len >= 6,
+            "mixed sweep needs prompt_len >= 6 to derive three distinct lengths"
+        );
+        let shards = *opts.shard_counts.iter().max().unwrap();
+        let wave =
+            if opts.mixed_wave > 0 { opts.mixed_wave } else { (shards * opts.max_batch).max(1) };
+        let mut mrng = Rng::new(opts.seed.wrapping_add(0x4D495845)); // "MIXE"
+        let mixed_pool =
+            mixed_length_pool(&mut mrng, opts.mixed_requests, &mixed_lens(opts.prompt_len), vocab);
+        let cont = run_mixed_pass(opts, shards, &mixed_pool, 0)?;
+        let waved = run_mixed_pass(opts, shards, &mixed_pool, wave)?;
+        let parity = cont.responses == waved.responses;
+        ensure!(parity, "continuous-admission logits diverged from the waved reference");
+        Some(MixedSweep {
+            shards,
+            wave,
+            requests: opts.mixed_requests,
+            continuous_wall_secs: cont.wall_secs,
+            waved_wall_secs: waved.wall_secs,
+            continuous_p50_ms: pct_ms(&cont.completions, 50.0),
+            continuous_p95_ms: pct_ms(&cont.completions, 95.0),
+            waved_p50_ms: pct_ms(&waved.completions, 50.0),
+            waved_p95_ms: pct_ms(&waved.completions, 95.0),
+            parity,
+        })
+    } else {
+        None
+    };
     // fourth parity proof, when a trace was requested: replay the first
     // pass with the recorder armed and refuse to report unless the traced
     // fleet served the exact same bits
@@ -544,6 +782,7 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
         sharded_parity,
         transport_parity,
         prefix_parity,
+        mixed,
         trace_parity,
         trace_spans,
         trace_kinds,
@@ -577,6 +816,10 @@ mod tests {
             preset: EnginePreset::Small,
             backbone: BackboneKind::F32,
             trace_out: None,
+            // prompt_len 12 ⇒ mixed lengths [3, 6, 12]; wave of 4 makes the
+            // waved reference genuinely bursty even at this tiny scale
+            mixed_requests: 24,
+            mixed_wave: 4,
         }
     }
 
@@ -601,6 +844,15 @@ mod tests {
             "shared-prefix workload produced no prefix resumes"
         );
         assert!(rep.transport_rps_ratio() > 0.0);
+        // mixed sweep ran, held bit-parity, and measured both modes —
+        // the timing *ratio* is deliberately not asserted here (CI noise);
+        // scripts/check.sh gates it on the real smoke run
+        let m = rep.mixed.expect("tiny opts enable the mixed sweep");
+        assert!(m.parity);
+        assert_eq!(m.requests, 24);
+        assert_eq!(m.shards, 2);
+        assert!(m.continuous_p95_ms > 0.0 && m.waved_p95_ms > 0.0);
+        assert!(m.p95_ratio() > 0.0 && m.wall_ratio() > 0.0);
     }
 
     #[test]
@@ -621,6 +873,11 @@ mod tests {
         assert!(j.contains("\"sharded_parity\": 1"));
         assert!(j.contains("\"transport_parity\": 1"));
         assert!(j.contains("\"prefix_parity\": 1"));
+        assert!(j.contains("\"shards2_queue_p95_ms\""));
+        assert!(j.contains("\"mixed_parity\": 1"));
+        assert!(j.contains("\"continuous_p95_ratio\""));
+        assert!(j.contains("\"mixed_continuous_p95_ms\""));
+        assert!(j.contains("\"mixed_waved_p95_ms\""));
         assert!(j.contains("\"shards2_resident_bytes\""));
         assert!(j.trim_end().ends_with('}'));
         assert!(rep.summary().contains("scaling"));

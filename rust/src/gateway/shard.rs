@@ -18,16 +18,23 @@
 //!   decoding frames ([`super::worker`]).  **One loop, both transports**
 //!   — so batching behavior (and therefore perf shape) cannot diverge.
 //!
-//! The loop favours batching under load and latency when idle: after a
-//! blocking receive it soaks up whatever else is already queued (up to
-//! the micro-batch cap) before draining, so open-loop load forms real
-//! micro-batches while a lone interactive request is answered
-//! immediately.
+//! The loop batches **continuously**: it keeps a bounded pool of up to
+//! `max_batch` admitted requests, executes exactly one micro-batch at a
+//! time, and tops the freed slots back up from the inbox between
+//! executions — responses stream out per completed micro-batch instead
+//! of per drain, so short prompts never wait out a long wave behind
+//! them.  It still favours latency when idle (a lone interactive request
+//! is admitted by a blocking receive and served immediately) and batching
+//! under load (open-loop traffic fills the pool before each execution).
+//! `Flush` is *not* a scheduling trigger — it is a pure consistency
+//! barrier, acked only once the pool and queue are empty, used by
+//! tests/bench to delimit comparisons.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 
+use crate::obs::{self, SpanKind};
 use crate::proto::{
     GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError,
     TelemetryBatch,
@@ -41,9 +48,12 @@ pub struct ShardCore {
     server: Server<SyntheticEngine>,
     /// server-local request id -> gateway id, rewritten on the way out
     id_map: HashMap<u64, u64>,
-    /// largest micro-batch this shard has drained (saturation gauge)
+    /// most slots ever occupied when a micro-batch started executing
+    /// (saturation gauge; never exceeds `max_batch` — the slot-cap
+    /// invariant the gateway property test pins)
     inflight_peak: u64,
-    /// drains that started with a full batch (pending == max_batch)
+    /// micro-batch executions that started with every slot occupied
+    /// (pending == max_batch)
     full_soaks: u64,
 }
 
@@ -76,9 +86,11 @@ impl ShardCore {
     }
 
     fn submit(&mut self, req: Request, emit: &mut dyn FnMut(ShardEvent)) {
+        let t_slot = obs::start();
         match self.server.submit(&req.task, &req.tokens) {
             Ok(sid) => {
                 self.id_map.insert(sid, req.id);
+                obs::end(SpanKind::AdmitSlot, t_slot, req.id);
             }
             Err(e) => emit(ShardEvent::Rejected {
                 shard: self.index,
@@ -88,7 +100,11 @@ impl ShardCore {
         }
     }
 
-    fn drain_and_emit(&mut self, emit: &mut dyn FnMut(ShardEvent)) {
+    /// Execute exactly **one** micro-batch from the slot pool and stream
+    /// its outcomes; a no-op when nothing is pooled.  This is the unit
+    /// [`run_core_loop`] interleaves with admission — completed responses
+    /// leave the shard while later submits are still arriving.
+    fn step_and_emit(&mut self, emit: &mut dyn FnMut(ShardEvent)) {
         if self.server.pending() == 0 {
             return;
         }
@@ -98,21 +114,24 @@ impl ShardCore {
             self.full_soaks += 1;
         }
         let before_dropped = self.server.stats.dropped;
-        match self.server.drain() {
+        match self.server.step() {
             Ok(responses) => {
                 for mut r in responses {
-                    r.id = self.id_map.get(&r.id).copied().unwrap_or(r.id);
+                    r.id = self.id_map.remove(&r.id).unwrap_or(r.id);
                     emit(ShardEvent::Done(GatewayResponse { shard: self.index, resp: r }));
                 }
             }
-            Err(e) => eprintln!("gateway shard {}: drain failed: {e:#}", self.index),
+            Err(e) => eprintln!("gateway shard {}: batch failed: {e:#}", self.index),
         }
         let dropped = self.server.stats.dropped - before_dropped;
         if dropped > 0 {
             emit(ShardEvent::Dropped { shard: self.index, n: dropped as usize });
         }
-        // drain() leaves nothing pending: every id was answered or dropped
-        self.id_map.clear();
+        if self.server.pending() == 0 {
+            // dropped requests leave stale id entries behind; an empty
+            // pool has no live ids, so clearing here bounds the map
+            self.id_map.clear();
+        }
     }
 
     fn report(&self) -> ShardReport {
@@ -134,6 +153,7 @@ impl ShardCore {
             queue_depth: server.pending() as u64,
             inflight_peak: self.inflight_peak,
             full_soaks: self.full_soaks,
+            inflight_slots: server.pending() as u64,
         }
     }
 }
@@ -151,9 +171,25 @@ fn emit_telemetry(shard: usize, emit: &mut dyn FnMut(ShardEvent)) {
 
 /// Serve [`ShardMsg`]s from `rx` until `Shutdown` (or the sender side
 /// hangs up), emitting every outcome through `emit`.  Used verbatim by
-/// in-proc shard threads and socket workers — the batching soak and the
-/// flush/report semantics are identical across transports by
+/// in-proc shard threads and socket workers — continuous admission and
+/// the flush/report semantics are identical across transports by
 /// construction.
+///
+/// The loop alternates two moves:
+///
+/// 1. **Admit** — pull submits from the inbox into open slots, blocking
+///    only when the pool is completely idle.  A `Submit` is never pulled
+///    once every slot is occupied, so `pending` can never exceed
+///    `max_batch` (the slot-cap invariant).
+/// 2. **Step** — execute exactly one micro-batch and stream its
+///    responses out, freeing slots for the next admission pass.
+///
+/// Control messages are parked when they arrive: `Report` answers
+/// immediately (it is a snapshot — mid-pool gauges are the point);
+/// `Flush`/`Shutdown` are barriers that act only once every request
+/// admitted before them has been served, which keeps the PR 5 contract —
+/// per-shard FIFO events mean a `FlushAck` always follows the outcomes
+/// of everything submitted before the flush.
 ///
 /// `ship_telemetry` is set only by traced socket workers: alongside each
 /// `Report` (and at shutdown) the worker drains its span recorder into a
@@ -165,59 +201,68 @@ pub fn run_core_loop(
     emit: &mut dyn FnMut(ShardEvent),
     ship_telemetry: bool,
 ) {
-    // a control message pulled out of the inbox mid-batch, parked until
-    // the drain it interrupted completes
+    // a control message pulled out of the inbox during admission, held
+    // until its semantics allow acting on it
     let mut parked: Option<ShardMsg> = None;
-    loop {
-        let msg = match parked.take() {
-            Some(m) => m,
-            None => match rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // gateway gone: drain and exit
-            },
-        };
-        match msg {
-            ShardMsg::Submit(req) => {
-                core.submit(req, emit);
-                // soak up already-queued submits so micro-batches form
-                // under load; park any control message for after the drain
-                while core.pending() < core.max_batch() {
-                    match rx.try_recv() {
-                        Ok(ShardMsg::Submit(r)) => core.submit(r, emit),
-                        Ok(ctrl) => {
-                            parked = Some(ctrl);
-                            break;
-                        }
-                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-                    }
+    'serve: loop {
+        // admission: top the open slots up from the inbox
+        while parked.is_none() && core.pending() < core.max_batch() {
+            let msg = if core.pending() == 0 {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break 'serve, // gateway gone: drain and exit
                 }
-                core.drain_and_emit(emit);
-            }
-            ShardMsg::Flush => {
-                core.drain_and_emit(emit);
-                emit(ShardEvent::FlushAck { shard: core.index });
-            }
-            ShardMsg::Report => {
-                // telemetry first: per-shard FIFO means the gateway sees
-                // the span batch before the Report that ends its wait
-                if ship_telemetry {
-                    emit_telemetry(core.index, emit);
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'serve,
                 }
-                emit(ShardEvent::Report(core.report()));
-            }
-            ShardMsg::Shutdown => {
-                core.drain_and_emit(emit);
-                break;
-            }
-            ShardMsg::Configure { .. } => {
-                // in-proc shards are built from their spec directly; a
-                // socket worker consumes Configure before entering this
-                // loop — seeing one here is a protocol bug, not fatal
-                eprintln!("gateway shard {}: unexpected Configure (already configured)", core.index());
+            };
+            match msg {
+                ShardMsg::Submit(req) => core.submit(req, emit),
+                ctrl => parked = Some(ctrl),
             }
         }
+        if matches!(parked, Some(ShardMsg::Report)) {
+            parked = None;
+            // telemetry first: per-shard FIFO means the gateway sees
+            // the span batch before the Report that ends its wait
+            if ship_telemetry {
+                emit_telemetry(core.index, emit);
+            }
+            emit(ShardEvent::Report(core.report()));
+            continue 'serve;
+        }
+        if matches!(parked, Some(ShardMsg::Configure { .. })) {
+            parked = None;
+            // in-proc shards are built from their spec directly; a
+            // socket worker consumes Configure before entering this
+            // loop — seeing one here is a protocol bug, not fatal
+            eprintln!("gateway shard {}: unexpected Configure (already configured)", core.index());
+            continue 'serve;
+        }
+        if core.pending() == 0 {
+            // the barrier messages act only on an empty pool
+            match parked.take() {
+                Some(ShardMsg::Flush) => {
+                    emit(ShardEvent::FlushAck { shard: core.index });
+                    continue 'serve;
+                }
+                Some(ShardMsg::Shutdown) => break 'serve,
+                _ => {}
+            }
+        }
+        // exactly one micro-batch, then back to admission — responses
+        // stream out while later submits refill the freed slots.  The
+        // admission pass above guarantees pending > 0 here whenever no
+        // control message is parked, so this never spins.
+        core.step_and_emit(emit);
     }
-    core.drain_and_emit(emit);
+    // Shutdown, or the sender hung up, with work still pooled: serve it
+    while core.pending() > 0 {
+        core.step_and_emit(emit);
+    }
     if ship_telemetry {
         emit_telemetry(core.index, emit);
     }

@@ -495,6 +495,8 @@ fn cmd_bench_gateway(args: &Args) -> Result<()> {
         preset: serve::EnginePreset::parse(&args.str_or("preset", "large"))?,
         backbone: serve::BackboneKind::parse(&args.str_or("backbone", "w4"))?,
         trace_out: args.get("trace-out").map(|s| s.to_string()),
+        mixed_requests: args.usize_or("mixed-requests", 96)?,
+        mixed_wave: args.usize_or("mixed-wave", 0)?,
     };
     let report = qst::gateway::bench::run_bench(&opts)?;
     println!("{}", report.summary());

@@ -121,6 +121,13 @@ pub fn render(report: &GatewayReport, gw: &GatewayGauges) -> String {
     );
     per_shard(
         &mut out,
+        "qst_inflight_slots",
+        "micro-batch slots occupied by admitted-but-unserved requests (at report time)",
+        "gauge",
+        &report.shards.iter().map(|r| (r.shard, r.inflight_slots)).collect::<Vec<_>>(),
+    );
+    per_shard(
+        &mut out,
         "qst_shard_full_soaks_total",
         "micro-batch soaks that filled to the batch cap (saturation signal)",
         "counter",
@@ -148,6 +155,7 @@ mod tests {
         a.stats.hist.record(0.020);
         a.cache_hits = 3;
         a.queue_depth = 2;
+        a.inflight_slots = 2;
         let mut b = ShardReport { shard: 1, ..Default::default() };
         b.stats.requests = 4;
         b.stats.hist.record(0.040);
@@ -163,6 +171,8 @@ mod tests {
         assert!(text.contains("qst_cache_hits_total 3"));
         assert!(text.contains("qst_gateway_backpressure_rejections_total 2"));
         assert!(text.contains("qst_shard_queue_depth{shard=\"0\"} 2"));
+        assert!(text.contains("qst_inflight_slots{shard=\"0\"} 2"));
+        assert!(text.contains("qst_inflight_slots{shard=\"1\"} 0"));
         assert!(text.contains("qst_shard_full_soaks_total{shard=\"1\"} 5"));
         assert!(text.contains("# TYPE qst_request_latency_seconds histogram"));
         assert!(text.contains("qst_request_latency_seconds_bucket{le=\"+Inf\"} 3"));

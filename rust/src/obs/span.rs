@@ -32,7 +32,9 @@ use std::time::Instant;
 pub const RING_CAP: usize = 8192;
 
 /// The fixed span vocabulary.  The first eight are the request
-/// lifecycle, in pipeline order; the last three are kernel-level.
+/// lifecycle, in pipeline order; then three kernel-level kinds; the
+/// continuous-batching scheduler kinds append at the end (wire tags are
+/// stable forever, so new kinds may only ever be added at the back).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum SpanKind {
@@ -58,11 +60,17 @@ pub enum SpanKind {
     Qgemm = 9,
     /// handing row runs to the persistent kernel worker pool
     PoolDispatch = 10,
+    /// admitting a request into an open micro-batch slot of a shard's
+    /// continuous-batching pool
+    AdmitSlot = 11,
+    /// slot-pool wait: admission into the pool until the micro-batch
+    /// containing the request starts executing
+    QueueWait = 12,
 }
 
 impl SpanKind {
     /// Every kind, in tag order.
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 13] = [
         SpanKind::Admit,
         SpanKind::Route,
         SpanKind::ShardQueue,
@@ -74,6 +82,8 @@ impl SpanKind {
         SpanKind::Gemm,
         SpanKind::Qgemm,
         SpanKind::PoolDispatch,
+        SpanKind::AdmitSlot,
+        SpanKind::QueueWait,
     ];
 
     /// The eight request-lifecycle kinds (what the tracing smoke in
@@ -102,6 +112,8 @@ impl SpanKind {
             SpanKind::Gemm => "gemm",
             SpanKind::Qgemm => "qgemm",
             SpanKind::PoolDispatch => "pool_dispatch",
+            SpanKind::AdmitSlot => "admit_slot",
+            SpanKind::QueueWait => "queue_wait",
         }
     }
 

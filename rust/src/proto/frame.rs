@@ -256,6 +256,11 @@ fn enc_report(e: &mut Enc, r: &ShardReport) {
     e.u64(r.queue_depth);
     e.u64(r.inflight_peak);
     e.u64(r.full_soaks);
+    // continuous-batching tail (this block's fields ship after the PR 6
+    // tail, so decoders gate on remaining() a second time)
+    e.vec_f64(&r.stats.qlat);
+    e.u64(r.stats.qlat_stride.max(1));
+    e.u64(r.inflight_slots);
 }
 
 fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
@@ -276,6 +281,7 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
         queue_depth: 0,
         inflight_peak: 0,
         full_soaks: 0,
+        inflight_slots: 0,
     };
     // a frame from before the tail fields existed ends here
     if d.remaining() > 0 {
@@ -295,6 +301,12 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
         r.queue_depth = d.u64("report queue_depth")?;
         r.inflight_peak = d.u64("report inflight_peak")?;
         r.full_soaks = d.u64("report full_soaks")?;
+        // a frame from before the continuous-batching tail ends here
+        if d.remaining() > 0 {
+            r.stats.qlat = d.vec_f64("report queue-wait reservoir")?;
+            r.stats.qlat_stride = d.u64("report qlat_stride")?.max(1);
+            r.inflight_slots = d.u64("report inflight_slots")?;
+        }
     }
     Ok(r)
 }
@@ -550,9 +562,18 @@ mod tests {
             ShardEvent::FlushAck { shard: 5 },
             ShardEvent::Report(ShardReport::default()),
             ShardEvent::Report({
-                let mut r = ShardReport { shard: 2, queue_depth: 7, inflight_peak: 4, full_soaks: 1, ..Default::default() };
+                let mut r = ShardReport {
+                    shard: 2,
+                    queue_depth: 7,
+                    inflight_peak: 4,
+                    full_soaks: 1,
+                    inflight_slots: 3,
+                    ..Default::default()
+                };
                 r.stats.lat = vec![0.01, 0.02];
                 r.stats.lat_stride = 4;
+                r.stats.qlat = vec![0.003];
+                r.stats.qlat_stride = 2;
                 r.stats.hist.record(0.01);
                 r.stats.hist.record(0.02);
                 r
@@ -662,6 +683,9 @@ mod tests {
         assert_eq!(r.stats.lat_stride, 1);
         assert_eq!(r.stats.hist.count(), 0);
         assert_eq!((r.queue_depth, r.inflight_peak, r.full_soaks), (0, 0, 0));
+        assert_eq!(r.stats.qlat, Vec::<f64>::new());
+        assert_eq!(r.stats.qlat_stride, 1);
+        assert_eq!(r.inflight_slots, 0);
 
         let mut e = new_frame(TAG_CONFIGURE);
         e.u64(0); // shard

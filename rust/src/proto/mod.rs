@@ -196,6 +196,9 @@ pub struct ShardReport {
     /// micro-batch soaks that filled to the batch cap — the shard's
     /// saturation signal
     pub full_soaks: u64,
+    /// requests occupying micro-batch slots (admitted into the shard's
+    /// continuous-batching pool, not yet served), at report time
+    pub inflight_slots: u64,
 }
 
 /// Why a gateway submit was refused.

@@ -2,12 +2,16 @@
 //!
 //! Requests for different tasks can't share one side-network dispatch, so
 //! the queue groups pending requests by task and forms micro-batches of up
-//! to `max_batch`.  Task selection is arrival-ordered (the task owning the
-//! oldest pending request goes first) so no task starves.  Rows are padded
-//! to the engine's fixed sequence length — the artifact graphs are
-//! shape-specialized, so padding happens here, once, before dispatch.
+//! to `max_batch`.  Task selection rotates round-robin across lanes: a
+//! lane goes to the back of the rotation after every batch it is served,
+//! so a task whose lane stays hot under sustained load cannot starve the
+//! others (the old arrival-ordered policy let a hot lane's backlog keep
+//! owning the oldest pending request).  Within a lane requests stay FIFO.
+//! Rows are padded to the engine's fixed sequence length — the artifact
+//! graphs are shape-specialized, so padding happens here, once, before
+//! dispatch.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -35,9 +39,10 @@ pub struct MicroBatch {
 pub struct RequestQueue {
     next_id: u64,
     queues: HashMap<String, VecDeque<QueuedRequest>>,
-    /// global arrival order (id, task); stale entries are skipped lazily
-    arrivals: VecDeque<(u64, String)>,
-    pending_ids: HashSet<u64>,
+    /// round-robin lane rotation: every task with pending requests appears
+    /// exactly once; served lanes re-enter at the back
+    rotation: VecDeque<String>,
+    len: usize,
 }
 
 impl RequestQueue {
@@ -46,11 +51,11 @@ impl RequestQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.pending_ids.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending_ids.is_empty()
+        self.len == 0
     }
 
     /// Enqueue a request; returns its id.
@@ -58,29 +63,47 @@ impl RequestQueue {
         let id = self.next_id;
         self.next_id += 1;
         let req = QueuedRequest { id, task: task.to_string(), tokens, enqueued: Instant::now() };
-        self.queues.entry(task.to_string()).or_default().push_back(req);
-        self.arrivals.push_back((id, task.to_string()));
-        self.pending_ids.insert(id);
+        let lane = self.queues.entry(task.to_string()).or_default();
+        if lane.is_empty() {
+            // lane was idle: it joins the rotation at the back, behind
+            // every task already waiting for a turn
+            self.rotation.push_back(task.to_string());
+        }
+        lane.push_back(req);
+        self.len += 1;
         id
     }
 
-    /// Next micro-batch: up to `max_batch` requests of the task owning the
-    /// oldest pending request.  Returns `None` when the queue is empty.
+    /// Next micro-batch: up to `max_batch` requests of the task at the
+    /// front of the round-robin rotation.  A lane with requests left over
+    /// re-enters the rotation at the *back*, so every task is served one
+    /// batch per rotation however hot any single lane runs.  Returns
+    /// `None` when the queue is empty.
     pub fn next_batch(&mut self, max_batch: usize) -> Option<MicroBatch> {
         let max_batch = max_batch.max(1);
-        loop {
-            let (id, task) = self.arrivals.pop_front()?;
-            if !self.pending_ids.contains(&id) {
-                continue; // already served as part of an earlier batch
-            }
-            let q = self.queues.get_mut(&task).expect("pending id implies queue");
-            let n = q.len().min(max_batch);
-            let requests: Vec<QueuedRequest> = q.drain(..n).collect();
-            for r in &requests {
-                self.pending_ids.remove(&r.id);
-            }
-            return Some(MicroBatch { task, requests });
+        let task = self.rotation.pop_front()?;
+        let q = self.queues.get_mut(&task).expect("rotation entry implies queue");
+        let n = q.len().min(max_batch);
+        let requests: Vec<QueuedRequest> = q.drain(..n).collect();
+        if !q.is_empty() {
+            self.rotation.push_back(task.clone());
         }
+        self.len -= requests.len();
+        Some(MicroBatch { task, requests })
+    }
+
+    /// Rolling admission: the next micro-batch sized to the *open* slots —
+    /// `max_batch` minus the `inflight` requests already executing
+    /// downstream.  This is what a continuously-batching caller uses to
+    /// keep a bounded pool of work topped up as requests complete, instead
+    /// of draining fully between barriers.  Returns `None` when every slot
+    /// is occupied or nothing is pending.
+    pub fn refill(&mut self, max_batch: usize, inflight: usize) -> Option<MicroBatch> {
+        let open = max_batch.max(1).saturating_sub(inflight);
+        if open == 0 {
+            return None;
+        }
+        self.next_batch(open)
     }
 }
 
@@ -156,11 +179,54 @@ mod tests {
         q.push("cold", vec![1]);
         q.push("hot", vec![2]);
         // serving "hot" consumes both hot requests; "cold" must be next even
-        // though more "hot" arrivals sit in the arrival queue
+        // though more "hot" arrivals keep landing
         assert_eq!(q.next_batch(8).unwrap().task, "hot");
         q.push("hot", vec![3]);
         assert_eq!(q.next_batch(8).unwrap().task, "cold");
         assert_eq!(q.next_batch(8).unwrap().task, "hot");
+    }
+
+    #[test]
+    fn round_robin_rotation_prevents_hot_lane_starvation() {
+        // Regression: under the arrival-ordered policy a hot lane with a
+        // deep backlog owned the oldest pending request after every batch,
+        // so a cold task waited out the hot lane's entire backlog — and
+        // newly-arrived hot requests jumped ahead of it.  The rotation
+        // sends a served lane to the back: "cold" gets the very next turn.
+        let mut q = RequestQueue::new();
+        for i in 0..8 {
+            q.push("hot", vec![i]);
+        }
+        q.push("cold", vec![99]);
+        let b1 = q.next_batch(2).unwrap();
+        assert_eq!(b1.task, "hot");
+        // sustained load: the hot lane keeps receiving while it is served
+        q.push("hot", vec![100]);
+        assert_eq!(q.next_batch(2).unwrap().task, "cold", "cold lane must not starve");
+        assert_eq!(q.next_batch(2).unwrap().task, "hot");
+        // FIFO within the hot lane survived the rotation
+        let b = q.next_batch(8).unwrap();
+        assert_eq!(b.requests.iter().map(|r| r.tokens[0]).collect::<Vec<_>>(), vec![4, 5, 6, 7, 100]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn refill_fills_only_open_slots() {
+        let mut q = RequestQueue::new();
+        for i in 0..6 {
+            q.push("a", vec![i]);
+        }
+        // 4 slots, 3 in flight: a 1-deep top-up
+        let b = q.refill(4, 3).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        // every slot occupied: nothing is admitted even though work waits
+        assert!(q.refill(4, 4).is_none());
+        assert!(q.refill(4, 9).is_none());
+        assert_eq!(q.len(), 5);
+        // slots freed: the pool tops back up
+        assert_eq!(q.refill(4, 0).unwrap().requests.len(), 4);
+        assert_eq!(q.refill(4, 0).unwrap().requests.len(), 1);
+        assert!(q.is_empty());
     }
 
     #[test]

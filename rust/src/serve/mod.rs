@@ -138,8 +138,10 @@ impl Response {
 }
 
 /// The in-process multi-task inference server: queue → cache → backbone →
-/// side network, with residency and telemetry.  `submit` enqueues;
-/// `drain` processes everything pending and returns responses.
+/// side network, with residency and telemetry.  `submit` enqueues; `step`
+/// processes exactly one micro-batch and returns its responses — the unit
+/// a continuously-batching caller (the gateway shard loop) interleaves
+/// with admission; `drain` loops `step` until nothing is pending.
 pub struct Server<E: Engine> {
     pub engine: E,
     pub registry: Registry,
@@ -192,6 +194,40 @@ impl<E: Engine> Server<E> {
         self.max_batch
     }
 
+    /// Process exactly **one** pending micro-batch and return its
+    /// responses (empty when nothing is pending).  This is the scheduling
+    /// unit of continuous batching: a caller keeping a slot pool topped up
+    /// calls `step`, emits the completed responses downstream, re-admits
+    /// into the freed slots, and steps again — no full-drain barrier.
+    ///
+    /// A failing micro-batch drops its own requests — counted in
+    /// `stats.dropped` and logged — and returns the error; the queue keeps
+    /// the other lanes' requests, so the caller can simply step again.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let Some(mb) = self.queue.next_batch(self.max_batch) else {
+            return Ok(Vec::new());
+        };
+        if obs::enabled() {
+            // slot-pool wait, backdated: enqueue → this batch starting
+            for req in &mb.requests {
+                obs::end_backdated(
+                    SpanKind::QueueWait,
+                    req.enqueued.elapsed().as_nanos() as u64,
+                    req.id,
+                );
+            }
+        }
+        let n = mb.requests.len();
+        let task = mb.task.clone();
+        let mut responses = Vec::with_capacity(n);
+        if let Err(e) = self.process_batch(mb, &mut responses) {
+            self.stats.dropped += n as u64;
+            eprintln!("serve: dropping {n} request(s) for task '{task}': {e:#}");
+            return Err(e);
+        }
+        Ok(responses)
+    }
+
     /// Process every pending request; responses come back in completion
     /// order (batched per task), each tagged with its request id.
     ///
@@ -202,14 +238,13 @@ impl<E: Engine> Server<E> {
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut responses = Vec::with_capacity(self.queue.len());
         let mut first_err: Option<anyhow::Error> = None;
-        while let Some(mb) = self.queue.next_batch(self.max_batch) {
-            let n = mb.requests.len();
-            let task = mb.task.clone();
-            if let Err(e) = self.process_batch(mb, &mut responses) {
-                self.stats.dropped += n as u64;
-                eprintln!("serve: dropping {n} request(s) for task '{task}': {e:#}");
-                if first_err.is_none() {
-                    first_err = Some(e);
+        while self.pending() > 0 {
+            match self.step() {
+                Ok(mut batch) => responses.append(&mut batch),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
                 }
             }
         }
@@ -322,13 +357,23 @@ impl<E: Engine> Server<E> {
         }
         let t_respond = obs::start();
         let mut latencies = Vec::with_capacity(mb.requests.len());
+        let mut queue_waits = Vec::with_capacity(mb.requests.len());
         let mut tok_count = 0usize;
         for ((req, lg), hit) in mb.requests.into_iter().zip(logits).zip(hits) {
             latencies.push(req.enqueued.elapsed().as_secs_f64());
+            // queue-wait component: enqueue → batch execution start
+            // (duration_since saturates to zero; enqueue precedes t0)
+            queue_waits.push(t0.duration_since(req.enqueued).as_secs_f64());
             tok_count += req.tokens.len();
             responses.push(Response { id: req.id, task: req.task, logits: lg, cache_hit: hit });
         }
-        self.stats.record_batch(latencies.len(), tok_count, t0.elapsed().as_secs_f64(), &latencies);
+        self.stats.record_batch(
+            latencies.len(),
+            tok_count,
+            t0.elapsed().as_secs_f64(),
+            &latencies,
+            &queue_waits,
+        );
         obs::end(SpanKind::Respond, t_respond, first_id);
         Ok(())
     }

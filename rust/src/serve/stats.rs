@@ -1,8 +1,11 @@
-//! Serving telemetry: request/token throughput, batch shapes, and a
-//! latency distribution (p50/p95).  The [`Json`] writer `bench-serve`
-//! uses to persist `BENCH_serve.json` lives in [`crate::benchkit`]
-//! (it's a generic substrate, also used by `bench-kernels`) and is
-//! re-exported here for the serve-side callers.
+//! Serving telemetry: request/token throughput, batch shapes, and two
+//! latency distributions — total (queue + service) and the queue-wait
+//! component alone, so a scheduler change (e.g. continuous slot admission
+//! vs. waved drains) is visible as a queue-time shift rather than buried
+//! in the total.  The [`Json`] writer `bench-serve` uses to persist
+//! `BENCH_serve.json` lives in [`crate::benchkit`] (it's a generic
+//! substrate, also used by `bench-kernels`) and is re-exported here for
+//! the serve-side callers.
 
 use std::time::Instant;
 
@@ -14,6 +17,70 @@ pub use crate::benchkit::Json;
 /// (every 2nd sample kept) so memory stays bounded and the distribution
 /// stays representative for long-running servers.
 const LAT_CAP: usize = 65_536;
+
+/// A stride-decimated, lazily-sorted sample reservoir: bounded memory
+/// ([`LAT_CAP`]), each retained sample standing for `stride` recorded
+/// ones.  Used once for total latency and once for queue wait.
+struct Reservoir {
+    v: Vec<f64>,
+    /// whether `v` has unsorted appends since the last percentile read
+    dirty: bool,
+    /// decimation factor (a power of two, ≥ 1)
+    stride: u64,
+    skip: u64,
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Reservoir { v: Vec::new(), dirty: false, stride: 1, skip: 0 }
+    }
+
+    fn push(&mut self, sample: f64) {
+        self.skip += 1;
+        if self.skip < self.stride {
+            return;
+        }
+        self.skip = 0;
+        if self.v.len() >= LAT_CAP {
+            // decimation keeps every 2nd retained sample; `v` may be in
+            // sorted order here, which thins the distribution evenly
+            let mut keep = false;
+            self.v.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.stride *= 2;
+        }
+        self.v.push(sample);
+        self.dirty = true;
+    }
+
+    /// The reservoir in sorted order, re-sorting in place only when new
+    /// samples arrived since the last read — `summary()` reads percentiles
+    /// per request line in interactive serving, so this must not
+    /// clone-and-sort 64Ki samples per call.
+    fn sorted(&mut self) -> &[f64] {
+        if self.dirty {
+            self.v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.dirty = false;
+        }
+        &self.v
+    }
+
+    /// Nearest-rank percentile, in the samples' own unit.
+    fn pct(&mut self, p: f64) -> f64 {
+        nearest_rank(self.sorted(), p)
+    }
+}
+
+/// Nearest-rank percentile of an already-sorted slice (0.0 when empty).
+fn nearest_rank(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
 
 pub struct ServeStats {
     started: Instant,
@@ -29,18 +96,14 @@ pub struct ServeStats {
     /// denominator, so idle time (waiting on stdin/transport) between
     /// requests doesn't dilute req/s
     pub busy_secs: f64,
-    /// every request latency, log-bucketed — unlike the reservoir this is
+    /// every request latency, log-bucketed — unlike the reservoirs this is
     /// never decimated, and merges exactly across shards (see
     /// [`crate::obs::hist`])
     hist: LogHistogram,
-    /// request latencies in seconds (queue + compute), decimated reservoir;
-    /// kept sorted lazily — see [`ServeStats::sorted_lat`]
-    lat: Vec<f64>,
-    /// whether `lat` has unsorted appends since the last percentile read
-    lat_dirty: bool,
-    /// decimation factor (each retained sample stands for this many)
-    lat_stride: u64,
-    lat_skip: u64,
+    /// total request latencies in seconds (queue + service)
+    lat: Reservoir,
+    /// queue-wait component alone: enqueue → micro-batch execution start
+    queue: Reservoir,
 }
 
 impl Default for ServeStats {
@@ -60,39 +123,34 @@ impl ServeStats {
             prefix_resumes: 0,
             busy_secs: 0.0,
             hist: LogHistogram::new(),
-            lat: Vec::new(),
-            lat_dirty: false,
-            lat_stride: 1,
-            lat_skip: 0,
+            lat: Reservoir::new(),
+            queue: Reservoir::new(),
         }
     }
 
     /// Record one completed micro-batch of `n` requests covering `tokens`
-    /// prompt tokens, processed in `batch_secs`, with per-request latencies.
-    pub fn record_batch(&mut self, n: usize, tokens: usize, batch_secs: f64, latencies_secs: &[f64]) {
+    /// prompt tokens, processed in `batch_secs`, with per-request total
+    /// latencies and per-request queue waits (enqueue → execution start).
+    /// The two slices are parallel; an empty `queue_secs` records no
+    /// queue-wait samples (callers that cannot split still get totals).
+    pub fn record_batch(
+        &mut self,
+        n: usize,
+        tokens: usize,
+        batch_secs: f64,
+        latencies_secs: &[f64],
+        queue_secs: &[f64],
+    ) {
         self.batches += 1;
         self.requests += n as u64;
         self.tokens += tokens as u64;
         self.busy_secs += batch_secs.max(0.0);
         for &l in latencies_secs {
             self.hist.record(l);
-            self.lat_skip += 1;
-            if self.lat_skip < self.lat_stride {
-                continue;
-            }
-            self.lat_skip = 0;
-            if self.lat.len() >= LAT_CAP {
-                // decimation keeps every 2nd retained sample; `lat` may be
-                // in sorted order here, which thins the distribution evenly
-                let mut keep = false;
-                self.lat.retain(|_| {
-                    keep = !keep;
-                    keep
-                });
-                self.lat_stride *= 2;
-            }
             self.lat.push(l);
-            self.lat_dirty = true;
+        }
+        for &q in queue_secs {
+            self.queue.push(q);
         }
     }
 
@@ -119,26 +177,9 @@ impl ServeStats {
         }
     }
 
-    /// The reservoir in sorted order, re-sorting in place only when new
-    /// samples arrived since the last read — `summary()` reads two
-    /// percentiles per request line in interactive serving, so this must
-    /// not clone-and-sort 64Ki samples per call.
-    fn sorted_lat(&mut self) -> &[f64] {
-        if self.lat_dirty {
-            self.lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            self.lat_dirty = false;
-        }
-        &self.lat
-    }
-
-    /// Nearest-rank percentile of recorded latencies, in seconds.
+    /// Nearest-rank percentile of recorded total latencies, in seconds.
     pub fn latency_pct(&mut self, p: f64) -> f64 {
-        let v = self.sorted_lat();
-        if v.is_empty() {
-            return 0.0;
-        }
-        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
-        v[rank.clamp(1, v.len()) - 1]
+        self.lat.pct(p)
     }
 
     pub fn p50_secs(&mut self) -> f64 {
@@ -149,7 +190,16 @@ impl ServeStats {
         self.latency_pct(95.0)
     }
 
-    /// Counters + the latency reservoir, detached from the live server —
+    /// Nearest-rank percentile of recorded queue waits, in seconds.
+    pub fn queue_pct(&mut self, p: f64) -> f64 {
+        self.queue.pct(p)
+    }
+
+    pub fn queue_p95_secs(&mut self) -> f64 {
+        self.queue_pct(95.0)
+    }
+
+    /// Counters + the latency reservoirs, detached from the live server —
     /// what a gateway shard ships to the aggregator.  Snapshots from many
     /// shards [`StatsSnapshot::merge`] into fleet-wide percentiles.
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -160,8 +210,10 @@ impl ServeStats {
             dropped: self.dropped,
             prefix_resumes: self.prefix_resumes,
             busy_secs: self.busy_secs,
-            lat: self.lat.clone(),
-            lat_stride: self.lat_stride,
+            lat: self.lat.v.clone(),
+            lat_stride: self.lat.stride,
+            qlat: self.queue.v.clone(),
+            qlat_stride: self.queue.stride,
             hist: self.hist.clone(),
         }
     }
@@ -171,8 +223,9 @@ impl ServeStats {
         let dropped = if self.dropped > 0 { format!(" | {} dropped", self.dropped) } else { String::new() };
         let p50_ms = self.p50_secs() * 1e3;
         let p95_ms = self.p95_secs() * 1e3;
+        let q95_ms = self.queue_p95_secs() * 1e3;
         format!(
-            "{} req in {} batches ({:.1} req/batch) | {:.1} req/s, {:.0} tok/s | p50 {p50_ms:.2} ms, p95 {p95_ms:.2} ms | cache hit rate {:.1}%{dropped}",
+            "{} req in {} batches ({:.1} req/batch) | {:.1} req/s, {:.0} tok/s | p50 {p50_ms:.2} ms, p95 {p95_ms:.2} ms (queue p95 {q95_ms:.2} ms) | cache hit rate {:.1}%{dropped}",
             self.requests,
             self.batches,
             self.mean_batch_size(),
@@ -184,9 +237,9 @@ impl ServeStats {
 }
 
 /// A detached, mergeable view of [`ServeStats`]: plain counters, the
-/// (decimated) latency reservoir tagged with its decimation stride, and
-/// the exact [`LogHistogram`].  Gateway shards run their own servers on
-/// their own threads; each ships a snapshot and the aggregator merges
+/// (decimated) latency reservoirs tagged with their decimation strides,
+/// and the exact [`LogHistogram`].  Gateway shards run their own servers
+/// on their own threads; each ships a snapshot and the aggregator merges
 /// them into fleet-wide throughput and percentiles.  [`merge`] weighs
 /// reservoirs by stride so a lightly-loaded shard cannot outvote a
 /// heavily-loaded one, and the histogram merge is *exact* — fleet
@@ -204,17 +257,22 @@ pub struct StatsSnapshot {
     /// mean per-shard busy time; wall-clock throughput needs the caller's
     /// own clock (shards overlap in time)
     pub busy_secs: f64,
-    /// merged latency samples in seconds (unsorted)
+    /// merged total-latency samples in seconds (unsorted)
     pub lat: Vec<f64>,
     /// decimation factor of `lat`: each retained sample stands for this
     /// many requests (a power of two, ≥ 1)
     pub lat_stride: u64,
+    /// merged queue-wait samples in seconds (unsorted) — the
+    /// pre-execution component of `lat`
+    pub qlat: Vec<f64>,
+    /// decimation factor of `qlat` (a power of two, ≥ 1)
+    pub qlat_stride: u64,
     /// every request latency, log-bucketed; merges exactly
     pub hist: LogHistogram,
 }
 
 impl Default for StatsSnapshot {
-    /// The empty snapshot; `lat_stride` is 1 (each sample stands for
+    /// The empty snapshot; strides are 1 (each sample stands for
     /// itself), matching what [`ServeStats::snapshot`] ships.
     fn default() -> Self {
         StatsSnapshot {
@@ -226,6 +284,8 @@ impl Default for StatsSnapshot {
             busy_secs: 0.0,
             lat: Vec::new(),
             lat_stride: 1,
+            qlat: Vec::new(),
+            qlat_stride: 1,
             hist: LogHistogram::new(),
         }
     }
@@ -244,6 +304,20 @@ fn decimate(v: &mut Vec<f64>, k: u64) {
     });
 }
 
+/// Count-weighted merge of two stride-tagged reservoirs: the finer-strided
+/// side is decimated down to the coarser stride before concatenating
+/// (strides are powers of two, so the ratio is integral).  Plain
+/// concatenation let a stride-1 shard outvote a stride-8 shard
+/// eight-to-one per request in the fleet percentile.
+fn merge_reservoir(mine: &mut Vec<f64>, my_stride: &mut u64, theirs: &[f64], their_stride: u64) {
+    let target = my_stride.max(1).max(their_stride.max(1));
+    decimate(mine, target / (*my_stride).max(1));
+    let mut other = theirs.to_vec();
+    decimate(&mut other, target / their_stride.max(1));
+    mine.append(&mut other);
+    *my_stride = target;
+}
+
 impl StatsSnapshot {
     pub fn merge(&mut self, other: &StatsSnapshot) {
         self.requests += other.requests;
@@ -253,29 +327,19 @@ impl StatsSnapshot {
         self.prefix_resumes += other.prefix_resumes;
         self.busy_secs += other.busy_secs;
         self.hist.merge(&other.hist);
-        // Count-weighted reservoir merge: each retained sample stands for
-        // `lat_stride` requests, so the finer-strided side is decimated
-        // down to the coarser stride before concatenating (strides are
-        // powers of two, so the ratio is integral).  Plain concatenation
-        // let a stride-1 shard outvote a stride-8 shard eight-to-one per
-        // request in the fleet percentile.
-        let target = self.lat_stride.max(1).max(other.lat_stride.max(1));
-        decimate(&mut self.lat, target / self.lat_stride.max(1));
-        let mut theirs = other.lat.clone();
-        decimate(&mut theirs, target / other.lat_stride.max(1));
-        self.lat.append(&mut theirs);
-        self.lat_stride = target;
+        let mut stride = self.lat_stride;
+        merge_reservoir(&mut self.lat, &mut stride, &other.lat, other.lat_stride);
+        self.lat_stride = stride;
+        let mut qstride = self.qlat_stride;
+        merge_reservoir(&mut self.qlat, &mut qstride, &other.qlat, other.qlat_stride);
+        self.qlat_stride = qstride;
     }
 
-    /// Nearest-rank percentile of the merged latencies, in seconds.
+    /// Nearest-rank percentile of the merged total latencies, in seconds.
     pub fn latency_pct(&self, p: f64) -> f64 {
-        if self.lat.is_empty() {
-            return 0.0;
-        }
         let mut v = self.lat.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
-        v[rank.clamp(1, v.len()) - 1]
+        nearest_rank(&v, p)
     }
 
     pub fn p50_secs(&self) -> f64 {
@@ -284,6 +348,19 @@ impl StatsSnapshot {
 
     pub fn p95_secs(&self) -> f64 {
         self.latency_pct(95.0)
+    }
+
+    /// Nearest-rank percentile of the merged queue waits, in seconds.
+    pub fn queue_pct(&self, p: f64) -> f64 {
+        let mut v = self.qlat.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        nearest_rank(&v, p)
+    }
+
+    /// Fleet queue-wait p95 in seconds — the slot scheduler's
+    /// head-of-line signal, split out from total latency.
+    pub fn queue_p95_secs(&self) -> f64 {
+        self.queue_pct(95.0)
     }
 }
 
@@ -295,7 +372,7 @@ mod tests {
     fn percentiles_nearest_rank() {
         let mut s = ServeStats::new();
         let lats: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
-        s.record_batch(100, 400, 0.25, &lats);
+        s.record_batch(100, 400, 0.25, &lats, &[]);
         assert!((s.p50_secs() - 0.050).abs() < 1e-9);
         assert!((s.p95_secs() - 0.095).abs() < 1e-9);
         assert_eq!(s.requests, 100);
@@ -310,16 +387,32 @@ mod tests {
     fn empty_stats_are_zero() {
         let mut s = ServeStats::new();
         assert_eq!(s.p50_secs(), 0.0);
+        assert_eq!(s.queue_p95_secs(), 0.0);
         assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn queue_wait_is_recorded_separately_from_total_latency() {
+        let mut s = ServeStats::new();
+        // 4 requests: totals 10/20/30/40 ms, queue waits 1/2/3/4 ms
+        s.record_batch(4, 8, 0.04, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004]);
+        assert!((s.p95_secs() - 0.040).abs() < 1e-12);
+        assert!((s.queue_p95_secs() - 0.004).abs() < 1e-12);
+        assert!((s.queue_pct(50.0) - 0.002).abs() < 1e-12);
+        // the split survives the snapshot
+        let snap = s.snapshot();
+        assert!((snap.p95_secs() - 0.040).abs() < 1e-12);
+        assert!((snap.queue_p95_secs() - 0.004).abs() < 1e-12);
+        assert_eq!(snap.qlat_stride, 1);
     }
 
     #[test]
     fn percentiles_track_interleaved_reads_and_writes() {
         // the lazily-sorted reservoir must re-sort after every new batch
         let mut s = ServeStats::new();
-        s.record_batch(2, 4, 0.01, &[0.010, 0.020]);
+        s.record_batch(2, 4, 0.01, &[0.010, 0.020], &[]);
         assert!((s.p95_secs() - 0.020).abs() < 1e-12);
-        s.record_batch(2, 4, 0.01, &[0.100, 0.005]);
+        s.record_batch(2, 4, 0.01, &[0.100, 0.005], &[]);
         assert!((s.p95_secs() - 0.100).abs() < 1e-12, "new max must surface");
         assert!((s.p50_secs() - 0.010).abs() < 1e-12); // rank 2 of [5,10,20,100]ms
         // repeated reads with no writes are stable (and hit the cached sort)
@@ -331,20 +424,22 @@ mod tests {
         let mut s = ServeStats::new();
         let chunk = vec![0.001f64; 1000];
         for _ in 0..200 {
-            s.record_batch(1000, 1000, 0.001, &chunk);
+            s.record_batch(1000, 1000, 0.001, &chunk, &chunk);
         }
-        assert!(s.lat.len() <= LAT_CAP);
+        assert!(s.lat.v.len() <= LAT_CAP);
+        assert!(s.queue.v.len() <= LAT_CAP);
         assert_eq!(s.requests, 200_000);
         assert!((s.p95_secs() - 0.001).abs() < 1e-9);
+        assert!((s.queue_p95_secs() - 0.001).abs() < 1e-9);
     }
 
     #[test]
     fn snapshots_merge_counters_and_percentiles() {
         let mut a = ServeStats::new();
-        a.record_batch(2, 10, 0.1, &[0.010, 0.020]);
+        a.record_batch(2, 10, 0.1, &[0.010, 0.020], &[0.001, 0.002]);
         a.prefix_resumes = 3;
         let mut b = ServeStats::new();
-        b.record_batch(2, 6, 0.2, &[0.030, 0.040]);
+        b.record_batch(2, 6, 0.2, &[0.030, 0.040], &[0.003, 0.004]);
         let mut m = a.snapshot();
         m.merge(&b.snapshot());
         assert_eq!(m.requests, 4);
@@ -354,7 +449,9 @@ mod tests {
         assert!((m.busy_secs - 0.3).abs() < 1e-12);
         assert!((m.p50_secs() - 0.020).abs() < 1e-12);
         assert!((m.p95_secs() - 0.040).abs() < 1e-12);
+        assert!((m.queue_p95_secs() - 0.004).abs() < 1e-12);
         assert_eq!(StatsSnapshot::default().p95_secs(), 0.0);
+        assert_eq!(StatsSnapshot::default().queue_p95_secs(), 0.0);
     }
 
     #[test]
@@ -368,12 +465,12 @@ mod tests {
         let mut a = ServeStats::new();
         let fast = vec![0.001f64; 1000];
         for _ in 0..100 {
-            a.record_batch(1000, 1000, 0.01, &fast);
+            a.record_batch(1000, 1000, 0.01, &fast, &fast);
         }
         let mut b = ServeStats::new();
         let slow = vec![1.0f64; 1000];
         for _ in 0..30 {
-            b.record_batch(1000, 1000, 0.01, &slow);
+            b.record_batch(1000, 1000, 0.01, &slow, &slow);
         }
         let sa = a.snapshot();
         assert!(sa.lat_stride >= 2, "shard A must actually have decimated");
@@ -386,6 +483,9 @@ mod tests {
         // and the merge didn't erase the slow tail: ground-truth p80 is
         // rank 104k — past A's 100k, so 1 s
         assert!((m.latency_pct(80.0) - 1.0).abs() < 1e-9);
+        // the queue-wait reservoir merges with the same count weighting
+        assert!((m.queue_pct(70.0) - 0.001).abs() < 1e-9);
+        assert!((m.queue_pct(80.0) - 1.0).abs() < 1e-9);
         // the histogram counted every request exactly once
         assert_eq!(m.hist.count(), 130_000);
         let hp70 = m.hist.percentile(70.0);
@@ -396,5 +496,6 @@ mod tests {
         assert!((m2.latency_pct(70.0) - 0.001).abs() < 1e-9);
         assert_eq!(m2.hist, m.hist);
         assert_eq!(m2.lat_stride, m.lat_stride);
+        assert_eq!(m2.qlat_stride, m.qlat_stride);
     }
 }

@@ -299,6 +299,42 @@ pub fn shared_prefix_pool(
     out
 }
 
+/// Deterministic mixed-length pool for head-of-line-blocking workloads:
+/// `n` prompts spread round-robin across the pairwise-distinct lengths in
+/// `lens`, so consecutive submissions alternate short and long prompts —
+/// exactly the stream where waved scheduling makes short prompts wait out
+/// long ones.  Each length's prompts come from [`prompt_pool`] (pairwise
+/// distinct; distinct lengths make the pool distinct across groups too).
+pub fn mixed_length_pool(rng: &mut Rng, n: usize, lens: &[usize], vocab: usize) -> Vec<Vec<i32>> {
+    assert!(!lens.is_empty(), "need at least one prompt length");
+    for (i, a) in lens.iter().enumerate() {
+        assert!(*a >= 1, "prompt lengths must be positive");
+        assert!(!lens[i + 1..].contains(a), "prompt lengths must be distinct");
+    }
+    let per = (n + lens.len() - 1) / lens.len();
+    let pools: Vec<Vec<Vec<i32>>> = lens
+        .iter()
+        .map(|&len| {
+            assert!(
+                per <= prompt_pool_capacity(len, vocab),
+                "{per} unique prompts don't fit in {len} tokens over a {vocab}-token vocab"
+            );
+            prompt_pool(rng, per, len, vocab)
+        })
+        .collect();
+    // interleave so every admission window sees a mix of lengths
+    let mut out = Vec::with_capacity(n);
+    'fill: for i in 0..per {
+        for pool in &pools {
+            out.push(pool[i].clone());
+            if out.len() == n {
+                break 'fill;
+            }
+        }
+    }
+    out
+}
+
 /// FNV-1a fold step over one 64-bit value.
 fn fnv(h: u64, v: u64) -> u64 {
     (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
@@ -376,10 +412,11 @@ fn run_pass(opts: &BenchServeOpts, cache_bytes: usize, backbone: BackboneKind) -
 /// Measure what the *disabled* instrumentation costs: each site on the
 /// off path pays one relaxed atomic load + branch ([`crate::obs::start`]
 /// and [`crate::obs::end`] both lead with it).  Times a large probe loop
-/// of exactly that load, scales by a deliberately generous 32 sites per
-/// request, and reports it as a percent of the pass's p50 latency.  Reads
-/// the flag only — never records — so it is safe whatever state the
-/// global recorder is in.
+/// of exactly that load, scales by a deliberately generous 34 sites per
+/// request (the lifecycle + kernel sites plus the continuous-batching
+/// `admit_slot`/`queue_wait` pair), and reports it as a percent of the
+/// pass's p50 latency.  Reads the flag only — never records — so it is
+/// safe whatever state the global recorder is in.
 fn trace_off_overhead_pct(p50_secs: f64) -> f64 {
     const PROBES: u64 = 1_000_000;
     let t0 = std::time::Instant::now();
@@ -391,7 +428,7 @@ fn trace_off_overhead_pct(p50_secs: f64) -> f64 {
     }
     std::hint::black_box(armed);
     let per_site = t0.elapsed().as_secs_f64() / PROBES as f64;
-    100.0 * (per_site * 32.0) / p50_secs.max(1e-9)
+    100.0 * (per_site * 34.0) / p50_secs.max(1e-9)
 }
 
 /// Run the repeated-prompt workload with the cache as configured and again
@@ -514,6 +551,19 @@ mod tests {
         assert_ne!(pool[0][..8], pool[4][..8], "families have distinct prefixes");
         let set: std::collections::HashSet<_> = pool.iter().cloned().collect();
         assert_eq!(set.len(), 12, "all prompts pairwise distinct");
+    }
+
+    #[test]
+    fn mixed_length_pool_interleaves_distinct_lengths() {
+        let mut rng = Rng::new(9);
+        let pool = mixed_length_pool(&mut rng, 10, &[3, 6, 12], 256);
+        assert_eq!(pool.len(), 10);
+        // round-robin interleave: consecutive prompts cycle the lengths
+        let lens: Vec<usize> = pool.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, vec![3, 6, 12, 3, 6, 12, 3, 6, 12, 3]);
+        assert!(pool.iter().all(|p| p.iter().all(|&t| t > 0)));
+        let set: std::collections::HashSet<_> = pool.iter().cloned().collect();
+        assert_eq!(set.len(), 10, "all prompts pairwise distinct");
     }
 
     #[test]

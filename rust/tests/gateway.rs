@@ -292,6 +292,71 @@ fn four_shard_socket_histogram_merge_tracks_raw_samples_within_one_bucket() {
 }
 
 #[test]
+fn randomized_interleaved_submits_preserve_per_task_fifo_and_slot_cap() {
+    // Property test for continuous (slot-based) admission: under randomized
+    // interleavings of submits across tasks, with random mid-stream
+    // collections, (a) each task's responses arrive in its submit order —
+    // the per-shard event stream is FIFO and rolling admission must not
+    // reorder within a lane — and (b) the micro-batch pool never grows past
+    // the slot cap, because admission only tops up open slots.
+    use qst::util::rng::Rng;
+    for seed in [1u64, 7, 23] {
+        let mut cfg = gateway_cfg(1, BackboneKind::F32, 4);
+        cfg.serve.max_batch = 3;
+        let (mut gw, joins) = launch(&cfg, TransportKind::InProc);
+        let mut rng = Rng::new(seed);
+        let mut task_of: HashMap<u64, usize> = HashMap::new();
+        let mut arrived: Vec<u64> = Vec::new();
+        let total = 60usize;
+        for _ in 0..total {
+            let t = rng.below(2);
+            let tokens: Vec<i32> =
+                (0..rng.range(2, 6)).map(|_| rng.range(1, 40) as i32).collect();
+            loop {
+                match gw.submit(&task_name(t), &tokens) {
+                    Ok(id) => {
+                        task_of.insert(id, t);
+                        break;
+                    }
+                    Err(SubmitError::Backpressure { .. }) => {
+                        arrived.extend(gw.try_collect().iter().map(|gr| gr.resp.id));
+                        std::thread::yield_now();
+                    }
+                    Err(e) => panic!("submit failed: {e}"),
+                }
+            }
+            // random mid-stream collection, so responses interleave with
+            // admissions rather than all draining at the end
+            if rng.bool(0.3) {
+                arrived.extend(gw.try_collect().iter().map(|gr| gr.resp.id));
+            }
+        }
+        arrived.extend(gw.flush().unwrap().iter().map(|gr| gr.resp.id));
+        assert_eq!(arrived.len(), total, "seed {seed}: every submit answered exactly once");
+        // gateway ids are assigned in submit order, so per-task FIFO means
+        // each task's arrival subsequence is strictly increasing
+        for t in 0..2 {
+            let ids: Vec<u64> =
+                arrived.iter().copied().filter(|id| task_of[id] == t).collect();
+            assert!(
+                ids.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed}: task {t} responses out of submit order: {ids:?}"
+            );
+        }
+        let (report, leftover) = gw.shutdown().unwrap();
+        assert!(leftover.is_empty());
+        let peak = report.shards[0].inflight_peak;
+        assert!(
+            (1..=3).contains(&peak),
+            "seed {seed}: inflight_peak {peak} must stay within the 3-slot cap"
+        );
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}
+
+#[test]
 fn w4_fleet_residency_is_a_fraction_of_f32() {
     use qst::costmodel::memory::gateway_resident_bytes;
     let reqs = request_stream();

@@ -114,6 +114,11 @@ fn arb_snapshot(rng: &mut Rng) -> StatsSnapshot {
         // power of two >= 1, matching what the decimating reservoir ships
         lat_stride: 1u64 << rng.below(5),
         hist: arb_hist(rng),
+        qlat: {
+            let n = if rng.bool(0.3) { 0 } else { rng.below(256) };
+            (0..n).map(|_| rng.f64()).collect()
+        },
+        qlat_stride: 1u64 << rng.below(5),
     }
 }
 
@@ -135,6 +140,7 @@ fn arb_report(rng: &mut Rng) -> ShardReport {
         queue_depth: rng.next_u64(),
         inflight_peak: rng.next_u64(),
         full_soaks: rng.next_u64(),
+        inflight_slots: rng.next_u64(),
     }
 }
 
@@ -229,6 +235,10 @@ fn events_bit_equal(a: &ShardEvent, b: &ShardEvent) -> bool {
                 && x.queue_depth == y.queue_depth
                 && x.inflight_peak == y.inflight_peak
                 && x.full_soaks == y.full_soaks
+                && sx.qlat.len() == sy.qlat.len()
+                && sx.qlat.iter().zip(&sy.qlat).all(|(p, q)| p.to_bits() == q.to_bits())
+                && sx.qlat_stride == sy.qlat_stride
+                && x.inflight_slots == y.inflight_slots
         }
         // Telemetry (and the rest) carry no floats, so derived equality
         // is already bit-exact
@@ -408,10 +418,45 @@ fn pre_tail_report_frames_decode_with_default_observability() {
     assert_eq!(r.stats.lat_stride, 1);
     assert_eq!(r.stats.hist.count(), 0);
     assert_eq!((r.queue_depth, r.inflight_peak, r.full_soaks), (0, 0, 0));
+    // ...including the continuous-batching tail appended after it
+    assert_eq!(r.stats.qlat, Vec::<f64>::new());
+    assert_eq!(r.stats.qlat_stride, 1);
+    assert_eq!(r.inflight_slots, 0);
     // and the modern encoding of the decoded report is strictly longer
     // (it appends the tail), so new->old interop is the trailing-bytes
     // rejection pinned by header_corruptions_map_to_the_right_typed_errors
     assert!(frame::encode_event(&ShardEvent::Report(r)).len() > bytes.len());
+}
+
+#[test]
+fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
+    // A peer that speaks the observability tail (stride/histogram/queue
+    // gauges) but predates the continuous-batching tail: its frames end
+    // right after full_soaks.  Emulate one by encoding a modern report
+    // whose continuous tail is the canonical empty encoding (u32 empty
+    // qlat length + u64 stride + u64 slots = 20 bytes), chopping those
+    // 20 bytes, and patching the header length.
+    let report = ShardReport {
+        shard: 3,
+        queue_depth: 4,
+        inflight_peak: 2,
+        full_soaks: 9,
+        ..ShardReport::default()
+    };
+    let full = frame::encode_event(&ShardEvent::Report(report));
+    let cut = full.len() - 20;
+    let mut bytes = full[..cut].to_vec();
+    bytes[7..11].copy_from_slice(&((cut - HEADER_LEN) as u32).to_le_bytes());
+    let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("mid-tail frame must decode")
+    else {
+        panic!("expected a Report event");
+    };
+    // the PR 6 tail it did ship survives...
+    assert_eq!((r.shard, r.queue_depth, r.inflight_peak, r.full_soaks), (3, 4, 2, 9));
+    // ...and the absent continuous tail decodes to defaults, not errors
+    assert_eq!(r.stats.qlat, Vec::<f64>::new());
+    assert_eq!(r.stats.qlat_stride, 1);
+    assert_eq!(r.inflight_slots, 0);
 }
 
 #[test]

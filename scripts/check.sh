@@ -34,13 +34,32 @@ cargo test -q
 # sharded gateway smoke: 2 shards on the packed-W4 backbone, swept over
 # BOTH transports (inproc shard threads + socket shard workers over real
 # framed socket pairs); bench-gateway refuses to report unless sharded,
-# transport, and prefix-resume parity hold bit-for-bit, so this catches
-# replica/resume/framing divergence, not just crashes
-echo "== gateway smoke (2 shards, W4 backbone, inproc+socket transports) =="
+# transport, prefix-resume, AND continuous-vs-waved parity hold
+# bit-for-bit, so this catches replica/resume/framing/scheduling
+# divergence, not just crashes.  The mixed sweep (96 mixed-length
+# requests, wave of 8) is the continuous-batching gate: the JSON is only
+# serialized when slot-admitted logits match the waved reference, and the
+# sweep must actually beat the wave barrier on tail latency.
+echo "== gateway smoke (2 shards, W4 backbone, inproc+socket, mixed-length sweep) =="
 cargo run --release -p qst --bin qst -- bench-gateway --shards 2 --backbone w4 \
     --preset small --requests 64 --families 4 --per-family 2 --prefix-len 8 \
-    --prompt-len 12 --seq 16 --prefix-block 4 --json BENCH_gateway_smoke.json
+    --prompt-len 12 --seq 16 --prefix-block 4 \
+    --mixed-requests 96 --mixed-wave 8 --json BENCH_gateway_smoke.json
 grep -q '"transport_parity": 1' BENCH_gateway_smoke.json
+grep -q '"mixed_parity": 1' BENCH_gateway_smoke.json
+python3 - <<'EOF'
+import json
+
+bench = json.load(open("BENCH_gateway_smoke.json"))
+assert bench["mixed_parity"] == 1, "continuous logits diverged from the waved reference"
+ratio = bench["continuous_p95_ratio"]
+assert ratio < 1.0, (
+    f"continuous p95 is {ratio:.3f}x the waved reference — "
+    "slot admission must beat the wave barrier on tail latency")
+print(f"mixed sweep: continuous p95 = {ratio:.3f}x waved "
+      f"({bench['mixed_continuous_p95_ms']:.2f} ms vs {bench['mixed_waved_p95_ms']:.2f} ms), "
+      "bit-parity held")
+EOF
 rm -f BENCH_gateway_smoke.json
 
 # cross-process gateway smoke: two real `qst shard-worker` processes on
