@@ -110,13 +110,14 @@ COMMANDS:
   experiments  --id table1|table2|table3|table4|table5|table6|table7|
                     fig1a|fig1b|fig4|fig5|fig6|calib|all  [--fast]
   serve        [--synthetic [--num-tasks N]] | [--config <name> --method <m> --tasks cls,lm]
-               [--preset small|large] [--backbone f32|w4] [--threads N]
+               [--preset small|large|xl] [--backbone f32|w4] [--threads N]
                [--cache-bytes N] [--registry-bytes N] [--batch N] [--seq N]
                [--prefix-block N] [--seed N] [--trace-out PATH]
                In-process multi-task inference server: one shared frozen
                backbone, per-task side networks, hidden-state cache.
                --threads N runs the host kernels on N workers (bit-identical
-               results for any N); --preset large is d=256, 8 layers;
+               results for any N); --preset large is d=256, 8 layers
+               and --preset xl is d=512, 12 layers (packed-panel kernels);
                --backbone w4 keeps the frozen backbone packed in 4 bits and
                serves through the fused dequant-GEMM (~7x less resident);
                --prefix-block N lets prompts that extend a cached prompt
@@ -129,7 +130,7 @@ COMMANDS:
                The exact line 'STATS' returns Prometheus-style text metrics
                (lowercase 'stats' keeps the human summary).
   gateway      [--shards N | --connect ADDR,ADDR,...] [--queue-cap N]
-               [--num-tasks N] [--preset small|large] [--backbone f32|w4]
+               [--num-tasks N] [--preset small|large|xl] [--backbone f32|w4]
                [--threads N] [--cache-bytes N] [--registry-bytes N]
                [--batch N] [--seq N] [--prefix-block N] [--seed N]
                [--trace-out PATH]
@@ -158,7 +159,7 @@ COMMANDS:
   bench-serve  [--tasks N] [--requests N] [--unique-prompts N] [--prompt-len N]
                [--seq N] [--batch N] [--burst N] [--cache-bytes N]
                [--registry-bytes N] [--prefix-block N] [--seed N]
-               [--preset small|large] [--backbone f32|w4] [--threads N]
+               [--preset small|large|xl] [--backbone f32|w4] [--threads N]
                [--json PATH] [--trace-out PATH]
                Repeated-prompt serving benchmark over >=2 side networks;
                reports cached vs uncached throughput, cache hit rate,
@@ -172,7 +173,7 @@ COMMANDS:
                [--prefix-len N] [--prompt-len N] [--seq N] [--batch N]
                [--cache-bytes N] [--registry-bytes N] [--prefix-block N]
                [--queue-cap N] [--threads-per-shard N] [--seed N]
-               [--preset small|large] [--backbone f32|w4] [--json PATH]
+               [--preset small|large|xl] [--backbone f32|w4] [--json PATH]
                [--trace-out PATH] [--mixed-requests N] [--mixed-wave N]
                Shard-count x transport scaling sweep under open-loop
                shared-prefix load: one deterministic request stream per
@@ -189,11 +190,16 @@ COMMANDS:
                admission and through a driver-emulated wave barrier
                (--mixed-wave, 0 = shards x batch) and reports
                continuous_p95_ratio (--mixed-requests 0 disables)
-  bench-kernels [--dims 96,256] [--m N] [--threads N] [--seed N] [--json PATH]
+  bench-kernels [--dims 96,256,512] [--m N] [--threads N] [--seed N]
+               [--naive-cap-macs N] [--json PATH]
                Host kernel microbenchmarks: naive vs cache-blocked vs
-               blocked+threaded f32 GEMM, and fused W4 dequant-GEMM vs
-               dequantize-then-matmul; verifies exact equivalence, then
-               writes BENCH_kernels.json (--threads defaults to all cores)
+               packed-panel (serial + threaded) f32 GEMM, and fused W4
+               dequant-GEMM (panel-shared decode, serial + threaded) vs
+               the row-run baseline vs dequantize-then-matmul; verifies
+               exact equivalence, then writes BENCH_kernels.json with
+               per-kernel ms + GFLOP/s (--threads defaults to all cores;
+               the O(m*k*n) naive baseline is skipped above a MAC budget
+               and the blocked kernel stands in as reference)
   artifacts    List available AOT artifacts
   info         Print environment / runtime info
   help         This message

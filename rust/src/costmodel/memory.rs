@@ -253,8 +253,9 @@ mod tests {
     #[test]
     fn backbone_resident_bytes_matches_real_engines() {
         // the analytical figure must equal the bytes an actual engine holds,
-        // and the W4 form must be at least 5x smaller (ISSUE acceptance)
-        for preset in [EnginePreset::Small, EnginePreset::Large] {
+        // and the W4 form must be at least 5x smaller (ISSUE acceptance);
+        // EnginePreset::ALL keeps new presets (xl) pinned automatically
+        for preset in EnginePreset::ALL {
             for kind in [BackboneKind::F32, BackboneKind::W4] {
                 let engine = preset.build_backbone(3, 8, kind);
                 assert_eq!(

@@ -1,24 +1,41 @@
 //! `qst bench-kernels`: host-kernel microbenchmarks → `BENCH_kernels.json`.
 //!
-//! Three comparisons per matrix size, each verified for exact equivalence
+//! Four comparisons per matrix size, each verified for exact equivalence
 //! before timing so a bench run doubles as an integration check:
 //!
-//! 1. f32 GEMM (`m×d·d×d`): naive triple loop vs cache-blocked vs
-//!    blocked+threaded — the backbone-forward shape that caps `bench-serve`.
-//! 2. Threading medium: the same blocked GEMM on the persistent worker
+//! 1. f32 GEMM (`m×d·d×d`): naive triple loop vs cache-blocked vs the
+//!    packed-panel microkernel (serial and threaded) — the
+//!    backbone-forward shape that caps `bench-serve`.  `gemm_packed_speedup`
+//!    (blocked ÷ packed, serial vs serial) is the microkernel's measured
+//!    win; `scripts/check.sh` gates it ≥ 1.2 at d=512.  The O(m·k·n)
+//!    naive baseline is skipped above [`BenchKernelsOpts::naive_cap_macs`]
+//!    MACs (the blocked kernel stands in as the equivalence reference) so
+//!    xl-class shapes don't blow up CI wall-clock.
+//! 2. Threading medium: the same packed GEMM on the persistent worker
 //!    pool vs scoped spawn-per-call threads — the pool's amortization
 //!    delta (`scoped_ms / threaded_ms`).
 //! 3. W4 path: dequantize-to-f32-then-matmul vs the fused dequant-GEMM
-//!    (serial and threaded) straight from packed nibbles.
+//!    straight from packed nibbles (panel-shared decode, serial and
+//!    threaded).
+//! 4. W4 fused generations: the retired row-run kernel (per-run full
+//!    nibble re-decode + m/16 worker cap) vs the panel kernel at the same
+//!    thread count — `qgemm_packed_speedup`.
+//!
+//! Every timing is reported both as raw millis and as per-kernel GFLOP/s
+//! (2·m·d² FLOPs per call).
 
 use anyhow::{bail, Result};
 
-use super::gemm::{matmul, matmul_naive};
-use super::qgemm::w4_matmul;
+use super::gemm::{matmul, matmul_blocked_into, matmul_naive, matmul_packed_into};
+use super::qgemm::{w4_matmul, w4_matmul_rowrun};
 use super::threads::Threads;
 use crate::benchkit::{Bench, Json};
 use crate::quant::{dequantize_matrix_raw, quantize_matrix_raw};
 use crate::util::rng::Rng;
+
+/// Default MAC budget above which the naive baseline is skipped: d=256 at
+/// m=64 (4.2M MACs, ~sub-second) still runs it; d=512 (16.8M) does not.
+pub const NAIVE_CAP_MACS: usize = 8_000_000;
 
 #[derive(Clone, Debug)]
 pub struct BenchKernelsOpts {
@@ -29,39 +46,61 @@ pub struct BenchKernelsOpts {
     /// worker count for the threaded variants
     pub threads: usize,
     pub seed: u64,
+    /// skip the O(m·k·n) naive baseline when `m·d·d` exceeds this (the
+    /// blocked kernel becomes the equivalence reference at that size)
+    pub naive_cap_macs: usize,
 }
 
 impl Default for BenchKernelsOpts {
     fn default() -> Self {
-        BenchKernelsOpts { dims: vec![96, 256], m: 64, threads: 2, seed: 0 }
+        BenchKernelsOpts {
+            dims: vec![96, 256, 512],
+            m: 64,
+            threads: 2,
+            seed: 0,
+            naive_cap_macs: NAIVE_CAP_MACS,
+        }
     }
 }
 
 /// Median timings (ms) for one size; speedups are vs `naive_ms` for the
-/// GEMM family, vs `scoped_ms` for the pool, and vs `w4_dequant_ms` for
-/// the fused family.
+/// GEMM family (when measured), blocked-vs-packed for the microkernel,
+/// `scoped_ms` vs pool, `w4_dequant_ms` vs fused, and row-run vs panel
+/// for the fused-generation delta.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelRow {
     pub d: usize,
     pub qblock: usize,
-    pub naive_ms: f64,
+    /// `None` when `m·d·d` exceeded the naive MAC budget
+    pub naive_ms: Option<f64>,
     pub blocked_ms: f64,
-    /// blocked GEMM on the persistent worker pool
+    /// packed-panel microkernel, serial
+    pub packed_ms: f64,
+    /// packed-panel GEMM on the persistent worker pool
     pub threaded_ms: f64,
-    /// blocked GEMM with scoped spawn-per-call threads (pre-pool baseline)
+    /// packed-panel GEMM with scoped spawn-per-call threads (pre-pool baseline)
     pub scoped_ms: f64,
     pub w4_dequant_ms: f64,
+    /// panel-shared-decode fused kernel, serial
     pub w4_fused_ms: f64,
+    /// panel-shared-decode fused kernel on the pool
     pub w4_fused_threaded_ms: f64,
+    /// retired row-run fused kernel (per-run re-decode, m/16 cap) on the pool
+    pub w4_rowrun_ms: f64,
 }
 
 impl KernelRow {
-    pub fn blocked_speedup(&self) -> f64 {
-        self.naive_ms / self.blocked_ms.max(1e-12)
+    pub fn blocked_speedup(&self) -> Option<f64> {
+        self.naive_ms.map(|n| n / self.blocked_ms.max(1e-12))
     }
 
-    pub fn threaded_speedup(&self) -> f64 {
-        self.naive_ms / self.threaded_ms.max(1e-12)
+    pub fn threaded_speedup(&self) -> Option<f64> {
+        self.naive_ms.map(|n| n / self.threaded_ms.max(1e-12))
+    }
+
+    /// The microkernel's win: cache-blocked serial over packed-panel serial.
+    pub fn packed_speedup(&self) -> f64 {
+        self.blocked_ms / self.packed_ms.max(1e-12)
     }
 
     /// Spawn-per-GEMM over persistent-pool wall time (>1 means the pool
@@ -72,6 +111,21 @@ impl KernelRow {
 
     pub fn fused_speedup(&self) -> f64 {
         self.w4_dequant_ms / self.w4_fused_ms.max(1e-12)
+    }
+
+    /// Panel-shared decode over the retired row-run kernel, both threaded.
+    pub fn qgemm_packed_speedup(&self) -> f64 {
+        self.w4_rowrun_ms / self.w4_fused_threaded_ms.max(1e-12)
+    }
+
+    /// FLOPs of one `m × d · d × d` GEMM call at this size.
+    fn flops(&self, m: usize) -> f64 {
+        2.0 * (m * self.d * self.d) as f64
+    }
+
+    /// GFLOP/s a timing of `ms` milliseconds achieves at this size.
+    pub fn gflops(&self, m: usize, ms: f64) -> f64 {
+        self.flops(m) / (ms.max(1e-12) * 1e-3) / 1e9
     }
 }
 
@@ -91,19 +145,47 @@ impl BenchKernelsReport {
             .int("threads", self.threads as u64);
         for r in &self.rows {
             let d = r.d;
+            let ms_and_rate = |j: Json, key: &str, ms: f64| {
+                j.num(&format!("gemm_d{d}_{key}_ms"), ms)
+                    .num(&format!("gemm_d{d}_{key}_gflops"), r.gflops(self.m, ms))
+            };
+            match r.naive_ms {
+                Some(naive) => {
+                    j = ms_and_rate(j, "naive", naive)
+                        .int(&format!("gemm_d{d}_naive_skipped"), 0)
+                        .num(&format!("gemm_d{d}_blocked_speedup"), r.blocked_speedup().unwrap())
+                        .num(&format!("gemm_d{d}_threaded_speedup"), r.threaded_speedup().unwrap());
+                }
+                None => j = j.int(&format!("gemm_d{d}_naive_skipped"), 1),
+            }
+            j = ms_and_rate(j, "blocked", r.blocked_ms);
+            j = ms_and_rate(j, "packed", r.packed_ms);
+            j = ms_and_rate(j, "threaded", r.threaded_ms);
+            j = ms_and_rate(j, "scoped", r.scoped_ms);
             j = j
-                .num(&format!("gemm_d{d}_naive_ms"), r.naive_ms)
-                .num(&format!("gemm_d{d}_blocked_ms"), r.blocked_ms)
-                .num(&format!("gemm_d{d}_threaded_ms"), r.threaded_ms)
-                .num(&format!("gemm_d{d}_scoped_ms"), r.scoped_ms)
-                .num(&format!("gemm_d{d}_blocked_speedup"), r.blocked_speedup())
-                .num(&format!("gemm_d{d}_threaded_speedup"), r.threaded_speedup())
+                .num(&format!("gemm_d{d}_packed_speedup"), r.packed_speedup())
                 .num(&format!("gemm_d{d}_pool_speedup"), r.pool_speedup())
                 .int(&format!("w4_d{d}_qblock"), r.qblock as u64)
                 .num(&format!("w4_d{d}_dequant_matmul_ms"), r.w4_dequant_ms)
                 .num(&format!("w4_d{d}_fused_ms"), r.w4_fused_ms)
+                .num(&format!("w4_d{d}_fused_gflops"), r.gflops(self.m, r.w4_fused_ms))
                 .num(&format!("w4_d{d}_fused_threaded_ms"), r.w4_fused_threaded_ms)
-                .num(&format!("w4_d{d}_fused_speedup"), r.fused_speedup());
+                .num(
+                    &format!("w4_d{d}_fused_threaded_gflops"),
+                    r.gflops(self.m, r.w4_fused_threaded_ms),
+                )
+                .num(&format!("w4_d{d}_rowrun_ms"), r.w4_rowrun_ms)
+                .num(&format!("w4_d{d}_fused_speedup"), r.fused_speedup())
+                .num(&format!("w4_d{d}_packed_speedup"), r.qgemm_packed_speedup());
+        }
+        // headline keys (gated in scripts/check.sh / grepped in CI): the
+        // packed wins at the LARGEST benched size, where the microkernel
+        // matters most
+        if let Some(last) = self.rows.last() {
+            j = j
+                .int("packed_headline_d", last.d as u64)
+                .num("gemm_packed_speedup", last.packed_speedup())
+                .num("qgemm_packed_speedup", last.qgemm_packed_speedup());
         }
         j.finish()
     }
@@ -111,20 +193,29 @@ impl BenchKernelsReport {
     pub fn summary(&self) -> String {
         let mut out = String::new();
         for r in &self.rows {
+            let naive = match r.naive_ms {
+                Some(ms) => format!("naive {ms:.2} ms"),
+                None => "naive skipped".to_string(),
+            };
             out.push_str(&format!(
-                "kernels d={}: naive {:.2} ms | blocked {:.2} ms ({:.2}x) | +{} threads {:.2} ms ({:.2}x; pool vs scoped-spawn {:.2} ms = {:.2}x) | w4 dequant+matmul {:.2} ms vs fused {:.2} ms ({:.2}x)\n",
+                "kernels d={}: {} | blocked {:.2} ms | packed {:.2} ms ({:.2}x blocked, {:.2} GFLOP/s) | +{} threads {:.2} ms ({:.2} GFLOP/s; pool vs scoped-spawn {:.2} ms = {:.2}x) | w4 dequant+matmul {:.2} ms vs fused {:.2} ms ({:.2}x; threaded {:.2} ms, rowrun {:.2} ms = {:.2}x panel win)\n",
                 r.d,
-                r.naive_ms,
+                naive,
                 r.blocked_ms,
-                r.blocked_speedup(),
+                r.packed_ms,
+                r.packed_speedup(),
+                r.gflops(self.m, r.packed_ms),
                 self.threads,
                 r.threaded_ms,
-                r.threaded_speedup(),
+                r.gflops(self.m, r.threaded_ms),
                 r.scoped_ms,
                 r.pool_speedup(),
                 r.w4_dequant_ms,
                 r.w4_fused_ms,
-                r.fused_speedup()
+                r.fused_speedup(),
+                r.w4_fused_threaded_ms,
+                r.w4_rowrun_ms,
+                r.qgemm_packed_speedup()
             ));
         }
         out.pop();
@@ -152,32 +243,65 @@ pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
         let a: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
         let (packed, scales) = quantize_matrix_raw(&b, d, d, "nf4", qblock);
+        let run_naive = m * d * d <= opts.naive_cap_macs;
 
-        // equivalence gate: never publish timings for mismatched kernels
-        let want = matmul_naive(&a, &b, m, d, d);
-        if matmul(&serial, &a, &b, m, d, d) != want
+        // equivalence gate: never publish timings for mismatched kernels.
+        // Reference is the naive loop when affordable, the cache-blocked
+        // kernel (itself naive-pinned by unit tests) above the MAC budget.
+        let want = if run_naive {
+            matmul_naive(&a, &b, m, d, d)
+        } else {
+            let mut blocked = vec![0f32; m * d];
+            matmul_blocked_into(&mut blocked, &a, &b, m, d, d);
+            blocked
+        };
+        let mut packed_serial = vec![0f32; m * d];
+        matmul_packed_into(&mut packed_serial, &a, &b, m, d, d);
+        if packed_serial != want
             || matmul(&pool, &a, &b, m, d, d) != want
             || matmul(&scoped, &a, &b, m, d, d) != want
         {
-            bail!("blocked/threaded GEMM diverged from naive at d={d}");
+            bail!("packed/threaded GEMM diverged from the reference at d={d}");
+        }
+        if run_naive {
+            let mut blocked = vec![0f32; m * d];
+            matmul_blocked_into(&mut blocked, &a, &b, m, d, d);
+            if blocked != want {
+                bail!("blocked GEMM diverged from naive at d={d}");
+            }
         }
         let wd = dequantize_matrix_raw(&packed, &scales, d, d, "nf4", qblock);
         let w4_want = matmul(&serial, &a, &wd, m, d, d);
         if w4_matmul(&serial, &a, &packed, &scales, m, d, d, "nf4", qblock) != w4_want
             || w4_matmul(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock) != w4_want
+            || w4_matmul_rowrun(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock) != w4_want
         {
             bail!("fused dequant-GEMM diverged from dequantize-then-matmul at d={d}");
         }
 
-        let naive = Bench::quick(&format!("kernels: naive gemm {m}x{d}x{d}"))
-            .run(|| matmul_naive(&a, &b, m, d, d));
-        let blocked = Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d}"))
-            .run(|| matmul(&serial, &a, &b, m, d, d));
+        let naive = if run_naive {
+            Some(
+                Bench::quick(&format!("kernels: naive gemm {m}x{d}x{d}"))
+                    .run(|| matmul_naive(&a, &b, m, d, d)),
+            )
+        } else {
+            None
+        };
+        let blocked = Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d}")).run(|| {
+            let mut out = vec![0f32; m * d];
+            matmul_blocked_into(&mut out, &a, &b, m, d, d);
+            out
+        });
+        let packed_t = Bench::quick(&format!("kernels: packed gemm {m}x{d}x{d}")).run(|| {
+            let mut out = vec![0f32; m * d];
+            matmul_packed_into(&mut out, &a, &b, m, d, d);
+            out
+        });
         let threaded =
-            Bench::quick(&format!("kernels: blocked gemm {m}x{d}x{d} ({} threads)", pool.count()))
+            Bench::quick(&format!("kernels: packed gemm {m}x{d}x{d} ({} threads)", pool.count()))
                 .run(|| matmul(&pool, &a, &b, m, d, d));
         let scoped_t = Bench::quick(&format!(
-            "kernels: blocked gemm {m}x{d}x{d} ({} scoped-spawn threads)",
+            "kernels: packed gemm {m}x{d}x{d} ({} scoped-spawn threads)",
             scoped.count()
         ))
         .run(|| matmul(&scoped, &a, &b, m, d, d));
@@ -192,19 +316,24 @@ pub fn run_bench(opts: &BenchKernelsOpts) -> Result<BenchKernelsReport> {
             pool.count()
         ))
         .run(|| w4_matmul(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock));
+        let rowrun = Bench::quick(&format!(
+            "kernels: w4 row-run fused dequant-gemm {m}x{d}x{d} ({} threads, m/16 cap)",
+            pool.count()
+        ))
+        .run(|| w4_matmul_rowrun(&pool, &a, &packed, &scales, m, d, d, "nf4", qblock));
 
-        let gflop = 2.0 * (m * d * d) as f64 / 1e9;
-        threaded.throughput("GFLOP", gflop);
         rows.push(KernelRow {
             d,
             qblock,
-            naive_ms: naive.median_secs * 1e3,
+            naive_ms: naive.map(|r| r.median_secs * 1e3),
             blocked_ms: blocked.median_secs * 1e3,
+            packed_ms: packed_t.median_secs * 1e3,
             threaded_ms: threaded.median_secs * 1e3,
             scoped_ms: scoped_t.median_secs * 1e3,
             w4_dequant_ms: dequant.median_secs * 1e3,
             w4_fused_ms: fused.median_secs * 1e3,
             w4_fused_threaded_ms: fused_threaded.median_secs * 1e3,
+            w4_rowrun_ms: rowrun.median_secs * 1e3,
         });
     }
     Ok(BenchKernelsReport { m, threads: pool.count(), rows })
@@ -222,16 +351,50 @@ mod tests {
             m: 4,
             threads: 2,
             seed: 1,
+            ..BenchKernelsOpts::default()
         })
         .unwrap();
         assert_eq!(rep.rows.len(), 1);
         let j = rep.to_json();
         assert!(j.contains("\"bench\": \"kernels\""));
+        assert!(j.contains("gemm_d32_naive_ms"));
+        assert!(j.contains("\"gemm_d32_naive_skipped\": 0"));
         assert!(j.contains("gemm_d32_threaded_speedup"));
+        assert!(j.contains("gemm_d32_packed_ms"));
+        assert!(j.contains("gemm_d32_packed_gflops"));
+        assert!(j.contains("gemm_d32_packed_speedup"));
         assert!(j.contains("gemm_d32_scoped_ms"));
         assert!(j.contains("gemm_d32_pool_speedup"));
         assert!(j.contains("w4_d32_fused_speedup"));
+        assert!(j.contains("w4_d32_rowrun_ms"));
+        assert!(j.contains("w4_d32_packed_speedup"));
+        // headline keys for the check.sh / CI gates
+        assert!(j.contains("\"packed_headline_d\": 32"));
+        assert!(j.contains("\"gemm_packed_speedup\""));
+        assert!(j.contains("\"qgemm_packed_speedup\""));
         assert!(rep.summary().contains("d=32"));
+    }
+
+    #[test]
+    fn naive_skipped_above_mac_budget() {
+        // force the skip with a tiny budget: naive keys must vanish, the
+        // skipped marker must flip, and the run (blocked-referenced) still
+        // passes its equivalence gates
+        let rep = run_bench(&BenchKernelsOpts {
+            dims: vec![32],
+            m: 4,
+            threads: 2,
+            seed: 1,
+            naive_cap_macs: 1,
+        })
+        .unwrap();
+        assert!(rep.rows[0].naive_ms.is_none());
+        let j = rep.to_json();
+        assert!(j.contains("\"gemm_d32_naive_skipped\": 1"));
+        assert!(!j.contains("gemm_d32_naive_ms"));
+        assert!(!j.contains("gemm_d32_blocked_speedup"));
+        assert!(j.contains("gemm_d32_packed_speedup"));
+        assert!(rep.summary().contains("naive skipped"));
     }
 
     #[test]

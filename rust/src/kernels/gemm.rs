@@ -1,18 +1,22 @@
-//! Cache-blocked f32 GEMM with deterministic row-partitioned threading.
+//! f32 GEMM family with deterministic row-partitioned threading.
 //!
 //! All variants compute `out[i,j] = Σ_l a[i,l]·b[l,j]` with the reduction
-//! over `l` performed in ascending order, so the naive, blocked, and
-//! threaded paths are **bit-identical**: blocking tiles only the `l` and
-//! `j` loops (which never reorders the additions contributing to one
-//! output element) and threading partitions output rows `i` across
+//! over `l` performed in ascending order, so the naive, blocked, packed,
+//! and threaded paths are **bit-identical**: blocking/packing tile only
+//! the `l` and `j` loops (which never reorders the additions contributing
+//! to one output element) and threading partitions output rows `i` across
 //! workers.  The kernels equivalence tests pin this with exact equality.
+//!
+//! The production path ([`matmul`]) is the packed-panel microkernel from
+//! [`super::pack`]: each worker repacks its row-run into a thread-local
+//! KC-stripe buffer and streams contiguous panels through the KU-unrolled
+//! MAC.  The pre-panel cache-blocked kernel stays as [`matmul_blocked`] /
+//! [`matmul_blocked_into`] — both the `bench-kernels` baseline that
+//! measures the packed win and the in-place accumulate entry point for
+//! small side-network shapes.
 
+use super::pack::{self, JC, KC};
 use super::threads::Threads;
-
-/// k-tile: one stripe of `a`'s row plus the matching `b` rows stay hot.
-const KC: usize = 64;
-/// j-tile: 256 f32 = 1 KiB output/b-row segments, L1-friendly.
-const JC: usize = 256;
 
 /// Reference triple loop (ascending `l` accumulation). Kept for the
 /// equivalence tests and the `bench-kernels` baseline.
@@ -62,8 +66,50 @@ pub fn matmul_blocked_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: u
     }
 }
 
-/// Blocked + threaded GEMM: `a[m,k] · b[k,n]`, output rows partitioned
-/// across `threads` workers.  Bit-identical to [`matmul_naive`].
+/// Packed-panel serial GEMM accumulating into `out`: repack `a` into this
+/// thread's KC-stripe scratch ([`pack::pack_a`]), then stream each stripe
+/// through the unrolled [`pack::mac_panel`].  Bit-identical to
+/// [`matmul_blocked_into`] (same stripe order, same ascending-`l` adds).
+pub fn matmul_packed_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(out.len(), m * n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    pack::with_pack_buf(|buf| {
+        pack::pack_a(buf, a, m, k);
+        let mut l0 = 0;
+        while l0 < k {
+            let kc = KC.min(k - l0);
+            let apanel = &buf[m * l0..m * l0 + m * kc];
+            pack::mac_panel(out, apanel, kc, &b[l0 * n..(l0 + kc) * n], m, kc, n);
+            l0 += kc;
+        }
+    });
+}
+
+/// Pre-panel blocked + threaded GEMM, kept as the `bench-kernels` baseline
+/// the packed speedup is measured against.  Bit-identical to [`matmul`].
+pub fn matmul_blocked(
+    threads: &Threads,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    threads.par_rows(&mut out, n, |row0, run| {
+        let rows = run.len() / n;
+        matmul_blocked_into(run, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
+    });
+    out
+}
+
+/// Packed-panel + threaded GEMM — the production path: `a[m,k] · b[k,n]`,
+/// output rows partitioned across `threads` workers, each worker packing
+/// its own row-run into its thread-local scratch.  Bit-identical to
+/// [`matmul_naive`].
 pub fn matmul(threads: &Threads, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -71,7 +117,7 @@ pub fn matmul(threads: &Threads, a: &[f32], b: &[f32], m: usize, k: usize, n: us
     let mut out = vec![0f32; m * n];
     threads.par_rows(&mut out, n, |row0, run| {
         let rows = run.len() / n;
-        matmul_blocked_into(run, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
+        matmul_packed_into(run, &a[row0 * k..(row0 + rows) * k], b, rows, k, n);
     });
     crate::obs::end(crate::obs::SpanKind::Gemm, t_span, 0);
     out
@@ -96,6 +142,25 @@ mod tests {
             let mut got = vec![0f32; m * n];
             matmul_blocked_into(&mut got, &a, &b, m, k, n);
             assert_eq!(got, want, "blocked must be bit-identical ({m}x{k}x{n})");
+            let mut packed = vec![0f32; m * n];
+            matmul_packed_into(&mut packed, &a, &b, m, k, n);
+            assert_eq!(packed, want, "packed must be bit-identical ({m}x{k}x{n})");
+        }
+    }
+
+    #[test]
+    fn packed_matches_naive_bitwise_ragged_shapes_all_thread_counts() {
+        // shapes deliberately not multiples of KC (64), JC (256), or the
+        // KU (4) unroll: short tails on every loop level
+        let mut rng = Rng::new(77);
+        for (m, k, n) in [(1, 5, 1), (3, 67, 31), (7, 130, 257), (13, 191, 77), (5, 63, 65)] {
+            let a = rand(&mut rng, m * k);
+            let b = rand(&mut rng, k * n);
+            let want = matmul_naive(&a, &b, m, k, n);
+            for t in [1usize, 2, 4, 8] {
+                let got = matmul(&Threads::new(t), &a, &b, m, k, n);
+                assert_eq!(got, want, "packed {m}x{k}x{n} threads={t} must be bit-identical");
+            }
         }
     }
 
@@ -109,6 +174,8 @@ mod tests {
         for t in [1usize, 2, 3, 4, 8] {
             let got = matmul(&Threads::new(t), &a, &b, m, k, n);
             assert_eq!(got, want, "threads={t} must be bit-identical");
+            let baseline = matmul_blocked(&Threads::new(t), &a, &b, m, k, n);
+            assert_eq!(baseline, want, "blocked baseline threads={t} must be bit-identical");
         }
     }
 

@@ -13,22 +13,31 @@
 //!   spawn/join per GEMM), and results are bit-identical for any thread
 //!   count (`--threads` is wall-clock only).  [`Threads::scoped`] keeps
 //!   the old spawn-per-call path as a benchmark baseline.
-//! * [`gemm`] — naive reference, cache-blocked serial, and
-//!   blocked+threaded f32 GEMM, all bit-identical by construction.
+//! * [`pack`] — the packed-panel microkernel layer: KC-stripe activation
+//!   packing into reusable per-worker thread-local scratch, plus the
+//!   KU-unrolled panel MAC both GEMM families run their inner loop on.
+//! * [`gemm`] — naive reference, cache-blocked serial, and the
+//!   packed-panel + threaded production f32 GEMM, all bit-identical by
+//!   construction (the pre-panel blocked kernel stays as the measured
+//!   baseline).
 //! * [`qgemm`] — fused W4 dequant-GEMM multiplying straight from packed
 //!   nibbles + double-quantized scales, exactly matching
-//!   dequantize-then-matmul without materializing the f32 weight.  This is
-//!   the kernel a `--backbone w4` [`crate::serve::SyntheticEngine`] serves
-//!   every backbone matmul through (via [`crate::nn::Linear`]).
+//!   dequantize-then-matmul without materializing the f32 weight: each
+//!   KC-stripe of the weight is decoded once per call into a shared panel
+//!   (not once per row-run), then MAC'd through [`pack::mac_panel`].  This
+//!   is the kernel a `--backbone w4` [`crate::serve::SyntheticEngine`]
+//!   serves every backbone matmul through (via [`crate::nn::Linear`]).
 //! * [`bench`] — the `qst bench-kernels` runner emitting
-//!   `BENCH_kernels.json` (naive vs blocked vs blocked+threaded, pooled vs
-//!   scoped-spawn threading, fused vs dequantize-then-matmul).
+//!   `BENCH_kernels.json` (naive vs blocked vs packed vs threaded, pooled
+//!   vs scoped-spawn threading, fused panel vs row-run vs
+//!   dequantize-then-matmul, with per-kernel GFLOP/s).
 
 pub mod bench;
 pub mod gemm;
+pub mod pack;
 pub mod qgemm;
 pub mod threads;
 
-pub use gemm::{matmul, matmul_blocked_into, matmul_naive};
-pub use qgemm::{w4_matmul, w4_matmul_dq};
+pub use gemm::{matmul, matmul_blocked, matmul_blocked_into, matmul_naive, matmul_packed_into};
+pub use qgemm::{w4_matmul, w4_matmul_dq, w4_matmul_rowrun};
 pub use threads::{default_threads, pool_workers, set_default_threads, shutdown_pool, Threads};

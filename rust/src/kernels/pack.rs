@@ -1,0 +1,232 @@
+//! Packed-panel GEMM microkernel: the shared inner loop of [`super::gemm`]
+//! and [`super::qgemm`].
+//!
+//! The activation operand `a[m,k]` is repacked once per kernel call into
+//! KC-contiguous stripes ([`pack_a`]): for each k-stripe, every row's
+//! `[l0, l0+kc)` slice is stored back-to-back, so the microkernel streams
+//! one fully contiguous `kc`-slice per output row instead of striding
+//! through `a` with stride `k`.  The MAC itself ([`mac_panel`]) tiles `j`
+//! at [`JC`] and unrolls the `l` loop [`KU`]× over four consecutive panel
+//! rows; the four updates per output element are written as four separate
+//! `acc += a_i * w_i[j]` statements in one `j` pass, so the reduction
+//! order and per-add rounding are *exactly* those of four single-step
+//! passes — packed results stay bit-identical to [`super::gemm::matmul_naive`]
+//! (pinned by exact-equality tests in `gemm`/`qgemm`).
+//!
+//! Pack-buffer reuse contract: [`with_pack_buf`]/[`with_panel_buf`] hand
+//! out thread-local `Vec<f32>` scratch.  Pool workers are long-lived
+//! (see [`super::threads`]), so the allocation amortizes across every
+//! kernel call a worker ever runs — but the *contents* are invalidated on
+//! each call (activations change per micro-batch; only the capacity is
+//! reused).  The buffers are taken out of their cell for the duration of
+//! the closure, so a reentrant use (which no kernel in this crate does)
+//! degrades to a fresh allocation instead of aliasing.
+
+use std::cell::Cell;
+
+/// k-tile (panel height): one packed `a` stripe plus the matching `kc`
+/// weight rows stay hot in L1/L2.
+pub const KC: usize = 64;
+/// j-tile: 256 f32 = 1 KiB output/weight-row segments, L1-friendly.
+pub const JC: usize = 256;
+/// k-loop unroll factor of the microkernel.
+pub const KU: usize = 4;
+
+thread_local! {
+    /// Per-worker packed-A scratch (see module doc for the reuse contract).
+    static PACK_BUF: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    /// Per-thread decoded-weight-panel scratch (the W4 fused epilogue).
+    static PANEL_BUF: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable packed-A scratch buffer.
+pub fn with_pack_buf<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    PACK_BUF.with(|cell| {
+        let mut buf = cell.take();
+        let r = f(&mut buf);
+        cell.set(buf);
+        r
+    })
+}
+
+/// Run `f` with this thread's reusable decoded-panel scratch buffer.
+pub fn with_panel_buf<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    PANEL_BUF.with(|cell| {
+        let mut buf = cell.take();
+        let r = f(&mut buf);
+        cell.set(buf);
+        r
+    })
+}
+
+/// Pack `a[m,k]` into KC-contiguous stripes, stripe-major:
+/// stripe `s` (k-range `[s·KC, min((s+1)·KC, k))`, width `kc_s`) starts at
+/// offset `m·s·KC` and holds row `r`'s slice at `[m·s·KC + r·kc_s, +kc_s)`.
+/// Total size is exactly `m·k`; `buf` is cleared and refilled (capacity
+/// reused).
+pub fn pack_a(buf: &mut Vec<f32>, a: &[f32], m: usize, k: usize) {
+    assert_eq!(a.len(), m * k);
+    buf.clear();
+    buf.reserve(m * k);
+    let mut l0 = 0;
+    while l0 < k {
+        let kc = KC.min(k - l0);
+        for r in 0..m {
+            buf.extend_from_slice(&a[r * k + l0..r * k + l0 + kc]);
+        }
+        l0 += kc;
+    }
+}
+
+/// Panel MAC: `out[r, j] += Σ_{l<kc} a[r·a_stride + l] · w[l·n + j]` for
+/// `rows × n` outputs, with the `l` reduction ascending.  `a_stride` lets
+/// callers feed either a packed stripe (`a_stride == kc`, slices
+/// back-to-back) or rows straight out of an unpacked activation matrix
+/// (`a_stride == k`).  `j` tiles at [`JC`]; `l` unrolls [`KU`]× with four
+/// *separate* single-rounded adds per output element per pass — the exact
+/// rounding sequence of the one-step loop, so all paths stay bit-identical.
+pub fn mac_panel(
+    out: &mut [f32],
+    a: &[f32],
+    a_stride: usize,
+    w: &[f32],
+    rows: usize,
+    kc: usize,
+    n: usize,
+) {
+    if rows == 0 || kc == 0 || n == 0 {
+        return;
+    }
+    assert_eq!(out.len(), rows * n);
+    assert_eq!(w.len(), kc * n);
+    assert!(a_stride >= kc && a.len() >= (rows - 1) * a_stride + kc);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + JC).min(n);
+        let jn = j1 - j0;
+        for r in 0..rows {
+            let arow = &a[r * a_stride..r * a_stride + kc];
+            let orow = &mut out[r * n + j0..r * n + j1];
+            let mut l = 0;
+            while l + KU <= kc {
+                let (a0, a1, a2, a3) = (arow[l], arow[l + 1], arow[l + 2], arow[l + 3]);
+                let w0 = &w[l * n + j0..l * n + j1];
+                let w1 = &w[(l + 1) * n + j0..(l + 1) * n + j1];
+                let w2 = &w[(l + 2) * n + j0..(l + 2) * n + j1];
+                let w3 = &w[(l + 3) * n + j0..(l + 3) * n + j1];
+                for j in 0..jn {
+                    let mut acc = orow[j];
+                    acc += a0 * w0[j];
+                    acc += a1 * w1[j];
+                    acc += a2 * w2[j];
+                    acc += a3 * w3[j];
+                    orow[j] = acc;
+                }
+                l += KU;
+            }
+            // kc % KU tail: same single-step adds, still ascending in l
+            while l < kc {
+                let al = arow[l];
+                let wrow = &w[l * n + j0..l * n + j1];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += al * wv;
+                }
+                l += 1;
+            }
+        }
+        j0 = j1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::matmul_naive;
+    use crate::util::rng::Rng;
+
+    fn rand(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn pack_layout_roundtrips() {
+        // every (row, l) lands exactly once at the documented offset
+        let (m, k) = (3usize, KC + 5); // forces a short tail stripe
+        let a: Vec<f32> = (0..m * k).map(|v| v as f32).collect();
+        let mut buf = Vec::new();
+        pack_a(&mut buf, &a, m, k);
+        assert_eq!(buf.len(), m * k);
+        let mut l0 = 0;
+        while l0 < k {
+            let kc = KC.min(k - l0);
+            for r in 0..m {
+                assert_eq!(
+                    &buf[m * l0 + r * kc..m * l0 + (r + 1) * kc],
+                    &a[r * k + l0..r * k + l0 + kc],
+                    "stripe at l0={l0} row {r}"
+                );
+            }
+            l0 += kc;
+        }
+    }
+
+    #[test]
+    fn mac_panel_strided_and_packed_match_naive_bitwise() {
+        let mut rng = Rng::new(31);
+        // kc values straddle the KU unroll boundary; n straddles JC
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (4, KU, JC + 3), (2, 2 * KU + 3, 19)];
+        for (rows, kc, n) in shapes {
+            let a = rand(&mut rng, rows * kc);
+            let w = rand(&mut rng, kc * n);
+            let want = matmul_naive(&a, &w, rows, kc, n);
+            let mut got = vec![0f32; rows * n];
+            mac_panel(&mut got, &a, kc, &w, rows, kc, n);
+            assert_eq!(got, want, "packed-stride {rows}x{kc}x{n}");
+            // same inputs viewed through a wider stride
+            let stride = kc + 9;
+            let mut wide = vec![0f32; (rows - 1) * stride + kc];
+            for r in 0..rows {
+                wide[r * stride..r * stride + kc].copy_from_slice(&a[r * kc..(r + 1) * kc]);
+            }
+            let mut got2 = vec![0f32; rows * n];
+            mac_panel(&mut got2, &wide, stride, &w, rows, kc, n);
+            assert_eq!(got2, want, "wide-stride {rows}x{kc}x{n}");
+        }
+    }
+
+    #[test]
+    fn mac_panel_accumulates_into_existing_output() {
+        let mut rng = Rng::new(32);
+        let (rows, kc, n) = (2usize, 6usize, 4usize);
+        let a = rand(&mut rng, rows * kc);
+        let w = rand(&mut rng, kc * n);
+        let base = rand(&mut rng, rows * n);
+        let mut got = base.clone();
+        mac_panel(&mut got, &a, kc, &w, rows, kc, n);
+        // reference: the same ascending-l single-add sequence on top of base
+        let mut want = base;
+        for r in 0..rows {
+            for l in 0..kc {
+                for j in 0..n {
+                    want[r * n + j] += a[r * kc + l] * w[l * n + j];
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scratch_buffers_reuse_capacity() {
+        let cap_after_first = with_pack_buf(|buf| {
+            buf.resize(1024, 0.0);
+            buf.capacity()
+        });
+        let cap_second = with_pack_buf(|buf| {
+            assert!(buf.capacity() >= 1024, "capacity must survive across calls");
+            buf.capacity()
+        });
+        assert!(cap_second >= cap_after_first);
+        with_panel_buf(|buf| buf.resize(64, 0.0));
+        with_panel_buf(|buf| assert!(buf.capacity() >= 64));
+    }
+}

@@ -3,29 +3,48 @@
 //!
 //! `y[m,n] = x[m,k] · Ŵ[k,n]` where `Ŵ[l,j] = code[nibble(l,j)] ·
 //! scale[l/qblock, j]` — the quantized weight is never materialized as a
-//! full f32 matrix.  The only f32 scale state alive is one stripe's row
-//! (`n` floats): [`w4_matmul`] copies it out of the caller's scale table,
-//! while the double-quantized entry point [`w4_matmul_dq`] — the serving
-//! hot path behind a `--backbone w4` [`crate::nn::Linear`] — decodes it
-//! straight from the 8-bit `q8`/`gabs`/`gmean` tensors, stripe by stripe,
-//! with the exact arithmetic of [`crate::quant::dequantize_scales`] (so
-//! the full `k/qblock × n` scale matrix is never allocated per call).
+//! full f32 matrix.  The kernel walks the reduction in KC-stripes: each
+//! stripe's weight panel (`kc × n` floats, at most [`KC`]·n) is decoded
+//! **exactly once per call** into a thread-local scratch — the decode
+//! itself row-partitioned across workers — and then every output row MACs
+//! against the shared panel through the unrolled [`pack::mac_panel`]
+//! microkernel.  Because decode cost no longer multiplies by the worker
+//! count, threading needs no worker cap: the pre-panel kernel re-decoded
+//! the full nibble stream per row-run and had to clamp workers at `m/16`;
+//! that kernel survives as [`w4_matmul_rowrun`], the `bench-kernels`
+//! baseline the panel speedup is measured against (and a regression test
+//! pins that small-`m` calls now really fan out).
+//!
+//! Scale handling matches the storage format: [`w4_matmul`] copies one
+//! stripe's row (`n` floats) out of the caller's scale table, while the
+//! double-quantized entry point [`w4_matmul_dq`] — the serving hot path
+//! behind a `--backbone w4` [`crate::nn::Linear`] — decodes it straight
+//! from the 8-bit `q8`/`gabs`/`gmean` tensors with the exact arithmetic of
+//! [`crate::quant::dequantize_scales`] (so the full `k/qblock × n` scale
+//! matrix is never allocated per call).
 //!
 //! Floating-point order is pinned to the reference path: for each output
-//! element the `l` reduction ascends, and each decoded weight is the same
-//! single-rounded product `code * scale` the dequantizer produces — so
-//! the fused result is **exactly equal** to `dequantize_matrix_raw`
-//! followed by [`super::gemm::matmul`], which the equivalence tests
-//! assert bit-for-bit.  Threading partitions output rows, as everywhere
-//! in [`super`].
+//! element the `l` reduction ascends (stripes ascend, `l` ascends within a
+//! stripe, and the KU-unrolled MAC performs four *separate* single-rounded
+//! adds), and each decoded weight is the same single-rounded product
+//! `code * scale` the dequantizer produces — so the fused result is
+//! **exactly equal** to `dequantize_matrix_raw` followed by
+//! [`super::gemm::matmul`], which the equivalence tests assert
+//! bit-for-bit.  Threading partitions output rows, as everywhere in
+//! [`super`].
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pack::{self, KC};
 use super::threads::Threads;
 use crate::quant::codebook::codebook;
 
 /// Shared fused-kernel body: `fill_scales(stripe, buf)` writes the `n`
-/// scales of one K-stripe into `buf` whenever the reduction crosses into a
-/// new stripe.  Both entry points route here, so the nibble/MAC loops and
-/// their rounding order exist exactly once.
+/// scales of one K-stripe into `buf` whenever decode crosses into a new
+/// stripe.  Both entry points route here, so the nibble/MAC loops and
+/// their rounding order exist exactly once.  Returns the output plus the
+/// number of MAC row-runs dispatched (the threading-regression probe and
+/// the `Qgemm` span annotation).
 #[allow(clippy::too_many_arguments)]
 fn w4_matmul_impl<S>(
     threads: &Threads,
@@ -37,7 +56,7 @@ fn w4_matmul_impl<S>(
     n: usize,
     qdtype: &str,
     qblock: usize,
-) -> Vec<f32>
+) -> (Vec<f32>, u64)
 where
     S: Fn(usize, &mut [f32]) + Sync,
 {
@@ -49,49 +68,55 @@ where
     let t_span = crate::obs::start();
     let code = codebook(qdtype);
     let mut out = vec![0f32; m * n];
-    // each run re-decodes the full nibble stream (O(k·n), independent of its
-    // row count), so cap workers at m/16: with ≥16 rows per run the MAC work
-    // (2·rows·k·n flops) keeps duplicated decode under ~3% of the total
-    let threads = threads.with_count(threads.count().min((m / 16).max(1)));
-    threads.par_rows(&mut out, n, |row0, run| {
-        let rows = run.len() / n;
-        // decode each nibble row-pair once per run, then rank-1-update all
-        // of this run's output rows from the two decoded rows — the only
-        // f32 weight state alive is this 2×n pair plus one stripe of
-        // scales, never a full matrix
-        let mut w0 = vec![0f32; n];
-        let mut w1 = vec![0f32; n];
-        let mut srow = vec![0f32; n];
-        let mut stripe = usize::MAX;
-        for half in 0..k / 2 {
-            // rows 2·half and 2·half+1 share a scale stripe (qblock even)
-            let s = 2 * half / qblock;
-            if s != stripe {
-                stripe = s;
-                fill_scales(s, &mut srow);
+    if m == 0 {
+        crate::obs::end(crate::obs::SpanKind::Qgemm, t_span, 0);
+        return (out, 0);
+    }
+    let mac_runs = AtomicU64::new(0);
+    pack::with_panel_buf(|wpanel| {
+        wpanel.resize(KC.min(k) * n, 0.0);
+        let mut l0 = 0;
+        while l0 < k {
+            let kc = KC.min(k - l0);
+            // decode this stripe's weight panel once, row-partitioned:
+            // worker runs split the kc decoded rows, each refilling at most
+            // one scale row (O(n)) per qblock boundary it crosses
+            {
+                let panel = &mut wpanel[..kc * n];
+                threads.par_rows(panel, n, |r0, run| {
+                    let mut srow = vec![0f32; n];
+                    let mut stripe = usize::MAX;
+                    for (rr, wrow) in run.chunks_mut(n).enumerate() {
+                        let l = l0 + r0 + rr;
+                        let s = l / qblock;
+                        if s != stripe {
+                            stripe = s;
+                            fill_scales(s, &mut srow);
+                        }
+                        // nibble row-pairs share a byte row: 2i low, 2i+1 high
+                        let prow = &packed[(l / 2) * n..(l / 2 + 1) * n];
+                        let hi = l % 2 == 1;
+                        for ((wv, &byte), &sc) in wrow.iter_mut().zip(prow).zip(srow.iter()) {
+                            let nib = if hi { byte >> 4 } else { byte & 0xF };
+                            *wv = code[nib as usize] * sc;
+                        }
+                    }
+                });
             }
-            let prow = &packed[half * n..(half + 1) * n];
-            for j in 0..n {
-                let sc = srow[j];
-                w0[j] = code[(prow[j] & 0xF) as usize] * sc;
-                w1[j] = code[(prow[j] >> 4) as usize] * sc;
-            }
-            for r in 0..rows {
-                let x0 = x[(row0 + r) * k + 2 * half];
-                let x1 = x[(row0 + r) * k + 2 * half + 1];
-                let orow = &mut run[r * n..(r + 1) * n];
-                // two separate passes keep the ascending-l rounding order
-                for (o, &wv) in orow.iter_mut().zip(&w0) {
-                    *o += x0 * wv;
-                }
-                for (o, &wv) in orow.iter_mut().zip(&w1) {
-                    *o += x1 * wv;
-                }
-            }
+            // MAC every output row against the shared panel — no worker
+            // cap: decode cost is already paid once above
+            let panel = &wpanel[..kc * n];
+            threads.par_rows(&mut out, n, |row0, run| {
+                mac_runs.fetch_add(1, Ordering::Relaxed);
+                let rows = run.len() / n;
+                pack::mac_panel(run, &x[row0 * k + l0..], k, panel, rows, kc, n);
+            });
+            l0 += kc;
         }
     });
-    crate::obs::end(crate::obs::SpanKind::Qgemm, t_span, 0);
-    out
+    let runs = mac_runs.load(Ordering::Relaxed);
+    crate::obs::end(crate::obs::SpanKind::Qgemm, t_span, runs);
+    (out, runs)
 }
 
 /// Fused dequant-GEMM from packed nibbles + f32 block scales.
@@ -110,6 +135,30 @@ pub fn w4_matmul(
     qdtype: &str,
     qblock: usize,
 ) -> Vec<f32> {
+    assert!(qblock > 0 && k % qblock == 0);
+    assert_eq!(scales.len(), (k / qblock) * n);
+    let fill = |stripe: usize, buf: &mut [f32]| {
+        buf.copy_from_slice(&scales[stripe * n..(stripe + 1) * n]);
+    };
+    w4_matmul_impl(threads, x, packed, fill, m, k, n, qdtype, qblock).0
+}
+
+/// Test/bench entry exposing how many MAC row-runs the call dispatched —
+/// [`Threads::par_rows`] forms `min(workers, m)` runs per stripe
+/// deterministically, so the count pins that small-`m` fused calls no
+/// longer collapse to serial.
+#[doc(hidden)]
+pub fn w4_matmul_counting_runs(
+    threads: &Threads,
+    x: &[f32],
+    packed: &[u8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qdtype: &str,
+    qblock: usize,
+) -> (Vec<f32>, u64) {
     assert!(qblock > 0 && k % qblock == 0);
     assert_eq!(scales.len(), (k / qblock) * n);
     let fill = |stripe: usize, buf: &mut [f32]| {
@@ -149,7 +198,69 @@ pub fn w4_matmul_dq(
             *sv = crate::quant::scale_at(q8, gabs, gmean, qgroup, stripe * n + j);
         }
     };
-    w4_matmul_impl(threads, x, packed, fill, m, k, n, qdtype, qblock)
+    w4_matmul_impl(threads, x, packed, fill, m, k, n, qdtype, qblock).0
+}
+
+/// The pre-panel fused kernel: each row-run re-decodes the full nibble
+/// stream (O(k·n) per run, independent of its row count), so it caps
+/// workers at `m/16` to keep duplicated decode under ~3% of the MAC work.
+/// Kept **only** as the `bench-kernels` baseline that measures what the
+/// panel-shared decode buys (`qgemm_packed_speedup`); production callers
+/// use [`w4_matmul`]/[`w4_matmul_dq`].  Bit-identical to both.
+#[allow(clippy::too_many_arguments)]
+pub fn w4_matmul_rowrun(
+    threads: &Threads,
+    x: &[f32],
+    packed: &[u8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qdtype: &str,
+    qblock: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(k % 2, 0);
+    assert_eq!(packed.len(), (k / 2) * n);
+    assert!(qblock > 0 && k % qblock == 0);
+    assert_eq!(qblock % 2, 0);
+    assert_eq!(scales.len(), (k / qblock) * n);
+    let code = codebook(qdtype);
+    let mut out = vec![0f32; m * n];
+    let threads = threads.with_count(threads.count().min((m / 16).max(1)));
+    threads.par_rows(&mut out, n, |row0, run| {
+        let rows = run.len() / n;
+        let mut w0 = vec![0f32; n];
+        let mut w1 = vec![0f32; n];
+        let mut srow = vec![0f32; n];
+        let mut stripe = usize::MAX;
+        for half in 0..k / 2 {
+            let s = 2 * half / qblock;
+            if s != stripe {
+                stripe = s;
+                srow.copy_from_slice(&scales[s * n..(s + 1) * n]);
+            }
+            let prow = &packed[half * n..(half + 1) * n];
+            for j in 0..n {
+                let sc = srow[j];
+                w0[j] = code[(prow[j] & 0xF) as usize] * sc;
+                w1[j] = code[(prow[j] >> 4) as usize] * sc;
+            }
+            for r in 0..rows {
+                let x0 = x[(row0 + r) * k + 2 * half];
+                let x1 = x[(row0 + r) * k + 2 * half + 1];
+                let orow = &mut run[r * n..(r + 1) * n];
+                // two separate passes keep the ascending-l rounding order
+                for (o, &wv) in orow.iter_mut().zip(&w0) {
+                    *o += x0 * wv;
+                }
+                for (o, &wv) in orow.iter_mut().zip(&w1) {
+                    *o += x1 * wv;
+                }
+            }
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -166,8 +277,8 @@ mod tests {
     #[test]
     fn fused_matches_dequant_then_matmul_exactly() {
         let mut rng = Rng::new(21);
-        // m=5 collapses to the serial path (worker cap is m/16); m=64 runs
-        // 3 genuine workers, covering the row-partitioned fused path
+        // m=5 exercises runs shorter than the old serial-collapse regime;
+        // m=64 covers multi-stripe row partitioning
         for (m, k, n) in [(5usize, 128usize, 48usize), (64, 128, 48)] {
             for qdtype in ["nf4", "fp4"] {
                 let w = rand(&mut rng, k * n, 0.4);
@@ -181,8 +292,59 @@ mod tests {
                     fused, reference,
                     "{qdtype} m={m}: fused must match dequant+matmul bitwise"
                 );
+                let rowrun = w4_matmul_rowrun(&t, &x, &packed, &scales, m, k, n, qdtype, 64);
+                assert_eq!(rowrun, reference, "{qdtype} m={m}: rowrun baseline must match too");
             }
         }
+    }
+
+    #[test]
+    fn dq_packed_epilogue_matches_dequant_then_matmul_both_qblocks() {
+        // the serving entry point (double-quantized scales) against the
+        // full dequantize-then-matmul reference, for both codebooks at
+        // qblock 64 and 256, serial and threaded
+        let mut rng = Rng::new(23);
+        for qdtype in ["nf4", "fp4"] {
+            for qblock in [64usize, 256] {
+                let (m, k, n) = (9usize, 2 * qblock, 33usize);
+                let w = rand(&mut rng, k * n, 0.5);
+                let x = rand(&mut rng, m * k, 1.0);
+                let (packed, scales) = quantize_matrix_raw(&w, k, n, qdtype, qblock);
+                let (q8, gabs, gmean) = quantize_scales(&scales, 256);
+                let scales_back = crate::quant::dequantize_scales(&q8, &gabs, &gmean, 256);
+                let wd = dequantize_matrix_raw(&packed, &scales_back, k, n, qdtype, qblock);
+                for t in [1usize, 4] {
+                    let threads = Threads::new(t);
+                    let fused = w4_matmul_dq(
+                        &threads, &x, &packed, &q8, &gabs, &gmean, 256, m, k, n, qdtype, qblock,
+                    );
+                    let want = matmul(&threads, &x, &wd, m, k, n);
+                    assert_eq!(fused, want, "{qdtype} qblock={qblock} threads={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_no_longer_collapses_to_serial() {
+        // the retired m/16 cap would have clamped m=8 to 1 worker; the
+        // panel kernel must dispatch min(workers, m) = 8 MAC runs per
+        // stripe (k=128 → 2 stripes → 16 runs), deterministically
+        let mut rng = Rng::new(24);
+        let (m, k, n) = (8usize, 128usize, 40usize);
+        let w = rand(&mut rng, k * n, 0.5);
+        let x = rand(&mut rng, m * k, 1.0);
+        let (packed, scales) = quantize_matrix_raw(&w, k, n, "nf4", 64);
+        let (out, runs) = w4_matmul_counting_runs(
+            &Threads::new(8), &x, &packed, &scales, m, k, n, "nf4", 64,
+        );
+        assert_eq!(runs, 16, "8 workers on m=8 must form 8 MAC runs per stripe");
+        // and the fan-out must not change the bits
+        let (serial, serial_runs) = w4_matmul_counting_runs(
+            &Threads::new(1), &x, &packed, &scales, m, k, n, "nf4", 64,
+        );
+        assert_eq!(serial_runs, 2);
+        assert_eq!(out, serial);
     }
 
     #[test]
@@ -203,7 +365,7 @@ mod tests {
     #[test]
     fn prop_fused_equivalence_all_thread_counts() {
         prop::check(12, 0x5734, |rng| {
-            let m = rng.range(1, 80); // spans the serial (<16) and threaded regimes
+            let m = rng.range(1, 80);
             let k = 64 * rng.range(1, 4);
             let n = rng.range(1, 40);
             let qdtype = if rng.bool(0.5) { "nf4" } else { "fp4" };
@@ -215,6 +377,9 @@ mod tests {
             for t in [1usize, 2, 4] {
                 let got = w4_matmul(&Threads::new(t), &x, &packed, &scales, m, k, n, qdtype, 64);
                 assert_eq!(got, want, "{qdtype} threads={t}");
+                let rowrun =
+                    w4_matmul_rowrun(&Threads::new(t), &x, &packed, &scales, m, k, n, qdtype, 64);
+                assert_eq!(rowrun, want, "rowrun {qdtype} threads={t}");
             }
         });
     }

@@ -540,7 +540,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
 fn cmd_bench_kernels(args: &Args) -> Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
     let dims: Vec<usize> = args
-        .str_or("dims", "96,256")
+        .str_or("dims", "96,256,512")
         .split(',')
         .map(|s| {
             s.trim()
@@ -553,6 +553,8 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
         m: args.usize_or("m", 64)?,
         threads: args.usize_or("threads", cores)?,
         seed: args.u64_or("seed", 0)?,
+        naive_cap_macs: args
+            .usize_or("naive-cap-macs", qst::kernels::bench::NAIVE_CAP_MACS)?,
     };
     let report = qst::kernels::bench::run_bench(&opts)?;
     println!("{}", report.summary());

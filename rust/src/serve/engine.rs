@@ -88,14 +88,23 @@ pub enum EnginePreset {
     /// d=256, 8 layers — intractable on the seed's naive triple loops;
     /// unlocked by the blocked/threaded kernels.
     Large,
+    /// d=512, 12 layers — ~6x the backbone FLOPs of `large`; serveable at
+    /// interactive latency only on the packed-panel microkernel, and cheap
+    /// to hold under `--backbone w4` (~0.5 MB resident).
+    Xl,
 }
 
 impl EnginePreset {
+    /// Every preset, in ascending size — tests and sweeps iterate this so
+    /// a new preset can't dodge the parity/residency/costmodel pins.
+    pub const ALL: [EnginePreset; 3] = [EnginePreset::Small, EnginePreset::Large, EnginePreset::Xl];
+
     pub fn parse(name: &str) -> anyhow::Result<Self> {
         match name {
             "small" => Ok(EnginePreset::Small),
             "large" => Ok(EnginePreset::Large),
-            other => bail!("unknown preset '{other}' (expected 'small' or 'large')"),
+            "xl" => Ok(EnginePreset::Xl),
+            other => bail!("unknown preset '{other}' (expected 'small', 'large', or 'xl')"),
         }
     }
 
@@ -103,6 +112,7 @@ impl EnginePreset {
         match self {
             EnginePreset::Small => "small",
             EnginePreset::Large => "large",
+            EnginePreset::Xl => "xl",
         }
     }
 
@@ -110,6 +120,7 @@ impl EnginePreset {
         match self {
             EnginePreset::Small => SyntheticEngine::SMALL_VOCAB,
             EnginePreset::Large => SyntheticEngine::LARGE_VOCAB,
+            EnginePreset::Xl => SyntheticEngine::XL_VOCAB,
         }
     }
 
@@ -118,6 +129,7 @@ impl EnginePreset {
         match self {
             EnginePreset::Small => (96, 6, SyntheticEngine::SMALL_VOCAB, 12),
             EnginePreset::Large => (256, 8, SyntheticEngine::LARGE_VOCAB, 16),
+            EnginePreset::Xl => (512, 12, SyntheticEngine::XL_VOCAB, 16),
         }
     }
 
@@ -222,6 +234,9 @@ impl SyntheticEngine {
     /// Vocab of the [`SyntheticEngine::large`] configuration.
     pub const LARGE_VOCAB: usize = 512;
 
+    /// Vocab of the [`SyntheticEngine::xl`] configuration.
+    pub const XL_VOCAB: usize = 1024;
+
     /// Small default used by tests and `bench-serve`: heavy backbone
     /// (d=96, 6 layers) vs light side nets (width 8).  The shape literals
     /// live in [`EnginePreset::shape`] — the single source of truth.
@@ -234,6 +249,13 @@ impl SyntheticEngine {
     /// forwards run on the blocked/threaded kernels.
     pub fn large(seed: u64, seq: usize) -> Self {
         EnginePreset::Large.build(seed, seq)
+    }
+
+    /// Biggest preset (d=512, 12 layers, width-32 side nets): ~6x the
+    /// backbone FLOPs of [`SyntheticEngine::large`], interactive only on
+    /// the packed-panel microkernel (`kernels::pack`).
+    pub fn xl(seed: u64, seq: usize) -> Self {
+        EnginePreset::Xl.build(seed, seq)
     }
 
     /// Set the kernel worker count (clamped to >= 1).  Purely a wall-clock
@@ -323,17 +345,22 @@ impl Engine for SyntheticEngine {
                 bail!("backbone row must be padded to {seq} (got {})", row.len());
             }
         }
-        // All prompts run as one [rows·seq, d] activation so the blocked
+        // All prompts run as one [rows·seq, d] activation so the packed
         // kernels see enough rows to partition; every activation row depends
-        // only on its own prompt, so outputs stay batch-invariant.
+        // only on its own prompt, so outputs stay batch-invariant.  The
+        // embedding gather is itself row-partitioned: each activation row
+        // gathers only its own token (for W4 backbones that gather decodes
+        // nibbles, so it is real work, not a memcpy).
         let total = rows.len() * seq;
         let mut h0 = vec![0f32; total * d];
-        for (r, row) in rows.iter().enumerate() {
-            for (t, &tok) in row.iter().enumerate() {
-                let tok = (tok.max(0) as usize) % self.vocab;
-                self.embed.row_into(tok, &mut h0[(r * seq + t) * d..(r * seq + t + 1) * d]);
+        let (embed, vocab) = (&self.embed, self.vocab);
+        self.threads.par_rows(&mut h0, d, |row0, run| {
+            for (rr, hrow) in run.chunks_mut(d).enumerate() {
+                let idx = row0 + rr;
+                let tok = (rows[idx / seq][idx % seq].max(0) as usize) % vocab;
+                embed.row_into(tok, hrow);
             }
-        }
+        });
         // residual tanh layers: h' = tanh(h·W + h).  Each layer's states are
         // sliced into the per-row bundles as soon as they're produced, so
         // only the current/next activations stay alive beyond the bundles.
@@ -408,10 +435,13 @@ impl Engine for SyntheticEngine {
         }
         let tail = seq - prefix_len;
         let mut h = vec![0f32; tail * d];
-        for (t, &tok) in row[prefix_len..].iter().enumerate() {
-            let tok = (tok.max(0) as usize) % self.vocab;
-            self.embed.row_into(tok, &mut h[t * d..(t + 1) * d]);
-        }
+        let (embed, vocab, tail_toks) = (&self.embed, self.vocab, &row[prefix_len..]);
+        self.threads.par_rows(&mut h, d, |row0, run| {
+            for (rr, hrow) in run.chunks_mut(d).enumerate() {
+                let tok = (tail_toks[row0 + rr].max(0) as usize) % vocab;
+                embed.row_into(tok, hrow);
+            }
+        });
         let mut data = Vec::with_capacity((layers + 1) * per_layer);
         data.extend_from_slice(&donor.data[..prefix_len * d]);
         data.extend_from_slice(&h);
@@ -462,14 +492,23 @@ impl Engine for SyntheticEngine {
         // Batch the whole micro-batch through each ladder step: one
         // [rows, d] gather per layer feeds the shared GEMM kernels; rows
         // stay independent, so per-request results are batch-invariant.
+        // The gather is row-partitioned like every other assembly loop
+        // (`Rc` handles are unwrapped to plain `&Hidden` first — the
+        // bundles themselves are shared-read-only data).
         let nr = rows.len();
+        let query_at: Vec<usize> = rows.iter().map(|row| query_pos(row)).collect();
+        let bundles: Vec<&Hidden> = hiddens.iter().map(|h| &**h).collect();
+        let threads = self.threads;
         let gather = |l: usize| -> Vec<f32> {
             let mut g = vec![0f32; nr * d];
-            for (r, (hidden, row)) in hiddens.iter().zip(rows).enumerate() {
-                let pos = query_pos(row);
-                let src = &hidden.data[l * per_layer + pos * d..l * per_layer + (pos + 1) * d];
-                g[r * d..(r + 1) * d].copy_from_slice(src);
-            }
+            threads.par_rows(&mut g, d, |row0, run| {
+                for (rr, grow) in run.chunks_mut(d).enumerate() {
+                    let r = row0 + rr;
+                    let pos = query_at[r];
+                    let base = l * per_layer + pos * d;
+                    grow.copy_from_slice(&bundles[r].data[base..base + d]);
+                }
+            });
             g
         };
         // ladder: z = tanh(z·mix + down(h_l)), seeded by z0 = down(h0)
@@ -501,11 +540,19 @@ pub struct ExecutorEngine {
     seq: usize,
     tasks: HashMap<String, TaskExec>,
     id: u64,
+    /// worker count for the micro-batch assembly loops (bit-identical for
+    /// any value, like every row-partitioned loop in this crate)
+    threads: Threads,
 }
 
 impl ExecutorEngine {
     pub fn new(rt: Runtime) -> Self {
-        ExecutorEngine { rt, seq: 0, tasks: HashMap::new(), id: 0 }
+        ExecutorEngine { rt, seq: 0, tasks: HashMap::new(), id: 0, threads: Threads::default() }
+    }
+
+    /// Set the assembly worker count (clamped to >= 1); purely wall-clock.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = Threads::new(n);
     }
 
     /// Bind a task to an eval artifact, uploading its trainable state and
@@ -592,15 +639,22 @@ impl Engine for ExecutorEngine {
                 padded.push(chunk.last().expect("non-empty chunk"));
             }
             let b = te.batch;
-            let mut tokens = Vec::with_capacity(b * seq);
-            let mut positions = Vec::with_capacity(b);
+            // validate before fanning out (bail! can't cross par_rows), then
+            // assemble the [b, seq] token plane row-partitioned — the last
+            // serial stretch on the serve path for artifact-backed batches
             for row in &padded {
                 if row.len() != seq {
                     bail!("row must be padded to {seq}");
                 }
-                tokens.extend_from_slice(row);
-                positions.push(query_pos(row) as i32);
             }
+            let mut tokens = vec![0i32; b * seq];
+            let padded_ref = &padded;
+            self.threads.par_rows(&mut tokens, seq, |row0, run| {
+                for (rr, trow) in run.chunks_mut(seq).enumerate() {
+                    trow.copy_from_slice(padded_ref[row0 + rr]);
+                }
+            });
+            let positions: Vec<i32> = padded.iter().map(|row| query_pos(row) as i32).collect();
             // fill data slots by shape: [B,S] i32 -> tokens, [B] i32 -> query
             // positions, anything else -> zeros (loss-only aux inputs)
             let mut filled_tokens = false;
@@ -742,7 +796,7 @@ mod tests {
 
     #[test]
     fn preset_parse_roundtrip() {
-        for p in [EnginePreset::Small, EnginePreset::Large] {
+        for p in EnginePreset::ALL {
             assert_eq!(EnginePreset::parse(p.name()).unwrap(), p);
             assert_eq!(p.build(1, 8).vocab, p.vocab());
             let (d, layers, vocab, r) = p.shape();
@@ -753,8 +807,25 @@ mod tests {
     }
 
     #[test]
+    fn xl_preset_serves_deterministically() {
+        let mut e = SyntheticEngine::xl(5, 8);
+        assert_eq!((e.d, e.layers, e.vocab), (512, 12, SyntheticEngine::XL_VOCAB));
+        e.set_threads(4);
+        let row = vec![17i32, 900, 2, 0, 0, 0, 0, 0];
+        let h: Vec<Rc<Hidden>> =
+            e.backbone(std::slice::from_ref(&row)).unwrap().into_iter().map(Rc::new).collect();
+        let net = synth_net("xl-task", 78);
+        let rows = vec![row];
+        let a = e.side(&net, &h, &rows).unwrap();
+        let b = e.side(&net, &h, &rows).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), SyntheticEngine::XL_VOCAB);
+        assert!(a[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
     fn w4_backbone_shrinks_residency_at_least_5x() {
-        for p in [EnginePreset::Small, EnginePreset::Large] {
+        for p in EnginePreset::ALL {
             let f = p.build_backbone(1, 8, BackboneKind::F32);
             let q = p.build_backbone(1, 8, BackboneKind::W4);
             assert_eq!(f.backbone_kind(), BackboneKind::F32);

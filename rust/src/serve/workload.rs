@@ -36,7 +36,7 @@ pub struct BenchServeOpts {
     pub seed: u64,
     /// kernel worker count for the engine forwards (`--threads`)
     pub threads: usize,
-    /// engine shape (`--preset small|large`)
+    /// engine shape (`--preset small|large|xl`)
     pub preset: EnginePreset,
     /// frozen-backbone storage (`--backbone f32|w4`) for the primary passes
     pub backbone: BackboneKind,

@@ -59,7 +59,7 @@ fn arb_spec(rng: &mut Rng) -> ShardSpec {
     // stays inside the MAX_SPEC_* wire bounds; out-of-range specs are
     // rejected by decode (covered by out_of_range_specs_decode_to_malformed)
     ShardSpec {
-        preset: if rng.bool(0.5) { EnginePreset::Small } else { EnginePreset::Large },
+        preset: EnginePreset::ALL[rng.below(EnginePreset::ALL.len())],
         backbone: if rng.bool(0.5) { BackboneKind::F32 } else { BackboneKind::W4 },
         seed: rng.next_u64(),
         seq: 1 + rng.below(4096),

@@ -192,6 +192,54 @@ fn w4_backbone_bit_identical_to_f32_roundtrip() {
     }
 }
 
+/// The xl preset (d=512, 12 layers — the shape the packed-panel kernels
+/// are tuned for) must hold the same parity contract: W4 bit-identical to
+/// the f32 round-trip, and batched identical to unbatched, at 1 and 4
+/// threads.  Kept deliberately small (2 prompts, seq=4) because every
+/// backbone layer here is a 512×512 GEMM even in debug builds.
+#[test]
+fn xl_preset_w4_parity_end_to_end() {
+    let preset = EnginePreset::Xl;
+    let seq = 4;
+    let prompts: Vec<Vec<i32>> = vec![vec![17, 900, 2], vec![5, 1023]];
+    let rows: Vec<Vec<i32>> = prompts.iter().map(|p| batcher::pad_row(p, seq).unwrap()).collect();
+    for threads in [1usize, 4] {
+        let mut w4 = preset.build_backbone(13, seq, BackboneKind::W4);
+        w4.set_threads(threads);
+        let mut f32rt = w4.to_f32_roundtrip();
+        f32rt.set_threads(threads);
+        assert!(
+            w4.backbone_resident_bytes() * 5 <= f32rt.backbone_resident_bytes(),
+            "xl: packed backbone must be at least 5x smaller"
+        );
+        let mut reg = Registry::new(1 << 20);
+        reg.register_synthetic("par", 404, 4096).unwrap();
+        let net = reg.get("par").unwrap();
+
+        let hq: Vec<Rc<Hidden>> = w4.backbone(&rows).unwrap().into_iter().map(Rc::new).collect();
+        let hf: Vec<Rc<Hidden>> =
+            f32rt.backbone(&rows).unwrap().into_iter().map(Rc::new).collect();
+        for (a, b) in hq.iter().zip(&hf) {
+            assert_eq!(a.data, b.data, "xl t={threads}: batched hiddens must match");
+        }
+        let lq = w4.side(&net, &hq, &rows).unwrap();
+        let lf = f32rt.side(&net, &hf, &rows).unwrap();
+        assert_eq!(lq, lf, "xl t={threads}: batched logits must match");
+        assert_eq!(lq[0].len(), SyntheticEngine::XL_VOCAB);
+
+        for (i, row) in rows.iter().enumerate() {
+            let h1: Vec<Rc<Hidden>> = w4
+                .backbone(std::slice::from_ref(row))
+                .unwrap()
+                .into_iter()
+                .map(Rc::new)
+                .collect();
+            let solo = w4.side(&net, &h1, std::slice::from_ref(row)).unwrap();
+            assert_eq!(solo[0], lq[i], "xl t={threads} row {i}: unbatched must match batched");
+        }
+    }
+}
+
 #[test]
 fn eviction_pressure_does_not_corrupt_results() {
     // cache big enough for exactly one hidden bundle: constant eviction

@@ -128,6 +128,49 @@ print(f"trace: {len(trace['traceEvents'])} spans, all lifecycle kinds present; "
 EOF
 rm -f BENCH_serve_smoke.json   # trace.json is kept: CI uploads it as an artifact
 
+# packed-panel kernel gate: at the xl backbone shape (d=512) the packed
+# microkernel must beat the cache-blocked serial kernel by ≥1.2x, and the
+# panel-shared W4 decode must not lose to the retired row-run kernel.
+# bench-kernels bails before timing if any kernel diverges bitwise from
+# its reference, so a zero exit also re-proves bit-identity in release.
+echo "== packed-kernel speedup gate (bench-kernels, d=512) =="
+cargo run --release -p qst --bin qst -- bench-kernels --dims 512 --m 64 \
+    --threads 2 --json BENCH_kernels_gate.json
+python3 - <<'EOF'
+import json
+
+bench = json.load(open("BENCH_kernels_gate.json"))
+assert bench["gemm_d512_naive_skipped"] == 1, "naive baseline should be skipped at d=512"
+gemm = bench["gemm_packed_speedup"]
+qgemm = bench["qgemm_packed_speedup"]
+assert gemm >= 1.2, (
+    f"packed GEMM is only {gemm:.3f}x the blocked kernel at d=512 (gate: 1.2x)")
+assert qgemm >= 1.0, (
+    f"panel-shared W4 decode is {qgemm:.3f}x the row-run kernel (gate: 1.0x)")
+print(f"packed kernels: gemm {gemm:.2f}x blocked, qgemm {qgemm:.2f}x row-run at d=512")
+EOF
+rm -f BENCH_kernels_gate.json
+
+# xl preset smoke: the d=512/12-layer preset must serve end-to-end on the
+# packed-W4 backbone — bench-serve's cached-vs-uncached parity and
+# bench-gateway's sharded/batched-vs-unbatched parity gates both run
+# inside the binaries (they refuse to serialize JSON on divergence)
+echo "== xl preset smoke (bench-serve + 2-shard gateway, W4 backbone) =="
+cargo run --release -p qst --bin qst -- bench-serve --preset xl --backbone w4 \
+    --tasks 2 --requests 24 --unique-prompts 6 --prompt-len 8 --seq 12 \
+    --json BENCH_serve_xl_smoke.json
+grep -q '"preset": "xl"' BENCH_serve_xl_smoke.json
+rm -f BENCH_serve_xl_smoke.json
+cargo run --release -p qst --bin qst -- bench-gateway --preset xl --backbone w4 \
+    --shards 2 --transports inproc --requests 16 --families 2 --per-family 2 \
+    --prefix-len 4 --prompt-len 8 --seq 12 --prefix-block 4 \
+    --mixed-requests 0 --json BENCH_gateway_xl_smoke.json
+grep -q '"preset": "xl"' BENCH_gateway_xl_smoke.json
+grep -q '"sharded_parity": 1' BENCH_gateway_xl_smoke.json
+grep -q '"prefix_parity": 1' BENCH_gateway_xl_smoke.json
+rm -f BENCH_gateway_xl_smoke.json
+echo "xl preset served end-to-end with parity held"
+
 if [ "${QST_SKIP_FMT:-0}" = "1" ]; then
     # the seed predates rustfmt availability and has no rustfmt.toml; CI
     # sets this until a dedicated formatting pass lands
