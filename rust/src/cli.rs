@@ -133,7 +133,8 @@ COMMANDS:
                [--num-tasks N] [--preset small|large|xl] [--backbone f32|w4]
                [--threads N] [--cache-bytes N] [--registry-bytes N]
                [--batch N] [--seq N] [--prefix-block N] [--seed N]
-               [--trace-out PATH]
+               [--trace-out PATH] [--heartbeat-ms N] [--health-mult N]
+               [--series-ms N] [--series-cap N]
                Asynchronous sharded serving front-end: N worker shards each
                hold a private backbone replica + prefix-aware hidden-state
                cache behind a bounded inbox (full inbox => backpressure, not
@@ -151,6 +152,22 @@ COMMANDS:
                writes one fleet-wide Chrome trace file; the line 'STATS'
                returns Prometheus-style text metrics with exactly-merged
                fleet latency buckets.
+               --heartbeat-ms N makes every shard emit a liveness
+               heartbeat each N ms (queue depth, in-flight slots, span
+               drops, cache bytes); the gateway grades shards
+               Healthy/Suspect/Dead at 1x/2x the timeout
+               (N * --health-mult, default 3) and exports
+               qst_worker_up{shard} / qst_heartbeat_age_seconds{shard}
+               in 'STATS'.  The exact line 'HEALTH' returns the fleet
+               liveness registry as one JSON line without a report
+               barrier (it answers even with a dead shard).
+               --series-ms N arms the gauge flight recorder: each shard
+               samples queue depth, in-flight slots, and cache/registry
+               bytes every N ms into a --series-cap ring (default 256,
+               oldest overwritten); with --trace-out the merged series
+               render as Chrome counter tracks ('ph':'C') beside the
+               spans, including derived rps.  Both cadences default 0
+               (off) and cost nothing when disabled.
   shard-worker --listen ADDR
                One gateway shard as its own process: binds unix:<path> or
                <host>:<port>, accepts one `gateway --connect` session,

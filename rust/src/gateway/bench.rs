@@ -138,6 +138,10 @@ pub struct GatewayPass {
     /// worker-shipped spans absorbed during a traced pass (standalone
     /// socket workers only; empty otherwise and on untraced passes)
     remote_spans: Vec<crate::obs::trace::TraceSpan>,
+    /// per-shard gauge flight-recorder series from the final report,
+    /// already on their trace lanes (shard i -> pid i+1); only a traced
+    /// pass arms the series, so this is empty on measured passes
+    counter_tracks: Vec<crate::obs::trace::CounterTrack>,
 }
 
 /// The mixed-prompt-length continuous-vs-waved comparison: one open-loop
@@ -193,6 +197,10 @@ pub struct BenchGatewayReport {
     pub trace_spans: usize,
     /// distinct span names in the trace file
     pub trace_kinds: Vec<String>,
+    /// gauge flight-recorder points written as counter events alongside
+    /// the spans (0 when untraced — only the traced replay arms the
+    /// series)
+    pub trace_counter_points: usize,
 }
 
 /// The deterministic (task, prompt) request stream: the r-th accepted
@@ -226,6 +234,15 @@ fn run_pass(
         tasks: opts.tasks,
         threads_per_shard: opts.threads_per_shard,
         trace,
+        // the traced replay doubles as the health-plane parity proof:
+        // heartbeats and the gauge flight recorder are armed there (and
+        // only there), and the bits must still match the quiet pass.
+        // The 1ms series cadence guarantees samples even on a tiny
+        // replay that serves in a few milliseconds.
+        heartbeat_ms: if trace { 25 } else { 0 },
+        health_mult: crate::obs::health::DEFAULT_HEALTH_MULT,
+        series_ms: if trace { 1 } else { 0 },
+        series_cap: crate::obs::series::SERIES_DEFAULT_CAP,
     };
     let (mut gw, worker_joins) = worker::launch_gateway(&cfg, transport)?;
     let choices = stream_choices(opts, pool.len());
@@ -274,6 +291,17 @@ fn run_pass(
     for gr in leftover {
         responses.insert(gr.resp.id, gr.resp.logits);
     }
+    // shard i's gauge series renders on counter lane i+1, matching the
+    // lane its worker spans ship under (lane 0 = the gateway process)
+    let counter_tracks: Vec<crate::obs::trace::CounterTrack> = report
+        .shards
+        .iter()
+        .filter(|r| !r.series.is_empty())
+        .map(|r| crate::obs::trace::CounterTrack {
+            pid: r.shard as u32 + 1,
+            points: r.series.clone(),
+        })
+        .collect();
     ensure!(
         responses.len() == opts.requests,
         "completed {} of {} requests at {shards} shard(s) over {}",
@@ -311,6 +339,7 @@ fn run_pass(
         ),
         responses,
         remote_spans,
+        counter_tracks,
     })
 }
 
@@ -367,6 +396,10 @@ fn run_mixed_pass(
         tasks: opts.tasks,
         threads_per_shard: opts.threads_per_shard,
         trace: false,
+        heartbeat_ms: 0,
+        health_mult: crate::obs::health::DEFAULT_HEALTH_MULT,
+        series_ms: 0,
+        series_cap: crate::obs::series::SERIES_DEFAULT_CAP,
     };
     let (mut gw, worker_joins) = worker::launch_gateway(&cfg, TransportKind::InProc)?;
     let deadline = std::time::Duration::from_secs(60);
@@ -601,7 +634,8 @@ impl BenchGatewayReport {
             j = j
                 .int("trace_parity", tp as u64)
                 .int("trace_spans", self.trace_spans as u64)
-                .str("trace_kinds", &self.trace_kinds.join(","));
+                .str("trace_kinds", &self.trace_kinds.join(","))
+                .int("trace_counter_points", self.trace_counter_points as u64);
         }
         j.finish()
     }
@@ -652,9 +686,10 @@ impl BenchGatewayReport {
         ));
         if let Some(tp) = self.trace_parity {
             s.push_str(&format!(
-                " trace={tp} ({} spans, {} kinds)",
+                " trace={tp} ({} spans, {} kinds, {} gauge points)",
                 self.trace_spans,
-                self.trace_kinds.len()
+                self.trace_kinds.len(),
+                self.trace_counter_points
             ));
         }
         s
@@ -751,8 +786,8 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
     // fourth parity proof, when a trace was requested: replay the first
     // pass with the recorder armed and refuse to report unless the traced
     // fleet served the exact same bits
-    let (trace_parity, trace_spans, trace_kinds) = match &opts.trace_out {
-        None => (None, 0, Vec::new()),
+    let (trace_parity, trace_spans, trace_kinds, trace_counter_points) = match &opts.trace_out {
+        None => (None, 0, Vec::new(), 0),
         Some(path) => {
             let _ = crate::obs::drain(); // discard any stale spans
             crate::obs::set_enabled(true);
@@ -771,9 +806,11 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
             all.extend(traced.remote_spans);
             let kinds: Vec<String> =
                 crate::obs::trace::kinds_present(&all).iter().map(|s| s.to_string()).collect();
-            crate::obs::trace::write_file(path, &all)
+            let counter_points: usize =
+                traced.counter_tracks.iter().map(|t| t.points.len()).sum();
+            crate::obs::trace::write_file_with_counters(path, &all, &traced.counter_tracks)
                 .with_context(|| format!("writing trace {path}"))?;
-            (Some(true), all.len(), kinds)
+            (Some(true), all.len(), kinds, counter_points)
         }
     };
     Ok(BenchGatewayReport {
@@ -786,6 +823,7 @@ pub fn run_bench(opts: &BenchGatewayOpts) -> Result<BenchGatewayReport> {
         trace_parity,
         trace_spans,
         trace_kinds,
+        trace_counter_points,
     })
 }
 
@@ -921,8 +959,18 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.starts_with("{\"displayTimeUnit\""));
         assert!(body.contains("\"name\":\"backbone\""));
+        // the replay arms the gauge flight recorder: counter events ride
+        // in the same trace, on the shard lanes (pid = shard + 1)
+        assert!(
+            rep.trace_counter_points > 0,
+            "traced replay must record gauge series points"
+        );
+        assert!(body.contains("\"ph\":\"C\""), "gauge counters render as counter events");
+        assert!(body.contains("\"name\":\"queue_depth\""));
+        assert!(body.contains("\"name\":\"cache_bytes\""));
         let j = rep.to_json();
         assert!(j.contains("\"trace_parity\": 1"));
+        assert!(j.contains("\"trace_counter_points\""));
         assert!(j.contains("\"schema_version\": 2"));
         let _ = std::fs::remove_file(&path);
     }

@@ -17,7 +17,7 @@
 //!   [shard 0] [shard 1] … [shard N-1]
 //!      each: thread/process-owned Server<SyntheticEngine>
 //!            queue → prefix-aware cache → backbone/resume → side nets
-//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report / Telemetry
+//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report / Telemetry / Heartbeat
 //!         ▼
 //!   [event stream] ──▶ try_collect() / flush() ──▶ responses
 //!   [aggregator]   ──▶ report(): merged stats + summed cache counters
@@ -54,6 +54,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::obs::health::{FleetHealth, HealthSnapshot, DEFAULT_HEALTH_MULT};
+use crate::obs::series::SERIES_DEFAULT_CAP;
 use crate::obs::{self, trace::TraceSpan, SpanKind};
 use crate::serve::{BackboneKind, EnginePreset, ServeConfig};
 
@@ -102,6 +104,16 @@ pub struct GatewayConfig {
     /// enable the span recorder fleet-wide (`--trace-out`): locally and,
     /// via the spec's trace flag, in every socket worker
     pub trace: bool,
+    /// worker heartbeat cadence in ms (0 = disarmed): every shard emits
+    /// a periodic `Heartbeat` event the gateway's [`FleetHealth`] reads
+    pub heartbeat_ms: u64,
+    /// liveness timeout multiple: a shard is `Suspect` after
+    /// `heartbeat_ms × health_mult` of silence, `Dead` after twice that
+    pub health_mult: u64,
+    /// gauge flight-recorder cadence in ms (0 = disarmed)
+    pub series_ms: u64,
+    /// flight-recorder ring capacity (points per shard)
+    pub series_cap: usize,
 }
 
 impl Default for GatewayConfig {
@@ -117,6 +129,10 @@ impl Default for GatewayConfig {
             tasks: 2,
             threads_per_shard: 1,
             trace: false,
+            heartbeat_ms: 0,
+            health_mult: DEFAULT_HEALTH_MULT,
+            series_ms: 0,
+            series_cap: SERIES_DEFAULT_CAP,
         }
     }
 }
@@ -135,6 +151,9 @@ impl GatewayConfig {
             threads: self.threads_per_shard,
             serve: self.serve,
             trace: self.trace,
+            heartbeat_ms: self.heartbeat_ms,
+            series_ms: self.series_ms,
+            series_cap: self.series_cap,
         }
     }
 }
@@ -159,6 +178,9 @@ pub struct Gateway {
     remote_spans: Vec<TraceSpan>,
     /// worker-side spans lost to ring overwrites (from `Telemetry` frames)
     pub telemetry_dropped: u64,
+    /// heartbeat liveness registry, fed by `Heartbeat` events on the
+    /// data path; read by the `HEALTH` command and the `STATS` gauges
+    health: FleetHealth,
     /// requests accepted into shard inboxes
     pub submitted: u64,
     /// submits refused with [`SubmitError::Backpressure`]
@@ -197,9 +219,10 @@ impl Gateway {
         if transport.shards() == 0 || cfg.tasks == 0 {
             bail!("gateway needs at least one shard and one task");
         }
+        let shards = transport.shards();
         Ok(Gateway {
             cfg: *cfg,
-            router: Router::new(transport.shards(), cfg.serve.prefix_block),
+            router: Router::new(shards, cfg.serve.prefix_block),
             transport,
             tasks: (0..cfg.tasks).map(task_name).collect(),
             next_id: 0,
@@ -208,6 +231,7 @@ impl Gateway {
             pending_reports: Vec::new(),
             remote_spans: Vec::new(),
             telemetry_dropped: 0,
+            health: FleetHealth::new(shards, cfg.heartbeat_ms, cfg.health_mult),
             submitted: 0,
             rejected: 0,
             dropped: 0,
@@ -225,6 +249,13 @@ impl Gateway {
     /// Requests accepted but not yet answered.
     pub fn in_flight(&self) -> usize {
         self.in_flight
+    }
+
+    /// The fleet liveness registry (heartbeat ages and states).  Call
+    /// [`Gateway::try_collect`] first to absorb any heartbeats already
+    /// queued on the event stream.
+    pub fn health(&self) -> &FleetHealth {
+        &self.health
     }
 
     /// Spans shipped by traced socket workers since the last take,
@@ -303,6 +334,15 @@ impl Gateway {
                 let pid = t.shard as u32 + 1;
                 self.remote_spans.extend(t.spans.into_iter().map(|span| TraceSpan { pid, span }));
             }
+            ShardEvent::Heartbeat(hb) => self.health.beat(
+                hb.shard,
+                HealthSnapshot {
+                    queue_depth: hb.queue_depth,
+                    inflight_slots: hb.inflight_slots,
+                    spans_dropped: hb.spans_dropped,
+                    cache_bytes: hb.cache_bytes,
+                },
+            ),
         }
     }
 
@@ -439,6 +479,10 @@ mod tests {
                 prefix_block,
             },
             trace: false,
+            heartbeat_ms: 0,
+            health_mult: DEFAULT_HEALTH_MULT,
+            series_ms: 0,
+            series_cap: SERIES_DEFAULT_CAP,
         }
     }
 
@@ -621,6 +665,34 @@ mod tests {
         let report = gw.report().unwrap();
         assert_eq!(report.shards.len(), 1, "one report per shard, latest wins");
         assert_eq!(report.merged.requests, 5);
+    }
+
+    #[test]
+    fn heartbeats_feed_the_liveness_registry() {
+        let mut c = cfg(2, 4);
+        c.heartbeat_ms = 10;
+        let mut gw = Gateway::launch(&c).unwrap();
+        assert!(gw.health().armed());
+        assert_eq!(gw.health().shard_count(), 2);
+        // idle shards beat on their recv_timeout; absorb via try_collect
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while (gw.health().beats(0) == 0 || gw.health().beats(1) == 0)
+            && std::time::Instant::now() < deadline
+        {
+            let _ = gw.try_collect();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(gw.health().beats(0) > 0, "shard 0 never beat");
+        assert!(gw.health().beats(1) > 0, "shard 1 never beat");
+        assert_eq!(gw.health().state(0), crate::obs::health::HealthState::Healthy);
+        let j = gw.health().to_json();
+        assert!(j.contains("\"state\":\"healthy\""));
+        // heartbeats are absorbed, never returned as data responses
+        gw.submit("task0", &[1, 2, 3]).unwrap();
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 1);
+        let (report, _) = gw.shutdown().unwrap();
+        assert_eq!(report.merged.requests, 1);
     }
 
     #[test]

@@ -63,6 +63,9 @@ pub struct GatewayReport {
     pub backbone_resident_bytes: usize,
     pub cache_bytes: usize,
     pub registry_bytes: usize,
+    /// spans lost to recorder ring overwrites, summed across shards
+    /// (from the report tail each worker fills in)
+    pub spans_dropped: u64,
 }
 
 impl GatewayReport {
@@ -106,6 +109,25 @@ impl GatewayReport {
             }
         )
     }
+
+    /// Multi-line top-K per-task accounting table for the CLI (empty
+    /// string when no per-task rows were recorded).  Tasks sort by
+    /// request count, ties by name — the count-weighted merge across
+    /// shards happened in [`StatsSnapshot::merge`].
+    pub fn task_table(&self, k: usize) -> String {
+        let top = self.merged.top_tasks(k);
+        if top.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("task            requests    tokens  cache-hits  swap-ins\n");
+        for t in top {
+            out.push_str(&format!(
+                "{:<14} {:>9} {:>9} {:>11} {:>9}\n",
+                t.task, t.requests, t.tokens, t.cache_hits, t.swap_ins
+            ));
+        }
+        out
+    }
 }
 
 /// Merge per-shard reports into the fleet view (`reports` in any order;
@@ -125,6 +147,7 @@ pub fn aggregate(mut reports: Vec<ShardReport>) -> GatewayReport {
         g.backbone_resident_bytes += r.backbone_resident_bytes;
         g.cache_bytes += r.cache_bytes;
         g.registry_bytes += r.registry_bytes;
+        g.spans_dropped += r.spans_dropped;
     }
     g.shards = reports;
     g
@@ -204,5 +227,33 @@ mod tests {
         assert_eq!(g.backbone_resident_bytes, 200);
         assert_eq!(GatewayReport::default().hit_rate(), 0.0);
         assert_eq!(GatewayReport::default().prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn aggregate_merges_task_ledgers_and_span_drops() {
+        use crate::serve::TaskStat;
+        let mk = |shard: usize, reqs: u64, dropped: u64| {
+            let mut r = ShardReport::default();
+            r.shard = shard;
+            r.spans_dropped = dropped;
+            r.stats.tasks = vec![TaskStat {
+                task: "task0".into(),
+                requests: reqs,
+                tokens: reqs * 4,
+                cache_hits: 1,
+                swap_ins: 0,
+            }];
+            r
+        };
+        let g = aggregate(vec![mk(0, 3, 2), mk(1, 5, 7)]);
+        assert_eq!(g.spans_dropped, 9);
+        assert_eq!(g.merged.tasks.len(), 1, "same task merges across shards");
+        assert_eq!(g.merged.tasks[0].requests, 8);
+        assert_eq!(g.merged.tasks[0].tokens, 32);
+        assert_eq!(g.merged.tasks[0].cache_hits, 2);
+        let table = g.task_table(8);
+        assert!(table.contains("task0"));
+        assert!(table.lines().count() >= 2, "header plus one row");
+        assert_eq!(GatewayReport::default().task_table(8), "");
     }
 }

@@ -31,15 +31,23 @@
 //! tests/bench to delimit comparisons.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::obs::series::{GaugePoint, GaugeSeries};
 use crate::obs::{self, SpanKind};
 use crate::proto::{
-    GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, SubmitError,
-    TelemetryBatch,
+    GatewayResponse, Heartbeat, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec,
+    SubmitError, TelemetryBatch,
 };
 use crate::serve::{Server, SyntheticEngine};
+
+/// A periodic emission schedule (the heartbeat cadence).
+struct Cadence {
+    interval: Duration,
+    next: Instant,
+}
 
 /// The transport-free shard state machine: owns the server replica and
 /// the gateway-id bookkeeping, emits [`ShardEvent`]s through a callback.
@@ -55,6 +63,14 @@ pub struct ShardCore {
     /// micro-batch executions that started with every slot occupied
     /// (pending == max_batch)
     full_soaks: u64,
+    /// heartbeat schedule; `None` when the spec leaves heartbeats
+    /// disarmed (`heartbeat_ms == 0`) — the loop then never ticks
+    beat: Option<Cadence>,
+    /// gauge flight recorder; `None` when disarmed (`series_ms == 0`)
+    series: Option<GaugeSeries>,
+    /// spans dropped by this process's recorder, accumulated from
+    /// telemetry drains — shipped in heartbeats and the report tail
+    spans_dropped: u64,
 }
 
 impl ShardCore {
@@ -70,7 +86,22 @@ impl ShardCore {
                 super::SYNTHETIC_TASK_BYTES,
             )?;
         }
-        Ok(ShardCore { index, server, id_map: HashMap::new(), inflight_peak: 0, full_soaks: 0 })
+        let beat = (spec.heartbeat_ms > 0).then(|| {
+            let interval = Duration::from_millis(spec.heartbeat_ms);
+            Cadence { interval, next: Instant::now() + interval }
+        });
+        let series = (spec.series_ms > 0)
+            .then(|| GaugeSeries::new(spec.series_ms, spec.series_cap));
+        Ok(ShardCore {
+            index,
+            server,
+            id_map: HashMap::new(),
+            inflight_peak: 0,
+            full_soaks: 0,
+            beat,
+            series,
+            spans_dropped: 0,
+        })
     }
 
     pub fn index(&self) -> usize {
@@ -134,6 +165,60 @@ impl ShardCore {
         }
     }
 
+    /// One sample of this shard's load gauges (cheap counter reads).
+    fn gauge_point(&self) -> GaugePoint {
+        GaugePoint {
+            t_ms: 0, // stamped by GaugeSeries::sample
+            queue_depth: self.server.pending() as u64,
+            inflight_slots: self.server.pending() as u64,
+            cache_bytes: self.server.cache.bytes() as u64,
+            registry_bytes: self.server.registry.bytes() as u64,
+            requests: self.server.stats.requests,
+        }
+    }
+
+    /// Time until the next heartbeat or series sample is due — the idle
+    /// `recv_timeout` bound.  `None` when both cadences are disarmed
+    /// (the loop then keeps its plain blocking `recv`: zero overhead).
+    fn until_next(&self, now: Instant) -> Option<Duration> {
+        let beat = self.beat.as_ref().map(|c| c.next.saturating_duration_since(now));
+        let series = self.series.as_ref().map(|s| s.until_due(now));
+        match (beat, series) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
+    }
+
+    /// Emit a heartbeat and/or record a gauge sample if due.  Called on
+    /// every idle wake-up and after every micro-batch execution.
+    fn tick(&mut self, emit: &mut dyn FnMut(ShardEvent)) {
+        if self.beat.is_none() && self.series.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        if let Some(c) = &mut self.beat {
+            if now >= c.next {
+                // catch-up schedule, same as the series: a shard that
+                // stalled past several beats emits one, not a burst
+                c.next = now + c.interval;
+                let hb = Heartbeat {
+                    shard: self.index,
+                    queue_depth: self.server.pending() as u64,
+                    inflight_slots: self.server.pending() as u64,
+                    spans_dropped: self.spans_dropped,
+                    cache_bytes: self.server.cache.bytes() as u64,
+                };
+                emit(ShardEvent::Heartbeat(hb));
+            }
+        }
+        if self.series.as_ref().is_some_and(|s| s.due(now)) {
+            let point = self.gauge_point();
+            self.series.as_mut().expect("due implies armed").sample(now, point);
+        }
+    }
+
     fn report(&self) -> ShardReport {
         let server = &self.server;
         ShardReport {
@@ -154,19 +239,24 @@ impl ShardCore {
             inflight_peak: self.inflight_peak,
             full_soaks: self.full_soaks,
             inflight_slots: server.pending() as u64,
+            spans_dropped: self.spans_dropped,
+            series: self.series.as_ref().map(GaugeSeries::snapshot).unwrap_or_default(),
         }
     }
 }
 
 /// Drain this process's span recorder into a credit-neutral `Telemetry`
-/// event.  Only socket workers do this — an in-proc shard shares the
-/// gateway's rings, so shipping would double-count its spans.
-fn emit_telemetry(shard: usize, emit: &mut dyn FnMut(ShardEvent)) {
+/// event; returns how many spans the recorder dropped since the last
+/// drain (accumulated into the core's `spans_dropped` ledger).  Only
+/// socket workers do this — an in-proc shard shares the gateway's
+/// rings, so shipping would double-count its spans.
+fn emit_telemetry(shard: usize, emit: &mut dyn FnMut(ShardEvent)) -> u64 {
     let (spans, dropped) = crate::obs::drain();
     if spans.is_empty() && dropped == 0 {
-        return;
+        return 0;
     }
     emit(ShardEvent::Telemetry(TelemetryBatch { shard, dropped, spans }));
+    dropped
 }
 
 /// Serve [`ShardMsg`]s from `rx` until `Shutdown` (or the sender side
@@ -208,9 +298,23 @@ pub fn run_core_loop(
         // admission: top the open slots up from the inbox
         while parked.is_none() && core.pending() < core.max_batch() {
             let msg = if core.pending() == 0 {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => break 'serve, // gateway gone: drain and exit
+                // idle: block for the next message — but only until the
+                // next heartbeat/sample is due when a cadence is armed.
+                // Disarmed shards keep the plain blocking recv (no clock
+                // reads, no timeout bookkeeping: zero added overhead).
+                match core.until_next(Instant::now()) {
+                    None => match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break 'serve, // gateway gone: drain and exit
+                    },
+                    Some(wait) => match rx.recv_timeout(wait) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => {
+                            core.tick(emit);
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break 'serve,
+                    },
                 }
             } else {
                 match rx.try_recv() {
@@ -229,8 +333,10 @@ pub fn run_core_loop(
             // telemetry first: per-shard FIFO means the gateway sees
             // the span batch before the Report that ends its wait
             if ship_telemetry {
-                emit_telemetry(core.index, emit);
+                core.spans_dropped += emit_telemetry(core.index, emit);
             }
+            // a due gauge sample belongs in the snapshot being shipped
+            core.tick(emit);
             emit(ShardEvent::Report(core.report()));
             continue 'serve;
         }
@@ -258,13 +364,16 @@ pub fn run_core_loop(
         // admission pass above guarantees pending > 0 here whenever no
         // control message is parked, so this never spins.
         core.step_and_emit(emit);
+        // under sustained load the idle recv never runs, so beats and
+        // samples are driven from here, between micro-batches
+        core.tick(emit);
     }
     // Shutdown, or the sender hung up, with work still pooled: serve it
     while core.pending() > 0 {
         core.step_and_emit(emit);
     }
     if ship_telemetry {
-        emit_telemetry(core.index, emit);
+        core.spans_dropped += emit_telemetry(core.index, emit);
     }
 }
 
@@ -363,6 +472,9 @@ mod tests {
                 prefix_block: 4,
             },
             trace: false,
+            heartbeat_ms: 0,
+            series_ms: 0,
+            series_cap: 0,
         }
     }
 
@@ -454,5 +566,46 @@ mod tests {
         let r = ShardReport::default();
         assert_eq!(r.cache_hits, 0);
         assert_eq!(r.stats.requests, 0);
+        assert_eq!(r.spans_dropped, 0);
+        assert!(r.series.is_empty());
+    }
+
+    #[test]
+    fn armed_shard_heartbeats_while_idle_and_records_series() {
+        let spec = ShardSpec { heartbeat_ms: 10, series_ms: 5, series_cap: 64, ..tiny_spec() };
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel();
+        let mut shard = ShardHandle::spawn(0, spec, 16, ev_tx);
+        // serve one request so the gauges have something to show
+        shard.try_submit(Request { id: 1, task: "task0".into(), tokens: vec![1, 2, 3] }).unwrap();
+        // idle-wait long enough for several beats, then report
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut beats = 0u64;
+        let mut report = None;
+        let mut asked = false;
+        while std::time::Instant::now() < deadline {
+            if beats >= 2 && !asked {
+                assert!(shard.send(ShardMsg::Report));
+                asked = true;
+            }
+            match ev_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(ShardEvent::Heartbeat(hb)) => {
+                    assert_eq!(hb.shard, 0);
+                    beats += 1;
+                }
+                Ok(ShardEvent::Report(r)) => {
+                    report = Some(r);
+                    break;
+                }
+                Ok(_) => {}
+                Err(_) => {}
+            }
+        }
+        let report = report.expect("armed idle shard must beat and then report");
+        assert!(beats >= 2, "expected repeated idle heartbeats, saw {beats}");
+        assert!(!report.series.is_empty(), "armed series must have sampled");
+        assert!(report.series.iter().all(|p| p.registry_bytes > 0));
+        let last = report.series.last().unwrap();
+        assert_eq!(last.requests, 1, "cumulative request counter reaches the series");
+        shard.stop();
     }
 }

@@ -137,7 +137,17 @@ pub fn line_loop(gw: &mut Gateway, input: impl BufRead, out: &mut impl Write) ->
                     in_flight: gw.in_flight() as u64,
                 };
                 // render() ends each sample with \n; no extra newline
-                write!(out, "{}", crate::obs::prom::render(&report, &gauges))?;
+                write!(out, "{}", crate::obs::prom::render(&report, &gauges, Some(gw.health())))?;
+                continue;
+            }
+            Ok(TextLine::Health) => {
+                // liveness is judged from heartbeats already absorbed; drain
+                // the event queue first so the freshest beats count, but do
+                // NOT barrier on a report — HEALTH must answer even when a
+                // dead shard would stall the report rendezvous
+                let done = gw.try_collect();
+                print_responses(out, &done)?;
+                writeln!(out, "{}", gw.health().to_json())?;
                 continue;
             }
             Ok(TextLine::Request { task, tokens }) => (task, tokens),

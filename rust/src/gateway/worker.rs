@@ -236,6 +236,10 @@ mod tests {
                 prefix_block: 4,
             },
             trace: false,
+            heartbeat_ms: 0,
+            health_mult: crate::obs::health::DEFAULT_HEALTH_MULT,
+            series_ms: 0,
+            series_cap: crate::obs::series::SERIES_DEFAULT_CAP,
         }
     }
 

@@ -180,15 +180,25 @@ fn trace_arm(args: &Args) -> Option<String> {
 
 /// Drain the local recorder, append worker-shipped spans, and write the
 /// Chrome trace-event file (loadable in Perfetto / chrome://tracing).
-fn trace_finish(path: &str, remote: Vec<qst::obs::trace::TraceSpan>) -> Result<()> {
+/// `counters` carries the shards' gauge flight-recorder series (empty
+/// when `--series-ms` was off) rendered as counter tracks beside the
+/// spans.
+fn trace_finish(
+    path: &str,
+    remote: Vec<qst::obs::trace::TraceSpan>,
+    counters: &[qst::obs::trace::CounterTrack],
+) -> Result<()> {
     qst::obs::set_enabled(false);
     let (spans, dropped) = qst::obs::drain();
     let mut all = qst::obs::trace::local(spans);
     all.extend(remote);
-    qst::obs::trace::write_file(path, &all).with_context(|| format!("writing trace {path}"))?;
+    qst::obs::trace::write_file_with_counters(path, &all, counters)
+        .with_context(|| format!("writing trace {path}"))?;
+    let points: usize = counters.iter().map(|t| t.points.len()).sum();
     eprintln!(
-        "wrote {} span(s) to {path}{}",
+        "wrote {} span(s){} to {path}{}",
         all.len(),
+        if points > 0 { format!(" + {points} gauge point(s)") } else { String::new() },
         if dropped > 0 { format!(" ({dropped} lost to ring overwrite)") } else { String::new() }
     );
     Ok(())
@@ -261,7 +271,8 @@ fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
                     in_flight: pending,
                 };
                 let report = qst::gateway::aggregate(vec![rep]);
-                print!("{}", qst::obs::prom::render(&report, &gauges));
+                // no heartbeat registry in single-process serve
+                print!("{}", qst::obs::prom::render(&report, &gauges, None));
                 continue;
             }
             Ok(TextLine::Request { task, tokens }) => (task, tokens),
@@ -325,7 +336,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         serve_loop(&mut server)?;
         if let Some(p) = &trace_out {
-            trace_finish(p, Vec::new())?;
+            trace_finish(p, Vec::new(), &[])?;
         }
         return Ok(());
     }
@@ -359,7 +370,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.registry = server_registry;
     serve_loop(&mut server)?;
     if let Some(p) = &trace_out {
-        trace_finish(p, Vec::new())?;
+        trace_finish(p, Vec::new(), &[])?;
     }
     Ok(())
 }
@@ -388,6 +399,12 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         tasks: args.usize_or("num-tasks", 2)?.max(1),
         threads_per_shard: args.usize_or("threads", 1)?,
         trace: trace_out.is_some(),
+        // health plane: both cadences default off (zero overhead; the
+        // serving loops keep their plain blocking recv)
+        heartbeat_ms: args.u64_or("heartbeat-ms", 0)?,
+        health_mult: args.u64_or("health-mult", qst::obs::health::DEFAULT_HEALTH_MULT)?.max(1),
+        series_ms: args.u64_or("series-ms", 0)?,
+        series_cap: args.usize_or("series-cap", qst::obs::series::SERIES_DEFAULT_CAP)?.max(1),
     };
     // Gateway::connect owns the shards-from-addresses derivation, so the
     // banner reads the fleet shape back from the constructed gateway
@@ -439,8 +456,23 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     let (report, leftover) = gw.shutdown()?;
     debug_assert!(leftover.is_empty(), "line_loop flushes before returning");
     println!("{}", report.summary());
+    let table = report.task_table(8);
+    if !table.is_empty() {
+        print!("{table}");
+    }
     if let Some(p) = &trace_out {
-        trace_finish(p, remote)?;
+        // shard i's gauge series renders on counter lane i+1, matching
+        // its worker span lane (empty unless --series-ms armed it)
+        let counters: Vec<qst::obs::trace::CounterTrack> = report
+            .shards
+            .iter()
+            .filter(|r| !r.series.is_empty())
+            .map(|r| qst::obs::trace::CounterTrack {
+                pid: r.shard as u32 + 1,
+                points: r.series.clone(),
+            })
+            .collect();
+        trace_finish(p, remote, &counters)?;
     }
     // shard engines fanned kernel workers out of the process-wide pool;
     // join them on the way out instead of leaking parked threads

@@ -1,0 +1,278 @@
+//! Fleet liveness: the gateway-side heartbeat registry.
+//!
+//! Workers armed with a heartbeat cadence emit a periodic `Heartbeat`
+//! event carrying a cheap health snapshot; the gateway records each
+//! beat here and classifies every shard by **heartbeat age** against
+//! configurable timeout multiples:
+//!
+//! * `Healthy` — last beat within one timeout (`interval × mult`);
+//! * `Suspect` — silent for more than one timeout;
+//! * `Dead` — silent for more than **two** timeouts (the contract the
+//!   kill-a-worker test and CI smoke pin: a SIGKILLed worker is marked
+//!   dead within two heartbeat timeouts);
+//! * `Unknown` — heartbeats are not armed (`interval == 0`), so age
+//!   says nothing.
+//!
+//! A worker that *never* beats still goes `Dead`: age is measured from
+//! the registry's arm time until the first beat arrives.  This is
+//! detection only — re-routing a dead shard's prefix families is the
+//! ROADMAP's follow-up.  Exposition: `qst_worker_up{shard}` /
+//! `qst_heartbeat_age_seconds{shard}` in `STATS` ([`super::prom`]) and
+//! the `HEALTH` line-protocol command ([`FleetHealth::to_json`]).
+
+use std::time::{Duration, Instant};
+
+/// Default timeout multiple: a shard is suspect after missing ~3 beats.
+pub const DEFAULT_HEALTH_MULT: u64 = 3;
+
+/// The cheap per-shard gauges a heartbeat carries (mirrors
+/// `proto::Heartbeat` minus the shard index; `obs` stays independent of
+/// the wire layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    pub queue_depth: u64,
+    pub inflight_slots: u64,
+    pub spans_dropped: u64,
+    pub cache_bytes: u64,
+}
+
+/// Liveness classification by heartbeat age (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    Unknown,
+    Healthy,
+    Suspect,
+    Dead,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Unknown => "unknown",
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Dead => "dead",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ShardHealth {
+    last_seen: Option<Instant>,
+    beats: u64,
+    last: HealthSnapshot,
+}
+
+/// Gateway-side liveness registry: one slot per shard, fed by
+/// [`FleetHealth::beat`], read by `STATS` / `HEALTH`.
+#[derive(Clone, Debug)]
+pub struct FleetHealth {
+    interval: Duration,
+    mult: u64,
+    armed_at: Instant,
+    shards: Vec<ShardHealth>,
+}
+
+impl FleetHealth {
+    /// `heartbeat_ms == 0` builds a disarmed registry (every shard
+    /// reports `Unknown` and the prom health gauges stay absent).
+    pub fn new(shards: usize, heartbeat_ms: u64, mult: u64) -> Self {
+        FleetHealth {
+            interval: Duration::from_millis(heartbeat_ms),
+            mult: mult.max(1),
+            armed_at: Instant::now(),
+            shards: vec![
+                ShardHealth { last_seen: None, beats: 0, last: HealthSnapshot::default() };
+                shards
+            ],
+        }
+    }
+
+    pub fn armed(&self) -> bool {
+        !self.interval.is_zero() && !self.shards.is_empty()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// One timeout: `interval × mult`.  `Suspect` past one, `Dead` past
+    /// two.
+    pub fn timeout(&self) -> Duration {
+        self.interval * self.mult as u32
+    }
+
+    /// Record a heartbeat from `shard` (out-of-range indices are
+    /// ignored — a malformed shard index must not panic the gateway).
+    pub fn beat(&mut self, shard: usize, snap: HealthSnapshot) {
+        self.beat_at(shard, snap, Instant::now());
+    }
+
+    /// Test seam: record a beat at an explicit instant.
+    pub fn beat_at(&mut self, shard: usize, snap: HealthSnapshot, now: Instant) {
+        if let Some(s) = self.shards.get_mut(shard) {
+            s.last_seen = Some(now);
+            s.beats += 1;
+            s.last = snap;
+        }
+    }
+
+    /// Heartbeat age: time since the shard's last beat (or since the
+    /// registry was armed, for a shard that has never beaten).  `None`
+    /// when disarmed or out of range.
+    pub fn age(&self, shard: usize) -> Option<Duration> {
+        self.age_at(shard, Instant::now())
+    }
+
+    fn age_at(&self, shard: usize, now: Instant) -> Option<Duration> {
+        if !self.armed() {
+            return None;
+        }
+        let s = self.shards.get(shard)?;
+        Some(now.saturating_duration_since(s.last_seen.unwrap_or(self.armed_at)))
+    }
+
+    pub fn state(&self, shard: usize) -> HealthState {
+        self.state_at(shard, Instant::now())
+    }
+
+    /// Test seam: classify at an explicit instant.
+    pub fn state_at(&self, shard: usize, now: Instant) -> HealthState {
+        match self.age_at(shard, now) {
+            None => HealthState::Unknown,
+            Some(age) => {
+                let timeout = self.timeout();
+                if age <= timeout {
+                    HealthState::Healthy
+                } else if age <= timeout * 2 {
+                    HealthState::Suspect
+                } else {
+                    HealthState::Dead
+                }
+            }
+        }
+    }
+
+    /// The `qst_worker_up` gauge: 1 until a shard is classified `Dead`
+    /// (an `Unknown`/disarmed shard is presumed up — absence of
+    /// evidence is not death).
+    pub fn up(&self, shard: usize) -> bool {
+        self.state(shard) != HealthState::Dead
+    }
+
+    /// Total heartbeats recorded for `shard`.
+    pub fn beats(&self, shard: usize) -> u64 {
+        self.shards.get(shard).map_or(0, |s| s.beats)
+    }
+
+    /// The gauges from the shard's most recent beat.
+    pub fn last_snapshot(&self, shard: usize) -> HealthSnapshot {
+        self.shards.get(shard).map_or_else(HealthSnapshot::default, |s| s.last)
+    }
+
+    /// The `HEALTH` line-protocol reply: one JSON object summarizing
+    /// the fleet.  Hand-rolled like the trace writer — every string is
+    /// a static identifier, so no escaping is needed.
+    pub fn to_json(&self) -> String {
+        let now = Instant::now();
+        let mut out = String::with_capacity(128 + self.shards.len() * 160);
+        out.push_str(&format!(
+            "{{\"armed\":{},\"heartbeat_ms\":{},\"timeout_ms\":{},\"shards\":[",
+            self.armed(),
+            self.interval.as_millis(),
+            self.timeout().as_millis()
+        ));
+        for (i, s) in self.shards.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let age_ms = self
+                .age_at(i, now)
+                .map(|a| a.as_millis().to_string())
+                .unwrap_or_else(|| "null".into());
+            out.push_str(&format!(
+                "{{\"shard\":{},\"state\":\"{}\",\"up\":{},\"age_ms\":{},\"beats\":{},\"queue_depth\":{},\"inflight_slots\":{},\"spans_dropped\":{},\"cache_bytes\":{}}}",
+                i,
+                self.state_at(i, now).name(),
+                self.state_at(i, now) != HealthState::Dead,
+                age_ms,
+                s.beats,
+                s.last.queue_depth,
+                s.last.inflight_slots,
+                s.last.spans_dropped,
+                s.last.cache_bytes
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_registry_is_unknown_and_up() {
+        let h = FleetHealth::new(2, 0, DEFAULT_HEALTH_MULT);
+        assert!(!h.armed());
+        assert_eq!(h.state(0), HealthState::Unknown);
+        assert!(h.up(0));
+        assert_eq!(h.age(0), None);
+        let j = h.to_json();
+        assert!(j.contains("\"armed\":false"));
+        assert!(j.contains("\"state\":\"unknown\""));
+        assert!(j.contains("\"age_ms\":null"));
+    }
+
+    #[test]
+    fn states_step_through_timeout_multiples() {
+        let mut h = FleetHealth::new(1, 10, 3); // timeout = 30 ms
+        let t0 = Instant::now();
+        h.beat_at(0, HealthSnapshot { queue_depth: 4, ..Default::default() }, t0);
+        let ms = |m: u64| t0 + Duration::from_millis(m);
+        assert_eq!(h.state_at(0, ms(5)), HealthState::Healthy);
+        assert_eq!(h.state_at(0, ms(30)), HealthState::Healthy, "exactly one timeout is still healthy");
+        assert_eq!(h.state_at(0, ms(31)), HealthState::Suspect);
+        assert_eq!(h.state_at(0, ms(60)), HealthState::Suspect, "exactly two timeouts is still suspect");
+        assert_eq!(h.state_at(0, ms(61)), HealthState::Dead);
+        // a fresh beat resurrects the shard
+        h.beat_at(0, HealthSnapshot::default(), ms(100));
+        assert_eq!(h.state_at(0, ms(101)), HealthState::Healthy);
+        assert_eq!(h.beats(0), 2);
+        assert_eq!(h.last_snapshot(0), HealthSnapshot::default());
+    }
+
+    #[test]
+    fn never_beating_shard_dies_from_arm_time() {
+        let h = FleetHealth::new(2, 10, 3);
+        let late = Instant::now() + Duration::from_millis(61);
+        assert_eq!(h.state_at(0, late), HealthState::Dead);
+        assert_eq!(h.state_at(1, late), HealthState::Dead);
+    }
+
+    #[test]
+    fn out_of_range_beats_are_ignored() {
+        let mut h = FleetHealth::new(1, 10, 3);
+        h.beat(7, HealthSnapshot::default()); // must not panic
+        assert_eq!(h.beats(7), 0);
+        assert_eq!(h.state(7), HealthState::Unknown);
+    }
+
+    #[test]
+    fn json_shape_is_wellformed() {
+        let mut h = FleetHealth::new(2, 50, 3);
+        h.beat(0, HealthSnapshot { queue_depth: 1, inflight_slots: 2, spans_dropped: 0, cache_bytes: 99 });
+        let j = h.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"armed\":true"));
+        assert!(j.contains("\"heartbeat_ms\":50"));
+        assert!(j.contains("\"timeout_ms\":150"));
+        assert!(j.contains("\"shard\":0"));
+        assert!(j.contains("\"shard\":1"));
+        assert!(j.contains("\"cache_bytes\":99"));
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(j.matches(open).count(), j.matches(close).count());
+        }
+    }
+}

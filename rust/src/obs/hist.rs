@@ -92,12 +92,14 @@ impl LogHistogram {
         self.max = self.max.max(v);
     }
 
-    /// Exact merge: bucket counts add.
+    /// Exact merge: bucket counts add.  Counts saturate rather than
+    /// wrap — a fleet that really records 2^64 samples gets a pinned
+    /// bucket, not a corrupted distribution.
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
-        self.count += other.count;
+        self.count = self.count.saturating_add(other.count);
         self.sum += other.sum;
         if other.count > 0 {
             self.min = self.min.min(other.min);
@@ -303,6 +305,102 @@ mod tests {
         let mut ae = a.clone();
         ae.merge(&empty);
         assert_eq!(ae, a, "merging the empty histogram is the identity");
+    }
+
+    #[test]
+    fn empty_merges_in_both_directions() {
+        let mut a = LogHistogram::new();
+        a.record(0.010);
+        a.record(0.250);
+        // empty ⊕ nonempty adopts the nonempty side verbatim
+        let mut e = LogHistogram::new();
+        e.merge(&a);
+        assert_eq!(e, a);
+        assert_eq!(e.min(), a.min());
+        assert_eq!(e.max(), a.max());
+        // nonempty ⊕ empty is the identity — and must not let the empty
+        // side's sentinel min (+inf) / max (0) leak into the result
+        let mut a2 = a.clone();
+        a2.merge(&LogHistogram::new());
+        assert_eq!(a2, a);
+        assert!(a2.min() > 0.0);
+        // empty ⊕ empty stays canonical empty
+        let mut ee = LogHistogram::new();
+        ee.merge(&LogHistogram::new());
+        assert_eq!(ee, LogHistogram::new());
+        assert_eq!(ee.min(), 0.0);
+    }
+
+    #[test]
+    fn merge_handles_mismatched_trimmed_lengths() {
+        // one side trimmed short (single tiny sample), the other long
+        // (sample near the top bucket) — from_parts resizes both to
+        // HIST_BUCKETS, so the zip in merge never silently truncates
+        let mut short = LogHistogram::new();
+        short.record(0.00001);
+        let mut long = LogHistogram::new();
+        long.record(100.0);
+        let short_wire = LogHistogram::from_parts(
+            short.counts()[..short.trimmed_len()].to_vec(),
+            short.count(),
+            short.sum(),
+            short.min,
+            short.max,
+        );
+        let long_wire = LogHistogram::from_parts(
+            long.counts()[..long.trimmed_len()].to_vec(),
+            long.count(),
+            long.sum(),
+            long.min,
+            long.max,
+        );
+        assert!(short_wire.trimmed_len() < long_wire.trimmed_len());
+        let mut m1 = short_wire.clone();
+        m1.merge(&long_wire);
+        let mut m2 = long_wire.clone();
+        m2.merge(&short_wire);
+        assert_eq!(m1, m2);
+        assert_eq!(m1.count(), 2);
+        assert_eq!(m1.counts().len(), HIST_BUCKETS);
+        // both samples are findable: p1 in the low bucket, p99 high
+        assert!(m1.percentile(1.0) < 0.001);
+        assert!(m1.percentile(99.0) > 1.0);
+    }
+
+    #[test]
+    fn merge_saturates_instead_of_wrapping() {
+        let mut a = LogHistogram::from_parts(vec![u64::MAX - 1], u64::MAX - 1, 1.0, 0.5, 0.5);
+        let b = LogHistogram::from_parts(vec![5], 5, 1.0, 0.5, 0.5);
+        a.merge(&b);
+        assert_eq!(a.count(), u64::MAX, "count must saturate, not wrap");
+        assert_eq!(a.counts()[0], u64::MAX, "bucket must saturate, not wrap");
+        // percentiles still answer without panicking
+        assert!(a.percentile(50.0) > 0.0);
+    }
+
+    #[test]
+    fn merge_commutes_on_random_histogram_pairs() {
+        // property test: for random pairs (including empties and
+        // mismatched trims), a⊕b == b⊕a
+        let mut state = 0xF00DF00Du64;
+        for round in 0..50 {
+            let mut a = LogHistogram::new();
+            let mut b = LogHistogram::new();
+            let na = (xorshift(&mut state) % 40) as usize;
+            let nb = (xorshift(&mut state) % 40) as usize;
+            for _ in 0..na {
+                a.record(sample(&mut state));
+            }
+            for _ in 0..nb {
+                b.record(sample(&mut state));
+            }
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "round {round}: merge must commute (na={na}, nb={nb})");
+            assert_eq!(ab.count(), (na + nb) as u64);
+        }
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //!   loadable in Perfetto / `chrome://tracing`).
 //! * [`prom`] — Prometheus-style text exposition of the merged fleet
 //!   snapshot (the gateway line protocol's `STATS` command).
+//! * [`health`] — the gateway's heartbeat liveness registry
+//!   (Healthy→Suspect→Dead by heartbeat age; the `HEALTH` command and
+//!   the `qst_worker_up` / `qst_heartbeat_age_seconds` gauges).
+//! * [`series`] — the gauge flight recorder: a fixed-capacity
+//!   time-series ring of load gauges per shard, exported as Chrome
+//!   trace counter tracks (`"ph":"C"`).
 //!
 //! **Parity invariant**: recording reads clocks and appends to rings —
 //! it never touches request data, so tracing on/off cannot change one
@@ -27,8 +33,10 @@
 //! serialize its report unless the responses are bit-identical to the
 //! untraced pass.
 
+pub mod health;
 pub mod hist;
 pub mod prom;
+pub mod series;
 pub mod span;
 pub mod trace;
 

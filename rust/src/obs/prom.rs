@@ -14,6 +14,7 @@ use std::fmt::Write;
 
 use crate::gateway::GatewayReport;
 
+use super::health::FleetHealth;
 use super::hist::LogHistogram;
 
 /// Gateway-side (transport-ingress) counters that no shard can see:
@@ -64,7 +65,10 @@ fn histogram(out: &mut String, name: &str, help: &str, h: &LogHistogram) {
 }
 
 /// Render the merged fleet snapshot as Prometheus text exposition.
-pub fn render(report: &GatewayReport, gw: &GatewayGauges) -> String {
+/// `health` is the gateway's heartbeat registry when one exists (serve
+/// mode and disarmed gateways pass `None`; a disarmed registry also
+/// renders nothing — heartbeat age means nothing without heartbeats).
+pub fn render(report: &GatewayReport, gw: &GatewayGauges, health: Option<&FleetHealth>) -> String {
     let mut out = String::with_capacity(4096);
     let m = &report.merged;
     counter(&mut out, "qst_requests_total", "requests served by the fleet", m.requests);
@@ -90,6 +94,29 @@ pub fn render(report: &GatewayReport, gw: &GatewayGauges) -> String {
         "resident backbone bytes (one replica per shard)",
         report.backbone_resident_bytes as u64,
     );
+    counter(
+        &mut out,
+        "qst_spans_dropped_total",
+        "trace spans lost to recorder ring overwrites (fleet sum)",
+        report.spans_dropped,
+    );
+    if !m.tasks.is_empty() {
+        let _ = writeln!(out, "# HELP qst_task_requests_total requests served per task");
+        let _ = writeln!(out, "# TYPE qst_task_requests_total counter");
+        for t in &m.tasks {
+            let _ = writeln!(out, "qst_task_requests_total{{task=\"{}\"}} {}", t.task, t.requests);
+        }
+        let _ = writeln!(out, "# HELP qst_task_tokens_total prompt tokens served per task");
+        let _ = writeln!(out, "# TYPE qst_task_tokens_total counter");
+        for t in &m.tasks {
+            let _ = writeln!(out, "qst_task_tokens_total{{task=\"{}\"}} {}", t.task, t.tokens);
+        }
+        let _ = writeln!(out, "# HELP qst_task_swap_ins_total side-network registry reloads per task");
+        let _ = writeln!(out, "# TYPE qst_task_swap_ins_total counter");
+        for t in &m.tasks {
+            let _ = writeln!(out, "qst_task_swap_ins_total{{task=\"{}\"}} {}", t.task, t.swap_ins);
+        }
+    }
     counter(&mut out, "qst_gateway_submitted_total", "requests accepted by the gateway", gw.submitted);
     counter(
         &mut out,
@@ -139,6 +166,35 @@ pub fn render(report: &GatewayReport, gw: &GatewayGauges) -> String {
         "request latency (queue + compute), merged exactly across shards",
         &m.hist,
     );
+    // queue-wait distribution: the merged qlat reservoir re-bucketed at
+    // render time.  Reservoir-sampled past LAT_CAP per shard (unlike the
+    // exact latency histogram), which the HELP text declares.
+    if !m.qlat.is_empty() {
+        let mut qh = LogHistogram::new();
+        for &q in &m.qlat {
+            qh.record(q);
+        }
+        histogram(
+            &mut out,
+            "qst_queue_wait_seconds",
+            "queue wait before batch execution (reservoir-sampled, count-weighted merge)",
+            &qh,
+        );
+    }
+    if let Some(h) = health.filter(|h| h.armed()) {
+        let _ = writeln!(out, "# HELP qst_worker_up 1 until the shard's heartbeats go silent past two timeouts");
+        let _ = writeln!(out, "# TYPE qst_worker_up gauge");
+        for s in 0..h.shard_count() {
+            let _ = writeln!(out, "qst_worker_up{{shard=\"{s}\"}} {}", u64::from(h.up(s)));
+        }
+        let _ = writeln!(out, "# HELP qst_heartbeat_age_seconds seconds since the shard's last heartbeat");
+        let _ = writeln!(out, "# TYPE qst_heartbeat_age_seconds gauge");
+        for s in 0..h.shard_count() {
+            if let Some(age) = h.age(s) {
+                let _ = writeln!(out, "qst_heartbeat_age_seconds{{shard=\"{s}\"}} {:.3}", age.as_secs_f64());
+            }
+        }
+    }
     out
 }
 
@@ -156,6 +212,15 @@ mod tests {
         a.cache_hits = 3;
         a.queue_depth = 2;
         a.inflight_slots = 2;
+        a.spans_dropped = 4;
+        a.stats.qlat = vec![0.001, 0.002];
+        a.stats.tasks = vec![crate::serve::TaskStat {
+            task: "task0".into(),
+            requests: 6,
+            tokens: 24,
+            cache_hits: 3,
+            swap_ins: 1,
+        }];
         let mut b = ShardReport { shard: 1, ..Default::default() };
         b.stats.requests = 4;
         b.stats.hist.record(0.040);
@@ -165,7 +230,11 @@ mod tests {
 
     #[test]
     fn exposition_has_counters_gauges_and_histogram() {
-        let text = render(&report(), &GatewayGauges { submitted: 10, rejected: 2, dropped: 0, in_flight: 1 });
+        let text = render(
+            &report(),
+            &GatewayGauges { submitted: 10, rejected: 2, dropped: 0, in_flight: 1 },
+            None,
+        );
         assert!(text.contains("# TYPE qst_requests_total counter"));
         assert!(text.contains("qst_requests_total 10"));
         assert!(text.contains("qst_cache_hits_total 3"));
@@ -177,6 +246,15 @@ mod tests {
         assert!(text.contains("# TYPE qst_request_latency_seconds histogram"));
         assert!(text.contains("qst_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("qst_request_latency_seconds_count 3"));
+        assert!(text.contains("qst_spans_dropped_total 4"));
+        assert!(text.contains("qst_task_requests_total{task=\"task0\"} 6"));
+        assert!(text.contains("qst_task_tokens_total{task=\"task0\"} 24"));
+        assert!(text.contains("qst_task_swap_ins_total{task=\"task0\"} 1"));
+        assert!(text.contains("# TYPE qst_queue_wait_seconds histogram"));
+        assert!(text.contains("qst_queue_wait_seconds_count 2"));
+        // no registry passed: the health gauges stay absent
+        assert!(!text.contains("qst_worker_up"));
+        assert!(!text.contains("qst_heartbeat_age_seconds"));
         // cumulative buckets are monotonically non-decreasing
         let mut last = 0u64;
         for line in text.lines().filter(|l| l.starts_with("qst_request_latency_seconds_bucket")) {
@@ -189,5 +267,21 @@ mod tests {
             let (_, val) = line.rsplit_once(' ').unwrap();
             assert!(val.parse::<f64>().is_ok(), "unparseable sample: {line}");
         }
+    }
+
+    #[test]
+    fn armed_health_registry_renders_liveness_gauges() {
+        use crate::obs::health::{FleetHealth, HealthSnapshot};
+        let mut h = FleetHealth::new(2, 20, 3);
+        h.beat(0, HealthSnapshot::default());
+        let text = render(&report(), &GatewayGauges::default(), Some(&h));
+        assert!(text.contains("# TYPE qst_worker_up gauge"));
+        assert!(text.contains("qst_worker_up{shard=\"0\"} 1"));
+        assert!(text.contains("qst_worker_up{shard=\"1\"} "));
+        assert!(text.contains("qst_heartbeat_age_seconds{shard=\"0\"} "));
+        // a disarmed registry renders nothing
+        let disarmed = FleetHealth::new(2, 0, 3);
+        let text = render(&report(), &GatewayGauges::default(), Some(&disarmed));
+        assert!(!text.contains("qst_worker_up"));
     }
 }

@@ -1,0 +1,178 @@
+//! The gauge flight recorder: a fixed-capacity time-series ring of
+//! cheap load gauges, sampled at a configured cadence on every shard.
+//!
+//! End-of-run reports answer "what happened in total"; the flight
+//! recorder answers "how did load *evolve*" — queue depth, in-flight
+//! micro-batch slots, cache/registry residency, and request rate over
+//! the life of the run.  Design constraints mirror the span recorder
+//! ([`super::span`]):
+//!
+//! * **Parity-safe.**  Sampling reads counters and a clock; it never
+//!   touches request data, so arming the recorder cannot change one
+//!   output bit (pinned by the `bench-gateway` parity gate, which runs
+//!   its traced replay with the series armed).
+//! * **Bounded memory.**  The ring holds at most `cap` points; at
+//!   capacity the oldest point is overwritten and counted in
+//!   `dropped`, so a long-running shard records forever without
+//!   growing.
+//! * **Zero disabled cost.**  A shard with `series_ms == 0` never
+//!   constructs a series — the serving loop keeps its plain blocking
+//!   `recv` and no clock is read.
+//!
+//! Points ship gateway-side as a `Report` tail and are exported as
+//! Chrome trace **counter** events (`"ph":"C"`), so Perfetto shows the
+//! load curves on counter tracks beside the request-lifecycle spans.
+
+use std::time::{Duration, Instant};
+
+/// Default ring capacity when `--series-cap` is not given.
+pub const SERIES_DEFAULT_CAP: usize = 256;
+
+/// One sample of a shard's load gauges.  `t_ms` is milliseconds since
+/// the series was armed (each recording process keeps its own epoch,
+/// exactly like span timestamps — trace viewers only need per-process
+/// consistency).  `requests` is the *cumulative* served count at sample
+/// time; rate (rps) is derived between consecutive points at export.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GaugePoint {
+    pub t_ms: u64,
+    pub queue_depth: u64,
+    pub inflight_slots: u64,
+    pub cache_bytes: u64,
+    pub registry_bytes: u64,
+    pub requests: u64,
+}
+
+/// Fixed-capacity gauge time-series ring with a sampling cadence.
+#[derive(Debug)]
+pub struct GaugeSeries {
+    interval: Duration,
+    cap: usize,
+    epoch: Instant,
+    next_due: Instant,
+    points: Vec<GaugePoint>,
+    /// next write slot once the ring is full (oldest-first overwrite)
+    head: usize,
+    dropped: u64,
+}
+
+impl GaugeSeries {
+    /// A series sampling every `interval_ms` (must be > 0; gate on the
+    /// config before constructing) into a ring of `cap` points.
+    pub fn new(interval_ms: u64, cap: usize) -> Self {
+        let interval = Duration::from_millis(interval_ms.max(1));
+        let now = Instant::now();
+        GaugeSeries {
+            interval,
+            cap: cap.max(1),
+            epoch: now,
+            next_due: now + interval,
+            points: Vec::new(),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+
+    /// Is the next sample due at `now`?  The serving loop uses this (and
+    /// [`GaugeSeries::until_due`]) to bound its idle `recv_timeout`.
+    pub fn due(&self, now: Instant) -> bool {
+        now >= self.next_due
+    }
+
+    /// Time until the next sample is due (zero when overdue).
+    pub fn until_due(&self, now: Instant) -> Duration {
+        self.next_due.saturating_duration_since(now)
+    }
+
+    /// Record one sample (stamping `t_ms` from the series epoch) and
+    /// schedule the next.  A stalled shard that wakes late records one
+    /// catch-up point rather than a backlog burst: the next due time is
+    /// `now + interval`, not `next_due + interval`.
+    pub fn sample(&mut self, now: Instant, mut point: GaugePoint) {
+        point.t_ms = now.saturating_duration_since(self.epoch).as_millis() as u64;
+        if self.points.len() < self.cap {
+            self.points.push(point);
+        } else {
+            self.points[self.head] = point;
+            self.dropped += 1;
+        }
+        self.head = (self.head + 1) % self.cap;
+        self.next_due = now + self.interval;
+    }
+
+    /// Points lost to ring overwrites.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The recorded points in chronological order (reassembled across
+    /// the ring's wrap point) — what ships in the `Report` tail.
+    pub fn snapshot(&self) -> Vec<GaugePoint> {
+        let mut out = Vec::with_capacity(self.points.len());
+        if self.points.len() == self.cap && self.head != 0 {
+            out.extend_from_slice(&self.points[self.head..]);
+            out.extend_from_slice(&self.points[..self.head]);
+        } else {
+            out.extend_from_slice(&self.points);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(q: u64, r: u64) -> GaugePoint {
+        GaugePoint { queue_depth: q, requests: r, ..Default::default() }
+    }
+
+    #[test]
+    fn samples_stamp_monotonic_times_and_keep_order() {
+        let mut s = GaugeSeries::new(5, 8);
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            s.sample(t0 + Duration::from_millis(5 * (i + 1)), pt(i, i * 2));
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert!(snap.windows(2).all(|w| w[0].t_ms <= w[1].t_ms));
+        assert_eq!(snap[3].queue_depth, 3);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut s = GaugeSeries::new(1, 3);
+        let t0 = Instant::now();
+        for i in 0..5u64 {
+            s.sample(t0 + Duration::from_millis(i + 1), pt(i, i));
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 3, "ring is bounded at cap");
+        assert_eq!(s.dropped(), 2);
+        // the NEWEST points survive, chronologically ordered
+        let qs: Vec<u64> = snap.iter().map(|p| p.queue_depth).collect();
+        assert_eq!(qs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn due_and_catch_up_schedule() {
+        let mut s = GaugeSeries::new(10, 4);
+        let now = Instant::now();
+        assert!(!s.due(now), "freshly armed series is not immediately due");
+        let late = now + Duration::from_millis(100);
+        assert!(s.due(late));
+        s.sample(late, pt(0, 0));
+        // one catch-up point, not a 10-point backlog burst
+        assert!(!s.due(late));
+        assert!(s.due(late + Duration::from_millis(10)));
+        assert_eq!(s.snapshot().len(), 1);
+        assert!(s.until_due(late) >= Duration::from_millis(9));
+        assert_eq!(s.until_due(late + Duration::from_millis(20)), Duration::ZERO);
+    }
+}

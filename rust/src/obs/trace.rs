@@ -14,6 +14,7 @@
 
 use std::io::Write;
 
+use super::series::GaugePoint;
 use super::span::{Span, SpanKind};
 
 /// One span tagged with its origin process lane for the trace file.
@@ -29,14 +30,71 @@ pub fn local(spans: Vec<Span>) -> Vec<TraceSpan> {
     spans.into_iter().map(|span| TraceSpan { pid: 0, span }).collect()
 }
 
-/// Serialize spans as Chrome trace-event JSON.
-pub fn render(spans: &[TraceSpan]) -> String {
+/// One shard's gauge flight-recorder series, tagged with its trace
+/// lane.  Rendered as Chrome **counter** events (`"ph":"C"`), one track
+/// per gauge name, so Perfetto shows load curves beside the spans.
+#[derive(Clone, Debug)]
+pub struct CounterTrack {
+    /// counter lane: shard `i` renders as pid `i + 1` (matching the
+    /// lane its worker spans ship under; lane 0 is the gateway process)
+    pub pid: u32,
+    pub points: Vec<GaugePoint>,
+}
+
+/// The gauge names a [`CounterTrack`] expands into (one counter track
+/// each), plus the derived `rps` track.
+const COUNTER_GAUGES: [&str; 4] = ["queue_depth", "inflight_slots", "cache_bytes", "registry_bytes"];
+
+fn push_counter(out: &mut String, first: &mut bool, name: &str, pid: u32, ts_us: f64, v: f64) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    // counters carry their value in args under their own name; tid 0
+    // (counter tracks are per-process, not per-thread)
+    out.push_str(&format!(
+        "{{\"name\":\"{name}\",\"cat\":\"qst\",\"ph\":\"C\",\"ts\":{ts_us:.3},\"pid\":{pid},\"tid\":0,\"args\":{{\"{name}\":{v}}}}}"
+    ));
+}
+
+fn render_counters(out: &mut String, first: &mut bool, tracks: &[CounterTrack]) {
+    for track in tracks {
+        let mut prev: Option<&GaugePoint> = None;
+        for p in &track.points {
+            let ts_us = p.t_ms as f64 * 1e3;
+            for (name, v) in COUNTER_GAUGES.iter().zip([
+                p.queue_depth,
+                p.inflight_slots,
+                p.cache_bytes,
+                p.registry_bytes,
+            ]) {
+                push_counter(out, first, name, track.pid, ts_us, v as f64);
+            }
+            // request *rate* between consecutive points (requests is a
+            // cumulative counter; the first point has no baseline)
+            if let Some(q) = prev {
+                let dt_s = (p.t_ms.saturating_sub(q.t_ms)) as f64 / 1e3;
+                if dt_s > 0.0 {
+                    let rps = p.requests.saturating_sub(q.requests) as f64 / dt_s;
+                    push_counter(out, first, "rps", track.pid, ts_us, rps);
+                }
+            }
+            prev = Some(p);
+        }
+    }
+}
+
+/// Serialize spans plus gauge counter tracks as Chrome trace-event
+/// JSON (`"ph":"X"` spans and `"ph":"C"` counters in one event list).
+pub fn render_with_counters(spans: &[TraceSpan], counters: &[CounterTrack]) -> String {
     let mut out = String::with_capacity(128 + spans.len() * 96);
     out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
-    for (i, ts) in spans.iter().enumerate() {
-        if i > 0 {
+    let mut first = true;
+    for ts in spans.iter() {
+        if !first {
             out.push(',');
         }
+        first = false;
         let s = &ts.span;
         out.push_str(&format!(
             "{{\"name\":\"{}\",\"cat\":\"qst\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"id\":{}}}}}",
@@ -48,14 +106,29 @@ pub fn render(spans: &[TraceSpan]) -> String {
             s.id
         ));
     }
+    render_counters(&mut out, &mut first, counters);
     out.push_str("]}\n");
     out
 }
 
+/// Serialize spans as Chrome trace-event JSON.
+pub fn render(spans: &[TraceSpan]) -> String {
+    render_with_counters(spans, &[])
+}
+
 /// Write a trace file; parent directories must exist.
 pub fn write_file(path: &str, spans: &[TraceSpan]) -> std::io::Result<()> {
+    write_file_with_counters(path, spans, &[])
+}
+
+/// Write a trace file including gauge counter tracks.
+pub fn write_file_with_counters(
+    path: &str,
+    spans: &[TraceSpan],
+    counters: &[CounterTrack],
+) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
-    f.write_all(render(spans).as_bytes())?;
+    f.write_all(render_with_counters(spans, counters).as_bytes())?;
     f.flush()
 }
 
@@ -96,6 +169,34 @@ mod tests {
             assert_eq!(o, c, "unbalanced {open}{close}");
         }
         assert_eq!(render(&[]), "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[]}\n");
+    }
+
+    #[test]
+    fn counter_tracks_render_as_counter_events_with_derived_rps() {
+        let track = CounterTrack {
+            pid: 2,
+            points: vec![
+                GaugePoint { t_ms: 10, queue_depth: 3, inflight_slots: 1, cache_bytes: 64, registry_bytes: 16, requests: 4 },
+                GaugePoint { t_ms: 20, queue_depth: 1, inflight_slots: 2, cache_bytes: 64, registry_bytes: 16, requests: 9 },
+            ],
+        };
+        let spans = vec![span(SpanKind::Backbone, 1_000, 500, 7)];
+        let j = render_with_counters(&spans, &[track]);
+        assert!(j.contains("\"ph\":\"X\""), "spans still render");
+        assert!(j.contains("\"ph\":\"C\""), "counters render as counter events");
+        assert!(j.contains("\"name\":\"queue_depth\""));
+        assert!(j.contains("\"args\":{\"queue_depth\":3}"));
+        assert!(j.contains("\"args\":{\"inflight_slots\":2}"));
+        // ms -> µs: t_ms 10 renders at ts 10000
+        assert!(j.contains("\"ts\":10000.000"));
+        // rps derived between the two points: (9-4)/(10ms) = 500/s
+        assert!(j.contains("\"args\":{\"rps\":500}"));
+        assert!(j.contains("\"pid\":2"));
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(j.matches(open).count(), j.matches(close).count());
+        }
+        // no counters -> byte-identical to the plain renderer
+        assert_eq!(render_with_counters(&spans, &[]), render(&spans));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!   offset  size  field
 //!   0       4     magic  "QSTW"
 //!   4       2     protocol version (u16 LE) — this build speaks VERSION
-//!   6       1     message tag (request tags 1–5, event tags 16–21)
+//!   6       1     message tag (request tags 1–5, event tags 16–22)
 //!   7       4     payload length (u32 LE), capped at MAX_PAYLOAD
 //!   11      n     payload (message-specific, see [`super::wire`])
 //! ```
@@ -38,11 +38,15 @@ use std::io::Read;
 use anyhow::{Context, Result};
 
 use crate::obs::hist::HIST_BUCKETS;
+use crate::obs::series::GaugePoint;
 use crate::obs::{LogHistogram, Span, SpanKind};
-use crate::serve::{Response, StatsSnapshot};
+use crate::serve::{Response, StatsSnapshot, TaskStat};
 
 use super::wire::{Dec, DecodeError, Enc};
-use super::{GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, TelemetryBatch};
+use super::{
+    GatewayResponse, Heartbeat, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec,
+    TelemetryBatch,
+};
 
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"QSTW";
@@ -67,6 +71,7 @@ const TAG_REJECTED: u8 = 18;
 const TAG_FLUSH_ACK: u8 = 19;
 const TAG_REPORT_REPLY: u8 = 20;
 const TAG_TELEMETRY: u8 = 21;
+const TAG_HEARTBEAT: u8 = 22;
 
 /// Inner schema version of the `Telemetry` payload — the span layout can
 /// evolve without bumping the whole protocol.  A mismatch is a typed
@@ -174,6 +179,11 @@ fn enc_spec(e: &mut Enc, s: &ShardSpec) {
     e.u64(s.serve.prefix_block as u64);
     // tail field (see the module docs): absent on old frames ⇒ false
     e.bool(s.trace);
+    // health-plane tail (ships after the trace tail; decoders gate on
+    // remaining() a second time): heartbeat + flight-recorder cadences
+    e.u64(s.heartbeat_ms);
+    e.u64(s.series_ms);
+    e.u64(s.series_cap as u64);
 }
 
 fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
@@ -183,7 +193,7 @@ fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
     let backbone_name = d.str_("spec backbone")?;
     let backbone = crate::serve::BackboneKind::parse(&backbone_name)
         .map_err(|_| DecodeError::Malformed(format!("unknown backbone '{backbone_name}'")))?;
-    let spec = ShardSpec {
+    let mut spec = ShardSpec {
         preset,
         backbone,
         seed: d.u64("spec seed")?,
@@ -198,7 +208,17 @@ fn dec_spec(d: &mut Dec) -> Result<ShardSpec, DecodeError> {
         },
         // tail field: a frame from before the flag existed ends here
         trace: if d.remaining() > 0 { d.bool("spec trace")? } else { false },
+        heartbeat_ms: 0,
+        series_ms: 0,
+        series_cap: 0,
     };
+    // health-plane tail: a frame from before the cadences existed ends
+    // at the trace flag — absent ⇒ disarmed (all zero)
+    if d.remaining() > 0 {
+        spec.heartbeat_ms = d.u64("spec heartbeat_ms")?;
+        spec.series_ms = d.u64("spec series_ms")?;
+        spec.series_cap = d.usize_("spec series_cap")?;
+    }
     // a worker builds an engine straight from this, so an untrusted but
     // well-formed frame must not panic it or drive unbounded allocation
     spec.validate().map_err(DecodeError::Malformed)?;
@@ -261,7 +281,33 @@ fn enc_report(e: &mut Enc, r: &ShardReport) {
     e.vec_f64(&r.stats.qlat);
     e.u64(r.stats.qlat_stride.max(1));
     e.u64(r.inflight_slots);
+    // health-plane tail (third tail block): span-drop accounting, the
+    // per-task ledger, and the gauge flight-recorder series
+    e.u64(r.spans_dropped);
+    e.u32(r.stats.tasks.len() as u32);
+    for t in &r.stats.tasks {
+        e.str_(&t.task);
+        e.u64(t.requests);
+        e.u64(t.tokens);
+        e.u64(t.cache_hits);
+        e.u64(t.swap_ins);
+    }
+    e.u32(r.series.len() as u32);
+    for p in &r.series {
+        e.u64(p.t_ms);
+        e.u64(p.queue_depth);
+        e.u64(p.inflight_slots);
+        e.u64(p.cache_bytes);
+        e.u64(p.registry_bytes);
+        e.u64(p.requests);
+    }
 }
+
+/// Minimum encoded bytes per task-ledger entry (empty name: u32 length
+/// prefix + 4 counters) — the allocation guard for the declared count.
+const TASK_MIN_BYTES: usize = 4 + 8 * 4;
+/// Encoded bytes per flight-recorder gauge point (6 × u64).
+const POINT_BYTES: usize = 8 * 6;
 
 fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
     let mut r = ShardReport {
@@ -282,6 +328,8 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
         inflight_peak: 0,
         full_soaks: 0,
         inflight_slots: 0,
+        spans_dropped: 0,
+        series: Vec::new(),
     };
     // a frame from before the tail fields existed ends here
     if d.remaining() > 0 {
@@ -306,6 +354,41 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
             r.stats.qlat = d.vec_f64("report queue-wait reservoir")?;
             r.stats.qlat_stride = d.u64("report qlat_stride")?.max(1);
             r.inflight_slots = d.u64("report inflight_slots")?;
+            // a frame from before the health-plane tail ends here
+            if d.remaining() > 0 {
+                r.spans_dropped = d.u64("report spans_dropped")?;
+                let n = d.u32("report task count")? as usize;
+                if n > d.remaining() / TASK_MIN_BYTES {
+                    return Err(DecodeError::Truncated { what: "report task ledger" });
+                }
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tasks.push(TaskStat {
+                        task: d.str_("task name")?,
+                        requests: d.u64("task requests")?,
+                        tokens: d.u64("task tokens")?,
+                        cache_hits: d.u64("task cache_hits")?,
+                        swap_ins: d.u64("task swap_ins")?,
+                    });
+                }
+                r.stats.tasks = tasks;
+                let n = d.u32("report series count")? as usize;
+                if n > d.remaining() / POINT_BYTES {
+                    return Err(DecodeError::Truncated { what: "report gauge series" });
+                }
+                let mut series = Vec::with_capacity(n);
+                for _ in 0..n {
+                    series.push(GaugePoint {
+                        t_ms: d.u64("point t_ms")?,
+                        queue_depth: d.u64("point queue_depth")?,
+                        inflight_slots: d.u64("point inflight_slots")?,
+                        cache_bytes: d.u64("point cache_bytes")?,
+                        registry_bytes: d.u64("point registry_bytes")?,
+                        requests: d.u64("point requests")?,
+                    });
+                }
+                r.series = series;
+            }
         }
     }
     Ok(r)
@@ -364,6 +447,7 @@ fn event_tag(ev: &ShardEvent) -> u8 {
         ShardEvent::FlushAck { .. } => TAG_FLUSH_ACK,
         ShardEvent::Report(_) => TAG_REPORT_REPLY,
         ShardEvent::Telemetry(_) => TAG_TELEMETRY,
+        ShardEvent::Heartbeat(_) => TAG_HEARTBEAT,
     }
 }
 
@@ -398,6 +482,13 @@ pub fn encode_event(ev: &ShardEvent) -> Vec<u8> {
                 e.u64(s.dur_ns);
                 e.u32(s.tid);
             }
+        }
+        ShardEvent::Heartbeat(hb) => {
+            e.u64(hb.shard as u64);
+            e.u64(hb.queue_depth);
+            e.u64(hb.inflight_slots);
+            e.u64(hb.spans_dropped);
+            e.u64(hb.cache_bytes);
         }
     }
     seal_frame(e)
@@ -450,6 +541,13 @@ pub fn decode_event_payload(tag: u8, payload: &[u8]) -> Result<ShardEvent, Decod
             }
             ShardEvent::Telemetry(TelemetryBatch { shard, dropped, spans })
         }
+        TAG_HEARTBEAT => ShardEvent::Heartbeat(Heartbeat {
+            shard: d.usize_("heartbeat shard")?,
+            queue_depth: d.u64("heartbeat queue_depth")?,
+            inflight_slots: d.u64("heartbeat inflight_slots")?,
+            spans_dropped: d.u64("heartbeat spans_dropped")?,
+            cache_bytes: d.u64("heartbeat cache_bytes")?,
+        }),
         other => return Err(DecodeError::BadTag(other)),
     };
     d.finish("event payload")?;
@@ -527,6 +625,9 @@ mod tests {
             threads: 2,
             serve: ServeConfig { cache_bytes: 1 << 20, registry_bytes: 1 << 18, max_batch: 4, prefix_block: 8 },
             trace: true,
+            heartbeat_ms: 50,
+            series_ms: 10,
+            series_cap: 128,
         }
     }
 
@@ -576,7 +677,27 @@ mod tests {
                 r.stats.qlat_stride = 2;
                 r.stats.hist.record(0.01);
                 r.stats.hist.record(0.02);
+                r.spans_dropped = 5;
+                r.stats.tasks = vec![
+                    TaskStat { task: "task0".into(), requests: 9, tokens: 40, cache_hits: 3, swap_ins: 1 },
+                    TaskStat { task: "task1".into(), requests: 2, tokens: 8, cache_hits: 0, swap_ins: 0 },
+                ];
+                r.series = vec![GaugePoint {
+                    t_ms: 100,
+                    queue_depth: 4,
+                    inflight_slots: 2,
+                    cache_bytes: 1 << 16,
+                    registry_bytes: 1 << 12,
+                    requests: 11,
+                }];
                 r
+            }),
+            ShardEvent::Heartbeat(Heartbeat {
+                shard: 4,
+                queue_depth: 12,
+                inflight_slots: 3,
+                spans_dropped: 1,
+                cache_bytes: 1 << 20,
             }),
             ShardEvent::Telemetry(TelemetryBatch { shard: 3, dropped: 0, spans: vec![] }),
             ShardEvent::Telemetry(TelemetryBatch {
@@ -686,6 +807,9 @@ mod tests {
         assert_eq!(r.stats.qlat, Vec::<f64>::new());
         assert_eq!(r.stats.qlat_stride, 1);
         assert_eq!(r.inflight_slots, 0);
+        assert_eq!(r.spans_dropped, 0);
+        assert!(r.stats.tasks.is_empty());
+        assert!(r.series.is_empty());
 
         let mut e = new_frame(TAG_CONFIGURE);
         e.u64(0); // shard
@@ -704,6 +828,51 @@ mod tests {
         };
         assert!(!spec.trace, "absent trace flag must decode as false");
         assert_eq!(spec.seq, 24);
+        assert_eq!(spec.heartbeat_ms, 0, "absent heartbeat cadence must decode as disarmed");
+        assert_eq!(spec.series_ms, 0);
+        assert_eq!(spec.series_cap, 0);
+
+        // a spec ending at the trace flag (pre-health-plane) also decodes
+        let mut e = new_frame(TAG_CONFIGURE);
+        e.u64(0);
+        e.str_("small");
+        e.str_("w4");
+        e.u64(11);
+        e.u64(24);
+        e.u64(3);
+        e.u64(2);
+        e.u64(1 << 20);
+        e.u64(1 << 18);
+        e.u64(4);
+        e.u64(8);
+        e.bool(true); // trace tail present, cadence tail absent
+        let ShardMsg::Configure { spec, .. } = decode_msg(&seal_frame(e)).unwrap() else {
+            panic!("expected Configure");
+        };
+        assert!(spec.trace);
+        assert_eq!(spec.heartbeat_ms, 0);
+    }
+
+    #[test]
+    fn corrupt_report_tail_counts_cannot_balloon_allocation() {
+        let mut r = ShardReport { shard: 0, ..Default::default() };
+        r.spans_dropped = 1;
+        let good = encode_event(&ShardEvent::Report(r));
+        // the task count is the u32 right after spans_dropped; find it by
+        // re-encoding with a poisoned count instead of byte surgery
+        let mut e = new_frame(TAG_REPORT_REPLY);
+        let payload = &good[HEADER_LEN..];
+        // everything up to the health tail: spans_dropped sits 8 bytes
+        // before the task-count u32, which is 8 bytes from the end minus
+        // the empty series count (4) and empty task count (4)
+        let head = &payload[..payload.len() - 8];
+        e.raw(head);
+        e.u32(u32::MAX); // task count with no bytes behind it
+        e.u32(0);
+        assert!(matches!(
+            decode_event(&seal_frame(e)).unwrap_err(),
+            DecodeError::Truncated { .. }
+        ));
     }
 
     #[test]

@@ -84,6 +84,18 @@ pub struct ShardSpec {
     /// wire so v1 peers that predate it still interoperate (absent ⇒
     /// `false`).
     pub trace: bool,
+    /// heartbeat cadence in milliseconds; 0 disables.  An armed shard
+    /// emits a [`ShardEvent::Heartbeat`] roughly every `heartbeat_ms`,
+    /// even while idle.  Appended as a wire tail after `trace` (with
+    /// `series_ms`/`series_cap`) so pre-health peers interoperate
+    /// (absent ⇒ 0 ⇒ disabled, so old gateways never see a Heartbeat
+    /// frame they cannot decode).
+    pub heartbeat_ms: u64,
+    /// gauge flight-recorder cadence in milliseconds; 0 disables.  The
+    /// recorded series rides back in the `Report` tail.
+    pub series_ms: u64,
+    /// flight-recorder ring capacity, in points.
+    pub series_cap: usize,
 }
 
 /// Wire-decode sanity bounds for [`ShardSpec`] fields.  A shard-worker
@@ -100,6 +112,10 @@ pub const MAX_SPEC_THREADS: usize = 1 << 10;
 pub const MAX_SPEC_BATCH: usize = 1 << 16;
 /// Upper bound on the byte budgets (cache, registry): 1 TiB.
 pub const MAX_SPEC_BYTES: usize = 1 << 40;
+/// Upper bound on the heartbeat / series cadences: one hour.
+pub const MAX_SPEC_CADENCE_MS: u64 = 3_600_000;
+/// Upper bound on the gauge flight-recorder ring capacity.
+pub const MAX_SPEC_SERIES_CAP: usize = 1 << 16;
 
 impl ShardSpec {
     /// Range-check a spec (enforced on wire decode; see the
@@ -119,6 +135,13 @@ impl ShardSpec {
         check("prefix_block", self.serve.prefix_block, 0, MAX_SPEC_BATCH)?;
         check("cache_bytes", self.serve.cache_bytes, 0, MAX_SPEC_BYTES)?;
         check("registry_bytes", self.serve.registry_bytes, 0, MAX_SPEC_BYTES)?;
+        if self.heartbeat_ms > MAX_SPEC_CADENCE_MS {
+            return Err(format!("spec heartbeat_ms {} out of range 0..={MAX_SPEC_CADENCE_MS}", self.heartbeat_ms));
+        }
+        if self.series_ms > MAX_SPEC_CADENCE_MS {
+            return Err(format!("spec series_ms {} out of range 0..={MAX_SPEC_CADENCE_MS}", self.series_ms));
+        }
+        check("series_cap", self.series_cap, 0, MAX_SPEC_SERIES_CAP)?;
         Ok(())
     }
 }
@@ -160,6 +183,29 @@ pub enum ShardEvent {
     /// Pure telemetry: credit-neutral for backpressure accounting and
     /// never acts as a barrier.
     Telemetry(TelemetryBatch),
+    /// periodic liveness beacon from a heartbeat-armed shard (spec
+    /// `heartbeat_ms > 0`), emitted even while idle.  Pure telemetry:
+    /// credit-neutral, never a barrier.  Strictly opt-in — a gateway
+    /// that never sets `heartbeat_ms` never receives one, so peers that
+    /// predate the tag still interoperate.
+    Heartbeat(Heartbeat),
+}
+
+/// The cheap health snapshot a heartbeat carries.  Everything here is a
+/// counter/gauge the shard already maintains — sampling reads no
+/// request data, so heartbeats cannot perturb results (pinned by the
+/// bench parity gate, which runs its traced replay heartbeat-armed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Heartbeat {
+    pub shard: usize,
+    /// requests accepted but not yet drained
+    pub queue_depth: u64,
+    /// requests occupying continuous-batching micro-batch slots
+    pub inflight_slots: u64,
+    /// spans lost to recorder ring overwrite (cumulative)
+    pub spans_dropped: u64,
+    /// resident hidden-state cache bytes
+    pub cache_bytes: u64,
 }
 
 /// Spans drained from one worker's recorder, shipped alongside a
@@ -199,6 +245,12 @@ pub struct ShardReport {
     /// requests occupying micro-batch slots (admitted into the shard's
     /// continuous-batching pool, not yet served), at report time
     pub inflight_slots: u64,
+    /// spans lost to recorder ring overwrite on this shard (cumulative;
+    /// wire tail — absent ⇒ 0)
+    pub spans_dropped: u64,
+    /// the shard's gauge flight-recorder series (chronological; empty
+    /// when the recorder is disarmed; wire tail)
+    pub series: Vec<crate::obs::series::GaugePoint>,
 }
 
 /// Why a gateway submit was refused.

@@ -25,6 +25,11 @@ pub enum TextLine {
     /// `STATS` was always an unknown-task request, never a valid one,
     /// so claiming it breaks nothing.
     Prom,
+    /// the `HEALTH` command: one JSON line of fleet liveness
+    /// ([`crate::obs::health::FleetHealth::to_json`]).  Claimed the same
+    /// way as `STATS`: case-sensitive and exact, never a valid request
+    /// on old peers.
+    Health,
     /// a request: task name + prompt tokens
     Request { task: String, tokens: Vec<i32> },
 }
@@ -58,6 +63,9 @@ pub fn parse_line(line: &str) -> Result<TextLine, TextError> {
     }
     if line == "STATS" {
         return Ok(TextLine::Prom);
+    }
+    if line == "HEALTH" {
+        return Ok(TextLine::Health);
     }
     let mut parts = line.split_whitespace();
     let task = parts.next().expect("a trimmed non-empty line has a first token").to_string();
@@ -102,6 +110,11 @@ mod tests {
         assert_eq!(parse_line("   \t ").unwrap(), TextLine::Empty);
         assert_eq!(parse_line(" stats ").unwrap(), TextLine::Stats);
         assert_eq!(parse_line("STATS").unwrap(), TextLine::Prom);
+        assert_eq!(parse_line("HEALTH").unwrap(), TextLine::Health);
+        assert_eq!(
+            parse_line("Health").unwrap(),
+            TextLine::Request { task: "Health".into(), tokens: vec![] }
+        );
         // only the exact uppercase form is the exposition command; mixed
         // case stays a (rejectable) request, as on old peers
         assert_eq!(

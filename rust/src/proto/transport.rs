@@ -325,9 +325,12 @@ impl SocketTransport {
                     *o = o.saturating_sub(1);
                 }
             }
-            // control/telemetry events are credit-neutral: they do not
-            // resolve a submitted request
-            ShardEvent::FlushAck { .. } | ShardEvent::Report(_) | ShardEvent::Telemetry(_) => {}
+            // control/telemetry/heartbeat events are credit-neutral:
+            // they do not resolve a submitted request
+            ShardEvent::FlushAck { .. }
+            | ShardEvent::Report(_)
+            | ShardEvent::Telemetry(_)
+            | ShardEvent::Heartbeat(_) => {}
         }
     }
 

@@ -65,7 +65,7 @@ pub use cache::HiddenCache;
 pub use engine::{Engine, EnginePreset, ExecutorEngine, SyntheticEngine};
 pub use crate::nn::BackboneKind;
 pub use registry::{Registry, SideNetwork};
-pub use stats::{ServeStats, StatsSnapshot};
+pub use stats::{ServeStats, StatsSnapshot, TaskStat};
 
 /// One prompt's frozen-backbone hidden states (engine-defined layout).
 #[derive(Clone, Debug)]
@@ -272,7 +272,11 @@ impl<E: Engine> Server<E> {
         let t_assemble = obs::start();
         let seq = self.engine.seq_len();
         let use_cache = self.engine.cacheable() && self.cache.enabled();
+        // per-task swap-in accounting: a registry load here means this
+        // batch's side network had been evicted and was rebuilt on demand
+        let loads_before = self.registry.loads;
         let net = self.registry.get(&mb.task)?;
+        let swap_ins = self.registry.loads - loads_before;
         let rows: Vec<Vec<i32>> = mb
             .requests
             .iter()
@@ -356,6 +360,7 @@ impl<E: Engine> Server<E> {
             bail!("side returned {} rows for {}", logits.len(), rows.len());
         }
         let t_respond = obs::start();
+        let hit_count = hits.iter().filter(|&&h| h).count() as u64;
         let mut latencies = Vec::with_capacity(mb.requests.len());
         let mut queue_waits = Vec::with_capacity(mb.requests.len());
         let mut tok_count = 0usize;
@@ -373,6 +378,13 @@ impl<E: Engine> Server<E> {
             t0.elapsed().as_secs_f64(),
             &latencies,
             &queue_waits,
+        );
+        self.stats.record_task(
+            &mb.task,
+            latencies.len() as u64,
+            tok_count as u64,
+            hit_count,
+            swap_ins,
         );
         obs::end(SpanKind::Respond, t_respond, first_id);
         Ok(())

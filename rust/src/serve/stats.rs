@@ -7,11 +7,36 @@
 //! substrate, also used by `bench-kernels`) and is re-exported here for
 //! the serve-side callers.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::obs::LogHistogram;
 
 pub use crate::benchkit::Json;
+
+/// Per-task accounting: one row per task id, keyed and merged by name.
+/// The tenancy counterpart of the fleet counters — at thousand-task
+/// scale "who is using the fleet" needs attribution, not just totals.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TaskStat {
+    pub task: String,
+    pub requests: u64,
+    pub tokens: u64,
+    /// whole-prompt hidden-state cache hits attributed to this task
+    pub cache_hits: u64,
+    /// registry cold loads (initial registration + post-eviction
+    /// reloads) triggered by this task's batches
+    pub swap_ins: u64,
+}
+
+impl TaskStat {
+    fn absorb(&mut self, other: &TaskStat) {
+        self.requests += other.requests;
+        self.tokens += other.tokens;
+        self.cache_hits += other.cache_hits;
+        self.swap_ins += other.swap_ins;
+    }
+}
 
 /// Cap on retained latency samples; at the cap the reservoir is decimated
 /// (every 2nd sample kept) so memory stays bounded and the distribution
@@ -104,6 +129,9 @@ pub struct ServeStats {
     lat: Reservoir,
     /// queue-wait component alone: enqueue → micro-batch execution start
     queue: Reservoir,
+    /// per-task accounting, keyed by task id (BTreeMap so snapshots list
+    /// tasks in a stable name order)
+    tasks: BTreeMap<String, TaskStat>,
 }
 
 impl Default for ServeStats {
@@ -125,6 +153,7 @@ impl ServeStats {
             hist: LogHistogram::new(),
             lat: Reservoir::new(),
             queue: Reservoir::new(),
+            tasks: BTreeMap::new(),
         }
     }
 
@@ -152,6 +181,20 @@ impl ServeStats {
         for &q in queue_secs {
             self.queue.push(q);
         }
+    }
+
+    /// Attribute one micro-batch to its task: `n` requests covering
+    /// `tokens` prompt tokens, of which `cache_hits` were whole-prompt
+    /// cache hits and `swap_ins` registry cold loads were triggered.
+    pub fn record_task(&mut self, task: &str, n: u64, tokens: u64, cache_hits: u64, swap_ins: u64) {
+        let e = self.tasks.entry(task.to_string()).or_insert_with(|| TaskStat {
+            task: task.to_string(),
+            ..Default::default()
+        });
+        e.requests += n;
+        e.tokens += tokens;
+        e.cache_hits += cache_hits;
+        e.swap_ins += swap_ins;
     }
 
     /// Wall time since the server came up (includes idle).
@@ -215,6 +258,7 @@ impl ServeStats {
             qlat: self.queue.v.clone(),
             qlat_stride: self.queue.stride,
             hist: self.hist.clone(),
+            tasks: self.tasks.values().cloned().collect(),
         }
     }
 
@@ -269,6 +313,9 @@ pub struct StatsSnapshot {
     pub qlat_stride: u64,
     /// every request latency, log-bucketed; merges exactly
     pub hist: LogHistogram,
+    /// per-task accounting rows, in stable task-name order; merges by
+    /// name with counters summing (wire tail — absent ⇒ empty)
+    pub tasks: Vec<TaskStat>,
 }
 
 impl Default for StatsSnapshot {
@@ -287,6 +334,7 @@ impl Default for StatsSnapshot {
             qlat: Vec::new(),
             qlat_stride: 1,
             hist: LogHistogram::new(),
+            tasks: Vec::new(),
         }
     }
 }
@@ -333,6 +381,26 @@ impl StatsSnapshot {
         let mut qstride = self.qlat_stride;
         merge_reservoir(&mut self.qlat, &mut qstride, &other.qlat, other.qlat_stride);
         self.qlat_stride = qstride;
+        if !other.tasks.is_empty() {
+            let mut by_name: BTreeMap<String, TaskStat> =
+                std::mem::take(&mut self.tasks).into_iter().map(|t| (t.task.clone(), t)).collect();
+            for t in &other.tasks {
+                by_name
+                    .entry(t.task.clone())
+                    .and_modify(|mine| mine.absorb(t))
+                    .or_insert_with(|| t.clone());
+            }
+            self.tasks = by_name.into_values().collect();
+        }
+    }
+
+    /// The `k` busiest tasks by request count (ties broken by name for
+    /// determinism) — the `GatewayReport` top-K table.
+    pub fn top_tasks(&self, k: usize) -> Vec<&TaskStat> {
+        let mut v: Vec<&TaskStat> = self.tasks.iter().collect();
+        v.sort_by(|a, b| b.requests.cmp(&a.requests).then_with(|| a.task.cmp(&b.task)));
+        v.truncate(k);
+        v
     }
 
     /// Nearest-rank percentile of the merged total latencies, in seconds.
@@ -452,6 +520,45 @@ mod tests {
         assert!((m.queue_p95_secs() - 0.004).abs() < 1e-12);
         assert_eq!(StatsSnapshot::default().p95_secs(), 0.0);
         assert_eq!(StatsSnapshot::default().queue_p95_secs(), 0.0);
+    }
+
+    #[test]
+    fn task_accounting_records_and_merges_by_name() {
+        let mut a = ServeStats::new();
+        a.record_task("qa", 2, 10, 1, 1);
+        a.record_task("sum", 1, 4, 0, 0);
+        a.record_task("qa", 3, 12, 2, 0); // same task accumulates
+        let sa = a.snapshot();
+        assert_eq!(sa.tasks.len(), 2);
+        // BTreeMap iteration: stable name order
+        assert_eq!(sa.tasks[0].task, "qa");
+        assert_eq!(sa.tasks[0].requests, 5);
+        assert_eq!(sa.tasks[0].tokens, 22);
+        assert_eq!(sa.tasks[0].cache_hits, 3);
+        assert_eq!(sa.tasks[0].swap_ins, 1);
+        assert_eq!(sa.tasks[1].task, "sum");
+
+        let mut b = ServeStats::new();
+        b.record_task("qa", 4, 16, 4, 2);
+        b.record_task("cls", 7, 7, 0, 1);
+        let mut m = sa.clone();
+        m.merge(&b.snapshot());
+        // shared names sum, disjoint names union, order stays sorted
+        assert_eq!(
+            m.tasks.iter().map(|t| t.task.as_str()).collect::<Vec<_>>(),
+            vec!["cls", "qa", "sum"]
+        );
+        let qa = m.tasks.iter().find(|t| t.task == "qa").unwrap();
+        assert_eq!((qa.requests, qa.tokens, qa.cache_hits, qa.swap_ins), (9, 38, 7, 3));
+        // merging into an empty snapshot adopts the other side
+        let mut e = StatsSnapshot::default();
+        e.merge(&m);
+        assert_eq!(e.tasks, m.tasks);
+        // top-K: sorted by requests desc, ties by name
+        let top = m.top_tasks(2);
+        assert_eq!(top[0].task, "qa");
+        assert_eq!(top[1].task, "cls");
+        assert_eq!(m.top_tasks(10).len(), 3);
     }
 
     #[test]

@@ -43,6 +43,10 @@ fn gateway_cfg(shards: usize, backbone: BackboneKind, prefix_block: usize) -> Ga
             prefix_block,
         },
         trace: false,
+        heartbeat_ms: 0,
+        health_mult: qst::obs::health::DEFAULT_HEALTH_MULT,
+        series_ms: 0,
+        series_cap: qst::obs::series::SERIES_DEFAULT_CAP,
     }
 }
 
@@ -353,6 +357,127 @@ fn randomized_interleaved_submits_preserve_per_task_fifo_and_slot_cap() {
         for j in joins {
             j.join().unwrap();
         }
+    }
+}
+
+/// The tentpole liveness proof, end-to-end over real socket framing:
+/// kill one worker of a heartbeat-armed 2-shard fleet mid-run and the
+/// gateway must classify it Dead within two heartbeat timeouts — shown
+/// by both the `HEALTH` JSON and the `STATS` Prometheus gauges — while
+/// the surviving shard keeps answering requests.
+#[cfg(unix)]
+#[test]
+fn killed_socket_worker_goes_dead_within_two_timeouts_while_survivor_serves() {
+    use qst::gateway::worker::serve_stream;
+    use qst::obs::health::HealthState;
+    use qst::proto::transport::{SocketTransport, Stream};
+    use std::net::Shutdown;
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    let mut cfg = gateway_cfg(2, BackboneKind::F32, 4);
+    cfg.heartbeat_ms = 50;
+    cfg.health_mult = 2; // timeout 100 ms => Dead past 200 ms of silence
+    let spec = cfg.shard_spec();
+    let mut gw_ends: Vec<Box<dyn Stream>> = Vec::with_capacity(2);
+    let mut workers = Vec::with_capacity(2);
+    let mut killer: Option<UnixStream> = None;
+    for i in 0..2usize {
+        let (gw_end, worker_end) = UnixStream::pair().unwrap();
+        if i == 0 {
+            // a second handle on shard 0's connection: shutting it down
+            // both ways severs the stream exactly as a SIGKILLed worker
+            // process would (no clean Shutdown frame, just silence)
+            killer = Some(gw_end.try_clone().unwrap());
+        }
+        gw_ends.push(Box::new(gw_end));
+        workers.push(std::thread::spawn(move || {
+            let _ = serve_stream(Box::new(worker_end), false);
+        }));
+    }
+    let transport = SocketTransport::from_streams(gw_ends, &spec, cfg.queue_cap).unwrap();
+    let mut gw = Gateway::with_transport(&cfg, Box::new(transport)).unwrap();
+    assert!(gw.health().armed());
+    let timeout = gw.health().timeout();
+    assert_eq!(timeout, Duration::from_millis(100));
+
+    // a prompt routed to each shard, via the gateway's own router
+    let router = qst::gateway::Router::new(2, cfg.serve.prefix_block);
+    let prompt_for = |shard: usize| {
+        (0i32..1024)
+            .map(|i| vec![i + 1, i + 2, 5])
+            .find(|p| router.route(p) == shard)
+            .expect("some 3-token prompt routes to every shard")
+    };
+    let to_dead = prompt_for(0);
+    let to_survivor = prompt_for(1);
+
+    // both shards serve and beat before the kill
+    gw.submit("task0", &to_dead).unwrap();
+    gw.submit("task0", &to_survivor).unwrap();
+    assert_eq!(gw.flush().unwrap().len(), 2);
+    let armed_deadline = Instant::now() + Duration::from_secs(10);
+    while (gw.health().beats(0) == 0 || gw.health().beats(1) == 0)
+        && Instant::now() < armed_deadline
+    {
+        let _ = gw.try_collect();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(gw.health().beats(0) > 0 && gw.health().beats(1) > 0, "both shards must beat");
+
+    // kill shard 0 mid-run
+    killer.unwrap().shutdown(Shutdown::Both).unwrap();
+    let killed_at = Instant::now();
+    let deadline = killed_at + Duration::from_secs(10);
+    while gw.health().state(0) != HealthState::Dead && Instant::now() < deadline {
+        let _ = gw.try_collect();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let detected_in = killed_at.elapsed();
+    assert_eq!(gw.health().state(0), HealthState::Dead, "killed worker never classified Dead");
+    // the contract: dead within two heartbeat timeouts (generous
+    // scheduling slack on top — the classification itself is by age)
+    assert!(
+        detected_in <= timeout * 2 + Duration::from_secs(2),
+        "Dead took {detected_in:?}, contract is ~2x{timeout:?}"
+    );
+    assert!(!gw.health().up(0));
+
+    // the survivor keeps answering while shard 0 is dead
+    gw.submit("task0", &to_survivor).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut answered = Vec::new();
+    while answered.is_empty() && Instant::now() < deadline {
+        answered = gw.try_collect();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(answered.len(), 1, "survivor stopped answering after the kill");
+    assert_eq!(gw.health().state(1), HealthState::Healthy, "survivor must stay healthy");
+
+    // HEALTH: the JSON line names the dead shard without a report barrier
+    let j = gw.health().to_json();
+    assert!(j.contains("\"shard\":0,\"state\":\"dead\",\"up\":false"), "{j}");
+    assert!(j.contains("\"shard\":1,\"state\":\"healthy\",\"up\":true"), "{j}");
+
+    // STATS: the Prometheus exposition flips qst_worker_up{shard="0"} to 0
+    // (report() only reaches the survivor; the gauges come from health)
+    let report = gw.report().unwrap();
+    let gauges = qst::obs::prom::GatewayGauges {
+        submitted: gw.submitted,
+        rejected: gw.rejected,
+        dropped: gw.dropped,
+        in_flight: gw.in_flight() as u64,
+    };
+    let prom = qst::obs::prom::render(&report, &gauges, Some(gw.health()));
+    assert!(prom.contains("qst_worker_up{shard=\"0\"} 0"), "{prom}");
+    assert!(prom.contains("qst_worker_up{shard=\"1\"} 1"), "{prom}");
+    assert!(prom.contains("qst_heartbeat_age_seconds{shard=\"0\"}"), "{prom}");
+
+    // teardown: shard 0 is gone, so a clean fleet-wide shutdown may
+    // legitimately error — the survivor's worker thread still joins
+    let _ = gw.shutdown();
+    for w in workers {
+        let _ = w.join();
     }
 }
 

@@ -12,13 +12,15 @@
 //!    length, or appending trailing junk yields a typed
 //!    [`DecodeError`], never a panic and never a bogus `Ok`.
 
+use qst::obs::series::GaugePoint;
 use qst::obs::{LogHistogram, Span, SpanKind};
 use qst::proto::frame::{self, HEADER_LEN, MAX_PAYLOAD, VERSION};
 use qst::proto::wire::DecodeError;
 use qst::proto::{
-    GatewayResponse, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec, TelemetryBatch,
+    GatewayResponse, Heartbeat, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec,
+    TelemetryBatch,
 };
-use qst::serve::{BackboneKind, EnginePreset, Response, ServeConfig, StatsSnapshot};
+use qst::serve::{BackboneKind, EnginePreset, Response, ServeConfig, StatsSnapshot, TaskStat};
 use qst::util::prop;
 use qst::util::rng::Rng;
 
@@ -72,6 +74,11 @@ fn arb_spec(rng: &mut Rng) -> ShardSpec {
             prefix_block: rng.below(128),
         },
         trace: rng.bool(0.5),
+        // cadences stay under MAX_SPEC_CADENCE_MS, cap under MAX_SPEC_SERIES_CAP;
+        // zero (disarmed) gets real probability on both
+        heartbeat_ms: if rng.bool(0.3) { 0 } else { rng.below(60_000) as u64 },
+        series_ms: if rng.bool(0.3) { 0 } else { rng.below(60_000) as u64 },
+        series_cap: rng.below(1 << 12),
     }
 }
 
@@ -119,6 +126,31 @@ fn arb_snapshot(rng: &mut Rng) -> StatsSnapshot {
             (0..n).map(|_| rng.f64()).collect()
         },
         qlat_stride: 1u64 << rng.below(5),
+        tasks: {
+            // empty ledgers get real probability; task names exercise the
+            // same unicode/empty-string space as request routing
+            let n = if rng.bool(0.3) { 0 } else { rng.below(6) };
+            (0..n)
+                .map(|_| TaskStat {
+                    task: arb_string(rng, 24),
+                    requests: rng.next_u64(),
+                    tokens: rng.next_u64(),
+                    cache_hits: rng.next_u64(),
+                    swap_ins: rng.next_u64(),
+                })
+                .collect()
+        },
+    }
+}
+
+fn arb_gauge_point(rng: &mut Rng) -> GaugePoint {
+    GaugePoint {
+        t_ms: rng.next_u64(),
+        queue_depth: rng.next_u64(),
+        inflight_slots: rng.next_u64(),
+        cache_bytes: rng.next_u64(),
+        registry_bytes: rng.next_u64(),
+        requests: rng.next_u64(),
     }
 }
 
@@ -141,6 +173,11 @@ fn arb_report(rng: &mut Rng) -> ShardReport {
         inflight_peak: rng.next_u64(),
         full_soaks: rng.next_u64(),
         inflight_slots: rng.next_u64(),
+        spans_dropped: rng.next_u64(),
+        series: {
+            let n = if rng.bool(0.3) { 0 } else { rng.below(8) };
+            (0..n).map(|_| arb_gauge_point(rng)).collect()
+        },
     }
 }
 
@@ -165,7 +202,7 @@ fn arb_telemetry(rng: &mut Rng) -> TelemetryBatch {
 }
 
 fn arb_event(rng: &mut Rng) -> ShardEvent {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => ShardEvent::Done(GatewayResponse {
             shard: rng.below(1024),
             resp: Response {
@@ -184,6 +221,13 @@ fn arb_event(rng: &mut Rng) -> ShardEvent {
         },
         3 => ShardEvent::FlushAck { shard: rng.below(1024) },
         4 => ShardEvent::Telemetry(arb_telemetry(rng)),
+        5 => ShardEvent::Heartbeat(Heartbeat {
+            shard: rng.below(1024),
+            queue_depth: rng.next_u64(),
+            inflight_slots: rng.next_u64(),
+            spans_dropped: rng.next_u64(),
+            cache_bytes: rng.next_u64(),
+        }),
         _ => ShardEvent::Report(arb_report(rng)),
     }
 }
@@ -239,6 +283,11 @@ fn events_bit_equal(a: &ShardEvent, b: &ShardEvent) -> bool {
                 && sx.qlat.iter().zip(&sy.qlat).all(|(p, q)| p.to_bits() == q.to_bits())
                 && sx.qlat_stride == sy.qlat_stride
                 && x.inflight_slots == y.inflight_slots
+                // the health-plane tail is all integers and strings, so
+                // derived equality is already bit-exact
+                && x.spans_dropped == y.spans_dropped
+                && sx.tasks == sy.tasks
+                && x.series == y.series
         }
         // Telemetry (and the rest) carry no floats, so derived equality
         // is already bit-exact
@@ -422,6 +471,10 @@ fn pre_tail_report_frames_decode_with_default_observability() {
     assert_eq!(r.stats.qlat, Vec::<f64>::new());
     assert_eq!(r.stats.qlat_stride, 1);
     assert_eq!(r.inflight_slots, 0);
+    // ...and the health-plane tail appended after that
+    assert_eq!(r.spans_dropped, 0);
+    assert!(r.stats.tasks.is_empty());
+    assert!(r.series.is_empty());
     // and the modern encoding of the decoded report is strictly longer
     // (it appends the tail), so new->old interop is the trailing-bytes
     // rejection pinned by header_corruptions_map_to_the_right_typed_errors
@@ -434,8 +487,10 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
     // gauges) but predates the continuous-batching tail: its frames end
     // right after full_soaks.  Emulate one by encoding a modern report
     // whose continuous tail is the canonical empty encoding (u32 empty
-    // qlat length + u64 stride + u64 slots = 20 bytes), chopping those
-    // 20 bytes, and patching the header length.
+    // qlat length + u64 stride + u64 slots = 20 bytes) followed by the
+    // canonical empty health-plane tail (u64 spans_dropped + u32 empty
+    // task count + u32 empty series count = 16 bytes), chopping those
+    // 36 bytes, and patching the header length.
     let report = ShardReport {
         shard: 3,
         queue_depth: 4,
@@ -444,7 +499,7 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
         ..ShardReport::default()
     };
     let full = frame::encode_event(&ShardEvent::Report(report));
-    let cut = full.len() - 20;
+    let cut = full.len() - 20 - 16;
     let mut bytes = full[..cut].to_vec();
     bytes[7..11].copy_from_slice(&((cut - HEADER_LEN) as u32).to_le_bytes());
     let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("mid-tail frame must decode")
@@ -453,10 +508,43 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
     };
     // the PR 6 tail it did ship survives...
     assert_eq!((r.shard, r.queue_depth, r.inflight_peak, r.full_soaks), (3, 4, 2, 9));
-    // ...and the absent continuous tail decodes to defaults, not errors
+    // ...and the absent continuous + health-plane tails decode to
+    // defaults, not errors
     assert_eq!(r.stats.qlat, Vec::<f64>::new());
     assert_eq!(r.stats.qlat_stride, 1);
     assert_eq!(r.inflight_slots, 0);
+    assert_eq!(r.spans_dropped, 0);
+    assert!(r.stats.tasks.is_empty());
+    assert!(r.series.is_empty());
+}
+
+#[test]
+fn pr7_tail_only_report_frames_decode_with_default_health_plane() {
+    // A peer that speaks the continuous-batching tail but predates the
+    // health plane: its frames end right after inflight_slots.  Emulate
+    // one by chopping the canonical empty health-plane tail (u64
+    // spans_dropped + u32 empty task count + u32 empty series count =
+    // 16 bytes) and patching the header length.
+    let report = ShardReport {
+        shard: 6,
+        inflight_slots: 12,
+        queue_depth: 3,
+        ..ShardReport::default()
+    };
+    let full = frame::encode_event(&ShardEvent::Report(report));
+    let cut = full.len() - 16;
+    let mut bytes = full[..cut].to_vec();
+    bytes[7..11].copy_from_slice(&((cut - HEADER_LEN) as u32).to_le_bytes());
+    let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("pr7 frame must decode")
+    else {
+        panic!("expected a Report event");
+    };
+    // the tails it did ship survive...
+    assert_eq!((r.shard, r.inflight_slots, r.queue_depth), (6, 12, 3));
+    // ...and the absent health-plane tail decodes to defaults
+    assert_eq!(r.spans_dropped, 0);
+    assert!(r.stats.tasks.is_empty());
+    assert!(r.series.is_empty());
 }
 
 #[test]

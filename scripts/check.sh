@@ -60,7 +60,6 @@ print(f"mixed sweep: continuous p95 = {ratio:.3f}x waved "
       f"({bench['mixed_continuous_p95_ms']:.2f} ms vs {bench['mixed_waved_p95_ms']:.2f} ms), "
       "bit-parity held")
 EOF
-rm -f BENCH_gateway_smoke.json
 
 # cross-process gateway smoke: two real `qst shard-worker` processes on
 # unix sockets driven by `qst gateway --connect`, compared line-for-line
@@ -96,6 +95,52 @@ diff <(grep '^task' /tmp/qst-gw-socket.out | sort) \
 rm -f /tmp/qst-gw-socket.out /tmp/qst-gw-inproc.out "$SOCK0" "$SOCK1"
 echo "cross-process responses match the in-proc gateway"
 
+# fleet health smoke: 2 shard-worker processes with 100ms heartbeats and a
+# 2x liveness multiple (timeout 200ms, dead past 400ms).  SIGKILL one
+# worker mid-session — no Shutdown frame, just silence — then verify from
+# the gateway's own output that (a) HEALTH reports the killed shard dead
+# and the survivor healthy, (b) STATS flips qst_worker_up{shard="0"} to 0
+# while shard 1 stays 1, and (c) the survivor keeps answering requests.
+# Detection latency itself is pinned precisely (in-process clocks) by
+# tests/gateway.rs; this smoke proves the same story across real
+# processes and unix sockets.
+echo "== fleet health smoke (kill -9 one shard-worker, liveness flips, survivor serves) =="
+HSOCK0=$(mktemp -u /tmp/qst-health-shard0.XXXXXX.sock)
+HSOCK1=$(mktemp -u /tmp/qst-health-shard1.XXXXXX.sock)
+HFIFO=$(mktemp -u /tmp/qst-health.XXXXXX.fifo)
+mkfifo "$HFIFO"
+"$QST_BIN" shard-worker --listen "unix:$HSOCK0" & HW0=$!
+"$QST_BIN" shard-worker --listen "unix:$HSOCK1" & HW1=$!
+trap 'kill -9 "$HW0" "$HW1" 2>/dev/null || true' EXIT
+# 8 distinct prompts spread over both shards by the prefix router
+HREQS='task0 1 2 3\ntask0 2 3 4\ntask1 3 4 5\ntask1 4 5 6\ntask0 5 6 7\ntask1 6 7 8\ntask0 7 8 9\ntask1 8 9 10\n'
+timeout 120 "$QST_BIN" gateway --connect "unix:$HSOCK0,unix:$HSOCK1" --seq 16 \
+    --heartbeat-ms 100 --health-mult 2 < "$HFIFO" > /tmp/qst-health.out &
+HGW=$!
+exec 3>"$HFIFO"
+printf "$HREQS" >&3
+sleep 1                       # all 8 answered; both shards beating
+kill -9 "$HW0"                # hard-kill shard 0: silence, no goodbye frame
+sleep 0.7                     # > 2x the 200ms liveness timeout
+printf "$HREQS" >&3           # survivor's share must answer again (stderr
+                              # shows 'rejected' for the dead shard's share)
+printf 'HEALTH\nSTATS\n' >&3
+sleep 0.5
+exec 3>&-                     # EOF: gateway flushes the live shard and exits
+wait "$HGW" || { echo "error: gateway died instead of riding out the dead shard" >&2; exit 1; }
+kill "$HW1" 2>/dev/null || true
+wait "$HW0" "$HW1" 2>/dev/null || true
+trap - EXIT
+grep -q '"shard":0,"state":"dead","up":false' /tmp/qst-health.out
+grep -q '"shard":1,"state":"healthy","up":true' /tmp/qst-health.out
+grep -q 'qst_worker_up{shard="0"} 0' /tmp/qst-health.out
+grep -q 'qst_worker_up{shard="1"} 1' /tmp/qst-health.out
+grep -q 'qst_heartbeat_age_seconds{shard="0"}' /tmp/qst-health.out
+# 8 pre-kill responses plus at least one post-kill answer from the survivor
+[ "$(grep -c '^task' /tmp/qst-health.out)" -ge 9 ]
+rm -f /tmp/qst-health.out "$HFIFO" "$HSOCK0" "$HSOCK1"
+echo "dead worker detected from heartbeat silence; survivor kept serving"
+
 # tracing smoke: run the serving bench with the span recorder armed.
 # bench-serve refuses to serialize unless the traced replay is
 # bit-identical to the untraced pass, so a zero-exit already proves
@@ -126,7 +171,8 @@ assert bench["schema_version"] == 2, "bench provenance schema drifted"
 print(f"trace: {len(trace['traceEvents'])} spans, all lifecycle kinds present; "
       f"off-overhead {overhead:.4f}% < 2%")
 EOF
-rm -f BENCH_serve_smoke.json   # trace.json is kept: CI uploads it as an artifact
+# BENCH_serve_smoke.json is kept for the trend block below;
+# trace.json is kept: CI uploads it as an artifact
 
 # packed-panel kernel gate: at the xl backbone shape (d=512) the packed
 # microkernel must beat the cache-blocked serial kernel by ≥1.2x, and the
@@ -149,7 +195,47 @@ assert qgemm >= 1.0, (
     f"panel-shared W4 decode is {qgemm:.3f}x the row-run kernel (gate: 1.0x)")
 print(f"packed kernels: gemm {gemm:.2f}x blocked, qgemm {qgemm:.2f}x row-run at d=512")
 EOF
-rm -f BENCH_kernels_gate.json
+
+# benchmark trend: append one JSON line of this run's headline numbers
+# (git rev + UTC timestamp for provenance) to BENCH_trend.jsonl.  CI
+# uploads the file as an artifact, so regressions in the headline
+# speedups/ratios are visible as a series across runs, not just as a
+# pass/fail gate on one run.  Append-only by design: a local file
+# accumulates a history across `make check` runs too.
+echo "== benchmark trend (BENCH_trend.jsonl) =="
+python3 - <<'EOF'
+import datetime
+import json
+import subprocess
+
+def pick(path, keys):
+    d = json.load(open(path))
+    return {k: d[k] for k in keys if k in d}
+
+rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                     capture_output=True, text=True).stdout.strip()
+entry = {
+    "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    "git_rev": rev or "unknown",
+}
+entry.update(pick("BENCH_gateway_smoke.json", [
+    "continuous_p95_ratio", "mixed_continuous_p95_ms", "mixed_waved_p95_ms",
+    "transport_rps_ratio", "shard_scaling_speedup", "rps", "p95_ms",
+    "resident_bytes",
+]))
+entry.update(pick("BENCH_serve_smoke.json", [
+    "cached_rps", "cached_p50_ms", "trace_off_overhead_pct",
+    "backbone_bytes", "backbone_bytes_ratio", "speedup",
+]))
+entry.update(pick("BENCH_kernels_gate.json", [
+    "gemm_packed_speedup", "qgemm_packed_speedup",
+]))
+with open("BENCH_trend.jsonl", "a") as f:
+    f.write(json.dumps(entry, sort_keys=True) + "\n")
+print(f"trend: appended {len(entry) - 2} headline keys @ {entry['git_rev']}")
+EOF
+rm -f BENCH_gateway_smoke.json BENCH_serve_smoke.json BENCH_kernels_gate.json
 
 # xl preset smoke: the d=512/12-layer preset must serve end-to-end on the
 # packed-W4 backbone — bench-serve's cached-vs-uncached parity and
