@@ -217,6 +217,20 @@ COMMANDS:
                per-kernel ms + GFLOP/s (--threads defaults to all cores;
                the O(m*k*n) naive baseline is skipped above a MAC budget
                and the blocked kernel stands in as reference)
+  bench-registry [--tasks N] [--requests N] [--zipf-s F] [--budget-pct N]
+               [--seq N] [--prompt-len N] [--batch N] [--parity-requests N]
+               [--seed N] [--threads N] [--json PATH]
+               Task-artifact registry churn benchmark: writes N synthetic
+               task artifacts (default 1000) into a file-backed
+               content-addressed store, registers them against a registry
+               budgeted at --budget-pct percent of the catalog (must be
+               < 10, so the long tail must thrash), and drives a seeded
+               Zipf-distributed request mix through it; reports swap-in
+               p50/p95, registry hit rate, evictions, and resident bytes.
+               Before writing BENCH_registry.json it live-Deploys a fresh
+               artifact to a running 2-worker socket fleet and refuses to
+               serialize unless the deployed task serves bit-identically
+               to a replica loaded from the store after a restart
   artifacts    List available AOT artifacts
   info         Print environment / runtime info
   help         This message

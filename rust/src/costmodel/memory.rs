@@ -168,6 +168,23 @@ pub fn gateway_resident_bytes_multiproc(
         + shards * (WORKER_PROCESS_OVERHEAD_BYTES + 4 * SOCKET_ENDPOINT_BUF_BYTES)
 }
 
+/// Exact on-the-wire size of a sectioned task artifact
+/// ([`crate::store::artifact`]): fixed header + one index entry per
+/// section (fixed part + the section's name bytes) + the section
+/// payloads.  The analytical twin of [`crate::store::ArtifactBuilder`]'s
+/// output length — a test pins the two to exact agreement, so deploy
+/// payload sizes and store catalog footprints are auditable without
+/// building artifacts.
+pub fn artifact_bytes(sections: &[(&str, usize)]) -> usize {
+    crate::store::artifact::ARTIFACT_HEADER_BYTES
+        + sections
+            .iter()
+            .map(|(name, payload)| {
+                crate::store::artifact::INDEX_ENTRY_FIXED_BYTES + name.len() + payload
+            })
+            .sum::<usize>()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +336,25 @@ mod tests {
         // dwarf the f32 backbone it replaces
         let f32_backbone = backbone_resident_bytes(EnginePreset::Large, BackboneKind::F32);
         assert!(per_shard_delta < f32_backbone);
+    }
+
+    #[test]
+    fn artifact_bytes_pins_to_real_builder_output() {
+        use crate::store::{side_artifact_synthetic, ArtifactBuilder, SECTION_SYNTHETIC};
+        // multi-section artifact: the model must hit the real byte count
+        let built = ArtifactBuilder::new()
+            .section("tensor:side.w", vec![0u8; 40])
+            .section("tensor:side.b", vec![0u8; 12])
+            .finish();
+        assert_eq!(
+            artifact_bytes(&[("tensor:side.w", 40), ("tensor:side.b", 12)]),
+            built.len()
+        );
+        // the synthetic deploy artifact: one 16-byte section
+        let synth = side_artifact_synthetic(9, 1 << 12);
+        assert_eq!(artifact_bytes(&[(SECTION_SYNTHETIC, 16)]), synth.len());
+        // empty artifact is just the header
+        assert_eq!(artifact_bytes(&[]), ArtifactBuilder::new().finish().len());
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! `bench-registry`: registry churn under a 1000-task Zipf request mix,
+//! gated by live-Deploy parity.
+//!
+//! The workload models a large multi-tenant catalog: `tasks` synthetic
+//! side-network artifacts are written into a content-addressed
+//! [`crate::store`] backend (a real [`LocalDir`] under a scratch dir, so
+//! every cold load crosses the file-backed streaming read path), then
+//! registered against a registry whose byte budget is a small percent
+//! (`budget_pct`, enforced < 10) of the catalog's resident footprint.
+//! A Zipf-distributed request stream ([`Zipf`], seeded) then hammers the
+//! registry: hot ranks stay resident, the long tail thrashes through
+//! LRU eviction, and every cold load lands in the registry's swap-in
+//! histogram — the p50/p95, hit rate, eviction count, and resident
+//! bytes this bench reports.
+//!
+//! Before anything is serialized, a **deploy-parity gate** runs: a fresh
+//! artifact is pushed with [`Gateway::deploy`] to a live 2-worker
+//! *socket* fleet (real wire framing via [`spawn_local_fleet`]) and the
+//! same artifact is registered from a store by a direct single `Server`
+//! — the restart-loaded replica.  Both serve the same prompt stream; the
+//! FNV-folded logit digests must match bit-for-bit or `run_bench`
+//! refuses to produce a report at all.  `BENCH_registry.json` therefore
+//! can only ever record runs where live deployment is provably
+//! equivalent to a restart.
+
+use anyhow::{ensure, Context, Result};
+use std::rc::Rc;
+
+use crate::proto::TransportKind;
+use crate::serve::workload::{prompt_pool, prompt_pool_capacity, Zipf};
+use crate::serve::{EnginePreset, ServeConfig, Server};
+use crate::store::{fingerprint_bytes, side_artifact_synthetic, LocalDir, Storage};
+use crate::util::rng::Rng;
+
+use super::worker::launch_gateway;
+use super::{task_name, task_seed, GatewayConfig};
+
+/// Resident bytes each synthetic task charges against the registry
+/// budget (the artifact on disk is a few dozen bytes; the *declared*
+/// footprint is what the LRU arbitrates).
+pub const TASK_RESIDENT_BYTES: usize = 1 << 16;
+
+#[derive(Clone, Debug)]
+pub struct BenchRegistryOpts {
+    /// catalog size (the acceptance floor is 1000)
+    pub tasks: usize,
+    /// Zipf-sampled requests driven through the registry
+    pub requests: usize,
+    /// Zipf exponent (1.0 = classic rank-inverse popularity)
+    pub zipf_s: f64,
+    /// registry budget as a percent of catalog resident bytes; must stay
+    /// below 10 so the bench always measures churn, never full residency
+    pub budget_pct: usize,
+    pub seq: usize,
+    pub prompt_len: usize,
+    pub max_batch: usize,
+    /// distinct prompts served by BOTH legs of the deploy-parity gate
+    pub parity_requests: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for BenchRegistryOpts {
+    fn default() -> Self {
+        BenchRegistryOpts {
+            tasks: 1000,
+            requests: 3000,
+            zipf_s: 1.0,
+            budget_pct: 8,
+            seq: 32,
+            prompt_len: 12,
+            max_batch: 8,
+            parity_requests: 24,
+            seed: 0,
+            threads: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchRegistryReport {
+    pub opts: BenchRegistryOpts,
+    /// summed declared resident footprint of the whole catalog
+    pub catalog_bytes: u64,
+    pub budget_bytes: u64,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    /// cold side-network loads over the whole run (registration included)
+    pub swap_ins: u64,
+    pub swap_in_p50_ms: f64,
+    pub swap_in_p95_ms: f64,
+    /// share of requests answered by an already-resident side network
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub resident_tasks: usize,
+    /// content digest of the artifact the parity gate deployed
+    pub deploy_digest: u64,
+}
+
+impl BenchRegistryReport {
+    pub fn to_json(&self) -> String {
+        crate::benchkit::Json::new()
+            .provenance()
+            .str("bench", "registry")
+            .int("tasks", self.opts.tasks as u64)
+            .int("requests", self.opts.requests as u64)
+            .num("zipf_s", self.opts.zipf_s)
+            .int("budget_pct", self.opts.budget_pct as u64)
+            .int("catalog_bytes", self.catalog_bytes)
+            .int("budget_bytes", self.budget_bytes)
+            .int("seed", self.opts.seed)
+            .int("threads", self.opts.threads as u64)
+            .num("requests_per_sec", self.requests_per_sec)
+            .int("swap_ins", self.swap_ins)
+            .num("swap_in_p50_ms", self.swap_in_p50_ms)
+            .num("swap_in_p95_ms", self.swap_in_p95_ms)
+            .num("hit_rate", self.hit_rate)
+            .int("evictions", self.evictions)
+            .int("resident_bytes", self.resident_bytes)
+            .int("resident_tasks", self.resident_tasks as u64)
+            // run_bench refuses to return otherwise, so this is always 1
+            // when present — recorded so the JSON is self-auditing
+            .int("deploy_parity", 1)
+            .finish()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "registry bench: {} tasks ({} catalog) under {} budget ({}%) | {} req ({:.1} req/s) | hit {:.1}%, {} swap-ins (p50 {:.3} ms, p95 {:.3} ms), {} evictions | {} resident as {} task(s) | deploy parity ok ({:016x})",
+            self.opts.tasks,
+            crate::util::human_bytes(self.catalog_bytes as f64),
+            crate::util::human_bytes(self.budget_bytes as f64),
+            self.opts.budget_pct,
+            self.opts.requests,
+            self.requests_per_sec,
+            self.hit_rate * 100.0,
+            self.swap_ins,
+            self.swap_in_p50_ms,
+            self.swap_in_p95_ms,
+            self.evictions,
+            crate::util::human_bytes(self.resident_bytes as f64),
+            self.resident_tasks,
+            self.deploy_digest,
+        )
+    }
+}
+
+/// FNV-1a fold step over one 64-bit value.
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Digest a response set independent of completion order: fold (id,
+/// logit bits) sorted by request id.
+fn digest_responses(mut pairs: Vec<(u64, Vec<f32>)>) -> u64 {
+    pairs.sort_by_key(|(id, _)| *id);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (id, logits) in &pairs {
+        h = fnv(h, *id);
+        for &v in logits {
+            h = fnv(h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// The parity gate: deploy `artifact` live to a 2-worker socket fleet,
+/// register the same bytes from a store into a fresh single server (the
+/// restart path), serve the same prompts through both, and return the
+/// two digests plus the fleet-reported deploy digest.
+fn deploy_parity(opts: &BenchRegistryOpts, artifact: &[u8]) -> Result<(u64, u64, u64)> {
+    let cfg = GatewayConfig {
+        shards: 2,
+        queue_cap: 64,
+        serve: ServeConfig {
+            cache_bytes: 0, // cache is parity-invisible; keep the legs minimal
+            registry_bytes: 64 << 20,
+            max_batch: opts.max_batch,
+            prefix_block: 0,
+        },
+        preset: EnginePreset::Small,
+        backbone: crate::serve::BackboneKind::F32,
+        seed: opts.seed,
+        seq: opts.seq,
+        tasks: 1,
+        threads_per_shard: opts.threads,
+        trace: false,
+        heartbeat_ms: 0,
+        health_mult: crate::obs::health::DEFAULT_HEALTH_MULT,
+        series_ms: 0,
+        series_cap: crate::obs::series::SERIES_DEFAULT_CAP,
+    };
+    let mut rng = Rng::new(opts.seed.wrapping_add(0xDE91));
+    let vocab = cfg.preset.vocab();
+    let n = opts.parity_requests.max(1).min(prompt_pool_capacity(opts.prompt_len, vocab));
+    let prompts = prompt_pool(&mut rng, n, opts.prompt_len, vocab);
+
+    // leg 1: live Deploy into a running socket fleet
+    let (mut gw, joins) = launch_gateway(&cfg, TransportKind::Socket)?;
+    let deployed_digest = gw.deploy("deployed", artifact).context("fleet-wide deploy")?;
+    let mut fleet_pairs = Vec::with_capacity(prompts.len());
+    for p in &prompts {
+        gw.submit("deployed", p).map_err(anyhow::Error::from)?;
+    }
+    for gr in gw.flush()? {
+        fleet_pairs.push((gr.resp.id, gr.resp.logits.clone()));
+    }
+    ensure!(fleet_pairs.len() == prompts.len(), "parity fleet lost responses");
+    let (_report, leftover) = gw.shutdown()?;
+    ensure!(leftover.is_empty(), "parity fleet left responses behind");
+    for j in joins {
+        let _ = j.join();
+    }
+
+    // leg 2: the restart path — a fresh server loads the same bytes
+    // through the content-addressed store
+    let mut engine = cfg.preset.build_backbone(cfg.seed, cfg.seq, cfg.backbone);
+    engine.set_threads(opts.threads);
+    let mut server = Server::new(engine, cfg.serve);
+    let store = Rc::new(crate::store::Mem::new());
+    let id = store.put(artifact)?;
+    server.registry.attach_store(store);
+    server.registry.register_store("deployed", id)?;
+    let mut direct_pairs = Vec::with_capacity(prompts.len());
+    for p in &prompts {
+        server.submit("deployed", p)?;
+    }
+    for r in server.drain()? {
+        direct_pairs.push((r.id, r.logits));
+    }
+    ensure!(direct_pairs.len() == prompts.len(), "parity server lost responses");
+    Ok((digest_responses(fleet_pairs), digest_responses(direct_pairs), deployed_digest))
+}
+
+pub fn run_bench(opts: &BenchRegistryOpts) -> Result<BenchRegistryReport> {
+    ensure!(opts.tasks >= 1 && opts.requests >= 1, "need at least one task and one request");
+    ensure!(
+        opts.budget_pct >= 1 && opts.budget_pct < 10,
+        "--budget-pct must be in 1..10: the bench exists to measure the registry churning \
+         well under full catalog residency"
+    );
+    ensure!(opts.prompt_len <= opts.seq, "prompt_len must be <= seq");
+
+    // ---- parity gate first: nothing is measured, let alone serialized,
+    // unless a live-Deployed task serves bit-identically to a
+    // restart-loaded replica across a real socket fleet ----
+    let deployed = side_artifact_synthetic(task_seed(opts.seed, opts.tasks + 1), 1 << 14);
+    let (fleet_digest, direct_digest, deploy_digest) = deploy_parity(opts, &deployed)?;
+    ensure!(
+        fleet_digest == direct_digest,
+        "live-Deployed task diverged from the restart-loaded replica \
+         ({fleet_digest:016x} != {direct_digest:016x}) — refusing to serialize"
+    );
+    ensure!(
+        deploy_digest == fingerprint_bytes(&deployed),
+        "fleet acked a different artifact digest than the one deployed"
+    );
+
+    // ---- churn leg: catalog in a real file-backed store ----
+    let scratch = std::env::temp_dir()
+        .join(format!("qst-bench-registry-{}-{:x}", std::process::id(), opts.seed));
+    let store = Rc::new(LocalDir::new(&scratch)?);
+    let mut ids = Vec::with_capacity(opts.tasks);
+    for i in 0..opts.tasks {
+        let art = side_artifact_synthetic(task_seed(opts.seed, i), TASK_RESIDENT_BYTES as u64);
+        ids.push(store.put(&art)?);
+    }
+    let catalog_bytes = (opts.tasks * TASK_RESIDENT_BYTES) as u64;
+    let budget_bytes = catalog_bytes * opts.budget_pct as u64 / 100;
+
+    let preset = EnginePreset::Small;
+    let mut engine = preset.build_backbone(opts.seed, opts.seq, crate::serve::BackboneKind::F32);
+    engine.set_threads(opts.threads);
+    let vocab = engine.vocab;
+    let mut server = Server::new(
+        engine,
+        ServeConfig {
+            // hidden-state cache off: requests must reach the registry,
+            // otherwise prompt reuse would mask the swap-in story
+            cache_bytes: 0,
+            registry_bytes: budget_bytes as usize,
+            max_batch: opts.max_batch,
+            prefix_block: 0,
+        },
+    );
+    server.registry.attach_store(store);
+    for (i, &id) in ids.iter().enumerate() {
+        server
+            .registry
+            .register_store(&task_name(i), id)
+            .with_context(|| format!("registering catalog task {i}"))?;
+    }
+    let registration_loads = server.registry.loads;
+
+    let mut zipf = Zipf::new(opts.tasks, opts.zipf_s, opts.seed.wrapping_add(0x21BF));
+    let mut rng = Rng::new(opts.seed.wrapping_add(0x7A11));
+    let pool_n = 16.min(prompt_pool_capacity(opts.prompt_len, vocab));
+    let prompts = prompt_pool(&mut rng, pool_n, opts.prompt_len, vocab);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    while submitted < opts.requests {
+        let burst = opts.max_batch.min(opts.requests - submitted);
+        for _ in 0..burst {
+            let task = task_name(zipf.sample());
+            let prompt = &prompts[rng.below(prompts.len())];
+            server.submit(&task, prompt)?;
+            submitted += 1;
+        }
+        completed += server.drain()?.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ensure!(completed == opts.requests, "completed {completed} of {} requests", opts.requests);
+
+    let cold = server.registry.loads - registration_loads;
+    let hit_rate = 1.0 - cold as f64 / opts.requests as f64;
+    let report = BenchRegistryReport {
+        opts: opts.clone(),
+        catalog_bytes,
+        budget_bytes,
+        wall_secs: wall,
+        requests_per_sec: opts.requests as f64 / wall.max(1e-12),
+        swap_ins: server.registry.swap_hist.count(),
+        swap_in_p50_ms: server.registry.swap_hist.p50_secs() * 1e3,
+        swap_in_p95_ms: server.registry.swap_hist.p95_secs() * 1e3,
+        hit_rate,
+        evictions: server.registry.evictions,
+        resident_bytes: server.registry.bytes() as u64,
+        resident_tasks: server.registry.resident_count(),
+        deploy_digest,
+    };
+    let _ = std::fs::remove_dir_all(&scratch);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchRegistryOpts {
+        BenchRegistryOpts {
+            tasks: 40,
+            requests: 120,
+            zipf_s: 1.0,
+            budget_pct: 8,
+            seq: 16,
+            prompt_len: 8,
+            max_batch: 4,
+            parity_requests: 4,
+            seed: 3,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn churn_bench_measures_evictions_and_holds_budget() {
+        let rep = run_bench(&tiny()).unwrap();
+        // 8% of a 40-task catalog keeps ~3 tasks resident: the Zipf tail
+        // must thrash
+        assert!(rep.evictions > 0, "no evictions — the budget never bit");
+        assert!(rep.swap_ins >= rep.opts.tasks as u64, "every registration is a cold load");
+        assert!(rep.resident_bytes <= rep.budget_bytes, "residency exceeded the budget");
+        assert!((0.0..=1.0).contains(&rep.hit_rate), "hit rate {} out of range", rep.hit_rate);
+        assert!(rep.hit_rate > 0.0, "a Zipf head this hot must rehit resident tasks");
+        assert!(rep.swap_in_p95_ms >= rep.swap_in_p50_ms);
+        assert_ne!(rep.deploy_digest, 0);
+    }
+
+    #[test]
+    fn json_report_is_wellformed_and_parity_stamped() {
+        let rep = run_bench(&tiny()).unwrap();
+        let j = rep.to_json();
+        assert!(j.contains("\"bench\": \"registry\""));
+        assert!(j.contains("\"tasks\": 40"));
+        assert!(j.contains("\"deploy_parity\": 1"));
+        assert!(j.contains("\"swap_in_p50_ms\""));
+        assert!(j.contains("\"swap_in_p95_ms\""));
+        assert!(j.contains("\"hit_rate\""));
+        assert!(j.contains("\"evictions\""));
+        assert!(j.contains("\"resident_bytes\""));
+        assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn over_budget_pct_is_rejected() {
+        let mut o = tiny();
+        o.budget_pct = 10;
+        assert!(run_bench(&o).is_err(), "budget >= 10% of catalog must be refused");
+        o.budget_pct = 0;
+        assert!(run_bench(&o).is_err());
+    }
+
+    #[test]
+    fn response_digest_is_order_independent() {
+        let a = vec![(0u64, vec![1.0f32, 2.0]), (1, vec![3.0])];
+        let b = vec![(1u64, vec![3.0f32]), (0, vec![1.0, 2.0])];
+        assert_eq!(digest_responses(a.clone()), digest_responses(b));
+        let c = vec![(0u64, vec![1.0f32, 2.5]), (1, vec![3.0])];
+        assert_ne!(digest_responses(a), digest_responses(c));
+    }
+}

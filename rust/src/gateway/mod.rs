@@ -17,7 +17,7 @@
 //!   [shard 0] [shard 1] … [shard N-1]
 //!      each: thread/process-owned Server<SyntheticEngine>
 //!            queue → prefix-aware cache → backbone/resume → side nets
-//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report / Telemetry / Heartbeat
+//!         │ ShardEvent::Done / Dropped / Rejected / FlushAck / Report / Telemetry / Heartbeat / DeployAck
 //!         ▼
 //!   [event stream] ──▶ try_collect() / flush() ──▶ responses
 //!   [aggregator]   ──▶ report(): merged stats + summed cache counters
@@ -45,6 +45,7 @@
 //!   (`BENCH_gateway.json`).
 
 pub mod bench;
+pub mod bench_registry;
 pub mod router;
 pub mod shard;
 pub mod transport;
@@ -343,6 +344,10 @@ impl Gateway {
                     cache_bytes: hb.cache_bytes,
                 },
             ),
+            // a stray ack means an earlier deploy barrier gave up on this
+            // shard (or a different task's ack raced past); the shard did
+            // register the task, so the ack is safe to drop
+            ShardEvent::DeployAck { .. } => {}
         }
     }
 
@@ -400,6 +405,55 @@ impl Gateway {
             }
         }
         Ok(())
+    }
+
+    /// Push a task artifact to every live shard and hot-register it
+    /// fleet-wide, without restarting anything.  Blocks until every
+    /// reached shard acks its `Deploy`; the acks must all be error-free
+    /// and agree on the artifact's content digest, which is returned.
+    /// On success the task joins the gateway's advertised set, so
+    /// `submit` accepts it immediately.  Data responses that complete
+    /// while acks are in transit are stashed for the next
+    /// `try_collect`/`flush` — never dropped, even on failure.
+    pub fn deploy(&mut self, task: &str, artifact: &[u8]) -> Result<u64> {
+        let expected = self.transport.start_deploy(task, artifact);
+        if expected == 0 {
+            bail!("no live shards to deploy '{task}' to");
+        }
+        let mut stashed = Vec::new();
+        let res = self.deploy_inner(task, expected, &mut stashed);
+        self.stash.append(&mut stashed);
+        let digest = res?;
+        if !self.tasks.iter().any(|t| t == task) {
+            self.tasks.push(task.to_string());
+        }
+        Ok(digest)
+    }
+
+    fn deploy_inner(
+        &mut self,
+        task: &str,
+        expected: usize,
+        stashed: &mut Vec<GatewayResponse>,
+    ) -> Result<u64> {
+        let mut digests = Vec::with_capacity(expected);
+        while digests.len() < expected {
+            match self.transport.recv() {
+                Ok(ShardEvent::DeployAck { shard, task: t, digest, err }) if t == task => {
+                    if !err.is_empty() {
+                        bail!("shard {shard} failed to deploy '{task}': {err}");
+                    }
+                    digests.push(digest);
+                }
+                Ok(ev) => self.absorb(ev, stashed),
+                Err(e) => bail!("a gateway shard died mid-deploy: {e:#}"),
+            }
+        }
+        let first = digests[0];
+        if digests.iter().any(|&d| d != first) {
+            bail!("deploy of '{task}' diverged: shards report different artifact digests");
+        }
+        Ok(first)
     }
 
     /// Snapshot every shard and merge into the fleet-wide report.  Data
@@ -602,6 +656,9 @@ mod tests {
         fn start_report(&mut self) -> usize {
             self.report_live
         }
+        fn start_deploy(&mut self, _task: &str, _artifact: &[u8]) -> usize {
+            0
+        }
         fn shutdown(&mut self) -> Result<()> {
             Ok(())
         }
@@ -693,6 +750,29 @@ mod tests {
         assert_eq!(got.len(), 1);
         let (report, _) = gw.shutdown().unwrap();
         assert_eq!(report.merged.requests, 1);
+    }
+
+    #[test]
+    fn deploy_registers_fleet_wide_and_serves() {
+        let mut gw = Gateway::launch(&cfg(2, 4)).unwrap();
+        assert!(matches!(gw.submit("deployed", &[1]), Err(SubmitError::Invalid(_))));
+        let artifact = crate::store::side_artifact_synthetic(1234, 1 << 12);
+        let digest = gw.deploy("deployed", &artifact).unwrap();
+        assert_eq!(digest, crate::store::fingerprint_bytes(&artifact));
+        // both shards now serve the task; spread prompts across the router
+        for i in 0..6i32 {
+            gw.submit("deployed", &[i + 1, 2 * i]).unwrap();
+        }
+        let got = gw.flush().unwrap();
+        assert_eq!(got.len(), 6);
+        // deploying identical bytes again is idempotent — same digest
+        assert_eq!(gw.deploy("deployed", &artifact).unwrap(), digest);
+        // junk bytes fail with a typed error and the fleet keeps serving
+        assert!(gw.deploy("junk", b"not an artifact").is_err());
+        gw.submit("deployed", &[9]).unwrap();
+        assert_eq!(gw.flush().unwrap().len(), 1);
+        let (report, _) = gw.shutdown().unwrap();
+        assert_eq!(report.merged.requests, 7);
     }
 
     #[test]

@@ -66,6 +66,10 @@ pub struct GatewayReport {
     /// spans lost to recorder ring overwrites, summed across shards
     /// (from the report tail each worker fills in)
     pub spans_dropped: u64,
+    /// side networks evicted under the registry budget, summed fleet-wide
+    pub registry_evictions: u64,
+    /// cold side-network load (swap-in) latency, merged across shards
+    pub swap_hist: crate::obs::LogHistogram,
 }
 
 impl GatewayReport {
@@ -148,6 +152,8 @@ pub fn aggregate(mut reports: Vec<ShardReport>) -> GatewayReport {
         g.cache_bytes += r.cache_bytes;
         g.registry_bytes += r.registry_bytes;
         g.spans_dropped += r.spans_dropped;
+        g.registry_evictions += r.registry_evictions;
+        g.swap_hist.merge(&r.swap_hist);
     }
     g.shards = reports;
     g
@@ -217,6 +223,8 @@ mod tests {
             r.cache_hits = hits;
             r.cache_misses = 10 - hits;
             r.backbone_resident_bytes = 100;
+            r.registry_evictions = hits;
+            r.swap_hist.record(0.01);
             r
         };
         let g = aggregate(vec![mk(1, 4), mk(0, 6)]);
@@ -225,6 +233,8 @@ mod tests {
         assert_eq!(g.cache_misses, 10);
         assert!((g.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(g.backbone_resident_bytes, 200);
+        assert_eq!(g.registry_evictions, 10);
+        assert_eq!(g.swap_hist.count(), 2, "swap-in histograms merge fleet-wide");
         assert_eq!(GatewayReport::default().hit_rate(), 0.0);
         assert_eq!(GatewayReport::default().prefix_hit_rate(), 0.0);
     }

@@ -31,6 +31,7 @@
 //! tests/bench to delimit comparisons.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -42,6 +43,7 @@ use crate::proto::{
     SubmitError, TelemetryBatch,
 };
 use crate::serve::{Server, SyntheticEngine};
+use crate::store::Storage;
 
 /// A periodic emission schedule (the heartbeat cadence).
 struct Cadence {
@@ -71,6 +73,10 @@ pub struct ShardCore {
     /// spans dropped by this process's recorder, accumulated from
     /// telemetry drains — shipped in heartbeats and the report tail
     spans_dropped: u64,
+    /// the shard-local artifact store `Deploy`ed bytes land in (workers
+    /// have no shared disk, so deployed artifacts live in memory); the
+    /// registry holds a clone and streams sections out of it on swap-in
+    store: Rc<crate::store::Mem>,
 }
 
 impl ShardCore {
@@ -79,6 +85,8 @@ impl ShardCore {
         let mut engine = spec.preset.build_backbone(spec.seed, spec.seq, spec.backbone);
         engine.set_threads(spec.threads);
         let mut server = Server::new(engine, spec.serve);
+        let store = Rc::new(crate::store::Mem::new());
+        server.registry.attach_store(store.clone());
         for i in 0..spec.tasks.max(1) {
             server.registry.register_synthetic(
                 &super::task_name(i),
@@ -101,6 +109,7 @@ impl ShardCore {
             beat,
             series,
             spans_dropped: 0,
+            store,
         })
     }
 
@@ -162,6 +171,22 @@ impl ShardCore {
             // dropped requests leave stale id entries behind; an empty
             // pool has no live ids, so clearing here bounds the map
             self.id_map.clear();
+        }
+    }
+
+    /// Land a `Deploy`ed artifact: store the bytes under their content
+    /// fingerprint and hot-register the task through the store source.
+    /// Never panics — a malformed artifact comes back as the ack's `err`
+    /// and the shard keeps serving its existing tasks.
+    fn deploy(&mut self, task: &str, artifact: &[u8]) -> (u64, String) {
+        let digest = crate::store::fingerprint_bytes(artifact);
+        let res = self
+            .store
+            .put(artifact)
+            .and_then(|id| self.server.registry.register_store(task, id));
+        match res {
+            Ok(()) => (digest, String::new()),
+            Err(e) => (digest, format!("{e:#}")),
         }
     }
 
@@ -241,6 +266,8 @@ impl ShardCore {
             inflight_slots: server.pending() as u64,
             spans_dropped: self.spans_dropped,
             series: self.series.as_ref().map(GaugeSeries::snapshot).unwrap_or_default(),
+            registry_evictions: server.registry.evictions,
+            swap_hist: server.registry.swap_hist.clone(),
         }
     }
 }
@@ -338,6 +365,17 @@ pub fn run_core_loop(
             // a due gauge sample belongs in the snapshot being shipped
             core.tick(emit);
             emit(ShardEvent::Report(core.report()));
+            continue 'serve;
+        }
+        if matches!(parked, Some(ShardMsg::Deploy { .. })) {
+            // like Report, a Deploy acts immediately: registering a task
+            // touches only the registry, so in-flight requests for other
+            // tasks are unaffected and the ack never waits out the pool
+            let Some(ShardMsg::Deploy { task, artifact }) = parked.take() else {
+                unreachable!("matched Deploy above")
+            };
+            let (digest, err) = core.deploy(&task, &artifact);
+            emit(ShardEvent::DeployAck { shard: core.index, task, digest, err });
             continue 'serve;
         }
         if matches!(parked, Some(ShardMsg::Configure { .. })) {
@@ -558,6 +596,50 @@ mod tests {
             }
         }
         assert!(saw_backpressure, "a 1-slot inbox must reject under load");
+        shard.stop();
+    }
+
+    #[test]
+    fn deploy_hot_registers_a_new_task_without_restart() {
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel();
+        let mut shard = ShardHandle::spawn(0, tiny_spec(), 16, ev_tx);
+        // before the deploy the task does not exist on this shard
+        shard.try_submit(Request { id: 1, task: "hot".into(), tokens: vec![1, 2] }).unwrap();
+        assert!(shard.send(ShardMsg::Flush));
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::Rejected { id: 1, .. }));
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::FlushAck { .. }));
+        // deploy an artifact; the ack carries its content fingerprint
+        let artifact = crate::store::side_artifact_synthetic(99, 1 << 12);
+        assert!(shard.send(ShardMsg::Deploy { task: "hot".into(), artifact: artifact.clone() }));
+        match ev_rx.recv().unwrap() {
+            ShardEvent::DeployAck { shard: s, task, digest, err } => {
+                assert_eq!(s, 0);
+                assert_eq!(task, "hot");
+                assert_eq!(digest, crate::store::fingerprint_bytes(&artifact));
+                assert!(err.is_empty(), "deploy failed: {err}");
+            }
+            other => panic!("expected DeployAck, got {other:?}"),
+        }
+        // the same request now serves
+        shard.try_submit(Request { id: 2, task: "hot".into(), tokens: vec![1, 2] }).unwrap();
+        assert!(shard.send(ShardMsg::Flush));
+        let ShardEvent::Done(gr) = ev_rx.recv().unwrap() else { panic!("expected Done") };
+        assert_eq!(gr.resp.id, 2);
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::FlushAck { .. }));
+        // a malformed artifact is a typed ack error, not a dead shard
+        assert!(shard.send(ShardMsg::Deploy { task: "bad".into(), artifact: vec![1, 2, 3] }));
+        match ev_rx.recv().unwrap() {
+            ShardEvent::DeployAck { task, err, .. } => {
+                assert_eq!(task, "bad");
+                assert!(!err.is_empty(), "junk bytes must fail registration");
+            }
+            other => panic!("expected DeployAck, got {other:?}"),
+        }
+        // and the shard still serves afterwards
+        shard.try_submit(Request { id: 3, task: "hot".into(), tokens: vec![4] }).unwrap();
+        assert!(shard.send(ShardMsg::Flush));
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::Done(_)));
+        assert!(matches!(ev_rx.recv().unwrap(), ShardEvent::FlushAck { .. }));
         shard.stop();
     }
 

@@ -95,6 +95,15 @@ impl Transport for InProc {
         self.shards.iter().filter(|s| s.send(ShardMsg::Report)).count()
     }
 
+    fn start_deploy(&mut self, task: &str, artifact: &[u8]) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| {
+                s.send(ShardMsg::Deploy { task: task.to_string(), artifact: artifact.to_vec() })
+            })
+            .count()
+    }
+
     fn shutdown(&mut self) -> Result<()> {
         for s in &mut self.shards {
             s.stop();

@@ -33,6 +33,10 @@
 //!   per-thread span recorder (Chrome trace export), exactly-mergeable
 //!   latency histograms, Prometheus-style `STATS` exposition — always
 //!   compiled, runtime-toggled, parity-safe
+//! * [`store`]      — content-addressed task-artifact store behind a
+//!   [`store::Storage`] trait (local dir + in-memory backends), sectioned
+//!   artifacts with index headers for streaming partial reads; feeds the
+//!   registry's `Source::Store` and the fleet `Deploy` path
 //! * [`cli`], [`benchkit`], [`util`] — in-repo substrates (no external deps)
 
 pub mod benchkit;
@@ -49,6 +53,7 @@ pub mod proto;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod util;
 

@@ -159,6 +159,7 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-serve" => cmd_bench_serve(&args),
         "bench-gateway" => cmd_bench_gateway(&args),
         "bench-kernels" => cmd_bench_kernels(&args),
+        "bench-registry" => cmd_bench_registry(&args),
         other => {
             eprintln!("error: unknown command '{other}'\n");
             eprint!("{USAGE}");
@@ -261,6 +262,8 @@ fn serve_loop<E: Engine>(server: &mut Server<E>) -> Result<()> {
                     cache_entries: server.cache.len(),
                     cache_bytes: server.cache.bytes(),
                     registry_bytes: server.registry.bytes(),
+                    registry_evictions: server.registry.evictions,
+                    swap_hist: server.registry.swap_hist.clone(),
                     queue_depth: pending,
                     ..Default::default()
                 };
@@ -566,6 +569,29 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     std::fs::write(&json_path, report.to_json())
         .with_context(|| format!("writing {json_path}"))?;
     println!("wrote {json_path}");
+    Ok(())
+}
+
+fn cmd_bench_registry(args: &Args) -> Result<()> {
+    let opts = qst::gateway::bench_registry::BenchRegistryOpts {
+        tasks: args.usize_or("tasks", 1000)?.max(1),
+        requests: args.usize_or("requests", 3000)?,
+        zipf_s: args.f32_or("zipf-s", 1.0)? as f64,
+        budget_pct: args.usize_or("budget-pct", 8)?,
+        seq: args.usize_or("seq", 32)?,
+        prompt_len: args.usize_or("prompt-len", 12)?,
+        max_batch: args.usize_or("batch", 8)?,
+        parity_requests: args.usize_or("parity-requests", 24)?,
+        seed: args.u64_or("seed", 0)?,
+        threads: args.usize_or("threads", 1)?,
+    };
+    let report = qst::gateway::bench_registry::run_bench(&opts)?;
+    println!("{}", report.summary());
+    let json_path = args.str_or("json", "BENCH_registry.json");
+    std::fs::write(&json_path, report.to_json())
+        .with_context(|| format!("writing {json_path}"))?;
+    println!("wrote {json_path}");
+    qst::kernels::shutdown_pool();
     Ok(())
 }
 

@@ -90,6 +90,18 @@ pub fn render(report: &GatewayReport, gw: &GatewayGauges, health: Option<&FleetH
     gauge(&mut out, "qst_registry_bytes", "resident side-network registry bytes (fleet sum)", report.registry_bytes as u64);
     gauge(
         &mut out,
+        "qst_registry_resident_bytes",
+        "resident side-network registry bytes (fleet sum; alias of qst_registry_bytes)",
+        report.registry_bytes as u64,
+    );
+    counter(
+        &mut out,
+        "qst_registry_evictions_total",
+        "side networks evicted under the registry byte budget (fleet sum)",
+        report.registry_evictions,
+    );
+    gauge(
+        &mut out,
         "qst_backbone_resident_bytes",
         "resident backbone bytes (one replica per shard)",
         report.backbone_resident_bytes as u64,
@@ -166,6 +178,12 @@ pub fn render(report: &GatewayReport, gw: &GatewayGauges, health: Option<&FleetH
         "request latency (queue + compute), merged exactly across shards",
         &m.hist,
     );
+    histogram(
+        &mut out,
+        "qst_swap_in_seconds",
+        "cold side-network load (registry swap-in) latency, merged exactly across shards",
+        &report.swap_hist,
+    );
     // queue-wait distribution: the merged qlat reservoir re-bucketed at
     // render time.  Reservoir-sampled past LAT_CAP per shard (unlike the
     // exact latency histogram), which the HELP text declares.
@@ -225,6 +243,9 @@ mod tests {
         b.stats.requests = 4;
         b.stats.hist.record(0.040);
         b.full_soaks = 5;
+        b.registry_evictions = 2;
+        b.registry_bytes = 4096;
+        b.swap_hist.record(0.005);
         aggregate(vec![a, b])
     }
 
@@ -252,6 +273,11 @@ mod tests {
         assert!(text.contains("qst_task_swap_ins_total{task=\"task0\"} 1"));
         assert!(text.contains("# TYPE qst_queue_wait_seconds histogram"));
         assert!(text.contains("qst_queue_wait_seconds_count 2"));
+        // registry churn: evictions counter, residency gauge, swap-in histogram
+        assert!(text.contains("qst_registry_evictions_total 2"));
+        assert!(text.contains("qst_registry_resident_bytes 4096"));
+        assert!(text.contains("# TYPE qst_swap_in_seconds histogram"));
+        assert!(text.contains("qst_swap_in_seconds_count 1"));
         // no registry passed: the health gauges stay absent
         assert!(!text.contains("qst_worker_up"));
         assert!(!text.contains("qst_heartbeat_age_seconds"));

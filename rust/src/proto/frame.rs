@@ -6,7 +6,7 @@
 //!   offset  size  field
 //!   0       4     magic  "QSTW"
 //!   4       2     protocol version (u16 LE) — this build speaks VERSION
-//!   6       1     message tag (request tags 1–5, event tags 16–22)
+//!   6       1     message tag (request tags 1–6, event tags 16–23)
 //!   7       4     payload length (u32 LE), capped at MAX_PAYLOAD
 //!   11      n     payload (message-specific, see [`super::wire`])
 //! ```
@@ -45,7 +45,7 @@ use crate::serve::{Response, StatsSnapshot, TaskStat};
 use super::wire::{Dec, DecodeError, Enc};
 use super::{
     GatewayResponse, Heartbeat, Request, ShardEvent, ShardMsg, ShardReport, ShardSpec,
-    TelemetryBatch,
+    TelemetryBatch, MAX_DEPLOY_ARTIFACT,
 };
 
 /// Frame magic: the first four bytes of every frame.
@@ -64,6 +64,7 @@ const TAG_SUBMIT: u8 = 2;
 const TAG_FLUSH: u8 = 3;
 const TAG_REPORT: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_DEPLOY: u8 = 6;
 // Shard → gateway event tags.
 const TAG_DONE: u8 = 16;
 const TAG_DROPPED: u8 = 17;
@@ -72,6 +73,7 @@ const TAG_FLUSH_ACK: u8 = 19;
 const TAG_REPORT_REPLY: u8 = 20;
 const TAG_TELEMETRY: u8 = 21;
 const TAG_HEARTBEAT: u8 = 22;
+const TAG_DEPLOY_ACK: u8 = 23;
 
 /// Inner schema version of the `Telemetry` payload — the span layout can
 /// evolve without bumping the whole protocol.  A mismatch is a typed
@@ -301,6 +303,15 @@ fn enc_report(e: &mut Enc, r: &ShardReport) {
         e.u64(p.registry_bytes);
         e.u64(p.requests);
     }
+    // registry-churn tail (fourth tail block): eviction counter and the
+    // swap-in latency histogram, same trimmed-bucket wire shape as the
+    // request-latency histogram above
+    e.u64(r.registry_evictions);
+    e.u64(r.swap_hist.count());
+    e.f64(r.swap_hist.sum());
+    e.f64(r.swap_hist.min());
+    e.f64(r.swap_hist.max());
+    e.vec_u64(&r.swap_hist.counts()[..r.swap_hist.trimmed_len()]);
 }
 
 /// Minimum encoded bytes per task-ledger entry (empty name: u32 length
@@ -330,6 +341,8 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
         inflight_slots: 0,
         spans_dropped: 0,
         series: Vec::new(),
+        registry_evictions: 0,
+        swap_hist: LogHistogram::default(),
     };
     // a frame from before the tail fields existed ends here
     if d.remaining() > 0 {
@@ -388,6 +401,22 @@ fn dec_report(d: &mut Dec) -> Result<ShardReport, DecodeError> {
                     });
                 }
                 r.series = series;
+                // a frame from before the registry-churn tail ends here
+                if d.remaining() > 0 {
+                    r.registry_evictions = d.u64("report registry_evictions")?;
+                    let count = d.u64("report swap hist count")?;
+                    let sum = d.f64("report swap hist sum")?;
+                    let min = d.f64("report swap hist min")?;
+                    let max = d.f64("report swap hist max")?;
+                    let counts = d.vec_u64("report swap hist buckets")?;
+                    if counts.len() > HIST_BUCKETS {
+                        return Err(DecodeError::Malformed(format!(
+                            "swap histogram has {} buckets (this build has {HIST_BUCKETS})",
+                            counts.len()
+                        )));
+                    }
+                    r.swap_hist = LogHistogram::from_parts(counts, count, sum, min, max);
+                }
             }
         }
     }
@@ -401,6 +430,7 @@ fn msg_tag(m: &ShardMsg) -> u8 {
         ShardMsg::Flush => TAG_FLUSH,
         ShardMsg::Report => TAG_REPORT,
         ShardMsg::Shutdown => TAG_SHUTDOWN,
+        ShardMsg::Deploy { .. } => TAG_DEPLOY,
     }
 }
 
@@ -414,6 +444,11 @@ pub fn encode_msg(m: &ShardMsg) -> Vec<u8> {
         }
         ShardMsg::Submit(r) => enc_request(&mut e, r),
         ShardMsg::Flush | ShardMsg::Report | ShardMsg::Shutdown => {}
+        ShardMsg::Deploy { task, artifact } => {
+            e.str_(task);
+            e.u32(artifact.len() as u32);
+            e.raw(artifact);
+        }
     }
     seal_frame(e)
 }
@@ -427,6 +462,17 @@ pub fn decode_msg_payload(tag: u8, payload: &[u8]) -> Result<ShardMsg, DecodeErr
         TAG_FLUSH => ShardMsg::Flush,
         TAG_REPORT => ShardMsg::Report,
         TAG_SHUTDOWN => ShardMsg::Shutdown,
+        TAG_DEPLOY => {
+            let task = d.str_("deploy task")?;
+            let len = d.u32("deploy artifact length")? as usize;
+            // the artifact cap is tighter than MAX_PAYLOAD: reject an
+            // over-cap declared length before any allocation happens
+            if len > MAX_DEPLOY_ARTIFACT {
+                return Err(DecodeError::Oversize { len, max: MAX_DEPLOY_ARTIFACT });
+            }
+            let artifact = d.bytes_(len, "deploy artifact")?;
+            ShardMsg::Deploy { task, artifact }
+        }
         other => return Err(DecodeError::BadTag(other)),
     };
     d.finish("message payload")?;
@@ -448,6 +494,7 @@ fn event_tag(ev: &ShardEvent) -> u8 {
         ShardEvent::Report(_) => TAG_REPORT_REPLY,
         ShardEvent::Telemetry(_) => TAG_TELEMETRY,
         ShardEvent::Heartbeat(_) => TAG_HEARTBEAT,
+        ShardEvent::DeployAck { .. } => TAG_DEPLOY_ACK,
     }
 }
 
@@ -489,6 +536,12 @@ pub fn encode_event(ev: &ShardEvent) -> Vec<u8> {
             e.u64(hb.inflight_slots);
             e.u64(hb.spans_dropped);
             e.u64(hb.cache_bytes);
+        }
+        ShardEvent::DeployAck { shard, task, digest, err } => {
+            e.u64(*shard as u64);
+            e.str_(task);
+            e.u64(*digest);
+            e.str_(err);
         }
     }
     seal_frame(e)
@@ -548,6 +601,12 @@ pub fn decode_event_payload(tag: u8, payload: &[u8]) -> Result<ShardEvent, Decod
             spans_dropped: d.u64("heartbeat spans_dropped")?,
             cache_bytes: d.u64("heartbeat cache_bytes")?,
         }),
+        TAG_DEPLOY_ACK => ShardEvent::DeployAck {
+            shard: d.usize_("deploy-ack shard")?,
+            task: d.str_("deploy-ack task")?,
+            digest: d.u64("deploy-ack digest")?,
+            err: d.str_("deploy-ack err")?,
+        },
         other => return Err(DecodeError::BadTag(other)),
     };
     d.finish("event payload")?;
@@ -639,6 +698,8 @@ mod tests {
             ShardMsg::Flush,
             ShardMsg::Report,
             ShardMsg::Shutdown,
+            ShardMsg::Deploy { task: "hot-task".into(), artifact: vec![0xAB; 257] },
+            ShardMsg::Deploy { task: "empty".into(), artifact: Vec::new() },
         ];
         for m in msgs {
             let bytes = encode_msg(&m);
@@ -690,8 +751,13 @@ mod tests {
                     registry_bytes: 1 << 12,
                     requests: 11,
                 }];
+                r.registry_evictions = 6;
+                r.swap_hist.record(0.004);
+                r.swap_hist.record(0.12);
                 r
             }),
+            ShardEvent::DeployAck { shard: 1, task: "hot-task".into(), digest: 0xDEAD_BEEF, err: String::new() },
+            ShardEvent::DeployAck { shard: 0, task: "t".into(), digest: 0, err: "store full".into() },
             ShardEvent::Heartbeat(Heartbeat {
                 shard: 4,
                 queue_depth: 12,
@@ -810,6 +876,8 @@ mod tests {
         assert_eq!(r.spans_dropped, 0);
         assert!(r.stats.tasks.is_empty());
         assert!(r.series.is_empty());
+        assert_eq!(r.registry_evictions, 0, "absent churn tail must decode as zero");
+        assert_eq!(r.swap_hist.count(), 0);
 
         let mut e = new_frame(TAG_CONFIGURE);
         e.u64(0); // shard
@@ -862,15 +930,39 @@ mod tests {
         // re-encoding with a poisoned count instead of byte surgery
         let mut e = new_frame(TAG_REPORT_REPLY);
         let payload = &good[HEADER_LEN..];
-        // everything up to the health tail: spans_dropped sits 8 bytes
-        // before the task-count u32, which is 8 bytes from the end minus
-        // the empty series count (4) and empty task count (4)
-        let head = &payload[..payload.len() - 8];
+        // everything up to the health tail: the empty task count (4) and
+        // series count (4) sit just before the 44-byte registry-churn
+        // tail (evictions u64 + empty swap histogram: 4×8 + count u32)
+        let head = &payload[..payload.len() - 8 - 44];
         e.raw(head);
         e.u32(u32::MAX); // task count with no bytes behind it
         e.u32(0);
         assert!(matches!(
             decode_event(&seal_frame(e)).unwrap_err(),
+            DecodeError::Truncated { .. }
+        ));
+    }
+
+    #[test]
+    fn deploy_artifact_cap_is_enforced_before_allocation() {
+        // hand-craft a Deploy whose declared artifact length is over the
+        // 16 MiB cap while the frame itself is tiny: the decoder must
+        // return Oversize from the length field alone, never allocate
+        let mut e = new_frame(TAG_DEPLOY);
+        e.str_("task0");
+        e.u32((MAX_DEPLOY_ARTIFACT + 1) as u32);
+        assert_eq!(
+            decode_msg(&seal_frame(e)).unwrap_err(),
+            DecodeError::Oversize { len: MAX_DEPLOY_ARTIFACT + 1, max: MAX_DEPLOY_ARTIFACT }
+        );
+        // an in-cap declared length with fewer bytes behind it is a
+        // typed truncation, also before allocation
+        let mut e = new_frame(TAG_DEPLOY);
+        e.str_("task0");
+        e.u32(1 << 20);
+        e.raw(&[0u8; 16]);
+        assert!(matches!(
+            decode_msg(&seal_frame(e)).unwrap_err(),
             DecodeError::Truncated { .. }
         ));
     }

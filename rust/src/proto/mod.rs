@@ -157,9 +157,23 @@ pub enum ShardMsg {
     Flush,
     /// snapshot serving stats + cache/engine counters into a `Report` event
     Report,
+    /// push a task artifact (a `store::artifact` blob) to the shard and
+    /// hot-register it in the shard's side-network registry without a
+    /// restart.  The shard answers with a [`ShardEvent::DeployAck`]
+    /// carrying the content fingerprint it computed (so the gateway can
+    /// verify every replica registered identical bytes).  Strictly
+    /// opt-in: only `Gateway::deploy` emits the tag, so peers that
+    /// predate it never see a frame they cannot decode.
+    Deploy { task: String, artifact: Vec<u8> },
     /// drain, emit, and exit the shard
     Shutdown,
 }
+
+/// Upper bound on a `Deploy` artifact payload (16 MiB) — far above any
+/// side network this repo serves, far below the 64 MiB frame cap, and
+/// enforced on decode *before* allocation so a hostile length cannot
+/// balloon memory.
+pub const MAX_DEPLOY_ARTIFACT: usize = 1 << 24;
 
 /// Events out of a shard.  One stream carries everything, in per-shard
 /// FIFO order — which is what makes flush a transport-independent
@@ -189,6 +203,12 @@ pub enum ShardEvent {
     /// that never sets `heartbeat_ms` never receives one, so peers that
     /// predate the tag still interoperate.
     Heartbeat(Heartbeat),
+    /// response to a [`ShardMsg::Deploy`]: the artifact's content
+    /// fingerprint as this shard computed it, or a non-empty `err` if
+    /// storing/registering failed.  Credit-neutral (control traffic,
+    /// not request outcomes) and only ever sent in response to a
+    /// `Deploy`, so legacy gateways never see the tag.
+    DeployAck { shard: usize, task: String, digest: u64, err: String },
 }
 
 /// The cheap health snapshot a heartbeat carries.  Everything here is a
@@ -251,6 +271,13 @@ pub struct ShardReport {
     /// the shard's gauge flight-recorder series (chronological; empty
     /// when the recorder is disarmed; wire tail)
     pub series: Vec<crate::obs::series::GaugePoint>,
+    /// side networks evicted from the shard's registry under byte
+    /// pressure (cumulative; registry-churn wire tail — absent ⇒ 0)
+    pub registry_evictions: u64,
+    /// distribution of cold side-network load latencies (registration +
+    /// post-eviction swap-ins), merged exactly fleet-wide like the
+    /// request-latency histogram (registry-churn wire tail)
+    pub swap_hist: crate::obs::LogHistogram,
 }
 
 /// Why a gateway submit was refused.

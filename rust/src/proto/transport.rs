@@ -99,6 +99,11 @@ pub trait Transport: Send {
     /// reached (== the number of `Report` events to await).
     fn start_report(&mut self) -> usize;
 
+    /// Push a task artifact to every live shard for hot registration;
+    /// returns how many were reached (== the number of `DeployAck`
+    /// events to await).
+    fn start_deploy(&mut self, task: &str, artifact: &[u8]) -> usize;
+
     /// Stop every shard and release transport resources (idempotent).
     fn shutdown(&mut self) -> Result<()>;
 }
@@ -330,7 +335,8 @@ impl SocketTransport {
             ShardEvent::FlushAck { .. }
             | ShardEvent::Report(_)
             | ShardEvent::Telemetry(_)
-            | ShardEvent::Heartbeat(_) => {}
+            | ShardEvent::Heartbeat(_)
+            | ShardEvent::DeployAck { .. } => {}
         }
     }
 
@@ -414,6 +420,10 @@ impl Transport for SocketTransport {
 
     fn start_report(&mut self) -> usize {
         self.broadcast(&ShardMsg::Report)
+    }
+
+    fn start_deploy(&mut self, task: &str, artifact: &[u8]) -> usize {
+        self.broadcast(&ShardMsg::Deploy { task: task.to_string(), artifact: artifact.to_vec() })
     }
 
     fn shutdown(&mut self) -> Result<()> {

@@ -223,6 +223,15 @@ impl<'a> Dec<'a> {
             .map_err(|_| DecodeError::Malformed(format!("{what}: invalid UTF-8")))
     }
 
+    /// Exactly `len` raw bytes.  The caller validates `len` against its
+    /// own schema cap *before* calling (e.g. the `Deploy` artifact cap);
+    /// this only guards against reading past the payload, so a declared
+    /// length larger than the bytes remaining is `Truncated`, never an
+    /// allocation.
+    pub fn bytes_(&mut self, len: usize, what: &'static str) -> Result<Vec<u8>, DecodeError> {
+        Ok(self.take(len, what)?.to_vec())
+    }
+
     /// Element-count guard shared by the vector readers: the declared
     /// count must fit in the bytes actually remaining *before* any
     /// allocation happens.

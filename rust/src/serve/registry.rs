@@ -3,18 +3,23 @@
 //! One quantized backbone is shared by every task; what differs per task is
 //! a tiny side network (≤1% of backbone params).  The registry keeps side
 //! networks resident under a byte budget with LRU eviction, remembers where
-//! each one came from (a `coordinator::checkpoint` file or a synthetic
-//! seed), and transparently reloads evicted entries on demand — so a server
-//! can advertise far more tasks than fit in memory at once.
+//! each one came from (a `coordinator::checkpoint` file, a synthetic seed,
+//! or a content-addressed artifact in an attached [`crate::store`] backend),
+//! and transparently reloads evicted entries on demand — so a server can
+//! advertise far more tasks than fit in memory at once.  Every cold load is
+//! timed into [`Registry::swap_hist`]; eviction counts feed the health
+//! plane as `qst_registry_evictions_total`.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Checkpoint;
 use crate::costmodel::paperdims::PaperModel;
+use crate::obs::LogHistogram;
 use crate::tensor::HostTensor;
 
 /// A loaded side network: the per-task trainable state bound to the shared
@@ -38,8 +43,15 @@ impl SideNetwork {
 /// Where a side network can be (re)loaded from after eviction.
 #[derive(Clone, Debug)]
 enum Source {
-    Checkpoint(PathBuf),
+    /// a `coordinator::checkpoint` file; `digest` is the tensors'
+    /// fingerprint taken **once** at registration — reloads verify it
+    /// instead of silently re-deriving the seed from whatever the file
+    /// holds now
+    Checkpoint { path: PathBuf, digest: u64 },
     Synthetic { seed: u64, bytes: usize },
+    /// a content-addressed artifact in the attached [`crate::store`]
+    /// backend; sections are streamed by ranged reads on every swap-in
+    Store { id: u64 },
 }
 
 /// Nominal registry bytes charged per *synthetic* task (seed-derived side
@@ -61,6 +73,11 @@ pub struct Registry {
     /// cold loads from a source (initial registration + post-eviction reloads)
     pub loads: u64,
     pub evictions: u64,
+    /// wall-clock seconds of every cold load (registration included) —
+    /// rendered as `qst_swap_in_seconds` and merged fleet-wide
+    pub swap_hist: LogHistogram,
+    /// artifact store `Source::Store` tasks resolve through
+    store: Option<Rc<dyn crate::store::Storage>>,
 }
 
 /// Fingerprint a checkpoint's tensors (name-sorted FNV-1a over names+bytes).
@@ -93,7 +110,17 @@ impl Registry {
             tick: 0,
             loads: 0,
             evictions: 0,
+            swap_hist: LogHistogram::default(),
+            store: None,
         }
+    }
+
+    /// Attach the content-addressed store that [`Registry::register_store`]
+    /// tasks load from.  Backends are object-store shaped (`put` / `len` /
+    /// ranged reads), so a worker's in-memory store and a local directory
+    /// plug in identically.
+    pub fn attach_store(&mut self, store: Rc<dyn crate::store::Storage>) {
+        self.store = Some(store);
     }
 
     /// A sensible residency budget for `n_tasks` QST side networks of a
@@ -105,9 +132,47 @@ impl Registry {
     }
 
     /// Register a task backed by a side checkpoint on disk and load it.
+    /// The tensors are fingerprinted **once**, here; post-eviction reloads
+    /// verify the stored digest instead of re-deriving the seed, so a
+    /// checkpoint mutated on disk surfaces as a typed error (re-register
+    /// to hot-swap new weights deliberately).
     pub fn register_checkpoint(&mut self, task: &str, path: &std::path::Path) -> Result<()> {
-        self.sources.insert(task.to_string(), Source::Checkpoint(path.to_path_buf()));
-        self.load(task)?;
+        let t0 = Instant::now();
+        let ckpt = Checkpoint::load(path)
+            .with_context(|| format!("loading side network for '{task}'"))?;
+        if ckpt.tensors.is_empty() {
+            bail!("side checkpoint {} has no tensors", path.display());
+        }
+        let digest = fingerprint(&ckpt.tensors);
+        let bytes = ckpt.total_bytes();
+        self.sources
+            .insert(task.to_string(), Source::Checkpoint { path: path.to_path_buf(), digest });
+        let net =
+            SideNetwork { task: task.to_string(), seed: digest, tensors: ckpt.tensors, bytes };
+        self.install(task, net);
+        self.swap_hist.record(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Register a task backed by a content-addressed artifact in the
+    /// attached store and load it, streaming only the sections it needs.
+    /// A failed load (junk bytes, missing id) restores whatever source
+    /// the task had before, so a bad `Deploy` can never shadow a task
+    /// that was serving.
+    pub fn register_store(&mut self, task: &str, id: u64) -> Result<()> {
+        ensure!(self.store.is_some(), "no artifact store attached (call attach_store first)");
+        let prev = self.sources.insert(task.to_string(), Source::Store { id });
+        if let Err(e) = self.load(task) {
+            match prev {
+                Some(p) => {
+                    self.sources.insert(task.to_string(), p);
+                }
+                None => {
+                    self.sources.remove(task);
+                }
+            }
+            return Err(e);
+        }
         Ok(())
     }
 
@@ -158,25 +223,94 @@ impl Registry {
     }
 
     fn load(&mut self, task: &str) -> Result<()> {
+        let t0 = Instant::now();
         let source = self
             .sources
             .get(task)
             .with_context(|| format!("task '{task}' is not registered"))?
             .clone();
         let net = match source {
-            Source::Checkpoint(path) => {
+            Source::Checkpoint { path, digest } => {
                 let ckpt = Checkpoint::load(&path)
                     .with_context(|| format!("loading side network for '{task}'"))?;
                 if ckpt.tensors.is_empty() {
                     bail!("side checkpoint {} has no tensors", path.display());
                 }
+                // registration fingerprinted these tensors; a reload only
+                // verifies — a mismatch means the file changed on disk
+                // underneath a task that is still advertised with the old
+                // weights
+                let got = fingerprint(&ckpt.tensors);
+                if got != digest {
+                    bail!(
+                        "side checkpoint {} changed on disk since registration \
+                         (digest {got:016x}, registered {digest:016x}); \
+                         re-register to hot-swap new weights",
+                        path.display()
+                    );
+                }
                 let bytes = ckpt.total_bytes();
-                SideNetwork { task: task.to_string(), seed: fingerprint(&ckpt.tensors), tensors: ckpt.tensors, bytes }
+                SideNetwork { task: task.to_string(), seed: digest, tensors: ckpt.tensors, bytes }
             }
             Source::Synthetic { seed, bytes } => {
                 SideNetwork { task: task.to_string(), seed, tensors: HashMap::new(), bytes }
             }
+            Source::Store { id } => {
+                let store = self
+                    .store
+                    .clone()
+                    .with_context(|| format!("task '{task}' is store-backed but no store is attached"))?;
+                self.load_from_store(task, store.as_ref(), id)?
+            }
         };
+        self.install(task, net);
+        self.swap_hist.record(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Materialize a side network from a sectioned artifact.  The reader
+    /// issues one ranged read for the index and one per section actually
+    /// consumed — the artifact as a whole is never pulled into memory.
+    fn load_from_store(
+        &self,
+        task: &str,
+        store: &dyn crate::store::Storage,
+        id: u64,
+    ) -> Result<SideNetwork> {
+        let reader = crate::store::ArtifactReader::open(store, id)
+            .with_context(|| format!("opening artifact {id:016x} for '{task}'"))?;
+        if reader.has(crate::store::SECTION_SYNTHETIC) {
+            let raw = reader.section(store, crate::store::SECTION_SYNTHETIC)?;
+            ensure!(
+                raw.len() == 16,
+                "synthetic section of artifact {id:016x} is {} bytes (want 16)",
+                raw.len()
+            );
+            let seed = u64::from_le_bytes(raw[0..8].try_into().expect("length checked"));
+            let bytes = u64::from_le_bytes(raw[8..16].try_into().expect("length checked")) as usize;
+            return Ok(SideNetwork { task: task.to_string(), seed, tensors: HashMap::new(), bytes });
+        }
+        let names: Vec<String> = reader.section_names().iter().map(|s| s.to_string()).collect();
+        let mut tensors = HashMap::new();
+        let mut bytes = 0usize;
+        for name in &names {
+            let Some(t_name) = name.strip_prefix(crate::store::TENSOR_SECTION_PREFIX) else {
+                continue;
+            };
+            let raw = reader.section(store, name)?;
+            let t = crate::store::decode_tensor_section(&raw)
+                .with_context(|| format!("decoding section '{name}' of artifact {id:016x}"))?;
+            bytes += t.data.len();
+            tensors.insert(t_name.to_string(), t);
+        }
+        ensure!(!tensors.is_empty(), "artifact {id:016x} has no tensor or synthetic sections");
+        // the artifact id *is* the content fingerprint — tasks deployed
+        // from identical bytes derive identical side networks everywhere
+        Ok(SideNetwork { task: task.to_string(), seed: id, tensors, bytes })
+    }
+
+    /// Hot-swap + evict-to-fit + insert: the shared tail of every cold load.
+    fn install(&mut self, task: &str, net: SideNetwork) {
         // hot-swap: drop any previous residency of this task first
         if let Some((old, tick)) = self.resident.remove(task) {
             self.lru.remove(&tick);
@@ -197,7 +331,6 @@ impl Registry {
         self.lru.insert(self.tick, task.to_string());
         self.resident.insert(task.to_string(), (Rc::new(net), self.tick));
         self.loads += 1;
-        Ok(())
     }
 }
 
@@ -315,5 +448,109 @@ mod tests {
         r.register_synthetic("big", 2, 500).unwrap();
         assert_eq!(r.resident_count(), 1);
         assert_eq!(r.resident_lru_order(), vec!["big"]);
+    }
+
+    #[test]
+    fn mutated_checkpoint_fails_verification_on_reload() {
+        let (pa, pb) = (tmpfile("mut_a.ckpt"), tmpfile("mut_b.ckpt"));
+        side_ckpt(&pa, 1.0, 64); // 256 bytes
+        side_ckpt(&pb, 2.0, 64);
+        let mut r = Registry::new(300); // fits one
+        r.register_checkpoint("a", &pa).unwrap();
+        side_ckpt(&pa, 5.0, 64); // mutate on disk behind the registry's back
+        r.register_checkpoint("b", &pb).unwrap(); // evicts "a"
+        assert_eq!(r.evictions, 1);
+        let err = r.get("a").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("changed on disk"),
+            "want a digest-mismatch error, got: {err:#}"
+        );
+        // deliberate hot-swap still works: re-registering fingerprints anew
+        r.register_checkpoint("a", &pa).unwrap();
+        assert_eq!(r.get("a").unwrap().task, "a");
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn store_backed_tasks_register_evict_and_reload() {
+        use crate::store::Storage;
+        let store = Rc::new(crate::store::Mem::new());
+        let mut r = Registry::new(1500);
+        r.attach_store(store.clone());
+        let a1 = crate::store::side_artifact_synthetic(7, 1000);
+        let id1 = store.put(&a1).unwrap();
+        r.register_store("s0", id1).unwrap();
+        assert_eq!(r.get("s0").unwrap().seed, 7);
+        assert_eq!(r.bytes(), 1000);
+        // parity: a store-backed synthetic task derives the same side
+        // network key as a directly registered synthetic one
+        let mut plain = Registry::new(1 << 20);
+        plain.register_synthetic("s0", 7, 1000).unwrap();
+        assert_eq!(plain.get("s0").unwrap().seed, r.get("s0").unwrap().seed);
+        // a second artifact evicts the first; the evictee reloads by
+        // streaming the artifact back out of the store
+        let id2 = store.put(&crate::store::side_artifact_synthetic(8, 1000)).unwrap();
+        r.register_store("s1", id2).unwrap();
+        assert_eq!(r.resident_count(), 1);
+        assert_eq!(r.evictions, 1);
+        let loads = r.loads;
+        assert_eq!(r.get("s0").unwrap().seed, 7);
+        assert_eq!(r.loads, loads + 1);
+    }
+
+    #[test]
+    fn tensor_artifacts_stream_into_side_networks() {
+        use crate::store::Storage;
+        let store = Rc::new(crate::store::Mem::new());
+        let mut tensors = HashMap::new();
+        tensors.insert("side.w".to_string(), HostTensor::from_f32(&[8], &vec![1.5f32; 8]));
+        tensors.insert("side.b".to_string(), HostTensor::from_f32(&[2], &vec![0.5f32; 2]));
+        let bytes = crate::store::side_artifact_from_tensors(&tensors);
+        let id = store.put(&bytes).unwrap();
+        let mut r = Registry::new(1 << 20);
+        r.attach_store(store);
+        r.register_store("t", id).unwrap();
+        let net = r.get("t").unwrap();
+        assert_eq!(net.seed, id, "tensor artifacts key the engine off their content id");
+        assert_eq!(net.tensors.len(), 2);
+        assert_eq!(net.tensors["side.w"].as_f32().unwrap(), vec![1.5f32; 8]);
+        assert_eq!(net.tensors["side.b"].as_f32().unwrap(), vec![0.5f32; 2]);
+        assert_eq!(net.bytes(), 40);
+    }
+
+    #[test]
+    fn swap_hist_records_every_cold_load() {
+        let mut r = Registry::new(100);
+        r.register_synthetic("a", 1, 80).unwrap();
+        r.register_synthetic("b", 2, 80).unwrap(); // evicts a
+        assert_eq!(r.swap_hist.count(), 2);
+        r.get("a").unwrap(); // post-eviction reload is a cold load too
+        assert_eq!(r.swap_hist.count(), 3);
+        assert_eq!(r.loads, 3);
+        r.get("a").unwrap(); // resident hit: not a swap-in
+        assert_eq!(r.swap_hist.count(), 3);
+    }
+
+    #[test]
+    fn register_store_without_store_is_a_typed_error() {
+        let mut r = Registry::new(1 << 20);
+        assert!(r.register_store("x", 1).is_err());
+        assert!(!r.contains("x"));
+    }
+
+    #[test]
+    fn failed_store_register_restores_previous_source() {
+        use crate::store::Storage;
+        let store = Rc::new(crate::store::Mem::new());
+        let mut r = Registry::new(1 << 20);
+        r.attach_store(store.clone());
+        r.register_synthetic("t", 3, 100).unwrap();
+        let junk = store.put(b"not an artifact").unwrap();
+        assert!(r.register_store("t", junk).is_err());
+        assert_eq!(r.get("t").unwrap().seed, 3, "the old source must keep serving");
+        // and a fresh name that fails leaves no phantom registration
+        assert!(r.register_store("ghost", junk).is_err());
+        assert!(!r.contains("ghost"));
     }
 }

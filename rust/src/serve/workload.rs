@@ -335,6 +335,50 @@ pub fn mixed_length_pool(rng: &mut Rng, n: usize, lens: &[usize], vocab: usize) 
     out
 }
 
+/// Deterministic Zipf-distributed rank sampler: rank `r` (0-based) is
+/// drawn with probability proportional to `1/(r+1)^s`, the canonical
+/// heavy-tailed task-popularity model (a few hot tasks, a long cold
+/// tail).  Sampling inverts a precomputed CDF with a binary search, so
+/// `sample` is O(log n) and — driven by the seeded xorshift generator —
+/// the stream is bit-reproducible for a given `(n, s, seed)`.
+pub struct Zipf {
+    cdf: Vec<f64>,
+    rng: Rng,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64, seed: u64) -> Zipf {
+        assert!(n >= 1, "zipf needs at least one rank");
+        assert!(s.is_finite() && s >= 0.0, "zipf exponent must be finite and >= 0");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        // the running sum is monotone, so only float roundoff could leave
+        // the final entry below 1.0; pin it so `sample` can never fall off
+        // the end
+        *cdf.last_mut().expect("n >= 1") = 1.0;
+        Zipf { cdf, rng: Rng::new(seed) }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Next rank in `0..n` (0 = hottest).
+    pub fn sample(&mut self) -> usize {
+        // 53 high bits -> uniform f64 in [0, 1)
+        let u = (self.rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        // first index whose CDF exceeds u; u < 1.0 = cdf[n-1] keeps it in range
+        self.cdf.partition_point(|&c| c <= u)
+    }
+}
+
 /// FNV-1a fold step over one 64-bit value.
 fn fnv(h: u64, v: u64) -> u64 {
     (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
@@ -564,6 +608,47 @@ mod tests {
         assert!(pool.iter().all(|p| p.iter().all(|&t| t > 0)));
         let set: std::collections::HashSet<_> = pool.iter().cloned().collect();
         assert_eq!(set.len(), 10, "all prompts pairwise distinct");
+    }
+
+    #[test]
+    fn zipf_is_seeded_and_in_range() {
+        let mut a = Zipf::new(50, 1.1, 7);
+        let mut b = Zipf::new(50, 1.1, 7);
+        let sa: Vec<usize> = (0..500).map(|_| a.sample()).collect();
+        let sb: Vec<usize> = (0..500).map(|_| b.sample()).collect();
+        assert_eq!(sa, sb, "same (n, s, seed) must reproduce the stream");
+        assert!(sa.iter().all(|&r| r < 50));
+        let mut c = Zipf::new(50, 1.1, 8);
+        let sc: Vec<usize> = (0..500).map(|_| c.sample()).collect();
+        assert_ne!(sa, sc, "a different seed must move the stream");
+        // degenerate cases stay total
+        let mut one = Zipf::new(1, 1.0, 3);
+        assert_eq!(one.sample(), 0);
+        assert_eq!(one.ranks(), 1);
+        let mut uniform = Zipf::new(4, 0.0, 3);
+        assert!((0..100).map(|_| uniform.sample()).all(|r| r < 4));
+    }
+
+    #[test]
+    fn zipf_rank_frequency_follows_the_power_law() {
+        // at s = 1.0 rank r is 10x likelier than rank 10*r; pin the shape
+        // with a large deterministic draw over 1000 ranks
+        let n = 1000;
+        let mut z = Zipf::new(n, 1.0, 42);
+        let mut freq = vec![0u64; n];
+        let draws = 200_000;
+        for _ in 0..draws {
+            freq[z.sample()] += 1;
+        }
+        assert!(freq[0] > freq[9] && freq[9] > freq[99], "{:?}", &freq[..10]);
+        let ratio = freq[0] as f64 / freq[9].max(1) as f64;
+        assert!((7.0..13.0).contains(&ratio), "rank0/rank9 = {ratio}, want ~10");
+        let ratio100 = freq[0] as f64 / freq[99].max(1) as f64;
+        assert!((70.0..130.0).contains(&ratio100), "rank0/rank99 = {ratio100}, want ~100");
+        // the tail is long but populated: a decent share of distinct ranks
+        // appear at least once in 200k draws
+        let seen = freq.iter().filter(|&&f| f > 0).count();
+        assert!(seen > n / 2, "only {seen} of {n} ranks ever sampled");
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Sectioned artifact format with an index header.
+//!
+//! ```text
+//! "QSTA" | u16 version | u32 nsec | u32 index_len      (14-byte header)
+//! nsec × ( u32 name_len | name | u64 off | u64 len | u64 digest )
+//! section payloads (tightly packed, offsets absolute)
+//! ```
+//!
+//! All integers little-endian.  The index is tiny (tens of bytes per
+//! section), so [`ArtifactReader::open`] costs two ranged reads — header,
+//! then index — and each [`ArtifactReader::section`] call costs exactly
+//! one more, sized to that section.  Nothing ever allocates the whole
+//! artifact; a registry loading one side net out of a multi-section
+//! artifact reads only the bytes it will keep.
+//!
+//! Every section carries its own FNV-1a digest in the index, verified on
+//! read — a ranged read cannot re-check the whole-object content address,
+//! so integrity is per-section.
+//!
+//! Side-network conventions (what `serve::Registry` understands):
+//! * [`SECTION_SYNTHETIC`] — 16 bytes, `u64 seed | u64 approx_bytes`; the
+//!   synthetic engine derives the task function from the seed.
+//! * `tensor:<name>` — `u8 dtype | u8 ndim | u64 dims[] | data`, one
+//!   tensor per section so each can stream independently.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::{DType, HostTensor};
+
+use super::backend::{fingerprint_bytes, Storage};
+
+const MAGIC: &[u8; 4] = b"QSTA";
+const VERSION: u16 = 1;
+const HEADER_LEN: usize = 14;
+/// Per-section index overhead beyond the name bytes: u32 name_len +
+/// u64 offset + u64 len + u64 digest.
+pub const INDEX_ENTRY_FIXED_BYTES: usize = 4 + 8 + 8 + 8;
+/// Fixed artifact overhead: magic + version + section count + index length.
+pub const ARTIFACT_HEADER_BYTES: usize = HEADER_LEN;
+
+const MAX_SECTIONS: u32 = 1 << 16;
+const MAX_SECTION_NAME: usize = 4096;
+const MAX_INDEX_BYTES: u32 = 1 << 22;
+const MAX_NDIM: usize = 8;
+
+/// Section name of the synthetic side-net payload (`u64 seed | u64 bytes`).
+pub const SECTION_SYNTHETIC: &str = "synthetic";
+/// Prefix of per-tensor sections: `tensor:<tensor name>`.
+pub const TENSOR_SECTION_PREFIX: &str = "tensor:";
+
+/// Accumulates named sections and serializes the artifact.
+#[derive(Default)]
+pub struct ArtifactBuilder {
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl ArtifactBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn section(mut self, name: &str, bytes: Vec<u8>) -> Self {
+        assert!(name.len() <= MAX_SECTION_NAME, "section name too long");
+        assert!(
+            !self.sections.iter().any(|(n, _)| n == name),
+            "duplicate section '{name}'"
+        );
+        self.sections.push((name.to_string(), bytes));
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        assert!((self.sections.len() as u32) < MAX_SECTIONS, "too many sections");
+        let index_len: usize = self
+            .sections
+            .iter()
+            .map(|(n, _)| INDEX_ENTRY_FIXED_BYTES + n.len())
+            .sum();
+        assert!((index_len as u32) < MAX_INDEX_BYTES, "index too large");
+        let mut out = Vec::with_capacity(
+            HEADER_LEN + index_len + self.sections.iter().map(|(_, b)| b.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(index_len as u32).to_le_bytes());
+        let mut off = (HEADER_LEN + index_len) as u64;
+        for (name, bytes) in &self.sections {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&off.to_le_bytes());
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fingerprint_bytes(bytes).to_le_bytes());
+            off += bytes.len() as u64;
+        }
+        for (_, bytes) in &self.sections {
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+}
+
+#[derive(Clone, Debug)]
+struct SectionEntry {
+    name: String,
+    offset: u64,
+    len: u64,
+    digest: u64,
+}
+
+/// Streaming view of one stored artifact: the parsed index, plus ranged
+/// per-section reads that verify the index digest.
+pub struct ArtifactReader {
+    id: u64,
+    total: u64,
+    index: Vec<SectionEntry>,
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+impl ArtifactReader {
+    /// Parse the header + index with two ranged reads.  Every length and
+    /// offset is bounds-checked against the stored object, so a corrupt
+    /// or hostile index errors instead of driving huge allocations.
+    pub fn open(store: &dyn Storage, id: u64) -> Result<Self> {
+        let total = store.len(id)?;
+        ensure!(total >= HEADER_LEN as u64, "artifact {id:016x}: shorter than its header");
+        let header = store.read_range(id, 0, HEADER_LEN)?;
+        ensure!(&header[..4] == MAGIC, "artifact {id:016x}: bad magic");
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        ensure!(version == VERSION, "artifact {id:016x}: version {version} (want {VERSION})");
+        let nsec = le_u32(&header[6..10]);
+        let index_len = le_u32(&header[10..14]);
+        ensure!(nsec < MAX_SECTIONS, "artifact {id:016x}: {nsec} sections (cap {MAX_SECTIONS})");
+        ensure!(
+            index_len < MAX_INDEX_BYTES && (HEADER_LEN as u64 + index_len as u64) <= total,
+            "artifact {id:016x}: index length {index_len} out of bounds"
+        );
+        // the minimal entry is the fixed fields with an empty name
+        ensure!(
+            (nsec as u64) * (INDEX_ENTRY_FIXED_BYTES as u64) <= index_len as u64,
+            "artifact {id:016x}: {nsec} sections cannot fit a {index_len}-byte index"
+        );
+        let raw = store.read_range(id, HEADER_LEN as u64, index_len as usize)?;
+        let mut index = Vec::with_capacity(nsec as usize);
+        let mut pos = 0usize;
+        for s in 0..nsec {
+            ensure!(pos + 4 <= raw.len(), "artifact {id:016x}: index truncated at section {s}");
+            let name_len = le_u32(&raw[pos..]) as usize;
+            pos += 4;
+            ensure!(
+                name_len <= MAX_SECTION_NAME && pos + name_len + 24 <= raw.len(),
+                "artifact {id:016x}: section {s} name length {name_len} out of bounds"
+            );
+            let name = std::str::from_utf8(&raw[pos..pos + name_len])
+                .with_context(|| format!("artifact {id:016x}: section {s} name not utf-8"))?
+                .to_string();
+            pos += name_len;
+            let offset = le_u64(&raw[pos..]);
+            let len = le_u64(&raw[pos + 8..]);
+            let digest = le_u64(&raw[pos + 16..]);
+            pos += 24;
+            let end = offset.checked_add(len);
+            ensure!(
+                end.is_some_and(|e| e <= total),
+                "artifact {id:016x}: section '{name}' range [{offset}, +{len}) exceeds {total} bytes"
+            );
+            index.push(SectionEntry { name, offset, len, digest });
+        }
+        ensure!(pos == raw.len(), "artifact {id:016x}: {} trailing index bytes", raw.len() - pos);
+        Ok(ArtifactReader { id, total, index })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Total stored bytes (header + index + payloads).
+    pub fn total_bytes(&self) -> u64 {
+        self.total
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.index.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.iter().any(|e| e.name == name)
+    }
+
+    pub fn section_len(&self, name: &str) -> Option<u64> {
+        self.index.iter().find(|e| e.name == name).map(|e| e.len)
+    }
+
+    /// One ranged read of exactly this section, verified against the
+    /// index digest — torn writes and bit rot surface as typed errors,
+    /// never as silently-wrong side weights.
+    pub fn section(&self, store: &dyn Storage, name: &str) -> Result<Vec<u8>> {
+        let entry = self
+            .index
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("artifact {:016x} has no section '{name}'", self.id))?;
+        let bytes = store.read_range(self.id, entry.offset, entry.len as usize)?;
+        ensure!(
+            fingerprint_bytes(&bytes) == entry.digest,
+            "artifact {:016x}: section '{name}' failed digest verification",
+            self.id
+        );
+        Ok(bytes)
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::I32 => 2,
+        DType::U32 => 3,
+        DType::U8 => 4,
+        DType::I8 => 5,
+    }
+}
+
+fn code_dtype(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::F16,
+        2 => DType::I32,
+        3 => DType::U32,
+        4 => DType::U8,
+        5 => DType::I8,
+        other => bail!("unknown dtype code {other}"),
+    })
+}
+
+fn encode_tensor_section(t: &HostTensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + 8 * t.shape.len() + t.data.len());
+    out.push(dtype_code(t.dtype));
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&t.data);
+    out
+}
+
+/// Decode one `tensor:` section payload back into a [`HostTensor`], with
+/// shape/dtype/length cross-checks (a section that passed its digest can
+/// still be a hostile or version-skewed encoding).
+pub fn decode_tensor_section(bytes: &[u8]) -> Result<HostTensor> {
+    ensure!(bytes.len() >= 2, "tensor section shorter than its dtype/ndim header");
+    let dtype = code_dtype(bytes[0])?;
+    let ndim = bytes[1] as usize;
+    ensure!(ndim <= MAX_NDIM, "tensor section declares {ndim} dims (cap {MAX_NDIM})");
+    ensure!(bytes.len() >= 2 + 8 * ndim, "tensor section truncated in its dims");
+    let mut shape = Vec::with_capacity(ndim);
+    let mut numel = 1u64;
+    for i in 0..ndim {
+        let d = le_u64(&bytes[2 + 8 * i..]);
+        numel = numel.checked_mul(d).context("tensor section shape overflows")?;
+        shape.push(d as usize);
+    }
+    let data = &bytes[2 + 8 * ndim..];
+    let want = numel
+        .checked_mul(dtype.size() as u64)
+        .context("tensor section byte count overflows")?;
+    ensure!(
+        data.len() as u64 == want,
+        "tensor section carries {} data bytes for a {want}-byte shape",
+        data.len()
+    );
+    Ok(HostTensor { dtype, shape, data: data.to_vec() })
+}
+
+/// Build a side-network artifact from checkpoint-style tensors, one
+/// `tensor:<name>` section per tensor in sorted-name order (so identical
+/// tensor maps always serialize to identical bytes → identical ids).
+pub fn side_artifact_from_tensors(tensors: &HashMap<String, HostTensor>) -> Vec<u8> {
+    let mut names: Vec<&String> = tensors.keys().collect();
+    names.sort();
+    let mut b = ArtifactBuilder::new();
+    for name in names {
+        b = b.section(
+            &format!("{TENSOR_SECTION_PREFIX}{name}"),
+            encode_tensor_section(&tensors[name]),
+        );
+    }
+    b.finish()
+}
+
+/// Build a synthetic side-network artifact: no tensors, just the seed the
+/// engine derives the task function from and the nominal residency bytes
+/// it charges the registry.
+pub fn side_artifact_synthetic(seed: u64, approx_bytes: u64) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(16);
+    payload.extend_from_slice(&seed.to_le_bytes());
+    payload.extend_from_slice(&approx_bytes.to_le_bytes());
+    ArtifactBuilder::new().section(SECTION_SYNTHETIC, payload).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::backend::Mem;
+
+    fn put(bytes: Vec<u8>) -> (Mem, u64) {
+        let store = Mem::new();
+        let id = store.put(&bytes).unwrap();
+        (store, id)
+    }
+
+    #[test]
+    fn build_open_and_stream_sections() {
+        let art = ArtifactBuilder::new()
+            .section("alpha", b"aaaa".to_vec())
+            .section("beta", vec![])
+            .section("gamma", (0..=255u8).collect())
+            .finish();
+        let (store, id) = put(art);
+        let r = ArtifactReader::open(&store, id).unwrap();
+        assert_eq!(r.id(), id);
+        assert_eq!(r.section_names(), vec!["alpha", "beta", "gamma"]);
+        assert_eq!(r.section_len("alpha"), Some(4));
+        assert_eq!(r.section_len("beta"), Some(0));
+        assert_eq!(r.section(&store, "alpha").unwrap(), b"aaaa");
+        assert_eq!(r.section(&store, "beta").unwrap(), Vec::<u8>::new());
+        assert_eq!(r.section(&store, "gamma").unwrap(), (0..=255u8).collect::<Vec<_>>());
+        assert!(r.section(&store, "missing").is_err());
+        assert!(!r.has("missing") && r.has("beta"));
+    }
+
+    #[test]
+    fn section_reads_are_ranged_not_whole_file() {
+        // a backend that counts the largest single read proves streaming:
+        // with a multi-MiB payload next to a tiny one, reading the tiny
+        // section must never touch the big one's bytes
+        struct Counting {
+            inner: Mem,
+            max_read: std::cell::Cell<usize>,
+        }
+        impl Storage for Counting {
+            fn put(&self, b: &[u8]) -> Result<u64> {
+                self.inner.put(b)
+            }
+            fn len(&self, id: u64) -> Result<u64> {
+                self.inner.len(id)
+            }
+            fn read_range(&self, id: u64, off: u64, len: usize) -> Result<Vec<u8>> {
+                self.max_read.set(self.max_read.get().max(len));
+                self.inner.read_range(id, off, len)
+            }
+            fn contains(&self, id: u64) -> bool {
+                self.inner.contains(id)
+            }
+        }
+        let big = vec![7u8; 4 << 20];
+        let art = ArtifactBuilder::new()
+            .section("big", big)
+            .section("small", b"tiny".to_vec())
+            .finish();
+        let store = Counting { inner: Mem::new(), max_read: std::cell::Cell::new(0) };
+        let id = store.put(&art).unwrap();
+        store.max_read.set(0);
+        let r = ArtifactReader::open(&store, id).unwrap();
+        assert_eq!(r.section(&store, "small").unwrap(), b"tiny");
+        assert!(
+            store.max_read.get() < 1024,
+            "largest read was {} bytes — whole-file, not streaming",
+            store.max_read.get()
+        );
+    }
+
+    #[test]
+    fn corrupted_section_fails_digest_verification() {
+        let art = ArtifactBuilder::new()
+            .section("w", vec![1, 2, 3, 4, 5, 6, 7, 8])
+            .finish();
+        let mut evil = art.clone();
+        let n = evil.len();
+        evil[n - 3] ^= 0xFF; // flip a payload byte, leave index intact
+        let store = Mem::new();
+        let good_id = store.put(&art).unwrap();
+        let evil_id = store.put(&evil).unwrap();
+        assert_ne!(good_id, evil_id, "content addressing separates the two");
+        let r = ArtifactReader::open(&store, evil_id).unwrap();
+        let err = r.section(&store, "w").unwrap_err();
+        assert!(format!("{err:#}").contains("digest"), "{err:#}");
+        // the untouched artifact still verifies
+        let r = ArtifactReader::open(&store, good_id).unwrap();
+        assert_eq!(r.section(&store, "w").unwrap(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn hostile_headers_error_instead_of_allocating() {
+        let store = Mem::new();
+        // too short for a header
+        let id = store.put(b"QSTA").unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+        // bad magic
+        let id = store.put(&[b'N', b'O', b'P', b'E', 1, 0, 0, 0, 0, 0, 0, 0, 0, 0]).unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+        // future version
+        let mut v2 = ArtifactBuilder::new().section("x", vec![1]).finish();
+        v2[4] = 2;
+        let id = store.put(&v2).unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+        // section count ballooned past what the index can hold
+        let mut huge = ArtifactBuilder::new().section("x", vec![1]).finish();
+        huge[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let id = store.put(&huge).unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+        // index length pointing past the object
+        let mut long = ArtifactBuilder::new().section("x", vec![1]).finish();
+        long[10..14].copy_from_slice(&1_000_000u32.to_le_bytes());
+        let id = store.put(&long).unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+        // a section whose range escapes the object
+        let good = ArtifactBuilder::new().section("x", vec![1, 2, 3]).finish();
+        let mut escape = good.clone();
+        // index entry layout after header: u32 name_len | "x" | u64 off...
+        let off_pos = HEADER_LEN + 4 + 1;
+        escape[off_pos..off_pos + 8].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        let id = store.put(&escape).unwrap();
+        assert!(ArtifactReader::open(&store, id).is_err());
+    }
+
+    #[test]
+    fn tensor_sections_round_trip_and_reject_skew() {
+        let t = HostTensor::from_f32(&[2, 3], &[1.0, -2.5, 3.25, 0.0, 5.5, -6.75]);
+        let enc = encode_tensor_section(&t);
+        let back = decode_tensor_section(&enc).unwrap();
+        assert_eq!(back.dtype, t.dtype);
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.data, t.data);
+        // truncated, hostile ndim, wrong byte count, unknown dtype
+        assert!(decode_tensor_section(&[]).is_err());
+        assert!(decode_tensor_section(&[0, 9]).is_err(), "ndim over cap");
+        let mut short = enc.clone();
+        short.pop();
+        assert!(decode_tensor_section(&short).is_err());
+        let mut bad_dtype = enc.clone();
+        bad_dtype[0] = 200;
+        assert!(decode_tensor_section(&bad_dtype).is_err());
+        let mut huge_dim = enc;
+        huge_dim[2..10].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_tensor_section(&huge_dim).is_err(), "shape overflow must error");
+    }
+
+    #[test]
+    fn side_artifacts_are_deterministic_and_self_describing() {
+        let mut tensors = HashMap::new();
+        tensors.insert("side.b".to_string(), HostTensor::from_f32(&[4], &[1.0; 4]));
+        tensors.insert("side.a".to_string(), HostTensor::from_f32(&[2, 2], &[2.0; 4]));
+        let a1 = side_artifact_from_tensors(&tensors);
+        let a2 = side_artifact_from_tensors(&tensors);
+        assert_eq!(a1, a2, "same tensors must serialize identically (stable ids)");
+        let (store, id) = put(a1);
+        let r = ArtifactReader::open(&store, id).unwrap();
+        // sorted by name regardless of HashMap iteration order
+        assert_eq!(r.section_names(), vec!["tensor:side.a", "tensor:side.b"]);
+        let t = decode_tensor_section(&r.section(&store, "tensor:side.a").unwrap()).unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), vec![2.0; 4]);
+
+        let syn = side_artifact_synthetic(0xDEAD_BEEF, 1 << 16);
+        let (store, id) = put(syn);
+        let r = ArtifactReader::open(&store, id).unwrap();
+        let payload = r.section(&store, SECTION_SYNTHETIC).unwrap();
+        assert_eq!(payload.len(), 16);
+        assert_eq!(u64::from_le_bytes(payload[..8].try_into().unwrap()), 0xDEAD_BEEF);
+        assert_eq!(u64::from_le_bytes(payload[8..].try_into().unwrap()), 1 << 16);
+    }
+}

@@ -1,0 +1,230 @@
+//! Storage backends: where artifact bytes live.
+//!
+//! [`Storage`] is deliberately shaped like an object store — opaque ids,
+//! whole-object put, length query, ranged get — so the [`LocalDir`]
+//! filesystem backend can later be swapped for an S3-like remote without
+//! changing the registry or the deploy path.  All methods take `&self`:
+//! backends manage their own interior mutability (the registry holds one
+//! behind an `Rc<dyn Storage>`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// FNV-1a over a byte slice — the content address of an artifact.  Same
+/// prime/offset as the checkpoint fingerprint in `serve::registry`, so a
+/// fingerprint anywhere in the repo means the same function.
+pub fn fingerprint_bytes(bytes: &[u8]) -> u64 {
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content-addressed blob storage.  `put` derives the id from the bytes
+/// themselves; `read_range` is the streaming primitive everything else
+/// builds on (the artifact reader issues one ranged read per section it
+/// actually needs).
+pub trait Storage {
+    /// Store `bytes` under their content fingerprint and return it.
+    /// Idempotent: putting identical bytes again returns the same id
+    /// without rewriting.
+    fn put(&self, bytes: &[u8]) -> Result<u64>;
+    /// Total length of the object, erroring if the id is unknown.
+    fn len(&self, id: u64) -> Result<u64>;
+    /// Read exactly `len` bytes starting at `offset`.  Short objects are
+    /// an error, never a short read.
+    fn read_range(&self, id: u64, offset: u64, len: usize) -> Result<Vec<u8>>;
+    /// Is this id present?
+    fn contains(&self, id: u64) -> bool;
+}
+
+/// Filesystem backend: one file per artifact under a root directory,
+/// named by the 16-hex-digit id.  Writes go to a temp file in the same
+/// directory and land via atomic rename, so a crashed writer never
+/// leaves a half-written object under a valid id and concurrent writers
+/// of the same content converge on one file.
+pub struct LocalDir {
+    root: PathBuf,
+}
+
+impl LocalDir {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating artifact store dir {}", root.display()))?;
+        Ok(LocalDir { root })
+    }
+
+    fn object_path(&self, id: u64) -> PathBuf {
+        self.root.join(format!("{id:016x}.qsta"))
+    }
+}
+
+impl Storage for LocalDir {
+    fn put(&self, bytes: &[u8]) -> Result<u64> {
+        let id = fingerprint_bytes(bytes);
+        let path = self.object_path(id);
+        if path.is_file() {
+            return Ok(id); // content-addressed: same bytes, same object
+        }
+        // unique temp name per writer, then atomic rename into place
+        let tmp = self.root.join(format!(".tmp-{}-{id:016x}", std::process::id()));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().ok(); // best effort — rename is the atomicity line
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing artifact {id:016x} into {}", self.root.display()))?;
+        Ok(id)
+    }
+
+    fn len(&self, id: u64) -> Result<u64> {
+        let path = self.object_path(id);
+        let meta = std::fs::metadata(&path)
+            .with_context(|| format!("artifact {id:016x} not in store {}", self.root.display()))?;
+        Ok(meta.len())
+    }
+
+    fn read_range(&self, id: u64, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let path = self.object_path(id);
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("artifact {id:016x} not in store {}", self.root.display()))?;
+        f.seek(SeekFrom::Start(offset)).with_context(|| format!("seeking artifact {id:016x}"))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf).with_context(|| {
+            format!("artifact {id:016x} shorter than range [{offset}, {offset}+{len})")
+        })?;
+        Ok(buf)
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.object_path(id).is_file()
+    }
+}
+
+/// In-memory backend: what a `shard-worker` keeps deployed artifacts in
+/// (no disk on the worker side of a `Deploy`), and what tests use.
+#[derive(Default)]
+pub struct Mem {
+    objects: RefCell<HashMap<u64, Vec<u8>>>,
+}
+
+impl Mem {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Storage for Mem {
+    fn put(&self, bytes: &[u8]) -> Result<u64> {
+        let id = fingerprint_bytes(bytes);
+        self.objects.borrow_mut().entry(id).or_insert_with(|| bytes.to_vec());
+        Ok(id)
+    }
+
+    fn len(&self, id: u64) -> Result<u64> {
+        match self.objects.borrow().get(&id) {
+            Some(b) => Ok(b.len() as u64),
+            None => bail!("artifact {id:016x} not in memory store"),
+        }
+    }
+
+    fn read_range(&self, id: u64, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let objects = self.objects.borrow();
+        let Some(b) = objects.get(&id) else {
+            bail!("artifact {id:016x} not in memory store");
+        };
+        let start = offset as usize;
+        let end = start.checked_add(len).filter(|&e| e <= b.len());
+        match end {
+            Some(end) => Ok(b[start..end].to_vec()),
+            None => bail!("artifact {id:016x} shorter than range [{offset}, {offset}+{len})"),
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.objects.borrow().contains_key(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("qst_store_{}_{}", std::process::id(), name));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        assert_eq!(fingerprint_bytes(b""), 0xcbf29ce484222325);
+        assert_eq!(fingerprint_bytes(b"abc"), fingerprint_bytes(b"abc"));
+        assert_ne!(fingerprint_bytes(b"abc"), fingerprint_bytes(b"abd"));
+        assert_ne!(fingerprint_bytes(b"abc"), fingerprint_bytes(b"ab"));
+    }
+
+    fn exercise(store: &dyn Storage) {
+        let a = store.put(b"hello artifact").unwrap();
+        assert_eq!(a, fingerprint_bytes(b"hello artifact"));
+        assert!(store.contains(a));
+        assert_eq!(store.len(a).unwrap(), 14);
+        // idempotent put, ranged reads, missing-id and over-range errors
+        assert_eq!(store.put(b"hello artifact").unwrap(), a);
+        assert_eq!(store.read_range(a, 0, 5).unwrap(), b"hello");
+        assert_eq!(store.read_range(a, 6, 8).unwrap(), b"artifact");
+        assert_eq!(store.read_range(a, 0, 0).unwrap(), b"");
+        assert!(store.read_range(a, 10, 5).is_err(), "over-range must error, not short-read");
+        assert!(store.read_range(a, 1 << 40, 1).is_err());
+        let missing = fingerprint_bytes(b"never stored");
+        assert!(!store.contains(missing));
+        assert!(store.len(missing).is_err());
+        assert!(store.read_range(missing, 0, 1).is_err());
+        // distinct contents get distinct ids and independent bytes
+        let b = store.put(b"other bytes").unwrap();
+        assert_ne!(a, b);
+        assert_eq!(store.read_range(b, 0, 11).unwrap(), b"other bytes");
+    }
+
+    #[test]
+    fn mem_backend_contract() {
+        exercise(&Mem::new());
+    }
+
+    #[test]
+    fn localdir_backend_contract() {
+        let dir = tmpdir("contract");
+        let store = LocalDir::new(&dir).unwrap();
+        exercise(&store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn localdir_survives_reopen_and_leaves_no_temp_files() {
+        let dir = tmpdir("reopen");
+        let id = {
+            let store = LocalDir::new(&dir).unwrap();
+            store.put(b"persistent").unwrap()
+        };
+        // a fresh handle over the same root sees the object
+        let store = LocalDir::new(&dir).unwrap();
+        assert!(store.contains(id));
+        assert_eq!(store.read_range(id, 0, 10).unwrap(), b"persistent");
+        // the atomic-rename protocol leaves no .tmp- droppings
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().into_string().unwrap();
+            assert!(!name.starts_with(".tmp-"), "leftover temp file {name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

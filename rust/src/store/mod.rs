@@ -1,0 +1,35 @@
+//! Content-addressed task-artifact store.
+//!
+//! Side networks stop being whole-file checkpoint loads and become
+//! **artifacts**: immutable byte blobs keyed by the FNV-1a fingerprint of
+//! their own contents.  Content addressing gives three properties the
+//! serving stack leans on:
+//!
+//! * **Deduplication** — putting the same bytes twice yields the same id
+//!   and stores one object.
+//! * **Integrity** — an artifact id *is* its checksum, so a reader can
+//!   verify what it got without a side channel.
+//! * **Deploy parity** — a task pushed across the fleet as bytes and the
+//!   same task loaded from a local store agree on their id, hence on the
+//!   side network the engine derives; bit-identical serving falls out.
+//!
+//! Two layers:
+//! * [`backend`] — the [`Storage`] trait (put / len / ranged read) with a
+//!   [`LocalDir`] filesystem backend (temp-file + atomic rename writes)
+//!   and an in-memory [`Mem`] backend for workers and tests.  The trait
+//!   is shaped like an object store (S3 `PutObject` / `HeadObject` /
+//!   ranged `GetObject`), so a remote backend slots in without touching
+//!   callers.
+//! * [`artifact`] — the sectioned artifact format: a tiny index header
+//!   maps section names to `(offset, len, digest)`, so
+//!   [`crate::serve::Registry`] streams exactly the sections it needs via
+//!   ranged reads and never allocates the whole file.
+
+pub mod artifact;
+pub mod backend;
+
+pub use artifact::{
+    decode_tensor_section, side_artifact_from_tensors, side_artifact_synthetic, ArtifactBuilder,
+    ArtifactReader, SECTION_SYNTHETIC, TENSOR_SECTION_PREFIX,
+};
+pub use backend::{fingerprint_bytes, LocalDir, Mem, Storage};

@@ -87,11 +87,20 @@ fn arb_request(rng: &mut Rng) -> Request {
 }
 
 fn arb_msg(rng: &mut Rng) -> ShardMsg {
-    match rng.below(5) {
+    match rng.below(6) {
         0 => ShardMsg::Configure { shard: rng.below(1024), spec: arb_spec(rng) },
         1 => ShardMsg::Submit(arb_request(rng)),
         2 => ShardMsg::Flush,
         3 => ShardMsg::Report,
+        // empty artifacts get real probability; bodies are arbitrary bytes
+        // (the frame layer ships them opaquely, the store layer validates)
+        4 => ShardMsg::Deploy {
+            task: arb_string(rng, 32),
+            artifact: {
+                let n = if rng.bool(0.2) { 0 } else { rng.below(512) };
+                (0..n).map(|_| rng.next_u64() as u8).collect()
+            },
+        },
         _ => ShardMsg::Shutdown,
     }
 }
@@ -178,6 +187,8 @@ fn arb_report(rng: &mut Rng) -> ShardReport {
             let n = if rng.bool(0.3) { 0 } else { rng.below(8) };
             (0..n).map(|_| arb_gauge_point(rng)).collect()
         },
+        registry_evictions: rng.next_u64(),
+        swap_hist: arb_hist(rng),
     }
 }
 
@@ -202,7 +213,7 @@ fn arb_telemetry(rng: &mut Rng) -> TelemetryBatch {
 }
 
 fn arb_event(rng: &mut Rng) -> ShardEvent {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => ShardEvent::Done(GatewayResponse {
             shard: rng.below(1024),
             resp: Response {
@@ -228,6 +239,13 @@ fn arb_event(rng: &mut Rng) -> ShardEvent {
             spans_dropped: rng.next_u64(),
             cache_bytes: rng.next_u64(),
         }),
+        // empty err strings (= success acks) get real probability
+        6 => ShardEvent::DeployAck {
+            shard: rng.below(1024),
+            task: arb_string(rng, 32),
+            digest: rng.next_u64(),
+            err: if rng.bool(0.5) { String::new() } else { arb_string(rng, 64) },
+        },
         _ => ShardEvent::Report(arb_report(rng)),
     }
 }
@@ -288,6 +306,12 @@ fn events_bit_equal(a: &ShardEvent, b: &ShardEvent) -> bool {
                 && x.spans_dropped == y.spans_dropped
                 && sx.tasks == sy.tasks
                 && x.series == y.series
+                && x.registry_evictions == y.registry_evictions
+                && x.swap_hist.count() == y.swap_hist.count()
+                && x.swap_hist.counts() == y.swap_hist.counts()
+                && x.swap_hist.sum().to_bits() == y.swap_hist.sum().to_bits()
+                && x.swap_hist.min().to_bits() == y.swap_hist.min().to_bits()
+                && x.swap_hist.max().to_bits() == y.swap_hist.max().to_bits()
         }
         // Telemetry (and the rest) carry no floats, so derived equality
         // is already bit-exact
@@ -475,6 +499,9 @@ fn pre_tail_report_frames_decode_with_default_observability() {
     assert_eq!(r.spans_dropped, 0);
     assert!(r.stats.tasks.is_empty());
     assert!(r.series.is_empty());
+    // ...and the registry-churn tail appended after that
+    assert_eq!(r.registry_evictions, 0);
+    assert_eq!(r.swap_hist.count(), 0);
     // and the modern encoding of the decoded report is strictly longer
     // (it appends the tail), so new->old interop is the trailing-bytes
     // rejection pinned by header_corruptions_map_to_the_right_typed_errors
@@ -489,8 +516,10 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
     // whose continuous tail is the canonical empty encoding (u32 empty
     // qlat length + u64 stride + u64 slots = 20 bytes) followed by the
     // canonical empty health-plane tail (u64 spans_dropped + u32 empty
-    // task count + u32 empty series count = 16 bytes), chopping those
-    // 36 bytes, and patching the header length.
+    // task count + u32 empty series count = 16 bytes) and the canonical
+    // empty registry-churn tail (u64 evictions + u64 count + f64 sum +
+    // f64 min + f64 max + u32 empty bucket count = 44 bytes), chopping
+    // those 80 bytes, and patching the header length.
     let report = ShardReport {
         shard: 3,
         queue_depth: 4,
@@ -499,7 +528,7 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
         ..ShardReport::default()
     };
     let full = frame::encode_event(&ShardEvent::Report(report));
-    let cut = full.len() - 20 - 16;
+    let cut = full.len() - 20 - 16 - 44;
     let mut bytes = full[..cut].to_vec();
     bytes[7..11].copy_from_slice(&((cut - HEADER_LEN) as u32).to_le_bytes());
     let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("mid-tail frame must decode")
@@ -516,6 +545,8 @@ fn pr6_tail_only_report_frames_decode_with_default_continuous_fields() {
     assert_eq!(r.spans_dropped, 0);
     assert!(r.stats.tasks.is_empty());
     assert!(r.series.is_empty());
+    assert_eq!(r.registry_evictions, 0);
+    assert_eq!(r.swap_hist.count(), 0);
 }
 
 #[test]
@@ -524,7 +555,10 @@ fn pr7_tail_only_report_frames_decode_with_default_health_plane() {
     // health plane: its frames end right after inflight_slots.  Emulate
     // one by chopping the canonical empty health-plane tail (u64
     // spans_dropped + u32 empty task count + u32 empty series count =
-    // 16 bytes) and patching the header length.
+    // 16 bytes) plus the canonical empty registry-churn tail appended
+    // after it (u64 evictions + u64 count + f64 sum + f64 min + f64 max
+    // + u32 empty bucket count = 44 bytes) and patching the header
+    // length.
     let report = ShardReport {
         shard: 6,
         inflight_slots: 12,
@@ -532,7 +566,7 @@ fn pr7_tail_only_report_frames_decode_with_default_health_plane() {
         ..ShardReport::default()
     };
     let full = frame::encode_event(&ShardEvent::Report(report));
-    let cut = full.len() - 16;
+    let cut = full.len() - 16 - 44;
     let mut bytes = full[..cut].to_vec();
     bytes[7..11].copy_from_slice(&((cut - HEADER_LEN) as u32).to_le_bytes());
     let ShardEvent::Report(r) = frame::decode_event(&bytes).expect("pr7 frame must decode")
@@ -541,10 +575,50 @@ fn pr7_tail_only_report_frames_decode_with_default_health_plane() {
     };
     // the tails it did ship survive...
     assert_eq!((r.shard, r.inflight_slots, r.queue_depth), (6, 12, 3));
-    // ...and the absent health-plane tail decodes to defaults
+    // ...and the absent health-plane + registry-churn tails decode to
+    // defaults
     assert_eq!(r.spans_dropped, 0);
     assert!(r.stats.tasks.is_empty());
     assert!(r.series.is_empty());
+    assert_eq!(r.registry_evictions, 0);
+    assert_eq!(r.swap_hist.count(), 0);
+}
+
+#[test]
+fn over_cap_deploy_artifact_lengths_are_rejected_before_allocation() {
+    use qst::proto::MAX_DEPLOY_ARTIFACT;
+    // a hostile peer can declare any artifact length; the decoder must
+    // reject it from the declared length alone, before allocating.
+    // Frame layout: header (11) + u32 task len + 3 task bytes + u32
+    // artifact len, so for task "hot" the length field sits at byte 18.
+    let good = ShardMsg::Deploy { task: "hot".into(), artifact: vec![0xA5; 64] };
+    let mut bytes = frame::encode_msg(&good);
+    assert_eq!(frame::decode_msg(&bytes).unwrap(), good);
+    bytes[18..22].copy_from_slice(&((MAX_DEPLOY_ARTIFACT + 1) as u32).to_le_bytes());
+    assert_eq!(
+        frame::decode_msg(&bytes).unwrap_err(),
+        DecodeError::Oversize { len: MAX_DEPLOY_ARTIFACT + 1, max: MAX_DEPLOY_ARTIFACT }
+    );
+}
+
+#[test]
+fn deploy_tags_never_appear_unless_deploy_is_used() {
+    // the Deploy (6) and DeployAck (23) tags are tail additions to the
+    // tag space: a fleet that never calls deploy emits neither, so a
+    // pre-Deploy peer sees byte-identical traffic — and if a new frame
+    // does reach an old decoder it fails with a typed BadTag (pinned by
+    // header_corruptions_map_to_the_right_typed_errors), not a misparse
+    let mut rng = Rng::new(0xD3_9107);
+    for _ in 0..256 {
+        let m = arb_msg(&mut rng);
+        if !matches!(m, ShardMsg::Deploy { .. }) {
+            assert_ne!(frame::encode_msg(&m)[6], 6, "{m:?}");
+        }
+        let ev = arb_event(&mut rng);
+        if !matches!(ev, ShardEvent::DeployAck { .. }) {
+            assert_ne!(frame::encode_event(&ev)[6], 23, "{ev:?}");
+        }
+    }
 }
 
 #[test]

@@ -196,6 +196,40 @@ assert qgemm >= 1.0, (
 print(f"packed kernels: gemm {gemm:.2f}x blocked, qgemm {qgemm:.2f}x row-run at d=512")
 EOF
 
+# registry churn smoke: 1000 synthetic task artifacts in a local
+# content-addressed store, served through the byte-budgeted registry
+# under a Zipf request mix with residency capped at 8% of catalog
+# bytes.  bench-registry refuses to serialize BENCH_registry.json
+# unless a live-deployed task serves bit-identically to a
+# restart-loaded one across a real 2-worker socket fleet, so a
+# zero-exit already proves the Deploy path; on top of that, gate that
+# the Zipf head actually hits (hot tasks stay resident), that
+# evictions occurred (the budget really bound), and that residency
+# held the budget.  BENCH_registry.json is kept: CI uploads it.
+echo "== registry churn smoke (bench-registry, 1000 tasks, 8% budget, deploy parity) =="
+cargo run --release -p qst --bin qst -- bench-registry --tasks 1000 \
+    --requests 2000 --budget-pct 8 --seq 16 --prompt-len 8 --batch 8 \
+    --parity-requests 16 --json BENCH_registry.json
+grep -q '"deploy_parity": 1' BENCH_registry.json
+python3 - <<'EOF'
+import json
+
+bench = json.load(open("BENCH_registry.json"))
+assert bench["deploy_parity"] == 1, "deployed task diverged from the restart-loaded one"
+assert bench["tasks"] >= 1000, f"bench ran only {bench['tasks']} tasks"
+assert bench["budget_bytes"] * 10 < bench["catalog_bytes"], \
+    f"budget {bench['budget_bytes']} is not <10% of catalog {bench['catalog_bytes']}"
+assert bench["hit_rate"] > 0.0, "Zipf head never hit the resident registry"
+assert bench["evictions"] > 0, "residency budget never bound — no evictions"
+assert bench["resident_bytes"] <= bench["budget_bytes"], \
+    f"resident {bench['resident_bytes']} overran budget {bench['budget_bytes']}"
+p50, p95 = bench["swap_in_p50_ms"], bench["swap_in_p95_ms"]
+assert p95 >= p50 >= 0.0, f"swap-in percentiles inverted: p50={p50} p95={p95}"
+print(f"registry churn: hit rate {bench['hit_rate']:.3f}, "
+      f"{bench['evictions']} evictions, swap-in p50 {p50:.3f} ms / p95 {p95:.3f} ms, "
+      f"deploy parity held over the socket fleet")
+EOF
+
 # benchmark trend: append one JSON line of this run's headline numbers
 # (git rev + UTC timestamp for provenance) to BENCH_trend.jsonl.  CI
 # uploads the file as an artifact, so regressions in the headline
@@ -231,6 +265,9 @@ entry.update(pick("BENCH_serve_smoke.json", [
 entry.update(pick("BENCH_kernels_gate.json", [
     "gemm_packed_speedup", "qgemm_packed_speedup",
 ]))
+entry.update({f"registry_{k}": v for k, v in pick("BENCH_registry.json", [
+    "swap_in_p50_ms", "swap_in_p95_ms", "hit_rate", "evictions",
+]).items()})
 with open("BENCH_trend.jsonl", "a") as f:
     f.write(json.dumps(entry, sort_keys=True) + "\n")
 print(f"trend: appended {len(entry) - 2} headline keys @ {entry['git_rev']}")
